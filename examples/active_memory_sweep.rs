@@ -1,0 +1,69 @@
+//! Active-memory-controller sweep on the *event-level simulator* (not the
+//! closed-form model): regenerates Fig. 2's saving curves from counted
+//! transactions, and adds what the paper only argues qualitatively — the
+//! energy impact of keeping psum read-backs inside the SRAM controller.
+//!
+//! Run: `cargo run --release --example active_memory_sweep`
+
+use psim::analytics::bandwidth::ControllerMode;
+use psim::analytics::partition::Strategy;
+use psim::coordinator::parallel::{default_workers, parallel_map};
+use psim::models::zoo;
+use psim::sim::scheduler::{simulate_network, SimConfig};
+
+fn main() {
+    let budgets = [512usize, 1024, 2048, 4096, 8192, 16384];
+    let nets = zoo::paper_networks();
+
+    println!("== Fig. 2 from the simulator: % bandwidth saved by the active controller ==\n");
+    print!("{:<12}", "CNN");
+    for p in budgets {
+        print!(" {p:>8}");
+    }
+    println!("  (energy saved @2048)");
+
+    let rows = parallel_map(&nets, default_workers(), |net| {
+        let mut cells = Vec::new();
+        let mut energy_note = String::new();
+        for p in budgets {
+            let passive = simulate_network(
+                net,
+                &SimConfig::new(p, ControllerMode::Passive, Strategy::Optimal),
+            )
+            .stats;
+            let active = simulate_network(
+                net,
+                &SimConfig::new(p, ControllerMode::Active, Strategy::Optimal),
+            )
+            .stats;
+            let bw_saving = (passive.activation_traffic() as f64
+                - active.activation_traffic() as f64)
+                / passive.activation_traffic() as f64
+                * 100.0;
+            cells.push(bw_saving);
+            if p == 2048 {
+                let e_saving =
+                    (passive.energy_pj - active.energy_pj) / passive.energy_pj * 100.0;
+                energy_note = format!("{e_saving:.1}%");
+            }
+        }
+        (net.name.clone(), cells, energy_note)
+    });
+
+    for (name, cells, energy) in rows {
+        print!("{name:<12}");
+        for v in cells {
+            print!(" {v:>7.1}%");
+        }
+        println!("  {energy}");
+    }
+
+    println!(
+        "\npaper's claim: 19-42% at 512 MACs, 2-38% at 16K. Savings shrink as P grows\n\
+         because fewer psum passes are needed (M/m falls toward 1)."
+    );
+    println!(
+        "note: energy saving is smaller than bandwidth saving — the active controller\n\
+         still performs the read inside the SRAM array; only the interconnect hop is avoided."
+    );
+}

@@ -1,0 +1,108 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! Loads the AOT artifacts (JAX/Pallas lowered to HLO by `make
+//! artifacts`), starts the Rust coordinator (dynamic batcher + PJRT
+//! engine), serves a closed-loop load of synthetic 32x32 images through
+//! PsimNet, and reports latency/throughput — proving Python is not on the
+//! request path.
+//!
+//! Also validates correctness without a Python oracle:
+//!   1. batching invariance — a request served alone (b1 artifact) gets
+//!      the same logits as the same image served inside a full batch
+//!      (b8 artifact);
+//!   2. determinism — identical images produce identical logits;
+//!   3. linearity of the conv_step artifact — conv is linear in the psum:
+//!      step(p, x, w) == step(0, x, w) + p, elementwise.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_inference`
+
+use std::time::Instant;
+
+use psim::coordinator::{InferenceService, ServiceConfig};
+use psim::runtime::{ArtifactDir, Runtime, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = ArtifactDir::open_default()?;
+    println!(
+        "artifacts: {} entries, fingerprint {}",
+        artifacts.entries.len(),
+        artifacts.fingerprint
+    );
+
+    // --- correctness gate 3: conv_step linearity (direct runtime use) ---
+    {
+        let mut rt = Runtime::new(artifacts.clone())?;
+        let psum = Tensor::random(&[16, 32, 32], 11, 1.0);
+        let x = Tensor::random(&[3, 34, 34], 12, 1.0);
+        let w = Tensor::random(&[16, 3, 3, 3], 13, 0.5);
+        let with_p = rt.execute("conv_step_l0", &[psum.clone(), x.clone(), w.clone()])?;
+        let zero_p = rt.execute("conv_step_l0", &[Tensor::zeros(&[16, 32, 32]), x, w])?;
+        let max_err = with_p[0]
+            .data
+            .iter()
+            .zip(zero_p[0].data.iter().zip(&psum.data))
+            .map(|(a, (b, p))| (a - (b + p)).abs())
+            .fold(0.0f32, f32::max);
+        anyhow::ensure!(max_err < 1e-4, "conv_step linearity violated: {max_err}");
+        println!("conv_step linearity      : OK (max err {max_err:.2e})");
+    }
+
+    // --- the serving stack ---
+    let service = InferenceService::start(artifacts, ServiceConfig::default())?;
+    let img = |seed: u64| Tensor::random(&[3, 32, 32], seed, 1.0);
+
+    // warmup compiles both batch artifacts on the engine thread
+    let warm = service.infer(img(0))?;
+    println!("warmup                   : class={} ({}us)", warm.top_class(), warm.latency_us);
+
+    // --- correctness gate 1+2: batching invariance & determinism ---
+    let solo = service.infer(img(777))?; // likely rides alone (b1)
+    let mut rxs = Vec::new();
+    for i in 0..8 {
+        // 8 concurrent submissions coalesce into one b8 batch
+        rxs.push(service.submit(img(if i == 3 { 777 } else { 1000 + i as u64 })));
+    }
+    let batched: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let twin = &batched[3];
+    let max_dev = solo
+        .logits
+        .iter()
+        .zip(&twin.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    anyhow::ensure!(max_dev < 1e-4, "batching invariance violated: {max_dev}");
+    println!("batching invariance      : OK (max logit dev {max_dev:.2e})");
+    let again = service.infer(img(777))?;
+    anyhow::ensure!(again.logits == solo.logits || {
+        let d = again.logits.iter().zip(&solo.logits).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        d < 1e-5
+    });
+    println!("determinism              : OK");
+
+    // --- the measured run: closed-loop concurrent load ---
+    let total = 256usize;
+    let concurrency = 16usize;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..concurrency {
+            let service = &service;
+            scope.spawn(move || {
+                for i in 0..total / concurrency {
+                    let _ = service.infer(img((c * 10_000 + i) as u64));
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let m = &service.metrics;
+    println!("\n== e2e serving run (PsimNet over PJRT, Python off the path) ==");
+    println!("requests                 : {total} at concurrency {concurrency}");
+    println!("wall time                : {:.3} s", wall.as_secs_f64());
+    println!("throughput               : {:.1} img/s", total as f64 / wall.as_secs_f64());
+    println!("server metrics           : {}", m.summary());
+    println!(
+        "batching efficiency      : mean batch {:.2} (8 = perfect coalescing)",
+        m.mean_batch_size()
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Partition explorer: how the five strategies behave across MAC budgets,
+//! and how much the paper's closed form (eq. 7 + integer adaptation)
+//! gives away against the exhaustive discrete optimum — the ablation
+//! DESIGN.md calls out.
+//!
+//! Run: `cargo run --release --example partition_explorer [network]`
+
+use psim::analytics::bandwidth::ControllerMode;
+use psim::analytics::partition::Strategy;
+use psim::analytics::sweep::network_bandwidth;
+use psim::models::zoo;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "GoogleNet".to_string());
+    let net = zoo::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown network '{name}', using GoogleNet");
+        zoo::googlenet()
+    });
+    let budgets = [256usize, 512, 1024, 2048, 4096, 8192, 16384, 65536];
+    let strategies = [
+        Strategy::MaxInput,
+        Strategy::MaxOutput,
+        Strategy::EqualMacs,
+        Strategy::Optimal,
+        Strategy::OptimalSearch,
+    ];
+
+    println!("== {} : total bandwidth (M activations) by strategy ==\n", net.name);
+    print!("{:>8}", "P");
+    for s in strategies {
+        print!(" {:>12}", s.label());
+    }
+    println!(" {:>10}", "eq7 gap");
+    let floor = net.min_bandwidth() as f64 / 1e6;
+
+    for p in budgets {
+        print!("{p:>8}");
+        let mut formula = 0.0;
+        let mut search = 0.0;
+        for s in strategies {
+            let t = network_bandwidth(&net, p, s, ControllerMode::Passive).total_mact();
+            if s == Strategy::Optimal {
+                formula = t;
+            }
+            if s == Strategy::OptimalSearch {
+                search = t;
+            }
+            print!(" {t:>12.2}");
+        }
+        // The integer-adaptation cost: closed form vs discrete optimum.
+        println!(" {:>9.2}%", (formula - search) / search * 100.0);
+    }
+    println!("\nfloor (Table III): {floor:.3} M — the search column approaches it as P grows");
+
+    // Where does the optimum sit between the extremes? Show the crossover
+    // structure the paper's Table I demonstrates.
+    println!("\nwho wins at each budget (passive controller):");
+    for p in budgets {
+        let mut best = (f64::INFINITY, "");
+        for s in [Strategy::MaxInput, Strategy::MaxOutput, Strategy::EqualMacs] {
+            let t = network_bandwidth(&net, p, s, ControllerMode::Passive).total_mact();
+            if t < best.0 {
+                best = (t, s.label());
+            }
+        }
+        let opt = network_bandwidth(&net, p, Strategy::Optimal, ControllerMode::Passive)
+            .total_mact();
+        println!(
+            "  P={p:>6}: best heuristic = {:<11} {:>9.2} M | this work {:>9.2} M ({:+.1}%)",
+            best.1,
+            best.0,
+            opt,
+            (opt - best.0) / best.0 * 100.0
+        );
+    }
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the analytics API in ~40 lines.
+//!
+//! Pick a network, choose the paper's optimal partition for every conv
+//! layer under a MAC budget, and quantify what the active memory
+//! controller saves — the paper's Section II + III pipeline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use psim::analytics::bandwidth::{layer_bandwidth, ControllerMode};
+use psim::analytics::partition::{partition_layer, Strategy};
+use psim::analytics::sweep::network_bandwidth;
+use psim::models::zoo;
+
+fn main() {
+    let net = zoo::resnet18();
+    let p_macs = 2048;
+
+    println!("== {} under a {}-MAC accelerator ==\n", net.name, p_macs);
+
+    // Per-layer: the optimal (m, n) tile and its bandwidth split.
+    println!("{:<18} {:>4} {:>4} {:>10} {:>10}", "layer", "m", "n", "B_i (M)", "B_o (M)");
+    for layer in net.layers.iter().take(6) {
+        let part = partition_layer(layer, p_macs, Strategy::Optimal, ControllerMode::Passive);
+        let bw = layer_bandwidth(layer, part.m, part.n, ControllerMode::Passive);
+        println!(
+            "{:<18} {:>4} {:>4} {:>10.2} {:>10.2}",
+            layer.name,
+            part.m,
+            part.n,
+            bw.input / 1e6,
+            bw.output / 1e6
+        );
+    }
+    println!("... ({} layers total)\n", net.layers.len());
+
+    // Network totals: the four Table I strategies.
+    for s in Strategy::TABLE1 {
+        let r = network_bandwidth(&net, p_macs, s, ControllerMode::Passive);
+        println!("{:<12} {:>8.1} M activations/image", s.label(), r.total_mact());
+    }
+
+    // What the active controller saves (Fig. 2's y-axis).
+    let passive = network_bandwidth(&net, p_macs, Strategy::Optimal, ControllerMode::Passive);
+    let active = network_bandwidth(&net, p_macs, Strategy::Optimal, ControllerMode::Active);
+    println!(
+        "\nactive SRAM controller: {:.2} M -> {:.2} M  ({:.1}% bandwidth saved)",
+        passive.total_mact(),
+        active.total_mact(),
+        (passive.total() - active.total()) / passive.total() * 100.0
+    );
+    println!(
+        "floor (Table III)     : {:.3} M",
+        net.min_bandwidth() as f64 / 1e6
+    );
+}

@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT.
+
+Nothing here runs at inference time — `make artifacts` lowers the model
+to HLO text once, and the Rust runtime executes the artifacts via PJRT.
+"""

@@ -1,0 +1,153 @@
+"""AOT pipeline: lower the L2 entry points to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla_extension 0.5.1
+backing the Rust `xla` crate rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Outputs (under --out-dir, default ../artifacts):
+  <name>.hlo.txt     one per entry point
+  manifest.json      entry-point index: inputs/outputs shapes + dtypes
+
+Entry points:
+  psimnet_b{1,8}     PsimNet batched inference (the serving workload)
+  conv_step_l{0,1,2} one partial-sum update per PsimNet layer shape
+  active_update      the controller op (add + ReLU) on a 64x30x30 block
+
+Usage: cd python && python -m compile.aot [--out-dir DIR] [--force]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.active_update import active_update
+from .kernels.conv_psum import conv_psum_step
+
+
+def to_hlo_text(fn, *args) -> str:
+    """Lower a jittable fn at the given abstract args to HLO text."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points():
+    """(name, fn, abstract args) for every artifact."""
+    eps = []
+
+    # --- PsimNet inference at the batch sizes the coordinator serves ---
+    wspecs = [spec(s) for _n, s in model.psimnet_param_shapes()]
+    for b in (1, 8):
+        eps.append(
+            (
+                f"psimnet_b{b}",
+                model.psimnet_infer,
+                [spec((b, *model.PSIMNET_INPUT)), *wspecs],
+            )
+        )
+
+    # --- single partial-sum steps, one per PsimNet conv shape ---
+    # Spatial dims after the preceding pools: 32, 16, 8 (padded +2).
+    spatial = {"conv1": 32, "conv2": 16, "conv3": 8}
+    for i, (name, cin, cout, k, pad, mb) in enumerate(model.PSIMNET_LAYERS):
+        s = spatial[name]
+        h = s + 2 * pad
+        ho = h - k + 1
+        eps.append(
+            (
+                f"conv_step_l{i}",
+                conv_psum_step,
+                [
+                    spec((cout, ho, ho)),  # psum
+                    spec((mb, h, h)),  # x tile (m_block channels)
+                    spec((cout, mb, k, k)),  # w tile
+                ],
+            )
+        )
+
+    # --- the controller op in isolation ---
+    eps.append(
+        (
+            "active_update",
+            lambda a, b: active_update(a, b, relu=True),
+            [spec((64, 30, 30)), spec((64, 30, 30))],
+        )
+    )
+    return eps
+
+
+def input_fingerprint() -> str:
+    """Hash of every compile-path source file — artifact staleness key."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _dirs, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    fp = input_fingerprint()
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                if json.load(f).get("fingerprint") == fp:
+                    print(f"artifacts fresh (fingerprint {fp}); skipping")
+                    return 0
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    manifest = {"fingerprint": fp, "entries": []}
+    for name, fn, specs in entry_points():
+        text = to_hlo_text(fn, *specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shape = jax.eval_shape(fn, *specs)
+        outs = jax.tree_util.tree_leaves(out_shape)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+                ],
+                "outputs": [
+                    {"shape": list(o.shape), "dtype": str(o.dtype)} for o in outs
+                ],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path} ({len(manifest['entries'])} entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime).
+
+`conv_psum` is the accelerator's per-iteration hot-spot: a tiled
+convolution that accumulates partial sums across input-channel blocks,
+with the psum block kept resident across grid steps — the in-kernel
+analogue of the paper's active memory controller. `active_update` is the
+controller's read-update-write (add + optional ReLU) as a standalone
+kernel. `ref` holds the pure-jnp oracles used by pytest.
+"""

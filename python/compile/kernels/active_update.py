@@ -1,0 +1,33 @@
+"""The active memory controller's read-update-write as a Pallas kernel.
+
+Section III offloads two ops into the SRAM controller: **Addition** of an
+incoming partial sum to the stored one, and optionally the **Activation**
+(ReLU) on the final accumulation. This kernel is that datapath — used by
+the L2 model for the final psum pass and exported as its own artifact so
+the Rust runtime (and benches) can exercise the controller op in
+isolation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _update_kernel(stored_ref, incoming_ref, o_ref, *, relu: bool):
+    out = stored_ref[...] + incoming_ref[...]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out
+
+
+def active_update(stored, incoming, *, relu: bool, interpret: bool = True):
+    """stored + incoming, optionally through ReLU. Any matching shapes."""
+    assert stored.shape == incoming.shape, "operand shape mismatch"
+    kernel = functools.partial(_update_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(stored.shape, stored.dtype),
+        interpret=interpret,
+    )(stored, incoming)

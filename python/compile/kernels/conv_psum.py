@@ -1,0 +1,139 @@
+"""The tiled partial-sum convolution as a Pallas kernel.
+
+This is the PE-array hot-spot of the paper's accelerator: one `(m, n)`
+tile iteration computes `n` output maps' partial sums from `m` input maps
+and accumulates into the stored psums. The Pallas grid iterates the
+input-channel blocks (the `ci` loop of Section II); the **psum block's
+index map is constant across that grid dimension, so the accumulator
+stays resident in VMEM** — the on-TPU analogue of the paper's active
+memory controller (the psum never round-trips to HBM between updates).
+
+Hardware adaptation (paper -> TPU):
+  * SRAM scratchpad + active controller  ->  VMEM-resident accumulator
+    block (BlockSpec with constant index map over the reduction grid).
+  * `K^2 * m * n <= P` MAC budget        ->  the `m`-contraction matmul
+    feeding the MXU: each (k1, k2) tap is a `[Ho*Wo, m] x [m, n]` matmul.
+  * AXI bursts                            ->  HBM->VMEM block transfers
+    expressed by the BlockSpecs.
+
+Lowered with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; on a real TPU the same kernel lowers natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _accumulate_taps(x, w, o_ref, *, k: int, ho: int, wo: int):
+    """o_ref += conv(x, w) as ONE im2col matmul.
+
+    x: [m, H, W] (H = ho+k-1), w: [n, m, k, k], o_ref block: [n, ho, wo].
+
+    Perf (EXPERIMENTS.md §Perf L1-1): the first version issued K^2
+    separate matmuls with contraction depth `m` (3..8 here — far below
+    the MXU's native 128). Gathering the K^2 shifted patches into a
+    single `[ho*wo, m*K^2]` im2col operand makes one matmul with
+    contraction depth `m*K^2` (27..72): 9x fewer MXU dispatches and a
+    9x deeper (better-utilized) systolic pass for 3x3 kernels. FLOPs are
+    identical; numerics verified against ref.py by pytest.
+    """
+    m_blk = x.shape[0]
+    n_blk = w.shape[0]
+    # [k*k, m, ho, wo] shifted patches, gathered once.
+    patches = jnp.stack(
+        [
+            x[:, k1 : k1 + ho, k2 : k2 + wo]
+            for k1 in range(k)
+            for k2 in range(k)
+        ]
+    )
+    # lhs: [ho*wo, m*k*k]  (contraction axis ordered (k1,k2,m))
+    lhs = patches.reshape(k * k * m_blk, ho * wo).T
+    # rhs: [m*k*k, n] with the same (k1,k2,m) ordering.
+    rhs = w.transpose(2, 3, 1, 0).reshape(k * k * m_blk, n_blk)
+    acc = jax.lax.dot_general(
+        lhs,
+        rhs,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=o_ref.dtype,
+    )
+    o_ref[...] += acc.T.reshape(n_blk, ho, wo)
+
+
+def _conv_psum_kernel(x_ref, w_ref, o_ref, *, k: int, ho: int, wo: int):
+    """One grid step: o += conv(x_block, w_block), valid padding, stride 1.
+
+    Block shapes:
+      x_ref: [m_blk, H, W]     (H = ho + k - 1, W = wo + k - 1)
+      w_ref: [n_blk, m_blk, k, k]
+      o_ref: [n_blk, ho, wo]   accumulator, resident across grid steps.
+    """
+    # Zero the accumulator on the first input-channel block (MemOp::Init).
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    _accumulate_taps(x_ref[...], w_ref[...], o_ref, k=k, ho=ho, wo=wo)
+
+
+def conv_psum(x, w, *, m_block: int | None = None, interpret: bool = True):
+    """Tiled conv: full `[N, Ho, Wo]` output from `[M, H, W]` x `[N, M, K, K]`.
+
+    The input-channel dimension is processed in blocks of `m_block`
+    (default: all of M in one pass), accumulating partial sums in a
+    VMEM-resident block across the Pallas grid — Section II's `ci` loop.
+
+    Valid padding, stride 1 (pad in the caller; see model.py).
+    """
+    M, H, W = x.shape
+    N, Mw, k, k2 = w.shape
+    assert M == Mw, f"channel mismatch {M} vs {Mw}"
+    assert k == k2, "square kernels only"
+    if m_block is None:
+        m_block = M
+    assert M % m_block == 0, f"m_block {m_block} must divide M {M}"
+    ho, wo = H - k + 1, W - k + 1
+    grid = (M // m_block,)
+
+    kernel = functools.partial(_conv_psum_kernel, k=k, ho=ho, wo=wo)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # input-channel block ci of x ...
+            pl.BlockSpec((m_block, H, W), lambda ci: (ci, 0, 0)),
+            # ... and the matching weight slice (all N output maps)
+            pl.BlockSpec((N, m_block, k, k), lambda ci: (0, ci, 0, 0)),
+        ],
+        # constant index map: the psum block stays resident across ci.
+        out_specs=pl.BlockSpec((N, ho, wo), lambda ci: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, ho, wo), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def conv_psum_step(psum, x_tile, w_tile, *, interpret: bool = True):
+    """One explicit partial-sum update (the runtime-artifact entry point):
+    `psum + conv(x_tile, w_tile)` with the addition fused into the kernel's
+    accumulator — what the accelerator's MAC block + active controller do
+    in one iteration.
+
+    Shapes: psum [N, Ho, Wo], x_tile [m, H, W], w_tile [N, m, K, K].
+    """
+    N, ho, wo = psum.shape
+    m, H, W = x_tile.shape
+    k = w_tile.shape[-1]
+    assert (ho, wo) == (H - k + 1, W - k + 1), "psum/tile shape mismatch"
+
+    def kernel(p_ref, x_ref, w_ref, o_ref):
+        o_ref[...] = p_ref[...]
+        _accumulate_taps(x_ref[...], w_ref[...], o_ref, k=k, ho=ho, wo=wo)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(psum.shape, psum.dtype),
+        interpret=interpret,
+    )(psum, x_tile, w_tile)

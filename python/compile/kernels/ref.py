@@ -1,0 +1,69 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These define the semantics the kernels must match (fp32, same contraction
+up to float reassociation). pytest + hypothesis compare kernel outputs
+against these on randomized shapes — the CORE correctness signal of the
+build-time stack.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x, w, *, pad: int = 0):
+    """Dense 2-D convolution, stride 1.
+
+    Args:
+      x: [M, H, W]    input feature maps.
+      w: [N, M, K, K] weights.
+      pad: symmetric zero padding applied to x.
+
+    Returns:
+      [N, Ho, Wo] with Ho = H + 2*pad - K + 1.
+    """
+    xb = x[None]  # NCHW with batch 1
+    out = lax.conv_general_dilated(
+        xb,
+        w,
+        window_strides=(1, 1),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def conv_psum_ref(psum, x_tile, w_tile):
+    """One partial-sum update: psum += conv(x_tile, w_tile), valid padding.
+
+    Args:
+      psum:   [N, Ho, Wo]  previous partial sums.
+      x_tile: [m, H, W]    the m input maps of this iteration (pre-padded).
+      w_tile: [N, m, K, K] the weight slice for these maps.
+    """
+    return psum + conv2d_ref(x_tile, w_tile, pad=0)
+
+
+def tiled_conv_ref(x, w, m_block: int, *, pad: int = 0):
+    """Full conv computed the accelerator's way: iterate input-channel
+    blocks of size `m_block`, accumulating partial sums (Section II's
+    loop nest). Equals `conv2d_ref(x, w, pad=pad)` up to reassociation.
+    """
+    M = x.shape[0]
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    k = w.shape[-1]
+    ho = x.shape[1] - k + 1
+    wo = x.shape[2] - k + 1
+    psum = jnp.zeros((w.shape[0], ho, wo), dtype=x.dtype)
+    for ci in range(0, M, m_block):
+        xs = x[ci : ci + m_block]
+        ws = w[:, ci : ci + m_block]
+        psum = conv_psum_ref(psum, xs, ws)
+    return psum
+
+
+def active_update_ref(stored, incoming, *, relu: bool):
+    """The active controller's read-update-write: stored + incoming,
+    optionally through ReLU (the final accumulation of a layer)."""
+    out = stored + incoming
+    return jnp.maximum(out, 0.0) if relu else out

@@ -1,0 +1,126 @@
+"""Layer-2: the JAX compute graph the Rust coordinator executes.
+
+Two entry-point families, both calling the L1 Pallas kernels so they
+lower into the same HLO:
+
+* `tiled_conv` / `conv_psum_step` — single-layer building blocks used by
+  the runtime microbenches and the sim-vs-functional cross-checks.
+* `PsimNet` — a small CNN (32x32 RGB -> 10 classes) whose every conv runs
+  through the tiled partial-sum kernel. This is the end-to-end workload:
+  the Rust coordinator loads its AOT artifact and serves batched inference
+  requests over it.
+
+Python never runs at inference time; everything here is lowered once by
+`aot.py` to HLO text.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.active_update import active_update
+from .kernels.conv_psum import conv_psum, conv_psum_step  # noqa: F401
+
+
+def tiled_conv(x, w, *, m_block=None, pad: int = 0, relu: bool = False):
+    """Full convolution computed as partial-sum accumulation.
+
+    Args:
+      x: [M, H, W] input maps.
+      w: [N, M, K, K] weights.
+      m_block: input-channel block size (Section II's `m`); None = all.
+      pad: symmetric zero padding.
+      relu: apply the controller-side activation on the final psum.
+    """
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    out = conv_psum(x, w, m_block=m_block)
+    if relu:
+        # The paper's controller applies the activation on the last
+        # accumulation; standalone-kernel form keeps that datapath honest.
+        out = active_update(jnp.zeros_like(out), out, relu=True)
+    return out
+
+
+def max_pool2(x):
+    """2x2 max pool, stride 2, over [C, H, W] (H, W even)."""
+    c, h, w = x.shape
+    return jnp.max(x.reshape(c, h // 2, 2, w // 2, 2), axis=(2, 4))
+
+
+# ---------------------------------------------------------------------------
+# PsimNet: the end-to-end workload.
+# ---------------------------------------------------------------------------
+
+#: (name, cin, cout, k, pad, m_block) — m_block mirrors an optimal-ish
+#: partition (divisors of cin) so the AOT graph exercises real psum chains.
+PSIMNET_LAYERS = (
+    ("conv1", 3, 16, 3, 1, 3),
+    ("conv2", 16, 32, 3, 1, 8),
+    ("conv3", 32, 64, 3, 1, 8),
+)
+PSIMNET_CLASSES = 10
+PSIMNET_INPUT = (3, 32, 32)
+
+
+def psimnet_param_shapes():
+    """Ordered (name, shape) of every parameter tensor."""
+    shapes = []
+    for name, cin, cout, k, _pad, _mb in PSIMNET_LAYERS:
+        shapes.append((name, (cout, cin, k, k)))
+    shapes.append(("head", (PSIMNET_CLASSES, 64, 1, 1)))
+    return shapes
+
+
+def psimnet_infer(x, w1, w2, w3, w_head):
+    """Forward pass: [B, 3, 32, 32] -> [B, 10] logits.
+
+    conv(3->16) relu pool -> conv(16->32) relu pool -> conv(32->64) relu
+    -> global average pool -> 1x1 conv head.
+    """
+
+    def one(img):
+        h = img
+        for (name, _cin, _cout, k, pad, mb), w in zip(
+            PSIMNET_LAYERS, (w1, w2, w3), strict=True
+        ):
+            h = tiled_conv(h, w, m_block=mb, pad=pad, relu=True)
+            if name in ("conv1", "conv2"):
+                h = max_pool2(h)
+        # global average pool -> [64, 1, 1]
+        h = jnp.mean(h, axis=(1, 2), keepdims=True)
+        logits = conv_psum(h, w_head)  # 1x1 conv == matmul over channels
+        return logits[:, 0, 0]
+
+    return jax.vmap(one)(x)
+
+
+def psimnet_init(seed: int = 0):
+    """He-style init for PsimNet, deterministic in `seed`."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for _name, shape in psimnet_param_shapes():
+        key, sub = jax.random.split(key)
+        fan_in = shape[1] * shape[2] * shape[3]
+        params.append(
+            jax.random.normal(sub, shape, dtype=jnp.float32)
+            * jnp.sqrt(2.0 / fan_in)
+        )
+    return params
+
+
+def psimnet_reference(x, w1, w2, w3, w_head):
+    """Pure-jnp PsimNet (no Pallas) — the oracle for the AOT artifact."""
+    from .kernels.ref import conv2d_ref
+
+    def one(img):
+        h = img
+        for (name, _cin, _cout, _k, pad, _mb), w in zip(
+            PSIMNET_LAYERS, (w1, w2, w3), strict=True
+        ):
+            h = jnp.maximum(conv2d_ref(h, w, pad=pad), 0.0)
+            if name in ("conv1", "conv2"):
+                h = max_pool2(h)
+        h = jnp.mean(h, axis=(1, 2), keepdims=True)
+        return conv2d_ref(h, w_head)[:, 0, 0]
+
+    return jax.vmap(one)(x)

@@ -1,0 +1,74 @@
+"""L1/L2 profiling: XLA cost analysis of the lowered entry points and a
+VMEM/MXU structure estimate for the Pallas kernel's BlockSpecs.
+
+interpret=True gives CPU-numpy timings only (not a TPU proxy), so the
+perf pass optimizes *structure*: contraction depth feeding the MXU, VMEM
+residency of the psum accumulator, HLO op mix after fusion. This script
+prints those numbers for EXPERIMENTS.md §Perf.
+
+Usage: cd python && python -m compile.profile
+"""
+
+import jax
+
+from . import aot, model
+
+
+def cost_analysis(fn, *specs):
+    compiled = jax.jit(fn).lower(*specs).compile()
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        return ca
+    except Exception as e:  # pragma: no cover - backend-dependent
+        return {"error": str(e)}
+
+
+def vmem_estimate_bytes(m_block, n, h, w, k, ho, wo, dtype_bytes=4):
+    """Per-grid-step VMEM residency of conv_psum's blocks."""
+    x_tile = m_block * h * w * dtype_bytes
+    w_tile = n * m_block * k * k * dtype_bytes
+    psum = n * ho * wo * dtype_bytes
+    patches = (ho * wo) * (m_block * k * k) * dtype_bytes  # im2col lhs
+    return {
+        "x_tile": x_tile,
+        "w_tile": w_tile,
+        "psum_resident": psum,
+        "im2col_lhs": patches,
+        "total": x_tile + w_tile + psum + patches,
+    }
+
+
+def main():
+    print("== XLA cost analysis (CPU backend, post-fusion) ==")
+    for name, fn, specs in aot.entry_points():
+        ca = cost_analysis(fn, *specs)
+        flops = ca.get("flops", float("nan"))
+        bytes_ = ca.get("bytes accessed", float("nan"))
+        ai = flops / bytes_ if bytes_ else float("nan")
+        print(f"{name:>16}: {flops:>14.0f} flops  {bytes_:>12.0f} bytes  AI={ai:6.2f}")
+
+    print("\n== Pallas conv_psum VMEM footprint per grid step ==")
+    spatial = {"conv1": 32, "conv2": 16, "conv3": 8}
+    for lname, cin, cout, k, pad, mb in model.PSIMNET_LAYERS:
+        s = spatial[lname]
+        h = s + 2 * pad
+        ho = h - k + 1
+        est = vmem_estimate_bytes(mb, cout, h, h, k, ho, ho)
+        # MXU structure: contraction depth per matmul
+        print(
+            f"{lname}: m_block={mb} -> VMEM {est['total']/1024:.1f} KiB "
+            f"(psum resident {est['psum_resident']/1024:.1f} KiB), "
+            f"contraction depth m*K^2={mb*k*k} "
+            f"(vs {mb} for per-tap) of MXU-native 128"
+        )
+    print(
+        "\n(16 MiB VMEM budget per TensorCore: all blocks fit with >100x headroom;\n"
+        " on real hardware m_block could grow to ~128 — the analytical\n"
+        " optimizer in rust picks m from bandwidth, not VMEM, at these sizes.)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""AOT pipeline tests: HLO text is produced, parseable-looking, and the
+manifest indexes every entry point with correct shapes."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_entry_points_cover_contract():
+    names = [name for name, _fn, _specs in aot.entry_points()]
+    assert "psimnet_b1" in names
+    assert "psimnet_b8" in names
+    assert "active_update" in names
+    assert sum(n.startswith("conv_step_l") for n in names) == len(
+        model.PSIMNET_LAYERS
+    )
+
+
+def test_to_hlo_text_emits_hlo():
+    text = aot.to_hlo_text(lambda a, b: (a @ b,),
+                           jnp.zeros((4, 4)), jnp.zeros((4, 4)))
+    assert "HloModule" in text
+    assert "dot(" in text or "dot " in text
+
+
+def test_fingerprint_stable_and_sensitive(tmp_path):
+    fp1 = aot.input_fingerprint()
+    fp2 = aot.input_fingerprint()
+    assert fp1 == fp2
+    assert len(fp1) == 16
+
+
+@pytest.mark.slow
+def test_full_aot_build(tmp_path):
+    """End-to-end: build all artifacts into a temp dir, check manifest."""
+    import sys
+
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(tmp_path), "--force"]
+    try:
+        assert aot.main() == 0
+    finally:
+        sys.argv = argv
+
+    with open(tmp_path / "manifest.json") as f:
+        manifest = json.load(f)
+    entries = {e["name"]: e for e in manifest["entries"]}
+    assert set(entries) == {n for n, _f, _s in aot.entry_points()}
+    b8 = entries["psimnet_b8"]
+    assert b8["inputs"][0]["shape"] == [8, 3, 32, 32]
+    assert b8["outputs"][0]["shape"] == [8, 10]
+    for e in manifest["entries"]:
+        path = tmp_path / e["file"]
+        assert path.exists()
+        head = path.read_text()[:200]
+        assert "HloModule" in head
+
+    # second run without --force is a no-op (freshness check)
+    sys.argv = ["aot", "--out-dir", str(tmp_path)]
+    try:
+        assert aot.main() == 0
+    finally:
+        sys.argv = argv

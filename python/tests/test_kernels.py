@@ -1,0 +1,140 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes; assert_allclose against ref.py — the
+core correctness signal for everything the Rust runtime later executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.active_update import active_update
+from compile.kernels.conv_psum import conv_psum, conv_psum_step
+from compile.kernels.ref import (
+    active_update_ref,
+    conv2d_ref,
+    conv_psum_ref,
+    tiled_conv_ref,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# conv_psum: full tiled conv vs dense reference
+# ---------------------------------------------------------------------------
+
+shape_params = st.tuples(
+    st.sampled_from([1, 2, 3, 4, 8, 16]),  # M
+    st.sampled_from([1, 2, 4, 8, 16]),  # N
+    st.sampled_from([1, 3, 5]),  # K
+    st.integers(min_value=6, max_value=14),  # H=W
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_params, st.integers(0, 3))
+def test_conv_psum_matches_ref(params, seed):
+    m, n, k, h = params
+    if h < k:
+        h = k
+    x = rand(seed, (m, h, h))
+    w = rand(seed + 100, (n, m, k, k))
+    got = conv_psum(x, w)
+    want = conv2d_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.sampled_from([(4, 1), (4, 2), (4, 4), (8, 2), (16, 4), (16, 8)]),
+    st.sampled_from([1, 3]),
+    st.integers(0, 2),
+)
+def test_conv_psum_blocking_invariant(mb, k, seed):
+    """Any m_block must give the same answer (psum chain correctness)."""
+    m, m_block = mb
+    x = rand(seed, (m, 10, 10))
+    w = rand(seed + 7, (4, m, k, k))
+    full = conv_psum(x, w)  # single pass
+    blocked = conv_psum(x, w, m_block=m_block)
+    np.testing.assert_allclose(blocked, full, rtol=2e-5, atol=2e-5)
+
+
+def test_conv_psum_rejects_non_divisor_block():
+    x = rand(0, (6, 8, 8))
+    w = rand(1, (2, 6, 3, 3))
+    with pytest.raises(AssertionError):
+        conv_psum(x, w, m_block=4)
+
+
+def test_conv_psum_rejects_channel_mismatch():
+    x = rand(0, (6, 8, 8))
+    w = rand(1, (2, 5, 3, 3))
+    with pytest.raises(AssertionError):
+        conv_psum(x, w)
+
+
+# ---------------------------------------------------------------------------
+# conv_psum_step: the runtime-artifact entry point
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 4))
+def test_conv_psum_step_matches_ref(seed):
+    psum = rand(seed, (8, 6, 6))
+    x = rand(seed + 1, (4, 8, 8))
+    w = rand(seed + 2, (8, 4, 3, 3))
+    got = conv_psum_step(psum, x, w)
+    want = conv_psum_ref(psum, x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_chained_steps_equal_full_conv():
+    """Section II's loop: chaining step() over ci blocks == dense conv."""
+    x = rand(3, (12, 9, 9))
+    w = rand(4, (5, 12, 3, 3))
+    psum = jnp.zeros((5, 7, 7))
+    for ci in range(0, 12, 4):
+        psum = conv_psum_step(psum, x[ci : ci + 4], w[:, ci : ci + 4])
+    np.testing.assert_allclose(psum, conv2d_ref(x, w), rtol=2e-5, atol=2e-5)
+
+
+def test_tiled_conv_ref_self_consistent():
+    x = rand(5, (8, 10, 10))
+    w = rand(6, (3, 8, 3, 3))
+    np.testing.assert_allclose(
+        tiled_conv_ref(x, w, 2, pad=1), conv2d_ref(x, w, pad=1), rtol=2e-5, atol=2e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# active_update: the controller op
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.sampled_from([(4, 4), (16, 9), (64, 30)]),
+    st.booleans(),
+    st.integers(0, 3),
+)
+def test_active_update_matches_ref(shape, relu, seed):
+    c, s = shape
+    a = rand(seed, (c, s, s))
+    b = rand(seed + 9, (c, s, s))
+    got = active_update(a, b, relu=relu)
+    want = active_update_ref(a, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_active_update_relu_clamps():
+    a = jnp.full((2, 2, 2), -3.0)
+    b = jnp.full((2, 2, 2), 1.0)
+    out = active_update(a, b, relu=True)
+    assert float(out.max()) == 0.0

@@ -1,0 +1,56 @@
+"""L2 model tests: PsimNet shapes, kernel-vs-reference equivalence, and
+tiled_conv semantics (padding, relu, blocking)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import conv2d_ref
+
+
+def test_tiled_conv_padding_and_relu():
+    x = jnp.array(np.random.RandomState(0).randn(4, 8, 8), dtype=jnp.float32)
+    w = jnp.array(np.random.RandomState(1).randn(6, 4, 3, 3), dtype=jnp.float32)
+    got = model.tiled_conv(x, w, m_block=2, pad=1, relu=True)
+    want = jnp.maximum(conv2d_ref(x, w, pad=1), 0.0)
+    assert got.shape == (6, 8, 8)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_max_pool2():
+    x = jnp.arange(16.0).reshape(1, 4, 4)
+    out = model.max_pool2(x)
+    np.testing.assert_allclose(out[0], [[5.0, 7.0], [13.0, 15.0]])
+
+
+def test_psimnet_param_shapes():
+    shapes = dict(model.psimnet_param_shapes())
+    assert shapes["conv1"] == (16, 3, 3, 3)
+    assert shapes["conv2"] == (32, 16, 3, 3)
+    assert shapes["conv3"] == (64, 32, 3, 3)
+    assert shapes["head"] == (10, 64, 1, 1)
+
+
+@pytest.mark.parametrize("batch", [1, 3])
+def test_psimnet_infer_matches_reference(batch):
+    params = model.psimnet_init(seed=42)
+    x = jnp.array(
+        np.random.RandomState(7).randn(batch, *model.PSIMNET_INPUT),
+        dtype=jnp.float32,
+    )
+    got = model.psimnet_infer(x, *params)
+    want = model.psimnet_reference(x, *params)
+    assert got.shape == (batch, model.PSIMNET_CLASSES)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+def test_psimnet_init_deterministic():
+    a = model.psimnet_init(seed=1)
+    b = model.psimnet_init(seed=1)
+    for pa, pb in zip(a, b, strict=True):
+        np.testing.assert_array_equal(pa, pb)
+    c = model.psimnet_init(seed=2)
+    assert any(
+        not np.array_equal(pa, pc) for pa, pc in zip(a, c, strict=True)
+    )

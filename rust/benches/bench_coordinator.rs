@@ -1,0 +1,70 @@
+//! Coordinator micro-benches: batching, metrics and fan-out overheads —
+//! the L3 serving machinery measured without (and with) PJRT underneath.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use psim::coordinator::batcher::{run_batcher, BatchPolicy};
+use psim::coordinator::job::InferRequest;
+use psim::coordinator::metrics::Metrics;
+use psim::coordinator::parallel::parallel_map;
+use psim::runtime::Tensor;
+use psim::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+
+    // Metrics hot path (called once per request/response).
+    let m = Metrics::new();
+    b.run_throughput("metrics record (ops/s)", 3, || {
+        m.record_request();
+        m.record_batch(8);
+        m.record_response(250);
+    });
+
+    // Batcher throughput: how fast requests move through the batching
+    // thread (synthetic sink, no PJRT).
+    b.run_throughput("batcher pipeline (reqs/s)", 256, || {
+        let (tx, rx) = mpsc::channel();
+        let (btx, brx) = mpsc::channel::<Vec<InferRequest>>();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) };
+        let h = std::thread::spawn(move || run_batcher(rx, btx, policy));
+        let sink = std::thread::spawn(move || {
+            let mut n = 0usize;
+            while let Ok(batch) = brx.recv() {
+                n += batch.len();
+            }
+            n
+        });
+        let (rtx, _rrx) = mpsc::channel();
+        for i in 0..256u64 {
+            tx.send(InferRequest {
+                id: i,
+                image: Tensor::zeros(&[1]),
+                reply: rtx.clone(),
+                enqueued: Instant::now(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        h.join().unwrap();
+        assert_eq!(sink.join().unwrap(), 256);
+    });
+
+    // parallel_map scaling on a CPU-bound job.
+    let items: Vec<u64> = (0..64).collect();
+    let work = |x: &u64| -> u64 {
+        let mut acc = *x;
+        for i in 0..200_000u64 {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        acc
+    };
+    b.run("parallel_map 64 jobs x 1 worker", || parallel_map(&items, 1, work));
+    let workers = psim::coordinator::parallel::default_workers();
+    b.run(&format!("parallel_map 64 jobs x {workers} workers"), || {
+        parallel_map(&items, workers, work)
+    });
+
+    b.finish();
+}

@@ -1,0 +1,72 @@
+//! PJRT runtime latency: compiled-artifact execution from Rust — the
+//! request-path numbers for EXPERIMENTS.md (latency per conv step, per
+//! controller op, per PsimNet batch). Skips when artifacts are missing.
+
+use psim::runtime::{ArtifactDir, Runtime, Tensor};
+use psim::util::benchkit::Bench;
+
+fn main() {
+    let artifacts = match ArtifactDir::open_default() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("SKIP bench_runtime: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let mut rt = Runtime::new(artifacts).expect("PJRT client");
+    let mut b = Bench::new();
+
+    // Warm compiles out of band so benches time execution only.
+    for name in ["conv_step_l0", "conv_step_l1", "conv_step_l2", "active_update", "psimnet_b1", "psimnet_b8"] {
+        rt.load(name).expect(name);
+    }
+    println!(
+        "compile time (all 6 executables): {:.1} ms\n",
+        rt.compile_nanos as f64 / 1e6
+    );
+
+    // conv_step per layer shape (the accelerator's iteration workload)
+    let cases = [
+        ("conv_step_l0", vec![16usize, 32, 32], vec![3usize, 34, 34], vec![16usize, 3, 3, 3]),
+        ("conv_step_l1", vec![32, 16, 16], vec![8, 18, 18], vec![32, 8, 3, 3]),
+        ("conv_step_l2", vec![64, 8, 8], vec![8, 10, 10], vec![64, 8, 3, 3]),
+    ];
+    for (name, ps, xs, ws) in &cases {
+        let psum = Tensor::zeros(ps);
+        let x = Tensor::random(xs, 1, 1.0);
+        let w = Tensor::random(ws, 2, 0.3);
+        let macs: u64 = (ps.iter().product::<usize>() * xs[0] * 9) as u64;
+        b.run_throughput(&format!("{name} (MACs/s)"), macs, || {
+            rt.execute(name, &[psum.clone(), x.clone(), w.clone()]).unwrap()
+        });
+    }
+
+    // the controller op
+    let a1 = Tensor::random(&[64, 30, 30], 3, 1.0);
+    let a2 = Tensor::random(&[64, 30, 30], 4, 1.0);
+    b.run_throughput("active_update (elems/s)", (64 * 30 * 30) as u64, || {
+        rt.execute("active_update", &[a1.clone(), a2.clone()]).unwrap()
+    });
+
+    // PsimNet end-to-end, b1 vs b8 (batching amortization)
+    let weights: Vec<Tensor> = rt
+        .entry("psimnet_b1")
+        .unwrap()
+        .inputs[1..]
+        .iter()
+        .enumerate()
+        .map(|(i, sig)| Tensor::random(&sig.shape, 100 + i as u64, 0.2))
+        .collect();
+    let img1 = Tensor::random(&[1, 3, 32, 32], 9, 1.0);
+    let mut in1 = vec![img1];
+    in1.extend(weights.iter().cloned());
+    b.run_throughput("psimnet_b1 (img/s)", 1, || rt.execute("psimnet_b1", &in1).unwrap());
+
+    let img8 = Tensor::random(&[8, 3, 32, 32], 10, 1.0);
+    let mut in8 = vec![img8];
+    in8.extend(weights.iter().cloned());
+    b.run_throughput("psimnet_b8 (img/s)", 8, || rt.execute("psimnet_b8", &in8).unwrap());
+
+    b.finish();
+    println!("\nruntime totals: {} execs, mean {:.1} µs/exec", rt.execs, rt.mean_exec_micros());
+}

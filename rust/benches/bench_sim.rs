@@ -1,0 +1,62 @@
+//! Simulator performance: how fast the event-level machine processes
+//! whole networks and single layers — the L3 hot path the perf pass
+//! optimizes (see EXPERIMENTS.md §Perf).
+
+use psim::analytics::bandwidth::ControllerMode;
+use psim::analytics::partition::Strategy;
+use psim::models::zoo;
+use psim::sim::scheduler::{simulate_layer, simulate_network, SimConfig};
+use psim::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+
+    let resnet50 = zoo::resnet50().dense_equivalent();
+    let cfg_a = SimConfig::new(2048, ControllerMode::Active, Strategy::Optimal);
+    let cfg_p = SimConfig::new(2048, ControllerMode::Passive, Strategy::OptimalSearch);
+
+    // Whole-network simulations (the sweep workhorse).
+    let layers = resnet50.layers.len() as u64;
+    b.run_throughput("sim ResNet-50 active/optimal (layers/s)", layers, || {
+        simulate_network(&resnet50, &cfg_a)
+    });
+    b.run_throughput("sim ResNet-50 passive/search (layers/s)", layers, || {
+        simulate_network(&resnet50, &cfg_p)
+    });
+
+    // The transaction-heavy case: tiny tiles -> many iterations.
+    let vgg = zoo::vgg16();
+    let conv2_1 = vgg.layer("conv2_1").unwrap().clone();
+    let cfg_small = SimConfig::new(256, ControllerMode::Passive, Strategy::MaxOutput);
+    b.run("sim vgg conv2_1 @P=256 (psum-storm case)", || {
+        simulate_layer(&conv2_1, &cfg_small)
+    });
+
+    // Full eight-network Table II regeneration through the simulator.
+    let nets = zoo::paper_networks();
+    b.run("sim all-8-networks x P=2048 x 2 modes", || {
+        for net in &nets {
+            for mode in ControllerMode::ALL {
+                let cfg = SimConfig::new(2048, mode, Strategy::Optimal);
+                simulate_network(net, &cfg);
+            }
+        }
+    });
+
+    // Partitioning itself (the analytics hot loop inside every sim call).
+    b.run("partition all-8-networks x 6 budgets (search)", || {
+        for net in &nets {
+            for p in [512usize, 1024, 2048, 4096, 8192, 16384] {
+                for layer in &net.layers {
+                    psim::analytics::partition::partition_layer(
+                        layer,
+                        p,
+                        Strategy::OptimalSearch,
+                        ControllerMode::Passive,
+                    );
+                }
+            }
+        }
+    });
+    b.finish();
+}

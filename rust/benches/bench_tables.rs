@@ -1,0 +1,37 @@
+//! Paper-evaluation bench: regenerates every table and figure of
+//! Section IV and times the full regeneration. `cargo bench` prints the
+//! tables themselves (the reproduction artifact) followed by timings.
+
+use psim::report::{compare, fig2, tables};
+use psim::util::benchkit::Bench;
+
+fn main() {
+    println!("================ TABLE III (minimum bandwidth) ================");
+    print!("{}", tables::table3().to_markdown());
+    println!("\n================ TABLE I (partitioning strategies) ============");
+    print!("{}", tables::table1().to_markdown());
+    println!("\n================ TABLE II (passive vs active) =================");
+    print!("{}", tables::table2().to_markdown());
+    println!("\n================ FIG. 2 (% saving, active controller) =========");
+    print!("{}", fig2::fig2_table().to_markdown());
+
+    println!("\n================ PAPER vs OURS ================================");
+    let cells = compare::compare_all();
+    let s = compare::summarize(&cells);
+    println!(
+        "{} cells: median |Δ| {:.1}%, {} within 5%, {} within 15%, worst {:.1}%\n",
+        s.cells,
+        s.median_rel_diff * 100.0,
+        s.within_5pct,
+        s.within_15pct,
+        s.worst * 100.0
+    );
+
+    let mut b = Bench::new();
+    b.run("table3 (8 networks)", tables::table3);
+    b.run("table1 (96 cells, 4 strategies)", tables::table1);
+    b.run("table2 (96 cells, 2 modes)", tables::table2);
+    b.run("fig2 (48 saving points)", fig2::fig2_table);
+    b.run("validate (200-cell comparison)", compare::compare_all);
+    b.finish();
+}

@@ -1,0 +1,156 @@
+//! Eqs. (2)–(4): bandwidth of one tiled convolution layer.
+//!
+//! With `m` input maps and `n` output maps processed per iteration:
+//!
+//! * input maps are read `N/n` times:  `B_i = Wi*Hi*M * N/n`         (2)
+//! * partial sums are written `M/m` times and read `M/m - 1` times:
+//!   `B_o = Wo*Ho*N * (2*M/m - 1)`                                    (3)
+//! * an **active** memory controller performs the read-add-write inside
+//!   the SRAM controller, so only the writes cross the interconnect:
+//!   `B_o = Wo*Ho*N * M/m`                                   (Section III)
+//!
+//! Grouped convolutions are handled per group (`M/g` in, `N/g` out) and
+//! summed; the partition `(m, n)` applies within a group.
+
+use crate::models::ConvLayer;
+
+/// Whether the SRAM controller can fold the partial-sum addition locally.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ControllerMode {
+    /// Conventional controller: psums are read back over the interconnect.
+    Passive,
+    /// Active controller (Section III): read-update-write happens inside
+    /// the controller; only the write crosses the interconnect.
+    Active,
+}
+
+impl ControllerMode {
+    pub const ALL: [ControllerMode; 2] = [ControllerMode::Passive, ControllerMode::Active];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ControllerMode::Passive => "passive",
+            ControllerMode::Active => "active",
+        }
+    }
+}
+
+/// Bandwidth decomposition for one layer (units: activations moved).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Bandwidth {
+    /// Input-activation traffic, eq. (2).
+    pub input: f64,
+    /// Output/partial-sum traffic, eq. (3) or its active variant.
+    pub output: f64,
+}
+
+impl Bandwidth {
+    pub fn total(&self) -> f64 {
+        self.input + self.output
+    }
+}
+
+/// Compute the bandwidth of `layer` partitioned as `(m, n)` **per group**.
+///
+/// `m` must lie in `[1, M/g]` and `n` in `[1, N/g]`. Non-divisor `m`/`n`
+/// are accepted in the first-order spirit of the paper: iteration counts
+/// are the *ceilings* `ceil(M_g/m)`/`ceil(N_g/n)` (a partial tile costs a
+/// full pass over the data it touches — matching what the simulator does).
+pub fn layer_bandwidth(layer: &ConvLayer, m: usize, n: usize, mode: ControllerMode) -> Bandwidth {
+    let mg = layer.m_per_group();
+    let ng = layer.n_per_group();
+    assert!(m >= 1 && m <= mg, "m={m} out of range [1,{mg}] for {}", layer.name);
+    assert!(n >= 1 && n <= ng, "n={n} out of range [1,{ng}] for {}", layer.name);
+    let g = layer.groups as f64;
+
+    // Iteration counts within a group.
+    let out_iters = (ng + n - 1) / n; // N_g / n, ceil
+    let psum_iters = (mg + m - 1) / m; // M_g / m, ceil
+
+    let wi_hi_mg = (layer.wi * layer.hi * mg) as f64;
+    let wo_ho_ng = (layer.wo() * layer.ho() * ng) as f64;
+
+    let input = wi_hi_mg * out_iters as f64 * g;
+    let output = match mode {
+        ControllerMode::Passive => wo_ho_ng * (2 * psum_iters - 1) as f64 * g,
+        ControllerMode::Active => wo_ho_ng * psum_iters as f64 * g,
+    };
+    Bandwidth { input, output }
+}
+
+/// The layer's floor traffic: everything read once + written once
+/// (the per-layer term of Table III).
+pub fn layer_min_bandwidth(layer: &ConvLayer) -> f64 {
+    (layer.input_activations() + layer.output_activations()) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ConvLayer;
+
+    fn layer() -> ConvLayer {
+        // 13x13, 192 -> 384, k3/p1 (AlexNet conv3 shape)
+        ConvLayer::new("c", 13, 13, 192, 384, 3, 1, 1)
+    }
+
+    #[test]
+    fn full_residency_hits_floor() {
+        // m=M, n=N: everything read once, written once.
+        let l = layer();
+        let bw = layer_bandwidth(&l, 192, 384, ControllerMode::Passive);
+        assert_eq!(bw.total(), layer_min_bandwidth(&l));
+    }
+
+    #[test]
+    fn eq2_eq3_match_hand_calc() {
+        let l = layer();
+        // m=12, n=4: input read 384/4=96 times, psums 192/12=16 iters.
+        let bw = layer_bandwidth(&l, 12, 4, ControllerMode::Passive);
+        assert_eq!(bw.input, (13 * 13 * 192) as f64 * 96.0);
+        assert_eq!(bw.output, (13 * 13 * 384) as f64 * 31.0);
+    }
+
+    #[test]
+    fn active_drops_psum_reads() {
+        let l = layer();
+        let p = layer_bandwidth(&l, 12, 4, ControllerMode::Passive);
+        let a = layer_bandwidth(&l, 12, 4, ControllerMode::Active);
+        assert_eq!(a.input, p.input);
+        // active = writes only = (passive + Wo*Ho*N) / 2
+        let wo_ho_n = (13 * 13 * 384) as f64;
+        assert_eq!(a.output, (p.output + wo_ho_n) / 2.0);
+    }
+
+    #[test]
+    fn m_equal_big_m_never_rereads_psums() {
+        let l = layer();
+        let p = layer_bandwidth(&l, 192, 1, ControllerMode::Passive);
+        let a = layer_bandwidth(&l, 192, 1, ControllerMode::Active);
+        // single psum iteration: passive == active
+        assert_eq!(p.output, a.output);
+    }
+
+    #[test]
+    fn non_divisor_uses_ceil_iterations() {
+        let l = layer();
+        // m=100 of 192 -> 2 psum iterations
+        let bw = layer_bandwidth(&l, 100, 384, ControllerMode::Passive);
+        assert_eq!(bw.output, (13 * 13 * 384) as f64 * 3.0);
+    }
+
+    #[test]
+    fn grouped_conv_sums_groups() {
+        // depthwise 3x3, 32 channels @112
+        let dw = ConvLayer::grouped("dw", 112, 112, 32, 32, 3, 1, 1, 32);
+        let bw = layer_bandwidth(&dw, 1, 1, ControllerMode::Passive);
+        // each group: read Wi*Hi once, write Wo*Ho once (m=M_g -> no rereads)
+        assert_eq!(bw.total(), (112 * 112 * 32 + 112 * 112 * 32) as f64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_m_out_of_range() {
+        layer_bandwidth(&layer(), 500, 1, ControllerMode::Passive);
+    }
+}

@@ -1,0 +1,115 @@
+//! Extensions beyond the paper's model — the "future work" its
+//! assumptions point at, quantified on the same descriptors.
+//!
+//! 1. **Layer fusion** (the paper assumes "no fused operations across
+//!    layers"): if a consumer starts from the producer's on-chip output,
+//!    the intermediate tensor never crosses the interconnect. We bound
+//!    the benefit (perfect fusion) and the on-chip buffer it demands.
+//! 2. **Weight traffic** (the paper tracks activations only): every
+//!    weight is loaded exactly once per inference under the Section II
+//!    loop nest (each weight belongs to exactly one `(co, ci)` tile), so
+//!    weight traffic is partition-invariant — but it *amortizes across a
+//!    batch*, which activation traffic does not.
+//! 3. **Batch amortization**: per-image traffic as a function of batch.
+
+use crate::models::Network;
+
+/// Fusion bound for a network (activations, raw counts).
+#[derive(Clone, Copy, Debug)]
+pub struct FusionReport {
+    /// Paper's floor: every tensor crosses the bus twice (write + read).
+    pub unfused: f64,
+    /// Perfect-fusion floor: only the image (read) and the last layer's
+    /// output (write) cross the bus.
+    pub fused: f64,
+    /// On-chip buffer needed: the largest producer+consumer working set.
+    pub required_buffer_elems: u64,
+}
+
+impl FusionReport {
+    pub fn saving_fraction(&self) -> f64 {
+        (self.unfused - self.fused) / self.unfused
+    }
+}
+
+/// Perfect-fusion bound. Intermediates (every tensor that is both some
+/// layer's output and another's input) stay on chip. With branching
+/// topologies (inception/residual) a tensor may feed several consumers —
+/// fusing removes the write plus *all* re-reads; our per-layer descriptor
+/// list counts each consumer's read separately in `min_bandwidth`, so the
+/// fused floor is simply image-in + final-out.
+pub fn fusion_bound(net: &Network) -> FusionReport {
+    let unfused = net.min_bandwidth() as f64;
+    let image = net.layers.first().map(|l| l.input_activations()).unwrap_or(0);
+    let last_out = net.layers.last().map(|l| l.output_activations()).unwrap_or(0);
+    let fused = (image + last_out) as f64;
+    // Working set: producing layer's input + output resident at once.
+    let required_buffer_elems = net
+        .layers
+        .iter()
+        .map(|l| l.input_activations() + l.output_activations())
+        .max()
+        .unwrap_or(0);
+    FusionReport { unfused, fused, required_buffer_elems }
+}
+
+/// Weight traffic per inference (elements) — partition-invariant under
+/// the Section II loop nest.
+pub fn weight_traffic(net: &Network) -> u64 {
+    net.total_weights()
+}
+
+/// Per-image total traffic at batch size `b`: activations are per-image;
+/// weights amortize (loaded once per batch per tile when the batch is
+/// processed before advancing tiles).
+pub fn per_image_traffic(activations_per_image: f64, weights: u64, b: usize) -> f64 {
+    assert!(b > 0);
+    activations_per_image + weights as f64 / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn fusion_bound_basics() {
+        let net = zoo::alexnet();
+        let f = fusion_bound(&net);
+        assert!(f.fused < f.unfused);
+        // image 3*224*224 + conv5 out 256*13*13
+        assert_eq!(f.fused, (3 * 224 * 224 + 256 * 13 * 13) as f64);
+        assert!(f.saving_fraction() > 0.5, "{}", f.saving_fraction());
+        assert!(f.required_buffer_elems > 0);
+    }
+
+    #[test]
+    fn fusion_saving_monotone_sanity() {
+        // Deeper nets with big intermediates save relatively more.
+        let vgg = fusion_bound(&zoo::vgg16());
+        assert!(vgg.saving_fraction() > 0.9);
+    }
+
+    #[test]
+    fn weight_traffic_is_total_weights() {
+        let net = zoo::resnet18();
+        assert_eq!(weight_traffic(&net), net.total_weights());
+    }
+
+    #[test]
+    fn batch_amortization() {
+        let w = 1_000_000u64;
+        let a = 5_000_000.0;
+        let b1 = per_image_traffic(a, w, 1);
+        let b8 = per_image_traffic(a, w, 8);
+        assert!(b8 < b1);
+        assert_eq!(b1 - a, 1_000_000.0);
+        assert_eq!(b8 - a, 125_000.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_batch_rejected() {
+        per_image_traffic(1.0, 1, 0);
+    }
+}

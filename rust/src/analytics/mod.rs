@@ -1,0 +1,28 @@
+//! The paper's first-order analytical bandwidth model (Sections II–III).
+//!
+//! Everything in this module is pure arithmetic over
+//! [`ConvLayer`](crate::models::ConvLayer) shapes — no simulation, no
+//! tensors. The event-level simulator in [`crate::sim`] validates these
+//! formulas transaction-by-transaction.
+//!
+//! * [`bandwidth`] — eqs. (2)–(4): input/output traffic of a tiled conv.
+//! * [`partition`] — the four partitioning strategies of Table I.
+//! * [`optimizer`] — eq. (7) closed form + the divisor-constrained search.
+//! * [`sweep`] — network-level aggregation over MAC budgets/strategies.
+//! * [`extensions`] — beyond the paper: fusion bound, weight traffic,
+//!   batch amortization.
+//! * [`spatial`] — beyond the paper: spatial (row-stripe) tiling with
+//!   halo re-reads, and the SRAM-budget -> stripe-height tradeoff.
+//! * [`paper`] — the published Tables I/II/III + Fig. 2 reference data.
+
+pub mod bandwidth;
+pub mod extensions;
+pub mod optimizer;
+pub mod paper;
+pub mod partition;
+pub mod spatial;
+pub mod sweep;
+
+pub use bandwidth::{layer_bandwidth, Bandwidth, ControllerMode};
+pub use partition::{partition_layer, Partition, Strategy};
+pub use sweep::{network_bandwidth, NetworkReport};

@@ -1,0 +1,171 @@
+//! Eq. (7) and its integer adaptation, plus an exhaustive divisor search
+//! used both as an ablation baseline and to validate that the closed form
+//! lands on (or next to) the true discrete optimum.
+
+use crate::models::ConvLayer;
+use crate::util::mathx::{divisors, nearest_divisor_log};
+
+use super::bandwidth::{layer_bandwidth, ControllerMode};
+use super::partition::Partition;
+
+/// The real-valued optimum of eq. (7) for a layer (per group).
+///
+/// Passive controller (paper eq. 7):
+///   `m* = sqrt(2 * Wo*Ho * P / (Wi*Hi * K^2))`
+///
+/// Active controller: the psum read-back term disappears from `B(m)`
+/// (`B_o = Wo*Ho*N*M/m`), so minimizing
+/// `B(m) = Wi*Hi*M*N*K^2/P * m + Wo*Ho*N*M/m` gives the same expression
+/// without the factor 2.
+pub fn optimal_m_real(layer: &ConvLayer, p_macs: usize, mode: ControllerMode) -> f64 {
+    let wo_ho = (layer.wo() * layer.ho()) as f64;
+    let wi_hi = (layer.wi * layer.hi) as f64;
+    let k2 = (layer.k * layer.k) as f64;
+    let factor = match mode {
+        ControllerMode::Passive => 2.0,
+        ControllerMode::Active => 1.0,
+    };
+    (factor * wo_ho * p_macs as f64 / (wi_hi * k2)).sqrt()
+}
+
+/// Adapt the real-valued `m*` per the paper: clamp to `[1, M]` and snap to
+/// a divisor of `M` (nearest in log space — the bandwidth terms scale as
+/// `m` and `1/m`, so multiplicative distance is the right metric). The
+/// result is further capped so at least one output map fits: `K^2 m <= P`.
+pub fn adapt_m(layer: &ConvLayer, p_macs: usize, m_real: f64) -> usize {
+    let mg = layer.m_per_group();
+    let k2 = layer.k * layer.k;
+    let cap = (p_macs / k2).max(1).min(mg);
+    let clamped = m_real.clamp(1.0, cap as f64);
+    let snapped = nearest_divisor_log(mg, clamped);
+    if snapped <= cap {
+        snapped
+    } else {
+        // nearest divisor overshot the MAC budget: take the largest
+        // divisor within the cap.
+        divisors(mg).into_iter().filter(|&d| d <= cap).max().unwrap_or(1)
+    }
+}
+
+/// Given `m`, allocate the remaining MACs to output maps per eq. (5):
+/// `n = P / (K^2 m)`, floored, clamped to `[1, N]`.
+pub fn n_from_budget(layer: &ConvLayer, p_macs: usize, m: usize) -> usize {
+    let k2 = layer.k * layer.k;
+    (p_macs / (k2 * m)).max(1).min(layer.n_per_group())
+}
+
+/// The paper's partition (Section II): eq. (7) + integer adaptation.
+pub fn optimal_partition(layer: &ConvLayer, p_macs: usize, mode: ControllerMode) -> Partition {
+    let m = adapt_m(layer, p_macs, optimal_m_real(layer, p_macs, mode));
+    Partition { m, n: n_from_budget(layer, p_macs, m) }
+}
+
+/// Exhaustive discrete optimum: `m` over divisors of `M` (integral psum
+/// passes, the paper's adaptation rule) and `n` over the feasible range
+/// `[1, min(N, P/(K^2 m))]` — the same feasible set the closed form draws
+/// its floor-adapted `n` from. Used to (a) ablate the closed form and (b)
+/// bound how much the integer adaptation gives away.
+///
+/// Perf note (EXPERIMENTS.md §Perf L3-1): bandwidth is monotone
+/// non-increasing in `n` (it enters only through `ceil(N/n)` input
+/// passes), so the inner dimension needs no scan — the feasible maximum
+/// `n_cap` is optimal for every `m`. This replaced an `O(n_cap)` loop.
+pub fn search_partition(layer: &ConvLayer, p_macs: usize, mode: ControllerMode) -> Partition {
+    let mg = layer.m_per_group();
+    let ng = layer.n_per_group();
+    let k2 = layer.k * layer.k;
+    let mut best = Partition { m: 1, n: 1 };
+    let mut best_bw = f64::INFINITY;
+    for m in divisors(mg) {
+        if k2 * m > p_macs && m > 1 {
+            break; // divisors ascending: no larger m fits either
+        }
+        let n = (p_macs / (k2 * m)).max(1).min(ng);
+        let bw = layer_bandwidth(layer, m, n, mode).total();
+        if bw < best_bw {
+            best_bw = bw;
+            best = Partition { m, n };
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ConvLayer;
+
+    fn conv3() -> ConvLayer {
+        // AlexNet conv3: 13x13, 192 -> 384, k3
+        ConvLayer::new("conv3", 13, 13, 192, 384, 3, 1, 1)
+    }
+
+    #[test]
+    fn eq7_hand_calc() {
+        // m* = sqrt(2 * 169 * 512 / (169 * 9)) = sqrt(1024/9) = 10.666..
+        let m = optimal_m_real(&conv3(), 512, ControllerMode::Passive);
+        assert!((m - 10.666).abs() < 0.01, "got {m}");
+        // active drops the factor 2: sqrt(512/9) = 7.54
+        let ma = optimal_m_real(&conv3(), 512, ControllerMode::Active);
+        assert!((ma - 7.542).abs() < 0.01, "got {ma}");
+    }
+
+    #[test]
+    fn adapt_snaps_to_divisor() {
+        let l = conv3();
+        let m = adapt_m(&l, 512, 10.666);
+        assert_eq!(192 % m, 0);
+        // nearest divisors of 192 around 10.67 are 8 and 12; log-nearest is 12
+        assert_eq!(m, 12);
+    }
+
+    #[test]
+    fn adapt_respects_mac_budget() {
+        // K=11 -> K^2=121; P=512 -> cap = 4; M=64
+        let l = ConvLayer::new("c", 224, 224, 64, 64, 11, 4, 2);
+        let m = adapt_m(&l, 512, 50.0);
+        assert!(m * 121 <= 512);
+        assert_eq!(64 % m, 0);
+    }
+
+    #[test]
+    fn n_from_budget_clamps() {
+        let l = conv3();
+        assert_eq!(n_from_budget(&l, 512, 12), 4); // 512/(9*12) = 4.74 -> 4
+        assert_eq!(n_from_budget(&l, 1_000_000, 192), 384); // clamped to N
+        assert_eq!(n_from_budget(&l, 9, 1), 1); // at least 1
+    }
+
+    #[test]
+    fn search_beats_or_matches_formula() {
+        for p in [512usize, 2048, 16384] {
+            for mode in ControllerMode::ALL {
+                let l = conv3();
+                let f = optimal_partition(&l, p, mode);
+                let s = search_partition(&l, p, mode);
+                let bf = layer_bandwidth(&l, f.m, f.n, mode).total();
+                let bs = layer_bandwidth(&l, s.m, s.n, mode).total();
+                assert!(bs <= bf + 1e-9, "search worse than formula at P={p}");
+                // and the closed form should be within 25% of discrete optimum
+                assert!(bf <= bs * 1.25, "formula {bf} far from optimum {bs}");
+            }
+        }
+    }
+
+    #[test]
+    fn search_respects_constraint() {
+        let l = conv3();
+        let s = search_partition(&l, 512, ControllerMode::Passive);
+        assert!(l.k * l.k * s.m * s.n <= 512);
+    }
+
+    #[test]
+    fn infeasible_budget_degrades_to_unit_tile() {
+        // K^2 = 121 > P = 100: must still run at m=n=1.
+        let l = ConvLayer::new("c", 32, 32, 8, 8, 11, 1, 5);
+        let s = search_partition(&l, 100, ControllerMode::Passive);
+        assert_eq!((s.m, s.n), (1, 1));
+        let f = optimal_partition(&l, 100, ControllerMode::Passive);
+        assert_eq!((f.m, f.n), (1, 1));
+    }
+}

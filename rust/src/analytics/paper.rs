@@ -1,0 +1,228 @@
+//! The numbers published in the paper (Tables I–III; Fig. 2 is derived
+//! from Table II). Used by `psim validate`, the regression tests and
+//! EXPERIMENTS.md to quantify how closely this implementation reproduces
+//! the published evaluation.
+//!
+//! Units: million activations per inference image.
+
+/// Paper's network order in every table.
+pub const NETWORKS: [&str; 8] = [
+    "AlexNet",
+    "VGG-16",
+    "SqueezeNet",
+    "GoogleNet",
+    "ResNet-18",
+    "ResNet-50",
+    "MobileNet",
+    "MNASNet",
+];
+
+/// Table III: minimum bandwidth (read once + write once).
+pub const TABLE3_MIN_BW: [(&str, f64); 8] = [
+    ("AlexNet", 0.823),
+    ("VGG-16", 20.095),
+    ("SqueezeNet", 7.304),
+    ("GoogleNet", 7.889),
+    ("ResNet-18", 4.666),
+    ("ResNet-50", 28.349),
+    ("MobileNet", 10.273),
+    ("MNASNet", 11.001),
+];
+
+/// MAC budgets of Table I columns.
+pub const TABLE1_MACS: [usize; 3] = [512, 2048, 16384];
+
+/// Table I rows: per network, for each P in [`TABLE1_MACS`], the four
+/// strategies `[max_input, max_output, equal_macs, this_work]`.
+pub const TABLE1: [(&str, [[f64; 4]; 3]); 8] = [
+    ("AlexNet", [
+        [61.9, 94.2, 26.2, 25.1],
+        [52.2, 64.6, 13.0, 12.6],
+        [9.2, 10.9, 7.3, 4.3],
+    ]),
+    ("VGG-16", [
+        [1170.3, 1938.6, 494.2, 442.5],
+        [909.5, 1309.3, 269.3, 237.2],
+        [207.1, 241.1, 151.0, 83.5],
+    ]),
+    ("SqueezeNet", [
+        [199.6, 244.8, 65.9, 52.0],
+        [53.6, 105.2, 47.4, 26.2],
+        [12.6, 17.3, 34.8, 11.1],
+    ]),
+    ("GoogleNet", [
+        [431.7, 313.6, 102.5, 93.5],
+        [174.6, 151.6, 61.2, 47.7],
+        [23.8, 24.1, 41.6, 17.5],
+    ]),
+    ("ResNet-18", [
+        [281.2, 315.8, 96.1, 88.9],
+        [205.0, 191.6, 50.9, 46.8],
+        [35.1, 31.7, 26.9, 16.0],
+    ]),
+    ("ResNet-50", [
+        [5245.2, 5770.4, 1059.2, 952.6],
+        [2909.0, 2830.4, 608.6, 479.5],
+        [929.8, 682.5, 330.1, 168.5],
+    ]),
+    ("MobileNet", [
+        [215.0, 209.2, 78.5, 68.3],
+        [136.8, 116.2, 48.8, 35.0],
+        [21.9, 21.0, 34.9, 16.1],
+    ]),
+    ("MNASNet", [
+        [884.4, 1294.1, 405.3, 373.4],
+        [722.0, 1030.3, 213.4, 183.0],
+        [500.2, 516.3, 101.8, 66.0],
+    ]),
+];
+
+/// MAC budgets of Table II columns.
+pub const TABLE2_MACS: [usize; 6] = [512, 1024, 2048, 4096, 8192, 16384];
+
+/// Table II: per network, passive then active controller bandwidth for
+/// each P in [`TABLE2_MACS`] (optimal partitioning per mode).
+pub const TABLE2: [(&str, [f64; 6], [f64; 6]); 8] = [
+    (
+        "AlexNet",
+        [25.07, 17.54, 12.56, 8.89, 6.52, 4.32],
+        [17.89, 12.62, 8.77, 6.38, 4.55, 3.51],
+    ),
+    (
+        "VGG-16",
+        [442.49, 321.79, 237.25, 169.43, 112.14, 83.54],
+        [315.33, 225.44, 161.67, 123.36, 89.97, 63.67],
+    ),
+    (
+        "SqueezeNet",
+        [51.98, 37.47, 26.22, 20.04, 14.12, 11.10],
+        [40.06, 27.35, 20.76, 14.87, 12.61, 9.78],
+    ),
+    (
+        "GoogleNet",
+        [93.46, 67.17, 47.65, 35.20, 23.23, 17.51],
+        [69.90, 48.37, 35.77, 25.95, 20.63, 14.62],
+    ),
+    (
+        "ResNet-18",
+        [88.87, 63.56, 46.79, 32.86, 22.01, 16.02],
+        [63.52, 45.53, 32.34, 24.74, 17.81, 12.90],
+    ),
+    (
+        "ResNet-50",
+        [952.60, 691.13, 479.50, 349.75, 232.82, 168.46],
+        [691.98, 480.49, 346.77, 242.90, 183.09, 121.93],
+    ),
+    (
+        "MobileNet",
+        [68.53, 46.74, 35.14, 25.22, 21.00, 16.02],
+        [50.90, 39.03, 27.69, 22.66, 17.82, 15.58],
+    ),
+    (
+        "MNASNet",
+        [373.41, 264.36, 183.01, 128.27, 92.35, 65.96],
+        [258.91, 188.75, 131.06, 94.92, 67.80, 50.40],
+    ),
+];
+
+/// Paper Table III lookup.
+pub fn table3(network: &str) -> Option<f64> {
+    TABLE3_MIN_BW.iter().find(|(n, _)| *n == network).map(|(_, v)| *v)
+}
+
+/// Paper Table I lookup: (network, P) -> [max_in, max_out, equal, this_work].
+pub fn table1(network: &str, p_macs: usize) -> Option<[f64; 4]> {
+    let pi = TABLE1_MACS.iter().position(|&p| p == p_macs)?;
+    TABLE1.iter().find(|(n, _)| *n == network).map(|(_, rows)| rows[pi])
+}
+
+/// Paper Table II lookup: (network, P) -> (passive, active).
+pub fn table2(network: &str, p_macs: usize) -> Option<(f64, f64)> {
+    let pi = TABLE2_MACS.iter().position(|&p| p == p_macs)?;
+    TABLE2.iter().find(|(n, _, _)| *n == network).map(|(_, pa, ac)| (pa[pi], ac[pi]))
+}
+
+/// Fig. 2's y-value: percentage saving of active vs passive.
+pub fn fig2_saving(network: &str, p_macs: usize) -> Option<f64> {
+    table2(network, p_macs).map(|(pa, ac)| (pa - ac) / pa * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookups_cover_all_networks() {
+        for n in NETWORKS {
+            assert!(table3(n).is_some(), "{n} missing from table3");
+            for p in TABLE1_MACS {
+                assert!(table1(n, p).is_some(), "{n}/{p} missing from table1");
+            }
+            for p in TABLE2_MACS {
+                assert!(table2(n, p).is_some(), "{n}/{p} missing from table2");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_network_is_none() {
+        assert!(table3("LeNet").is_none());
+        assert!(table1("LeNet", 512).is_none());
+        assert!(table2("LeNet", 512).is_none());
+    }
+
+    #[test]
+    fn table2_active_below_passive_everywhere() {
+        for (_, pa, ac) in TABLE2 {
+            for i in 0..6 {
+                assert!(ac[i] < pa[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn table1_this_work_wins_table() {
+        // The paper's headline: column 4 minimal in every cell.
+        for (net, rows) in TABLE1 {
+            for (pi, row) in rows.iter().enumerate() {
+                for s in 0..3 {
+                    assert!(
+                        row[3] <= row[s],
+                        "{net} P={} col{} {} < this-work {}",
+                        TABLE1_MACS[pi],
+                        s,
+                        row[s],
+                        row[3]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig2_savings_in_paper_band() {
+        // Paper: gains 19-42% at small P, 2-38% at 16K.
+        for n in NETWORKS {
+            let s512 = fig2_saving(n, 512).unwrap();
+            assert!((15.0..45.0).contains(&s512), "{n}: {s512}");
+            let s16k = fig2_saving(n, 16384).unwrap();
+            assert!((1.0..40.0).contains(&s16k), "{n}: {s16k}");
+        }
+    }
+
+    #[test]
+    fn table2_this_work_consistent_with_table1() {
+        // Table II passive @ P in {512, 2048, 16384} should equal Table I
+        // "This Work" (both are optimal partitioning, passive controller).
+        for (net, rows) in TABLE1 {
+            for (pi, &p) in TABLE1_MACS.iter().enumerate() {
+                let (pa, _) = table2(net, p).unwrap();
+                let tw = rows[pi][3];
+                assert!(
+                    (pa - tw).abs() < 0.06 + tw * 0.01,
+                    "{net} P={p}: table2 {pa} vs table1 {tw}"
+                );
+            }
+        }
+    }
+}

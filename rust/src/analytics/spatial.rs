@@ -1,0 +1,173 @@
+//! Spatial-tiling extension: the paper partitions only the channel
+//! dimensions `(m, n)`; real accelerators also tile the `Wo x Ho` plane
+//! when a full row set does not fit on chip. Spatial tiles overlap by
+//! `K - 1` rows/cols of *halo*, so input traffic grows with the tile
+//! count — a second-order term the paper's model omits. This module
+//! quantifies it and finds the traffic-optimal row-tile height.
+//!
+//! Model: output rows are processed in horizontal stripes of height `T`
+//! (full width). Each stripe needs `T*stride + K - stride` input rows, so
+//! a stripe re-reads `K - stride` halo rows shared with its neighbour
+//! (clamped at 0 for stride >= K). Channel partitioning composes
+//! multiplicatively, exactly as in eqs. (2)-(3).
+
+use crate::models::ConvLayer;
+
+use super::bandwidth::{Bandwidth, ControllerMode};
+
+/// Input rows needed by one output stripe of height `t`.
+fn input_rows_for_stripe(layer: &ConvLayer, t: usize) -> usize {
+    t * layer.stride + layer.k.saturating_sub(layer.stride)
+}
+
+/// Bandwidth of `layer` tiled as `(m, n)` channels x `t` output rows per
+/// stripe. `t = Ho` reproduces [`super::bandwidth::layer_bandwidth`]
+/// exactly (no halo).
+pub fn layer_bandwidth_spatial(
+    layer: &ConvLayer,
+    m: usize,
+    n: usize,
+    t: usize,
+    mode: ControllerMode,
+) -> Bandwidth {
+    let mg = layer.m_per_group();
+    let ng = layer.n_per_group();
+    let ho = layer.ho();
+    assert!(m >= 1 && m <= mg, "m out of range");
+    assert!(n >= 1 && n <= ng, "n out of range");
+    assert!(t >= 1 && t <= ho, "t out of range [1,{ho}]");
+    let g = layer.groups as f64;
+
+    let out_iters = (ng + n - 1) / n;
+    let psum_iters = (mg + m - 1) / m;
+    let stripes = (ho + t - 1) / t;
+
+    // Input rows touched per full pass over the plane: each stripe pulls
+    // its rows (with halos), bounded by the physical row count per pass
+    // only when t == ho (single stripe).
+    let mut rows_per_pass = 0usize;
+    for s in 0..stripes {
+        let t_eff = t.min(ho - s * t);
+        rows_per_pass += input_rows_for_stripe(layer, t_eff).min(layer.hi);
+    }
+
+    let input = (layer.wi * rows_per_pass * mg) as f64 * out_iters as f64 * g;
+    let wo_ho_ng = (layer.wo() * ho * ng) as f64;
+    let output = match mode {
+        ControllerMode::Passive => wo_ho_ng * (2 * psum_iters - 1) as f64 * g,
+        ControllerMode::Active => wo_ho_ng * psum_iters as f64 * g,
+    };
+    Bandwidth { input, output }
+}
+
+/// Halo overhead of stripe height `t`: extra input traffic relative to
+/// the unstriped plane, as a fraction (0 = free).
+pub fn halo_overhead(layer: &ConvLayer, t: usize) -> f64 {
+    let full = layer_bandwidth_spatial(layer, layer.m_per_group(), layer.n_per_group(), layer.ho(),
+        ControllerMode::Passive);
+    let tiled = layer_bandwidth_spatial(layer, layer.m_per_group(), layer.n_per_group(), t,
+        ControllerMode::Passive);
+    (tiled.input - full.input) / full.input
+}
+
+/// On-chip working set (elements) for a stripe of height `t` with channel
+/// tile `(m, n)`: input rows + psum stripe + weight tile.
+pub fn stripe_working_set(layer: &ConvLayer, m: usize, n: usize, t: usize) -> u64 {
+    let in_rows = input_rows_for_stripe(layer, t).min(layer.hi);
+    (layer.wi * in_rows * m + layer.wo() * t * n + n * m * layer.k * layer.k) as u64
+}
+
+/// Smallest stripe height whose working set fits `budget_elems`, together
+/// with its halo overhead — the knob an SRAM-constrained design would
+/// turn. Returns `None` if even `t = 1` does not fit.
+pub fn max_stripe_within(
+    layer: &ConvLayer,
+    m: usize,
+    n: usize,
+    budget_elems: u64,
+) -> Option<(usize, f64)> {
+    let ho = layer.ho();
+    let mut best = None;
+    for t in 1..=ho {
+        if stripe_working_set(layer, m, n, t) <= budget_elems {
+            best = Some(t);
+        } else {
+            break; // working set is monotone in t
+        }
+    }
+    best.map(|t| (t, halo_overhead(layer, t)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::bandwidth::layer_bandwidth;
+    use crate::models::ConvLayer;
+
+    fn layer() -> ConvLayer {
+        ConvLayer::new("c", 56, 56, 64, 128, 3, 1, 1)
+    }
+
+    #[test]
+    fn full_stripe_matches_channel_only_model() {
+        let l = layer();
+        for mode in ControllerMode::ALL {
+            let a = layer_bandwidth(&l, 16, 8, mode);
+            let b = layer_bandwidth_spatial(&l, 16, 8, l.ho(), mode);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn halo_grows_as_stripes_shrink() {
+        let l = layer();
+        let mut prev = -1.0;
+        for t in [56usize, 28, 14, 7, 4, 2, 1] {
+            let ov = halo_overhead(&l, t);
+            assert!(ov >= prev, "overhead not monotone at t={t}");
+            assert!(ov >= 0.0);
+            prev = ov;
+        }
+        // K=3,s=1: t=1 stripes read 3 rows per output row (≈3x near edges)
+        assert!(halo_overhead(&l, 1) > 1.0);
+        assert!(halo_overhead(&l, 56) < 1e-12);
+    }
+
+    #[test]
+    fn one_by_one_kernel_has_no_halo() {
+        let l = ConvLayer::new("pw", 28, 28, 64, 64, 1, 1, 0);
+        for t in [1usize, 4, 28] {
+            assert_eq!(halo_overhead(&l, t), 0.0);
+        }
+    }
+
+    #[test]
+    fn strided_conv_shrinks_halo() {
+        let s1 = ConvLayer::new("a", 56, 56, 8, 8, 3, 1, 1);
+        let s2 = ConvLayer::new("b", 56, 56, 8, 8, 3, 2, 1);
+        // halo rows = K - stride: 2 vs 1
+        assert!(halo_overhead(&s2, 4) < halo_overhead(&s1, 4));
+    }
+
+    #[test]
+    fn working_set_monotone_and_budget_search() {
+        let l = layer();
+        let mut prev = 0;
+        for t in 1..=l.ho() {
+            let ws = stripe_working_set(&l, 16, 8, t);
+            assert!(ws >= prev);
+            prev = ws;
+        }
+        // Big budget: whole plane fits -> no overhead.
+        let (t, ov) = max_stripe_within(&l, 16, 8, u64::MAX).unwrap();
+        assert_eq!(t, l.ho());
+        assert_eq!(ov, 0.0);
+        // Tiny budget: nothing fits.
+        assert!(max_stripe_within(&l, 16, 8, 10).is_none());
+        // Medium budget: some stripe with positive overhead.
+        let ws_t4 = stripe_working_set(&l, 16, 8, 4);
+        let (t4, ov4) = max_stripe_within(&l, 16, 8, ws_t4).unwrap();
+        assert!(t4 >= 4);
+        assert!(ov4 > 0.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Network-level aggregation: apply a strategy to every conv layer and sum
+//! the traffic — the quantity the paper tabulates (million activations per
+//! inference image).
+
+use crate::models::{ConvLayer, Network};
+
+use super::bandwidth::{layer_bandwidth, Bandwidth, ControllerMode};
+use super::partition::{partition_layer, Partition, Strategy};
+
+/// Per-layer outcome of a partitioning decision.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub layer: ConvLayer,
+    pub partition: Partition,
+    pub bandwidth: Bandwidth,
+}
+
+/// Whole-network outcome.
+#[derive(Clone, Debug)]
+pub struct NetworkReport {
+    pub network: String,
+    pub p_macs: usize,
+    pub strategy: Strategy,
+    pub mode: ControllerMode,
+    pub layers: Vec<LayerReport>,
+}
+
+impl NetworkReport {
+    /// Total activations moved (inputs + outputs/psums).
+    pub fn total(&self) -> f64 {
+        self.layers.iter().map(|l| l.bandwidth.total()).sum()
+    }
+
+    /// Total in million activations (the paper's tabulated unit).
+    pub fn total_mact(&self) -> f64 {
+        self.total() / 1.0e6
+    }
+
+    /// Input-traffic share of the total (used in the ablation benches).
+    pub fn input_fraction(&self) -> f64 {
+        let i: f64 = self.layers.iter().map(|l| l.bandwidth.input).sum();
+        i / self.total()
+    }
+}
+
+/// Partition every layer of `net` and report the summed bandwidth.
+pub fn network_bandwidth(
+    net: &Network,
+    p_macs: usize,
+    strategy: Strategy,
+    mode: ControllerMode,
+) -> NetworkReport {
+    let layers = net
+        .layers
+        .iter()
+        .map(|layer| {
+            let partition = partition_layer(layer, p_macs, strategy, mode);
+            let bandwidth = layer_bandwidth(layer, partition.m, partition.n, mode);
+            LayerReport { layer: layer.clone(), partition, bandwidth }
+        })
+        .collect();
+    NetworkReport { network: net.name.clone(), p_macs, strategy, mode, layers }
+}
+
+/// The Table III floor for a network, in raw activations.
+pub fn min_bandwidth(net: &Network) -> f64 {
+    net.min_bandwidth() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn totals_are_sums_of_layers() {
+        let net = zoo::alexnet();
+        let r = network_bandwidth(&net, 2048, Strategy::Optimal, ControllerMode::Passive);
+        let manual: f64 = r.layers.iter().map(|l| l.bandwidth.total()).sum();
+        assert_eq!(r.total(), manual);
+        assert_eq!(r.layers.len(), net.layers.len());
+    }
+
+    #[test]
+    fn bandwidth_never_below_floor() {
+        for net in zoo::paper_networks() {
+            for p in [512usize, 2048, 16384] {
+                for s in Strategy::TABLE1 {
+                    for mode in ControllerMode::ALL {
+                        let r = network_bandwidth(&net, p, s, mode);
+                        assert!(
+                            r.total() >= min_bandwidth(&net) - 1e-6,
+                            "{} {:?} {:?} P={p}: {} < floor {}",
+                            net.name,
+                            s,
+                            mode,
+                            r.total(),
+                            min_bandwidth(&net)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn huge_mac_budget_approaches_floor() {
+        // Paper Section IV: "with a very large number of MACs, it
+        // approaches the minimum bandwidth as given in table III".
+        let net = zoo::alexnet();
+        let r = network_bandwidth(&net, 1 << 26, Strategy::OptimalSearch, ControllerMode::Passive);
+        let floor = min_bandwidth(&net);
+        assert!((r.total() - floor).abs() / floor < 1e-9, "{} vs {floor}", r.total());
+    }
+
+    #[test]
+    fn active_le_passive_for_same_strategy() {
+        for net in zoo::paper_networks() {
+            for p in [512usize, 4096] {
+                let pa = network_bandwidth(&net, p, Strategy::Optimal, ControllerMode::Passive);
+                let ac = network_bandwidth(&net, p, Strategy::Optimal, ControllerMode::Active);
+                assert!(
+                    ac.total() <= pa.total() + 1e-6,
+                    "{} P={p}: active {} > passive {}",
+                    net.name,
+                    ac.total(),
+                    pa.total()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_macs_never_hurt_search_strategy() {
+        let net = zoo::resnet18();
+        let mut prev = f64::INFINITY;
+        for p in [512usize, 1024, 2048, 4096, 8192, 16384] {
+            let t =
+                network_bandwidth(&net, p, Strategy::OptimalSearch, ControllerMode::Passive).total();
+            assert!(t <= prev + 1e-6, "P={p}: {t} > {prev}");
+            prev = t;
+        }
+    }
+}

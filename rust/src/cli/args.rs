@@ -1,0 +1,141 @@
+//! Tiny argument parser: `psim <command> [--key value]... [--flag]...`.
+//! (clap is not in the offline vendor set.)
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Option keys the command actually read (unknown-option detection).
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args { command: argv.first().cloned().unwrap_or_default(), ..Default::default() };
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    args.options.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                bail!("unexpected positional argument '{a}' (options start with --)");
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated usize list.
+    pub fn opt_usize_list(&self, key: &str) -> Result<Option<Vec<usize>>> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad integer '{p}'"))
+                })
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on any option/flag the command never consulted.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.options.keys() {
+            if !consumed.contains(k) {
+                bail!("unknown option --{k} for '{}'", self.command);
+            }
+        }
+        for f in &self.flags {
+            if !consumed.contains(f) {
+                bail!("unknown flag --{f} for '{}'", self.command);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let a = Args::parse(&sv(&["simulate", "--network", "AlexNet", "--macs=2048", "--trace"]))
+            .unwrap();
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.opt("network"), Some("AlexNet"));
+        assert_eq!(a.opt_usize("macs").unwrap(), Some(2048));
+        assert!(a.flag("trace"));
+        assert!(!a.flag("csv"));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(&sv(&["sweep", "--macs", "512,1024, 2048"])).unwrap();
+        assert_eq!(a.opt_usize_list("macs").unwrap(), Some(vec![512, 1024, 2048]));
+    }
+
+    #[test]
+    fn rejects_unknown_options() {
+        let a = Args::parse(&sv(&["table1", "--bogus", "1"])).unwrap();
+        let _ = a.flag("csv");
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(&sv(&["run", "file.txt"])).is_err());
+    }
+
+    #[test]
+    fn bad_integer_reported() {
+        let a = Args::parse(&sv(&["x", "--macs", "lots"])).unwrap();
+        assert!(a.opt_usize("macs").is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! `networks` and `analyze`: zoo inspection and per-layer partitioning.
+
+use anyhow::{anyhow, Result};
+
+use crate::analytics::bandwidth::{layer_bandwidth, ControllerMode};
+use crate::analytics::optimizer;
+use crate::analytics::partition::{partition_layer, Strategy};
+use crate::cli::args::Args;
+use crate::config::accel::{parse_mode, parse_strategy};
+use crate::models::zoo;
+use crate::util::tablefmt::{mact, Table};
+
+pub(crate) fn mode_from(args: &Args) -> Result<ControllerMode> {
+    args.opt("mode").map(parse_mode).transpose().map(|m| m.unwrap_or(ControllerMode::Passive))
+}
+
+pub(crate) fn strategy_from(args: &Args) -> Result<Strategy> {
+    args.opt("strategy")
+        .map(parse_strategy)
+        .transpose()
+        .map(|s| s.unwrap_or(Strategy::Optimal))
+}
+
+/// `psim networks` — the zoo at a glance.
+pub fn networks(args: &Args) -> Result<i32> {
+    let faithful = args.flag("faithful");
+    let csv = args.flag("csv");
+    args.reject_unknown()?;
+    let nets = if faithful { zoo::faithful_networks() } else { zoo::paper_networks() };
+    let mut t = Table::new(vec!["CNN", "conv layers", "MACs (G)", "weights (M)", "min BW (M act)"]);
+    for net in nets.iter().chain(zoo::extra_networks().iter()) {
+        t.row(vec![
+            net.name.clone(),
+            net.layers.len().to_string(),
+            format!("{:.2}", net.total_macs() as f64 / 1e9),
+            format!("{:.2}", net.total_weights() as f64 / 1e6),
+            mact(net.min_bandwidth() as f64, 3),
+        ]);
+    }
+    if csv {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.to_markdown());
+    }
+    Ok(0)
+}
+
+/// `psim analyze --network NAME --macs P [--strategy S] [--mode M]`.
+pub fn analyze(args: &Args) -> Result<i32> {
+    let name = args.opt("network").ok_or_else(|| anyhow!("--network is required"))?.to_string();
+    let p_macs = args.opt_usize("macs")?.unwrap_or(2048);
+    let mode = mode_from(args)?;
+    let strategy = strategy_from(args)?;
+    let csv = args.flag("csv");
+    args.reject_unknown()?;
+
+    let net = zoo::by_name(&name)
+        .ok_or_else(|| anyhow!("unknown network '{name}' — see `psim networks`"))?;
+    let mut t = Table::new(vec![
+        "layer", "shape", "m", "n", "m* (eq.7)", "MAC util", "B_i (M)", "B_o (M)", "B (M)",
+    ]);
+    let mut total = 0.0;
+    for layer in &net.layers {
+        let part = partition_layer(layer, p_macs, strategy, mode);
+        let bw = layer_bandwidth(layer, part.m, part.n, mode);
+        let m_star = optimizer::optimal_m_real(layer, p_macs, mode);
+        total += bw.total();
+        t.row(vec![
+            layer.name.clone(),
+            format!("{}x{}x{}→{}x{}x{} k{}{}",
+                layer.wi, layer.hi, layer.m, layer.wo(), layer.ho(), layer.n, layer.k,
+                if layer.groups > 1 { format!(" g{}", layer.groups) } else { String::new() }),
+            part.m.to_string(),
+            part.n.to_string(),
+            format!("{m_star:.2}"),
+            format!("{:.0}%", (layer.k * layer.k * part.m * part.n) as f64 / p_macs as f64 * 100.0),
+            mact(bw.input, 2),
+            mact(bw.output, 2),
+            mact(bw.total(), 2),
+        ]);
+    }
+    if csv {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.to_markdown());
+    }
+    println!(
+        "\n{} @ P={p_macs}, {} controller, {} strategy: total {} M activations \
+         (floor {} M)",
+        net.name,
+        mode.label(),
+        strategy.label(),
+        mact(total, 2),
+        mact(net.min_bandwidth() as f64, 3),
+    );
+    Ok(0)
+}

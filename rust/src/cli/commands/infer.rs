@@ -1,0 +1,64 @@
+//! `infer`: closed-loop batched inference benchmark over the PJRT stack.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cli::args::Args;
+use crate::coordinator::{InferenceService, ServiceConfig};
+use crate::runtime::{ArtifactDir, Tensor};
+
+/// `psim infer [--requests N] [--concurrency C] [--max-batch B] [--seed S]`
+///
+/// Spawns C client threads that each fire requests back-to-back until N
+/// total responses arrive; reports throughput, latency percentiles and
+/// the realized batch-size distribution.
+pub fn infer(args: &Args) -> Result<i32> {
+    let requests = args.opt_usize("requests")?.unwrap_or(64);
+    let concurrency = args.opt_usize("concurrency")?.unwrap_or(8).max(1);
+    let max_batch = args.opt_usize("max-batch")?.unwrap_or(8).clamp(1, 8);
+    let seed = args.opt_usize("seed")?.unwrap_or(42) as u64;
+    args.reject_unknown()?;
+
+    let artifacts = ArtifactDir::open_default()?;
+    println!(
+        "artifacts: {} ({} entries, fingerprint {})",
+        artifacts.dir.display(),
+        artifacts.entries.len(),
+        artifacts.fingerprint
+    );
+    let cfg = ServiceConfig {
+        max_batch,
+        weight_seed: seed,
+        ..ServiceConfig::default()
+    };
+    let service = InferenceService::start(artifacts, cfg)?;
+
+    // Warm up (compilation happens on the engine thread's first loads).
+    let warm = service.infer(Tensor::random(&[3, 32, 32], seed, 1.0))?;
+    println!("warmup: class={} latency={}us", warm.top_class(), warm.latency_us);
+
+    let t0 = Instant::now();
+    let per_client = requests.div_ceil(concurrency);
+    std::thread::scope(|scope| {
+        for c in 0..concurrency {
+            let service = &service;
+            scope.spawn(move || {
+                for i in 0..per_client {
+                    let img = Tensor::random(&[3, 32, 32], seed ^ ((c * 1000 + i) as u64), 1.0);
+                    let _ = service.infer(img);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+
+    let m = &service.metrics;
+    let served = per_client * concurrency;
+    println!("\n== e2e inference over PJRT (PsimNet, batch<= {max_batch}) ==");
+    println!("requests          : {served}");
+    println!("wall time         : {:.3} s", wall.as_secs_f64());
+    println!("throughput        : {:.1} img/s", served as f64 / wall.as_secs_f64());
+    println!("metrics           : {}", m.summary());
+    Ok(0)
+}

@@ -1,0 +1,7 @@
+//! Command implementations, one module per command family.
+
+pub mod analyze;
+pub mod infer;
+pub mod serve;
+pub mod simulate;
+pub mod tables;

@@ -1,0 +1,160 @@
+//! `serve` / `client`: a TCP JSON-lines inference server + load generator.
+//!
+//! Protocol (one JSON object per line):
+//!   request : {"image": [3072 floats]}            -> inference
+//!             {"cmd": "metrics"}                  -> server metrics
+//!             {"cmd": "shutdown"}                 -> stop the server
+//!   response: {"id": n, "class": c, "logits": [...], "latency_us": n}
+//!             {"metrics": "..."} / {"ok": true} / {"error": "..."}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::cli::args::Args;
+use crate::coordinator::{InferenceService, ServiceConfig};
+use crate::runtime::{ArtifactDir, Tensor};
+use crate::util::json::Json;
+
+const IMAGE_ELEMS: usize = 3 * 32 * 32;
+
+/// `psim serve [--port P] [--max-batch B]`
+pub fn serve(args: &Args) -> Result<i32> {
+    let port = args.opt_usize("port")?.unwrap_or(7878) as u16;
+    let max_batch = args.opt_usize("max-batch")?.unwrap_or(8).clamp(1, 8);
+    args.reject_unknown()?;
+
+    let service = Arc::new(InferenceService::start(
+        ArtifactDir::open_default()?,
+        ServiceConfig { max_batch, ..ServiceConfig::default() },
+    )?);
+    let listener =
+        TcpListener::bind(("127.0.0.1", port)).with_context(|| format!("binding port {port}"))?;
+    println!("psim serve: listening on 127.0.0.1:{port} (max_batch={max_batch})");
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    std::thread::scope(|scope| -> Result<()> {
+        for stream in listener.incoming() {
+            if shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = stream?;
+            let service = service.clone();
+            let shutdown = shutdown.clone();
+            scope.spawn(move || {
+                if let Err(e) = handle_conn(stream, &service, &shutdown) {
+                    eprintln!("psim serve: connection error: {e:#}");
+                }
+            });
+        }
+        Ok(())
+    })?;
+    println!("psim serve: shut down. {}", service.metrics.summary());
+    Ok(0)
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    service: &InferenceService,
+    shutdown: &AtomicBool,
+) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match handle_line(&line, service, shutdown) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
+        };
+        writeln!(writer, "{reply}")?;
+        if shutdown.load(Ordering::SeqCst) {
+            // Poke the accept loop so it observes the flag.
+            let _ = TcpStream::connect(writer.local_addr()?);
+            break;
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn handle_line(line: &str, service: &InferenceService, shutdown: &AtomicBool) -> Result<Json> {
+    let msg = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    if let Some(cmd) = msg.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "metrics" => Ok(Json::obj(vec![("metrics", Json::Str(service.metrics.summary()))])),
+            "shutdown" => {
+                shutdown.store(true, Ordering::SeqCst);
+                Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+            }
+            other => Err(anyhow::anyhow!("unknown cmd '{other}'")),
+        };
+    }
+    let image = msg
+        .get("image")
+        .and_then(|i| i.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("missing 'image' array"))?;
+    anyhow::ensure!(
+        image.len() == IMAGE_ELEMS,
+        "image must have {IMAGE_ELEMS} floats, got {}",
+        image.len()
+    );
+    let data: Vec<f32> =
+        image.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
+    let tensor = Tensor::new(vec![3, 32, 32], data)?;
+    let resp = service.infer(tensor)?;
+    Ok(Json::obj(vec![
+        ("id", Json::Num(resp.id as f64)),
+        ("class", Json::Num(resp.top_class() as f64)),
+        ("logits", Json::Arr(resp.logits.iter().map(|&v| Json::Num(v as f64)).collect())),
+        ("latency_us", Json::Num(resp.latency_us as f64)),
+    ]))
+}
+
+/// `psim client [--port P] [--requests N]` — fire N random images at a
+/// running server and report client-observed latency/throughput.
+pub fn client(args: &Args) -> Result<i32> {
+    let port = args.opt_usize("port")?.unwrap_or(7878) as u16;
+    let requests = args.opt_usize("requests")?.unwrap_or(16);
+    args.reject_unknown()?;
+
+    let stream = TcpStream::connect(("127.0.0.1", port))
+        .with_context(|| format!("connecting to 127.0.0.1:{port} — is `psim serve` running?"))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    let t0 = std::time::Instant::now();
+    let mut line = String::new();
+    for i in 0..requests {
+        let img = Tensor::random(&[3, 32, 32], i as u64, 1.0);
+        let payload = Json::obj(vec![(
+            "image",
+            Json::Arr(img.data.iter().map(|&v| Json::Num(v as f64)).collect()),
+        )]);
+        writeln!(writer, "{payload}")?;
+        line.clear();
+        reader.read_line(&mut line)?;
+        let resp = Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+        if let Some(err) = resp.get("error") {
+            anyhow::bail!("server error: {err}");
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "client: {requests} requests in {:.3}s ({:.1} img/s sequential)",
+        wall.as_secs_f64(),
+        requests as f64 / wall.as_secs_f64()
+    );
+    // fetch server-side metrics
+    writeln!(writer, "{}", Json::obj(vec![("cmd", Json::Str("metrics".into()))]))?;
+    line.clear();
+    reader.read_line(&mut line)?;
+    println!("server: {line}");
+    Ok(0)
+}

@@ -1,0 +1,131 @@
+//! `simulate` and `sweep`: the event-level simulator from the CLI.
+
+use anyhow::{anyhow, Result};
+
+use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::partition::Strategy;
+use crate::analytics::sweep::network_bandwidth;
+use crate::cli::args::Args;
+use crate::config::{AccelConfig, ConfigDoc};
+use crate::coordinator::parallel::{default_workers, parallel_map};
+use crate::models::zoo;
+use crate::sim::scheduler::{simulate_layer, simulate_network};
+use crate::util::tablefmt::{mact, pct, Table};
+
+use super::analyze::{mode_from, strategy_from};
+
+/// `psim simulate --network NAME [--macs P] [--mode M] [--strategy S]
+/// [--config FILE] [--trace]`
+pub fn simulate(args: &Args) -> Result<i32> {
+    let name = args.opt("network").ok_or_else(|| anyhow!("--network is required"))?.to_string();
+    let mut accel = match args.opt("config") {
+        Some(path) => AccelConfig::from_doc(&ConfigDoc::load(std::path::Path::new(path))?)?,
+        None => AccelConfig::default(),
+    };
+    if let Some(p) = args.opt_usize("macs")? {
+        accel.p_macs = p;
+    }
+    if args.opt("mode").is_some() {
+        accel.mode = mode_from(args)?;
+    }
+    if args.opt("strategy").is_some() {
+        accel.strategy = strategy_from(args)?;
+    }
+    let trace = args.flag("trace");
+    args.reject_unknown()?;
+
+    let net = zoo::by_name(&name)
+        .ok_or_else(|| anyhow!("unknown network '{name}' — see `psim networks`"))?;
+    let mut cfg = accel.sim_config();
+    if trace {
+        cfg.trace_cap = 64;
+    }
+
+    let r = simulate_network(&net, &cfg);
+    let s = &r.stats;
+    let analytic = network_bandwidth(&net, accel.p_macs, accel.strategy, accel.mode).total();
+    println!("== {} on P={} ({} controller, {} strategy) ==", net.name, accel.p_macs,
+        accel.mode.label(), accel.strategy.label());
+    println!("activation traffic : {} M (analytical model: {} M)",
+        mact(s.activation_traffic() as f64, 3), mact(analytic, 3));
+    println!("  input reads      : {} M", mact(s.input_reads as f64, 3));
+    println!("  psum reads (bus) : {} M", mact(s.psum_reads as f64, 3));
+    println!("  psum writes      : {} M", mact(s.psum_writes as f64, 3));
+    println!("  psum reads (ctrl): {} M  <- absorbed by the active controller",
+        mact(s.internal_psum_reads as f64, 3));
+    println!("weight reads       : {} M", mact(s.weight_reads as f64, 3));
+    println!("bus                : {} beats, {} bursts, {} sideband words",
+        s.bus_beats, s.bus_transactions, s.sideband_words);
+    println!("sram accesses      : {} M", mact(s.sram_accesses as f64, 3));
+    println!("macs               : {:.3} G ({} cycles, {:.1}% array utilization)",
+        s.macs as f64 / 1e9, s.compute_cycles, s.mac_utilization(accel.p_macs) * 100.0);
+    println!("cycles             : {} (compute {}, bus {})",
+        s.total_cycles(), s.compute_cycles, s.bus_cycles);
+    println!("energy             : {:.3} mJ", s.energy_pj / 1e9);
+    let d = (s.activation_traffic() as f64 - analytic).abs() / analytic.max(1.0);
+    println!("sim-vs-model delta : {}", pct(d));
+    if d > 1e-9 {
+        eprintln!("WARNING: simulator diverged from the analytical model");
+        return Ok(2);
+    }
+    Ok(0)
+}
+
+/// `psim sweep [--networks a,b] [--macs 512,...] [--strategy S] [--mode M]`
+/// CSV: network,p_macs,mode,strategy,total_mact,input_mact,output_mact,
+///      energy_mj,cycles,mac_util
+pub fn sweep(args: &Args) -> Result<i32> {
+    let networks: Vec<String> = match args.opt("networks") {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        None => zoo::paper_networks().iter().map(|n| n.name.clone()).collect(),
+    };
+    let macs = args
+        .opt_usize_list("macs")?
+        .unwrap_or_else(|| vec![512, 1024, 2048, 4096, 8192, 16384]);
+    let strategy = strategy_from(args)?;
+    let mode = mode_from(args)?;
+    args.reject_unknown()?;
+
+    let mut jobs = Vec::new();
+    for name in &networks {
+        let net = zoo::by_name(name)
+            .ok_or_else(|| anyhow!("unknown network '{name}' — see `psim networks`"))?;
+        for &p in &macs {
+            jobs.push((net.clone(), p));
+        }
+    }
+    let rows = parallel_map(&jobs, default_workers(), |(net, p)| {
+        let cfg = crate::sim::scheduler::SimConfig::new(*p, mode, strategy);
+        let r = simulate_network(net, &cfg);
+        let s = r.stats;
+        vec![
+            net.name.clone(),
+            p.to_string(),
+            mode.label().to_string(),
+            strategy.label().to_string(),
+            mact(s.activation_traffic() as f64, 3),
+            mact(s.input_reads as f64, 3),
+            mact(s.output_traffic() as f64, 3),
+            format!("{:.3}", s.energy_pj / 1e9),
+            s.total_cycles().to_string(),
+            format!("{:.3}", s.mac_utilization(*p)),
+        ]
+    });
+    let mut t = Table::new(vec![
+        "network", "p_macs", "mode", "strategy", "total_mact", "input_mact", "output_mact",
+        "energy_mj", "cycles", "mac_util",
+    ]);
+    for row in rows {
+        t.row(row);
+    }
+    print!("{}", t.to_csv());
+    Ok(0)
+}
+
+/// Exposed for the per-layer bench: simulate one named layer.
+pub fn simulate_one_layer(net_name: &str, layer_name: &str, p: usize) -> Result<u64> {
+    let net = zoo::by_name(net_name).ok_or_else(|| anyhow!("unknown network"))?;
+    let layer = net.layer(layer_name).ok_or_else(|| anyhow!("unknown layer"))?;
+    let cfg = crate::sim::scheduler::SimConfig::new(p, ControllerMode::Passive, Strategy::Optimal);
+    Ok(simulate_layer(layer, &cfg).stats.activation_traffic())
+}

@@ -1,0 +1,107 @@
+//! Paper-table regenerators: `table1|table2|table3|fig2|validate`.
+
+use anyhow::Result;
+
+use crate::cli::args::Args;
+use crate::report::{compare, fig2 as fig2_mod, tables};
+use crate::util::tablefmt::Table;
+
+fn emit(t: &Table, csv: bool) {
+    if csv {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.to_markdown());
+    }
+}
+
+fn faithful_note(args: &Args) -> bool {
+    // --faithful switches to the architecturally faithful zoo; the default
+    // is the calibrated paper profile (see models::zoo docs).
+    args.flag("faithful")
+}
+
+pub fn table1(args: &Args) -> Result<i32> {
+    let csv = args.flag("csv");
+    let faithful = faithful_note(args);
+    args.reject_unknown()?;
+    if faithful {
+        emit(&tables::table1_for(&crate::models::zoo::faithful_networks()), csv);
+    } else {
+        emit(&tables::table1(), csv);
+    }
+    Ok(0)
+}
+
+pub fn table2(args: &Args) -> Result<i32> {
+    let csv = args.flag("csv");
+    let faithful = faithful_note(args);
+    args.reject_unknown()?;
+    if faithful {
+        emit(&tables::table2_for(&crate::models::zoo::faithful_networks()), csv);
+    } else {
+        emit(&tables::table2(), csv);
+    }
+    Ok(0)
+}
+
+pub fn table3(args: &Args) -> Result<i32> {
+    let csv = args.flag("csv");
+    let faithful = faithful_note(args);
+    args.reject_unknown()?;
+    if faithful {
+        emit(&tables::table3_for(&crate::models::zoo::faithful_networks()), csv);
+    } else {
+        emit(&tables::table3(), csv);
+    }
+    Ok(0)
+}
+
+pub fn fig2(args: &Args) -> Result<i32> {
+    let csv = args.flag("csv");
+    let ascii = args.flag("ascii");
+    args.reject_unknown()?;
+    if ascii {
+        print!("{}", fig2_mod::fig2_ascii());
+    } else {
+        emit(&fig2_mod::fig2_table(), csv);
+    }
+    Ok(0)
+}
+
+pub fn validate(args: &Args) -> Result<i32> {
+    let full = args.flag("full");
+    let csv = args.flag("csv");
+    args.reject_unknown()?;
+    let cells = compare::compare_all();
+    let s = compare::summarize(&cells);
+    println!(
+        "compared {} cells against the paper: median |Δ| {:.1}%, mean {:.1}%, \
+         {} within 5%, {} within 15%, worst {:.1}%",
+        s.cells,
+        s.median_rel_diff * 100.0,
+        s.mean_rel_diff * 100.0,
+        s.within_5pct,
+        s.within_15pct,
+        s.worst * 100.0
+    );
+    for t in ["III", "II", "I"] {
+        let sub: Vec<_> = cells.iter().filter(|c| c.table == t).cloned().collect();
+        let ss = compare::summarize(&sub);
+        println!(
+            "  Table {t:>3}: median {:.1}%  worst {:.1}%  ({} cells)",
+            ss.median_rel_diff * 100.0,
+            ss.worst * 100.0,
+            ss.cells
+        );
+    }
+    if full {
+        emit(&compare::to_table(&cells, true), csv);
+    } else {
+        println!("\nworst 10 cells (see EXPERIMENTS.md §Calibration for the why):");
+        let t = compare::to_table(&cells, true);
+        for line in t.to_markdown().lines().take(12) {
+            println!("{line}");
+        }
+    }
+    Ok(0)
+}

@@ -1,0 +1,155 @@
+//! The `psim` command surface.
+//!
+//! Paper regenerators: `table1`, `table2`, `table3`, `fig2`, `validate`.
+//! Exploration: `analyze`, `simulate`, `sweep`, `networks`.
+//! Functional stack: `infer` (batched PJRT inference), `serve` (TCP
+//! JSON-lines server), `client` (load generator against `serve`).
+
+pub mod args;
+pub mod commands;
+
+use anyhow::{bail, Result};
+use args::Args;
+
+const HELP: &str = "\
+psim — partial-sum bandwidth analytics, accelerator simulator and serving
+       stack reproducing Chandra, 'On the Impact of Partial Sums on
+       Interconnect Bandwidth and Memory Accesses in a DNN Accelerator'
+       (ICIIS 2020).
+
+USAGE: psim <command> [options]
+
+Paper evaluation (Section IV):
+  table1              BW by partitioning strategy x P (Table I)
+  table2              passive vs active controller x P (Table II)
+  table3              minimum BW per network (Table III)
+  fig2                % saving of the active controller (Fig. 2)
+  validate            compare every cell against the published numbers
+     options: --csv            emit CSV instead of markdown
+              --faithful       use faithful architectures (see DESIGN.md)
+              --full           (validate) print every cell, not a summary
+
+Exploration:
+  networks            list the model zoo with layer/MAC/BW summaries
+  analyze             per-layer partitions + bandwidth for one network
+     options: --network NAME --macs P [--strategy S] [--mode M]
+  simulate            run the event-level simulator, cross-check analytics
+     options: --network NAME [--macs P] [--strategy S] [--mode M]
+              [--config FILE] [--trace]
+  sweep               network x MAC-budget sweep to CSV
+     options: [--networks a,b,c] [--macs 512,1024,...] [--strategy S]
+              [--mode M]
+
+Functional stack (PJRT over artifacts/; run `make artifacts` first):
+  infer               batched PsimNet inference benchmark
+     options: [--requests N] [--concurrency C] [--max-batch B] [--seed S]
+  serve               TCP JSON-lines inference server
+     options: [--port P] [--max-batch B]
+  client              load generator against a running server
+     options: [--port P] [--requests N]
+
+  help                this text
+";
+
+/// Entry point used by main(); returns the process exit code.
+pub fn run(argv: &[String]) -> Result<i32> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "" | "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(0)
+        }
+        "table1" => commands::tables::table1(&args),
+        "table2" => commands::tables::table2(&args),
+        "table3" => commands::tables::table3(&args),
+        "fig2" => commands::tables::fig2(&args),
+        "validate" => commands::tables::validate(&args),
+        "networks" => commands::analyze::networks(&args),
+        "analyze" => commands::analyze::analyze(&args),
+        "simulate" => commands::simulate::simulate(&args),
+        "sweep" => commands::simulate::sweep(&args),
+        "infer" => commands::infer::infer(&args),
+        "serve" => commands::serve::serve(&args),
+        "client" => commands::serve::client(&args),
+        other => bail!("unknown command '{other}' — try `psim help`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn help_runs() {
+        assert_eq!(run(&sv(&["help"])).unwrap(), 0);
+        assert_eq!(run(&sv(&[])).unwrap(), 0);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn tables_run() {
+        for cmd in ["table1", "table2", "table3", "fig2", "validate"] {
+            assert_eq!(run(&sv(&[cmd])).unwrap(), 0, "{cmd}");
+        }
+    }
+
+    #[test]
+    fn analyze_requires_network() {
+        assert!(run(&sv(&["analyze"])).is_err());
+        assert_eq!(run(&sv(&["analyze", "--network", "AlexNet", "--macs", "512"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn simulate_cross_checks_model() {
+        // exit code 0 == sim matched the analytical model exactly
+        assert_eq!(
+            run(&sv(&["simulate", "--network", "resnet18", "--macs", "1024", "--mode", "active"]))
+                .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn simulate_accepts_extension_networks() {
+        assert_eq!(
+            run(&sv(&["simulate", "--network", "resnet34", "--macs", "2048"])).unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn sweep_and_networks_run() {
+        assert_eq!(run(&sv(&["networks"])).unwrap(), 0);
+        assert_eq!(
+            run(&sv(&["sweep", "--networks", "AlexNet", "--macs", "512,2048"])).unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_per_command() {
+        assert!(run(&sv(&["table1", "--frobnicate"])).is_err());
+        assert!(run(&sv(&["simulate", "--network", "AlexNet", "--warp", "9"])).is_err());
+    }
+
+    #[test]
+    fn faithful_and_csv_variants() {
+        assert_eq!(run(&sv(&["table3", "--faithful"])).unwrap(), 0);
+        assert_eq!(run(&sv(&["table2", "--csv"])).unwrap(), 0);
+        assert_eq!(run(&sv(&["fig2", "--ascii"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn bad_strategy_or_mode_errors() {
+        assert!(run(&sv(&["analyze", "--network", "AlexNet", "--strategy", "voodoo"])).is_err());
+        assert!(run(&sv(&["simulate", "--network", "AlexNet", "--mode", "quantum"])).is_err());
+    }
+}

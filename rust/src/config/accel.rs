@@ -1,0 +1,162 @@
+//! Typed accelerator configuration over the TOML-subset document.
+
+use anyhow::{bail, Result};
+
+use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::partition::Strategy;
+use crate::sim::interconnect::BusConfig;
+use crate::sim::scheduler::SimConfig;
+
+use super::parser::ConfigDoc;
+
+/// Accelerator-under-test knobs (the `[accelerator]` section).
+#[derive(Clone, Debug)]
+pub struct AccelConfig {
+    pub p_macs: usize,
+    pub banks: usize,
+    pub bus_bytes: usize,
+    pub elem_bytes: usize,
+    pub mode: ControllerMode,
+    pub strategy: Strategy,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        AccelConfig {
+            p_macs: 2048,
+            banks: 32,
+            bus_bytes: 16,
+            elem_bytes: 2,
+            mode: ControllerMode::Passive,
+            strategy: Strategy::Optimal,
+        }
+    }
+}
+
+/// Parse a controller-mode name.
+pub fn parse_mode(s: &str) -> Result<ControllerMode> {
+    match s.to_ascii_lowercase().as_str() {
+        "passive" => Ok(ControllerMode::Passive),
+        "active" => Ok(ControllerMode::Active),
+        other => bail!("unknown controller mode '{other}' (passive|active)"),
+    }
+}
+
+/// Parse a strategy name.
+pub fn parse_strategy(s: &str) -> Result<Strategy> {
+    match s.to_ascii_lowercase().replace(['-', '_'], "").as_str() {
+        "maxinput" => Ok(Strategy::MaxInput),
+        "maxoutput" => Ok(Strategy::MaxOutput),
+        "equalmacs" | "equal" => Ok(Strategy::EqualMacs),
+        "optimal" | "thiswork" => Ok(Strategy::Optimal),
+        "search" | "optimalsearch" => Ok(Strategy::OptimalSearch),
+        other => bail!(
+            "unknown strategy '{other}' (max-input|max-output|equal-macs|optimal|search)"
+        ),
+    }
+}
+
+impl AccelConfig {
+    /// Build from a parsed document; unknown keys are rejected so typos
+    /// fail loudly.
+    pub fn from_doc(doc: &ConfigDoc) -> Result<AccelConfig> {
+        const KNOWN: [&str; 6] = ["p_macs", "banks", "bus_bytes", "elem_bytes", "mode", "strategy"];
+        for key in doc.section_keys("accelerator") {
+            if !KNOWN.contains(&key) {
+                bail!("unknown [accelerator] key '{key}' (known: {KNOWN:?})");
+            }
+        }
+        let mut cfg = AccelConfig::default();
+        if let Some(v) = doc.get_usize("accelerator", "p_macs") {
+            cfg.p_macs = v;
+        }
+        if let Some(v) = doc.get_usize("accelerator", "banks") {
+            cfg.banks = v;
+        }
+        if let Some(v) = doc.get_usize("accelerator", "bus_bytes") {
+            cfg.bus_bytes = v;
+        }
+        if let Some(v) = doc.get_usize("accelerator", "elem_bytes") {
+            cfg.elem_bytes = v;
+        }
+        if let Some(s) = doc.get_str("accelerator", "mode") {
+            cfg.mode = parse_mode(s)?;
+        }
+        if let Some(s) = doc.get_str("accelerator", "strategy") {
+            cfg.strategy = parse_strategy(s)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.p_macs == 0 {
+            bail!("p_macs must be > 0");
+        }
+        if !self.banks.is_power_of_two() {
+            bail!("banks must be a power of two, got {}", self.banks);
+        }
+        if self.bus_bytes == 0 || self.elem_bytes == 0 {
+            bail!("bus_bytes and elem_bytes must be > 0");
+        }
+        Ok(())
+    }
+
+    /// Materialize the simulator configuration.
+    pub fn sim_config(&self) -> SimConfig {
+        let mut cfg = SimConfig::new(self.p_macs, self.mode, self.strategy);
+        cfg.banks = self.banks;
+        cfg.bus = BusConfig {
+            bus_bytes: self.bus_bytes,
+            elem_bytes: self.elem_bytes,
+            ..BusConfig::default()
+        };
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        AccelConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_doc_full() {
+        let doc = ConfigDoc::parse(
+            "[accelerator]\np_macs = 4096\nbanks = 16\nbus_bytes = 32\nelem_bytes = 1\nmode = \"active\"\nstrategy = \"max-input\"\n",
+        )
+        .unwrap();
+        let cfg = AccelConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.p_macs, 4096);
+        assert_eq!(cfg.banks, 16);
+        assert_eq!(cfg.mode, ControllerMode::Active);
+        assert_eq!(cfg.strategy, Strategy::MaxInput);
+        let sim = cfg.sim_config();
+        assert_eq!(sim.bus.bus_bytes, 32);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let doc = ConfigDoc::parse("[accelerator]\np_mac = 42\n").unwrap();
+        assert!(AccelConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn invalid_banks_rejected() {
+        let doc = ConfigDoc::parse("[accelerator]\nbanks = 12\n").unwrap();
+        assert!(AccelConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn parse_helpers() {
+        assert!(parse_mode("Active").is_ok());
+        assert!(parse_mode("hybrid").is_err());
+        assert_eq!(parse_strategy("this-work").unwrap(), Strategy::Optimal);
+        assert_eq!(parse_strategy("EQUAL_MACS").unwrap(), Strategy::EqualMacs);
+        assert!(parse_strategy("random").is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Configuration system: a TOML-subset parser (sections, scalar keys) and
+//! the typed accelerator/serving configs built on it.
+//!
+//! The offline vendor set has no serde/toml, so [`parser`] implements the
+//! subset the project needs: `[section]` headers, `key = value` with
+//! integer/float/boolean/string values, `#` comments. [`accel`] maps that
+//! onto [`accel::AccelConfig`] (the knobs of the simulator and the
+//! analytical model) with validation and defaults.
+
+pub mod accel;
+pub mod parser;
+
+pub use accel::AccelConfig;
+pub use parser::ConfigDoc;

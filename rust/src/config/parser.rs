@@ -1,0 +1,211 @@
+//! TOML-subset parser: `[section]`, `key = value`, `#` comments.
+//! Values: i64, f64, bool, "quoted string". No arrays/tables-in-tables —
+//! the project's configs don't need them.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Bool(v) => write!(f, "{v}"),
+            Value::Str(v) => write!(f, "\"{v}\""),
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// A parsed document: `section.key -> value`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConfigDoc {
+    values: BTreeMap<(String, String), Value>,
+}
+
+impl ConfigDoc {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<ConfigDoc, ConfigError> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| ConfigError { line: ln + 1, msg: "unterminated section".into() })?
+                    .trim();
+                if name.is_empty() {
+                    return Err(ConfigError { line: ln + 1, msg: "empty section name".into() });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError { line: ln + 1, msg: "expected key = value".into() })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ConfigError { line: ln + 1, msg: "empty key".into() });
+            }
+            let value = Self::parse_value(val.trim())
+                .ok_or_else(|| ConfigError { line: ln + 1, msg: format!("bad value: {}", val.trim()) })?;
+            doc.values.insert((section.clone(), key.to_string()), value);
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<ConfigDoc> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Ok(Self::parse(&text)?)
+    }
+
+    fn parse_value(s: &str) -> Option<Value> {
+        if let Some(stripped) = s.strip_prefix('"') {
+            return stripped.strip_suffix('"').map(|v| Value::Str(v.to_string()));
+        }
+        match s {
+            "true" => return Some(Value::Bool(true)),
+            "false" => return Some(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = s.parse::<i64>() {
+            return Some(Value::Int(i));
+        }
+        if let Ok(f) = s.parse::<f64>() {
+            return Some(Value::Float(f));
+        }
+        None
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        match self.get(section, key)? {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key)? {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// All keys in a section (for validation / error messages).
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        self.values
+            .keys()
+            .filter(|(s, _)| s == section)
+            .map(|(_, k)| k.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# accelerator under test
+[accelerator]
+p_macs = 2048
+banks = 32
+mode = "active"     # controller
+utilization = 0.85
+trace = false
+
+[serve]
+max_batch = 8
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = ConfigDoc::parse(DOC).unwrap();
+        assert_eq!(d.get_usize("accelerator", "p_macs"), Some(2048));
+        assert_eq!(d.get_str("accelerator", "mode"), Some("active"));
+        assert_eq!(d.get_f64("accelerator", "utilization"), Some(0.85));
+        assert_eq!(d.get_bool("accelerator", "trace"), Some(false));
+        assert_eq!(d.get_usize("serve", "max_batch"), Some(8));
+        assert_eq!(d.get("serve", "nope"), None);
+    }
+
+    #[test]
+    fn int_coerces_to_f64_not_vice_versa() {
+        let d = ConfigDoc::parse("[s]\na = 3\nb = 1.5\n").unwrap();
+        assert_eq!(d.get_f64("s", "a"), Some(3.0));
+        assert_eq!(d.get_usize("s", "b"), None);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = ConfigDoc::parse("[ok]\nkey value\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = ConfigDoc::parse("[broken\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = ConfigDoc::parse("[s]\nx = @bad\n").unwrap_err();
+        assert!(err.msg.contains("bad value"));
+    }
+
+    #[test]
+    fn section_keys_listed() {
+        let d = ConfigDoc::parse(DOC).unwrap();
+        let mut keys = d.section_keys("accelerator");
+        keys.sort();
+        assert_eq!(keys, vec!["banks", "mode", "p_macs", "trace", "utilization"]);
+    }
+
+    #[test]
+    fn negative_ints_not_usize() {
+        let d = ConfigDoc::parse("[s]\nx = -5\n").unwrap();
+        assert_eq!(d.get_usize("s", "x"), None);
+        assert_eq!(d.get_f64("s", "x"), Some(-5.0));
+    }
+}

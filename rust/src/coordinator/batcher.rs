@@ -1,0 +1,121 @@
+//! Dynamic batching: accumulate requests until the batch is full or the
+//! oldest request has waited long enough, then flush to the engine.
+//!
+//! The policy is the classic size-or-deadline rule serving systems use
+//! (vLLM-style continuous batching reduces to this for a single-stage
+//! model): never hold a full batch, never hold a lone request longer than
+//! `max_wait`.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use super::job::InferRequest;
+
+/// Flush policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Hard cap on batch size (the largest AOT'd batch artifact).
+    pub max_batch: usize,
+    /// Deadline: oldest request never waits longer than this.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Run the batching loop: read requests from `rx`, emit batches to
+/// `batch_tx`. Returns when `rx` disconnects (service shutdown).
+pub fn run_batcher(
+    rx: Receiver<InferRequest>,
+    batch_tx: Sender<Vec<InferRequest>>,
+    policy: BatchPolicy,
+) {
+    let mut pending: Vec<InferRequest> = Vec::with_capacity(policy.max_batch);
+    loop {
+        if pending.is_empty() {
+            // Nothing buffered: block for the next request.
+            match rx.recv() {
+                Ok(req) => pending.push(req),
+                Err(_) => return, // disconnected
+            }
+        }
+        // Buffered: wait for more only until the oldest request's deadline.
+        let deadline = pending[0].enqueued + policy.max_wait;
+        while pending.len() < policy.max_batch {
+            let now = Instant::now();
+            let remaining = deadline.saturating_duration_since(now);
+            if remaining.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(remaining) {
+                Ok(req) => pending.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    let _ = batch_tx.send(std::mem::take(&mut pending));
+                    return;
+                }
+            }
+        }
+        if batch_tx.send(std::mem::take(&mut pending)).is_err() {
+            return; // engine gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+    use std::sync::mpsc;
+
+    fn req(id: u64, reply: mpsc::Sender<super::super::job::InferResponse>) -> InferRequest {
+        InferRequest { id, image: Tensor::zeros(&[1]), reply, enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn flushes_full_batch_immediately() {
+        let (tx, rx) = mpsc::channel();
+        let (btx, brx) = mpsc::channel();
+        let (rtx, _rrx) = mpsc::channel();
+        for i in 0..8 {
+            tx.send(req(i, rtx.clone())).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(10) };
+        let h = std::thread::spawn(move || run_batcher(rx, btx, policy));
+        let batch = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.len(), 8);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        let (btx, brx) = mpsc::channel();
+        let (rtx, _rrx) = mpsc::channel();
+        tx.send(req(0, rtx.clone())).unwrap();
+        tx.send(req(1, rtx.clone())).unwrap();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) };
+        let h = std::thread::spawn(move || run_batcher(rx, btx, policy));
+        let batch = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.len(), 2);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn drains_on_disconnect() {
+        let (tx, rx) = mpsc::channel();
+        let (btx, brx) = mpsc::channel();
+        let (rtx, _rrx) = mpsc::channel();
+        tx.send(req(0, rtx.clone())).unwrap();
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(10) };
+        run_batcher(rx, btx, policy);
+        let batch = brx.recv().unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+}

@@ -1,0 +1,162 @@
+//! The engine thread: owns the PJRT runtime and executes batches.
+//!
+//! Owning the runtime on one thread (actor model) keeps the FFI handles
+//! single-threaded; batches arrive over a channel and responses leave
+//! through each request's reply channel. Batch-size dispatch: the engine
+//! uses the `psimnet_b8` artifact for any batch of 2..=8 (padding with
+//! zero images) and `psimnet_b1` for singles — one compiled executable
+//! per batch shape, as PJRT requires static shapes.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::job::{InferRequest, InferResponse};
+use super::metrics::Metrics;
+use super::weights::PsimNetWeights;
+use crate::runtime::{ArtifactDir, Runtime, Tensor};
+
+/// Image shape served by PsimNet.
+pub const IMAGE_SHAPE: [usize; 3] = [3, 32, 32];
+const IMAGE_ELEMS: usize = 3 * 32 * 32;
+/// The largest batch artifact.
+pub const MAX_BATCH: usize = 8;
+
+/// Run the engine loop until the batch channel disconnects.
+///
+/// The PJRT client handles are not `Send`, so the engine *constructs* the
+/// runtime on its own thread (classic actor ownership) from the cloneable
+/// artifact index.
+pub fn run_engine(
+    artifacts: ArtifactDir,
+    weights: PsimNetWeights,
+    batch_rx: Receiver<Vec<InferRequest>>,
+    metrics: Arc<Metrics>,
+) {
+    let mut runtime = match Runtime::new(artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("engine: failed to create PJRT runtime: {e:#}");
+            // Drain and drop everything so callers observe disconnects.
+            while batch_rx.recv().is_ok() {
+                metrics.record_error();
+            }
+            return;
+        }
+    };
+    // Warm the executable cache up front so first-request latency doesn't
+    // pay for compilation.
+    for name in ["psimnet_b1", "psimnet_b8"] {
+        if let Err(e) = runtime.load(name) {
+            eprintln!("engine: failed to load {name}: {e:#}");
+        }
+    }
+    // Perf (EXPERIMENTS.md §Perf RT-1): weights are constant for the
+    // service lifetime — prepare their XLA literals once; only the image
+    // tensor is converted per batch.
+    let device_weights: Vec<crate::runtime::PreparedTensor> = match weights
+        .tensors
+        .iter()
+        .map(|t| runtime.prepare(t))
+        .collect::<anyhow::Result<Vec<_>>>()
+    {
+        Ok(ws) => ws,
+        Err(e) => {
+            eprintln!("engine: weight upload failed: {e:#}");
+            while batch_rx.recv().is_ok() {
+                metrics.record_error();
+            }
+            return;
+        }
+    };
+
+    while let Ok(batch) = batch_rx.recv() {
+        if batch.is_empty() {
+            continue;
+        }
+        metrics.record_batch(batch.len());
+        match execute_batch_on(&mut runtime, &device_weights, &batch) {
+            Ok(logits_rows) => {
+                for (req, logits) in batch.into_iter().zip(logits_rows) {
+                    let resp = InferResponse {
+                        id: req.id,
+                        logits,
+                        latency_us: req.enqueued.elapsed().as_micros() as u64,
+                        batch_size: 0, // filled below
+                    };
+                    metrics.record_response(resp.latency_us);
+                    let _ = req.reply.send(resp);
+                }
+            }
+            Err(e) => {
+                eprintln!("engine: batch failed: {e:#}");
+                metrics.record_error();
+                // Drop the requests; their reply channels disconnect and
+                // callers observe the failure.
+            }
+        }
+    }
+}
+
+/// Pack a batch's images into one `[B, 3, 32, 32]` tensor (zero-padded).
+fn pack_images(batch: &[InferRequest], padded: usize) -> Result<Tensor> {
+    let mut data = vec![0.0f32; padded * IMAGE_ELEMS];
+    for (i, req) in batch.iter().enumerate() {
+        anyhow::ensure!(
+            req.image.shape == IMAGE_SHAPE,
+            "request {}: image shape {:?} != {:?}",
+            req.id,
+            req.image.shape,
+            IMAGE_SHAPE
+        );
+        data[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].copy_from_slice(&req.image.data);
+    }
+    Tensor::new(vec![padded, 3, 32, 32], data)
+}
+
+fn unpack_logits(out: &[Tensor], batch_len: usize) -> Vec<Vec<f32>> {
+    let logits = &out[0];
+    let classes = logits.shape[1];
+    (0..batch_len).map(|i| logits.data[i * classes..(i + 1) * classes].to_vec()).collect()
+}
+
+/// Execute one batch against prepared constant weights (the hot path).
+pub fn execute_batch_on(
+    runtime: &mut Runtime,
+    device_weights: &[crate::runtime::PreparedTensor],
+    batch: &[InferRequest],
+) -> Result<Vec<Vec<f32>>> {
+    use crate::runtime::Input;
+    debug_assert!(!batch.is_empty() && batch.len() <= MAX_BATCH);
+    let _t0 = Instant::now();
+    let (entry, padded) = if batch.len() == 1 { ("psimnet_b1", 1) } else { ("psimnet_b8", MAX_BATCH) };
+    let images = pack_images(batch, padded)?;
+    let mut inputs: Vec<Input<'_>> = vec![Input::Host(&images)];
+    inputs.extend(device_weights.iter().map(Input::Prepared));
+    let out = runtime.execute_mixed(entry, &inputs)?;
+    Ok(unpack_logits(&out, batch.len()))
+}
+
+/// Execute one batch re-sending host weights each call (kept as the
+/// baseline for the §Perf RT-1 comparison and for one-shot uses).
+pub fn execute_batch(
+    runtime: &mut Runtime,
+    weights: &PsimNetWeights,
+    batch: &[InferRequest],
+) -> Result<Vec<Vec<f32>>> {
+    debug_assert!(!batch.is_empty() && batch.len() <= MAX_BATCH);
+    let (entry, padded) = if batch.len() == 1 { ("psimnet_b1", 1) } else { ("psimnet_b8", MAX_BATCH) };
+    let mut inputs = vec![pack_images(batch, padded)?];
+    inputs.extend(weights.tensors.iter().cloned());
+    let out = runtime.execute(entry, &inputs)?;
+    Ok(unpack_logits(&out, batch.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in
+    // rust/tests/coordinator_e2e.rs; shape-packing logic is covered there
+    // end-to-end against the PJRT runtime.
+}

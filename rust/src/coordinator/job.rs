@@ -1,0 +1,57 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::runtime::Tensor;
+
+/// A single inference request (one image).
+#[derive(Debug)]
+pub struct InferRequest {
+    pub id: u64,
+    pub image: Tensor,
+    /// Where the engine delivers the response.
+    pub reply: Sender<InferResponse>,
+    /// Enqueue timestamp (for end-to-end latency accounting).
+    pub enqueued: Instant,
+}
+
+/// The engine's answer.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub id: u64,
+    /// Class logits (len = 10 for PsimNet).
+    pub logits: Vec<f32>,
+    /// End-to-end latency in microseconds (enqueue -> response built).
+    pub latency_us: u64,
+    /// How many requests shared the batch this one rode in.
+    pub batch_size: usize,
+}
+
+impl InferResponse {
+    /// Argmax class.
+    pub fn top_class(&self) -> usize {
+        self.logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_class_argmax() {
+        let r = InferResponse {
+            id: 1,
+            logits: vec![0.1, 2.0, -1.0, 0.5],
+            latency_us: 10,
+            batch_size: 1,
+        };
+        assert_eq!(r.top_class(), 1);
+    }
+}

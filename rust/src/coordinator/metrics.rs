@@ -1,0 +1,136 @@
+//! Lock-free serving metrics: counters + a bucketed latency histogram.
+//!
+//! All atomics — safe to share across the batcher/engine/client threads
+//! without a mutex on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency buckets in microseconds (upper bounds).
+const BUCKETS_US: [u64; 16] = [
+    50, 100, 200, 400, 800, 1_600, 3_200, 6_400, 12_800, 25_600, 51_200, 102_400, 204_800,
+    409_600, 819_200, u64::MAX,
+];
+
+/// Shared metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub exec_errors: AtomicU64,
+    latency_buckets: [AtomicU64; 16],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_response(&self, latency_us: u64) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
+        let idx = BUCKETS_US.iter().position(|&b| latency_us <= b).unwrap_or(15);
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.exec_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean batch size so far.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Mean end-to-end latency (µs).
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.responses.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate latency percentile from the histogram (returns the
+    /// bucket's upper bound).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return BUCKETS_US[i];
+            }
+        }
+        BUCKETS_US[15]
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} batches={} mean_batch={:.2} mean_latency={:.0}us p50<={}us p99<={}us errors={}",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.mean_latency_us(),
+            self.latency_percentile_us(0.50),
+            self.latency_percentile_us(0.99),
+            self.exec_errors.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_and_latency_accounting() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
+        for us in [100, 100, 100, 5_000] {
+            m.record_response(us);
+        }
+        assert!((m.mean_latency_us() - 1325.0).abs() < 1e-9);
+        assert_eq!(m.latency_percentile_us(0.5), 100);
+        assert!(m.latency_percentile_us(0.99) >= 5_000);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.latency_percentile_us(0.99), 0);
+    }
+
+    #[test]
+    fn summary_renders() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_response(77);
+        assert!(m.summary().contains("requests=1"));
+    }
+}

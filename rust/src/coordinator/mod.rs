@@ -1,0 +1,37 @@
+//! Layer-3 coordination: the serving/orchestration stack on top of the
+//! PJRT runtime and the simulator.
+//!
+//! Architecture (all std-thread based; the offline vendor set has no
+//! tokio — and none is needed at this scale):
+//!
+//! ```text
+//!  submit()            mpsc                 mpsc
+//!  clients  ──────▶  [Batcher thread] ──────▶ [Engine thread]
+//!            req           │  size/deadline        │ owns Runtime
+//!            + reply_tx    ▼  policy               ▼ (PJRT not Send-
+//!                     dynamic batches          execute psimnet_bN
+//!                                                  │
+//!  clients  ◀──────────── per-request reply channels
+//! ```
+//!
+//! * [`job`] — request/response types.
+//! * [`batcher`] — dynamic batching: flush on size or deadline.
+//! * [`engine`] — the worker that owns the PJRT runtime (actor model
+//!   sidesteps `Send` questions about FFI handles).
+//! * [`weights`] — deterministic synthetic PsimNet parameters (state).
+//! * [`service`] — [`service::InferenceService`]: ties the threads
+//!   together behind a `submit()` API.
+//! * [`metrics`] — lock-free counters + latency histogram.
+//! * [`parallel`] — scoped-thread fan-out used by sweeps and benches.
+
+pub mod batcher;
+pub mod engine;
+pub mod job;
+pub mod metrics;
+pub mod parallel;
+pub mod service;
+pub mod weights;
+
+pub use job::{InferRequest, InferResponse};
+pub use metrics::Metrics;
+pub use service::{InferenceService, ServiceConfig};

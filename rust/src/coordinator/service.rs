@@ -1,0 +1,109 @@
+//! The public face of the serving stack: spawn batcher + engine threads,
+//! expose a `submit()` API, collect metrics, shut down cleanly on drop.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{run_batcher, BatchPolicy};
+use super::engine::run_engine;
+use super::job::{InferRequest, InferResponse};
+use super::metrics::Metrics;
+use super::weights::PsimNetWeights;
+use crate::runtime::{ArtifactDir, Tensor};
+
+/// Service construction parameters.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Seed for the synthetic model weights.
+    pub weight_seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { max_batch: 8, max_wait: Duration::from_millis(2), weight_seed: 42 }
+    }
+}
+
+/// A running inference service (PsimNet over PJRT).
+pub struct InferenceService {
+    request_tx: Option<Sender<InferRequest>>,
+    batcher: Option<JoinHandle<()>>,
+    engine: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+}
+
+impl InferenceService {
+    /// Start the service over an artifact directory.
+    pub fn start(artifacts: ArtifactDir, cfg: ServiceConfig) -> Result<InferenceService> {
+        let weights = PsimNetWeights::synthetic(&artifacts, cfg.weight_seed)?;
+        let metrics = Arc::new(Metrics::new());
+
+        let (request_tx, request_rx) = mpsc::channel::<InferRequest>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<InferRequest>>();
+
+        let policy = BatchPolicy { max_batch: cfg.max_batch.min(8), max_wait: cfg.max_wait };
+        let batcher = std::thread::Builder::new()
+            .name("psim-batcher".into())
+            .spawn(move || run_batcher(request_rx, batch_tx, policy))?;
+
+        let m = metrics.clone();
+        let engine = std::thread::Builder::new()
+            .name("psim-engine".into())
+            .spawn(move || run_engine(artifacts, weights, batch_rx, m))?;
+
+        Ok(InferenceService {
+            request_tx: Some(request_tx),
+            batcher: Some(batcher),
+            engine: Some(engine),
+            next_id: AtomicU64::new(0),
+            metrics,
+        })
+    }
+
+    /// Start with default config over `./artifacts`.
+    pub fn start_default() -> Result<InferenceService> {
+        Self::start(ArtifactDir::open_default()?, ServiceConfig::default())
+    }
+
+    /// Submit one image; returns a receiver for the response.
+    pub fn submit(&self, image: Tensor) -> Receiver<InferResponse> {
+        let (reply, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.record_request();
+        let req = InferRequest { id, image, reply, enqueued: Instant::now() };
+        if let Some(tx) = &self.request_tx {
+            let _ = tx.send(req);
+        }
+        rx
+    }
+
+    /// Submit and block for the answer.
+    pub fn infer(&self, image: Tensor) -> Result<InferResponse> {
+        let rx = self.submit(image);
+        rx.recv().map_err(|_| anyhow::anyhow!("service dropped the request (engine error)"))
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        // Disconnect the request channel; batcher drains, engine follows.
+        self.request_tx.take();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.engine.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// Integration coverage (real artifacts + PJRT) lives in
+// rust/tests/coordinator_e2e.rs.

@@ -1,0 +1,80 @@
+//! Model state: deterministic synthetic PsimNet parameters.
+//!
+//! The paper's analysis never depends on weight *values* (only shapes), so
+//! the serving stack uses seeded synthetic weights — reproducible across
+//! runs and matching the shapes recorded in the artifact manifest.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{ArtifactDir, Tensor};
+
+/// PsimNet parameter set, in artifact input order (after the image).
+#[derive(Clone, Debug)]
+pub struct PsimNetWeights {
+    pub tensors: Vec<Tensor>,
+    pub seed: u64,
+}
+
+impl PsimNetWeights {
+    /// Derive shapes from the `psimnet_b1` manifest entry; fill with
+    /// He-style random values from `seed`.
+    pub fn synthetic(artifacts: &ArtifactDir, seed: u64) -> Result<PsimNetWeights> {
+        let entry = artifacts
+            .entry("psimnet_b1")
+            .ok_or_else(|| anyhow!("psimnet_b1 missing from manifest"))?;
+        if entry.inputs.len() < 2 {
+            return Err(anyhow!("psimnet_b1 has no weight inputs"));
+        }
+        let tensors = entry.inputs[1..]
+            .iter()
+            .enumerate()
+            .map(|(i, sig)| {
+                // He-ish scale: sqrt(2 / fan_in) with fan_in = prod(shape[1..])
+                let fan_in: usize = sig.shape[1..].iter().product::<usize>().max(1);
+                let scale = (2.0 / fan_in as f32).sqrt();
+                Tensor::random(&sig.shape, seed ^ ((i as u64 + 1) * 0x9E37), scale)
+            })
+            .collect();
+        Ok(PsimNetWeights { tensors, seed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn fake_artifacts() -> ArtifactDir {
+        let dir = std::env::temp_dir().join("psim_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"fingerprint":"t","entries":[
+              {"name":"psimnet_b1","file":"m.hlo.txt",
+               "inputs":[{"shape":[1,3,32,32],"dtype":"float32"},
+                          {"shape":[16,3,3,3],"dtype":"float32"},
+                          {"shape":[10,16,1,1],"dtype":"float32"}],
+               "outputs":[{"shape":[1,10],"dtype":"float32"}]}]}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule m").unwrap();
+        ArtifactDir::open(Path::new(&dir)).unwrap()
+    }
+
+    #[test]
+    fn shapes_follow_manifest() {
+        let w = PsimNetWeights::synthetic(&fake_artifacts(), 1).unwrap();
+        assert_eq!(w.tensors.len(), 2);
+        assert_eq!(w.tensors[0].shape, vec![16, 3, 3, 3]);
+        assert_eq!(w.tensors[1].shape, vec![10, 16, 1, 1]);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = PsimNetWeights::synthetic(&fake_artifacts(), 7).unwrap();
+        let b = PsimNetWeights::synthetic(&fake_artifacts(), 7).unwrap();
+        let c = PsimNetWeights::synthetic(&fake_artifacts(), 8).unwrap();
+        assert_eq!(a.tensors[0], b.tensors[0]);
+        assert_ne!(a.tensors[0], c.tensors[0]);
+    }
+}

@@ -1,0 +1,34 @@
+//! # PSIM — Partial-Sum Impact Simulator
+//!
+//! A production-grade reproduction of *"On the Impact of Partial Sums on
+//! Interconnect Bandwidth and Memory Accesses in a DNN Accelerator"*
+//! (M. Chandra, ICIIS 2020).
+//!
+//! The crate has four pillars:
+//!
+//! * [`models`] — conv-layer descriptors + the eight evaluated CNNs.
+//! * [`analytics`] — the paper's first-order bandwidth model: partitioning
+//!   strategies (eqs. 1–7), active-memory-controller model, sweeps.
+//! * [`sim`] — an event-level accelerator simulator (MAC array, SRAM,
+//!   AXI-like interconnect with sideband commands, passive/active memory
+//!   controller) that validates the analytical model transaction-by-
+//!   transaction.
+//! * [`coordinator`] + [`runtime`] — a Rust execution stack that runs the
+//!   tiled convolutions *functionally* through AOT-compiled XLA artifacts
+//!   (JAX/Pallas at build time, PJRT at run time; Python never on the
+//!   request path).
+//!
+//! Supporting modules: [`config`] (accelerator/workload config files),
+//! [`report`] (paper table/figure renderers), [`util`] (offline-friendly
+//! substrate: PRNG, JSON, table formatting, property-test + bench
+//! harnesses), [`cli`] (the `psim` binary's command surface).
+
+pub mod analytics;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod models;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

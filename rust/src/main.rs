@@ -1,0 +1,18 @@
+//! `psim` — the command-line launcher.
+//!
+//! See `psim help` for the command surface; each paper table/figure has a
+//! dedicated subcommand (`table1`, `table2`, `table3`, `fig2`), plus the
+//! simulator (`simulate`), the analytical explorer (`analyze`, `sweep`),
+//! model validation against the published numbers (`validate`), and the
+//! functional inference paths (`infer`, `serve`).
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match psim::cli::run(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("psim: error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

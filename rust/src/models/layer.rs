@@ -1,0 +1,208 @@
+//! A single convolution layer descriptor and its derived quantities.
+
+/// One convolution layer, in the paper's notation:
+/// `M` input feature maps of `Wi x Hi`, `N` output maps of `Wo x Ho`,
+/// kernel `K x K`. Extended with stride/padding/groups so the torchvision
+/// architectures (strided convs, depthwise convs) are representable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConvLayer {
+    /// Human-readable layer name, e.g. `"conv2"`, `"layer3.1.conv2"`.
+    pub name: String,
+    /// Input spatial width `Wi`.
+    pub wi: usize,
+    /// Input spatial height `Hi`.
+    pub hi: usize,
+    /// Input channels `M`.
+    pub m: usize,
+    /// Output channels `N`.
+    pub n: usize,
+    /// Kernel size `K` (square kernels; the paper assumes `K x K`).
+    pub k: usize,
+    /// Stride (square).
+    pub stride: usize,
+    /// Zero padding (symmetric).
+    pub pad: usize,
+    /// Groups: 1 = dense conv, `m == n == groups` = depthwise.
+    pub groups: usize,
+}
+
+impl ConvLayer {
+    /// Construct a dense (groups=1) layer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        wi: usize,
+        hi: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        Self::grouped(name, wi, hi, m, n, k, stride, pad, 1)
+    }
+
+    /// Construct a grouped layer (depthwise when `groups == m == n`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn grouped(
+        name: &str,
+        wi: usize,
+        hi: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    ) -> Self {
+        assert!(wi > 0 && hi > 0 && m > 0 && n > 0 && k > 0 && stride > 0 && groups > 0,
+            "invalid layer {name}");
+        assert!(m % groups == 0 && n % groups == 0,
+            "layer {name}: channels {m}->{n} not divisible by groups {groups}");
+        assert!(wi + 2 * pad >= k && hi + 2 * pad >= k,
+            "layer {name}: kernel {k} larger than padded input {wi}x{hi}+2*{pad}");
+        ConvLayer {
+            name: name.to_string(),
+            wi,
+            hi,
+            m,
+            n,
+            k,
+            stride,
+            pad,
+            groups,
+        }
+    }
+
+    /// Output width: `floor((Wi + 2*pad - K)/stride) + 1`.
+    pub fn wo(&self) -> usize {
+        (self.wi + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Output height.
+    pub fn ho(&self) -> usize {
+        (self.hi + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Input activations touched once: `Wi*Hi*M`.
+    pub fn input_activations(&self) -> u64 {
+        self.wi as u64 * self.hi as u64 * self.m as u64
+    }
+
+    /// Output activations written once: `Wo*Ho*N`.
+    pub fn output_activations(&self) -> u64 {
+        self.wo() as u64 * self.ho() as u64 * self.n as u64
+    }
+
+    /// Input channels per group (`M/g`) — the paper's `M` within a group.
+    pub fn m_per_group(&self) -> usize {
+        self.m / self.groups
+    }
+
+    /// Output channels per group (`N/g`).
+    pub fn n_per_group(&self) -> usize {
+        self.n / self.groups
+    }
+
+    /// Whether this is a depthwise convolution.
+    pub fn is_depthwise(&self) -> bool {
+        self.groups > 1 && self.m_per_group() == 1 && self.n_per_group() == 1
+    }
+
+    /// Total multiply-accumulates for this layer:
+    /// `Wo*Ho*N * (M/g) * K^2`.
+    pub fn macs(&self) -> u64 {
+        self.output_activations() * self.m_per_group() as u64 * (self.k * self.k) as u64
+    }
+
+    /// Weight-parameter count: `N * (M/g) * K^2`.
+    pub fn weights(&self) -> u64 {
+        self.n as u64 * self.m_per_group() as u64 * (self.k * self.k) as u64
+    }
+
+    /// The same layer with `groups` erased (treated as a dense `M -> N`
+    /// conv). Activation *footprints* are identical; only the partitioning
+    /// space and MAC count change. This is how the paper's own evaluation
+    /// handled the grouped convs of MNASNet and ResNeXt-50 (see
+    /// EXPERIMENTS.md §Calibration), so the paper-profile networks use it.
+    pub fn dense_equivalent(&self) -> ConvLayer {
+        ConvLayer { groups: 1, ..self.clone() }
+    }
+}
+
+impl std::fmt::Display for ConvLayer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {}x{}x{} -> {}x{}x{} k{} s{} p{}{}",
+            self.name,
+            self.wi,
+            self.hi,
+            self.m,
+            self.wo(),
+            self.ho(),
+            self.n,
+            self.k,
+            self.stride,
+            self.pad,
+            if self.groups > 1 { format!(" g{}", self.groups) } else { String::new() }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_conv1_dims() {
+        // Conv2d(3, 64, kernel_size=11, stride=4, padding=2) @224 -> 55x55
+        let l = ConvLayer::new("conv1", 224, 224, 3, 64, 11, 4, 2);
+        assert_eq!(l.wo(), 55);
+        assert_eq!(l.ho(), 55);
+        assert_eq!(l.input_activations(), 3 * 224 * 224);
+        assert_eq!(l.output_activations(), 64 * 55 * 55);
+    }
+
+    #[test]
+    fn same_padding_preserves_dims() {
+        let l = ConvLayer::new("c", 56, 56, 64, 64, 3, 1, 1);
+        assert_eq!(l.wo(), 56);
+        assert_eq!(l.ho(), 56);
+    }
+
+    #[test]
+    fn strided_downsample() {
+        let l = ConvLayer::new("ds", 56, 56, 64, 128, 1, 2, 0);
+        assert_eq!(l.wo(), 28);
+        assert_eq!(l.ho(), 28);
+    }
+
+    #[test]
+    fn depthwise_flags_and_macs() {
+        let l = ConvLayer::grouped("dw", 112, 112, 32, 32, 3, 1, 1, 32);
+        assert!(l.is_depthwise());
+        assert_eq!(l.m_per_group(), 1);
+        // MACs: Wo*Ho*N * 1 * 9
+        assert_eq!(l.macs(), 112 * 112 * 32 * 9);
+        assert_eq!(l.weights(), 32 * 9);
+    }
+
+    #[test]
+    fn macs_dense() {
+        let l = ConvLayer::new("c", 14, 14, 512, 512, 3, 1, 1);
+        assert_eq!(l.macs(), 14 * 14 * 512 * 512 * 9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_groups() {
+        ConvLayer::grouped("bad", 8, 8, 10, 10, 3, 1, 1, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_kernel_bigger_than_input() {
+        ConvLayer::new("bad", 2, 2, 8, 8, 7, 1, 0);
+    }
+}

@@ -1,0 +1,14 @@
+//! CNN workload descriptors.
+//!
+//! The paper's analysis depends only on the *shapes* of the convolution
+//! layers (input/output spatial dims, channel counts, kernel size, groups),
+//! never on weights or activations. [`ConvLayer`] captures exactly that,
+//! and [`zoo`] provides torchvision-faithful definitions of the eight
+//! networks evaluated in the paper (Tables I–III) at 224x224 input.
+
+pub mod layer;
+pub mod network;
+pub mod zoo;
+
+pub use layer::ConvLayer;
+pub use network::Network;

@@ -1,0 +1,95 @@
+//! A network = named ordered list of conv layers, plus aggregate queries.
+
+use super::layer::ConvLayer;
+
+/// A CNN's convolution stack (the only part the paper's analysis touches).
+#[derive(Clone, Debug)]
+pub struct Network {
+    /// Paper-facing name, e.g. `"AlexNet"`.
+    pub name: String,
+    /// Conv layers in execution order.
+    pub layers: Vec<ConvLayer>,
+}
+
+impl Network {
+    pub fn new(name: &str, layers: Vec<ConvLayer>) -> Self {
+        assert!(!layers.is_empty(), "network {name} has no layers");
+        Network { name: name.to_string(), layers }
+    }
+
+    /// Minimum bandwidth (activations moved if every tensor is read once
+    /// and written once — the paper's Table III quantity):
+    /// `sum_l (Wi*Hi*M + Wo*Ho*N)`.
+    pub fn min_bandwidth(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.input_activations() + l.output_activations())
+            .sum()
+    }
+
+    /// Total MACs over all conv layers.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total conv weights.
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+
+    /// Find a layer by name.
+    pub fn layer(&self, name: &str) -> Option<&ConvLayer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// The network with every layer's `groups` erased — see
+    /// [`ConvLayer::dense_equivalent`]. Minimum bandwidth is unchanged;
+    /// partitioned bandwidth generally grows.
+    pub fn dense_equivalent(&self) -> Network {
+        Network {
+            name: self.name.clone(),
+            layers: self.layers.iter().map(|l| l.dense_equivalent()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network {
+        Network::new(
+            "tiny",
+            vec![
+                ConvLayer::new("c1", 8, 8, 3, 16, 3, 1, 1),
+                ConvLayer::new("c2", 8, 8, 16, 32, 3, 1, 1),
+            ],
+        )
+    }
+
+    #[test]
+    fn min_bandwidth_sums_layers() {
+        let n = tiny();
+        let expect = (8 * 8 * 3 + 8 * 8 * 16) + (8 * 8 * 16 + 8 * 8 * 32);
+        assert_eq!(n.min_bandwidth(), expect as u64);
+    }
+
+    #[test]
+    fn layer_lookup() {
+        let n = tiny();
+        assert!(n.layer("c2").is_some());
+        assert!(n.layer("nope").is_none());
+    }
+
+    #[test]
+    fn macs_accumulate() {
+        let n = tiny();
+        assert_eq!(n.total_macs(), (8 * 8 * 16 * 3 * 9 + 8 * 8 * 32 * 16 * 9) as u64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_network_rejected() {
+        Network::new("empty", vec![]);
+    }
+}

@@ -1,0 +1,42 @@
+//! torchvision AlexNet `features` conv stack (the 64-channel variant).
+//!
+//! Resolution trace @224: conv1(k11,s4,p2)->55, pool->27, conv2->27,
+//! pool->13, conv3..5 -> 13.
+
+use crate::models::{ConvLayer, Network};
+
+pub fn alexnet() -> Network {
+    Network::new(
+        "AlexNet",
+        vec![
+            ConvLayer::new("conv1", 224, 224, 3, 64, 11, 4, 2),
+            ConvLayer::new("conv2", 27, 27, 64, 192, 5, 1, 2),
+            ConvLayer::new("conv3", 13, 13, 192, 384, 3, 1, 1),
+            ConvLayer::new("conv4", 13, 13, 384, 256, 3, 1, 1),
+            ConvLayer::new("conv5", 13, 13, 256, 256, 3, 1, 1),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_alexnet_min_bw() {
+        // Paper Table III: 0.823 M activations/inference.
+        let bw = alexnet().min_bandwidth() as f64 / 1e6;
+        assert!((bw - 0.823).abs() < 0.001, "got {bw}");
+    }
+
+    #[test]
+    fn five_conv_layers() {
+        assert_eq!(alexnet().layers.len(), 5);
+    }
+
+    #[test]
+    fn conv1_output_is_55() {
+        let net = alexnet();
+        assert_eq!(net.layers[0].wo(), 55);
+    }
+}

@@ -1,0 +1,80 @@
+//! torchvision GoogLeNet (Inception v1), aux classifiers excluded
+//! (inference path only).
+//!
+//! Resolution trace @224: conv1(k7,s2,p3)->112, pool->56, conv2(1x1),
+//! conv3(3x3,p1)->56, pool->28, inception 3a/3b @28, pool->14,
+//! 4a..4e @14, pool->7, 5a/5b @7.
+//!
+//! torchvision's Inception branch3 uses a 3x3 kernel (not the paper-named
+//! 5x5) — we follow torchvision, consistent with the Table III
+//! calibration of the other networks.
+
+use crate::models::{ConvLayer, Network};
+
+/// (ch1x1, ch3x3red, ch3x3, ch5x5red, ch5x5, pool_proj)
+struct Inc(usize, usize, usize, usize, usize, usize);
+
+fn inception(layers: &mut Vec<ConvLayer>, name: &str, res: usize, cin: usize, c: Inc) -> usize {
+    let Inc(c1, c3r, c3, c5r, c5, pp) = c;
+    layers.push(ConvLayer::new(&format!("{name}.b1"), res, res, cin, c1, 1, 1, 0));
+    layers.push(ConvLayer::new(&format!("{name}.b2a"), res, res, cin, c3r, 1, 1, 0));
+    layers.push(ConvLayer::new(&format!("{name}.b2b"), res, res, c3r, c3, 3, 1, 1));
+    layers.push(ConvLayer::new(&format!("{name}.b3a"), res, res, cin, c5r, 1, 1, 0));
+    // torchvision uses kernel_size=3 here (historical quirk of the port).
+    layers.push(ConvLayer::new(&format!("{name}.b3b"), res, res, c5r, c5, 3, 1, 1));
+    // branch4 = maxpool(3,s1,p1) then 1x1 proj; pool keeps dims.
+    layers.push(ConvLayer::new(&format!("{name}.b4"), res, res, cin, pp, 1, 1, 0));
+    c1 + c3 + c5 + pp
+}
+
+pub fn googlenet() -> Network {
+    let mut layers = vec![
+        ConvLayer::new("conv1", 224, 224, 3, 64, 7, 2, 3), // ->112
+        // maxpool1 (ceil): 112 -> 56
+        ConvLayer::new("conv2", 56, 56, 64, 64, 1, 1, 0),
+        ConvLayer::new("conv3", 56, 56, 64, 192, 3, 1, 1),
+        // maxpool2: 56 -> 28
+    ];
+    let mut c = 192;
+    c = inception(&mut layers, "3a", 28, c, Inc(64, 96, 128, 16, 32, 32));
+    c = inception(&mut layers, "3b", 28, c, Inc(128, 128, 192, 32, 96, 64));
+    // maxpool3: 28 -> 14
+    c = inception(&mut layers, "4a", 14, c, Inc(192, 96, 208, 16, 48, 64));
+    c = inception(&mut layers, "4b", 14, c, Inc(160, 112, 224, 24, 64, 64));
+    c = inception(&mut layers, "4c", 14, c, Inc(128, 128, 256, 24, 64, 64));
+    c = inception(&mut layers, "4d", 14, c, Inc(112, 144, 288, 32, 64, 64));
+    c = inception(&mut layers, "4e", 14, c, Inc(256, 160, 320, 32, 128, 128));
+    // maxpool4: 14 -> 7
+    c = inception(&mut layers, "5a", 7, c, Inc(256, 160, 320, 32, 128, 128));
+    c = inception(&mut layers, "5b", 7, c, Inc(384, 192, 384, 48, 128, 128));
+    assert_eq!(c, 1024);
+    Network::new("GoogleNet", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_googlenet_min_bw() {
+        // Paper Table III: 7.889 M activations/inference.
+        let bw = googlenet().min_bandwidth() as f64 / 1e6;
+        assert!((bw - 7.889).abs() < 0.05, "got {bw}");
+    }
+
+    #[test]
+    fn layer_count() {
+        // 3 stem convs + 9 inceptions x 6 convs = 57
+        assert_eq!(googlenet().layers.len(), 57);
+    }
+
+    #[test]
+    fn inception_channel_chain() {
+        let net = googlenet();
+        // 3a input = 192, 3b input = 256, 4a input = 480
+        assert_eq!(net.layer("3a.b1").unwrap().m, 192);
+        assert_eq!(net.layer("3b.b1").unwrap().m, 256);
+        assert_eq!(net.layer("4a.b1").unwrap().m, 480);
+        assert_eq!(net.layer("5b.b1").unwrap().m, 832);
+    }
+}

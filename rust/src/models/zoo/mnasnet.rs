@@ -1,0 +1,96 @@
+//! torchvision MNASNet 1.0 (the paper's [15] reference).
+//!
+//! Stem 3->32 k3/s2; separable conv (dw 3x3 + 1x1 -> 16); six stacks of
+//! inverted residuals with (exp, kernel, stride, out, repeats):
+//! (3,3,2,24,3) (3,5,2,40,3) (6,5,2,80,3) (6,3,1,96,2) (6,5,2,192,4)
+//! (6,3,1,320,1); head 320->1280 1x1.
+
+use crate::models::{ConvLayer, Network};
+
+#[allow(clippy::too_many_arguments)]
+fn inverted_residual(
+    layers: &mut Vec<ConvLayer>,
+    name: &str,
+    res: usize,
+    cin: usize,
+    cout: usize,
+    exp: usize,
+    k: usize,
+    s: usize,
+) -> usize {
+    let hidden = cin * exp;
+    layers.push(ConvLayer::new(&format!("{name}.expand"), res, res, cin, hidden, 1, 1, 0));
+    layers.push(ConvLayer::grouped(
+        &format!("{name}.dw"),
+        res,
+        res,
+        hidden,
+        hidden,
+        k,
+        s,
+        k / 2,
+        hidden,
+    ));
+    let r = layers.last().unwrap().wo();
+    layers.push(ConvLayer::new(&format!("{name}.project"), r, r, hidden, cout, 1, 1, 0));
+    r
+}
+
+pub fn mnasnet1_0() -> Network {
+    let mut layers = vec![ConvLayer::new("stem", 224, 224, 3, 32, 3, 2, 1)]; // ->112
+    // Separable conv: depthwise 3x3 s1 on 32ch, project to 16.
+    layers.push(ConvLayer::grouped("sep.dw", 112, 112, 32, 32, 3, 1, 1, 32));
+    layers.push(ConvLayer::new("sep.project", 112, 112, 32, 16, 1, 1, 0));
+
+    let stacks: &[(usize, usize, usize, usize, usize)] = &[
+        // (exp, kernel, stride, cout, repeats)
+        (3, 3, 2, 24, 3),
+        (3, 5, 2, 40, 3),
+        (6, 5, 2, 80, 3),
+        (6, 3, 1, 96, 2),
+        (6, 5, 2, 192, 4),
+        (6, 3, 1, 320, 1),
+    ];
+    let mut res = 112;
+    let mut cin = 16;
+    let mut blk = 0usize;
+    for &(exp, k, s, cout, n) in stacks {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            res = inverted_residual(&mut layers, &format!("ir{blk}"), res, cin, cout, exp, k, stride);
+            cin = cout;
+            blk += 1;
+        }
+    }
+    layers.push(ConvLayer::new("head", res, res, 320, 1280, 1, 1, 0));
+    Network::new("MNASNet", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_mnasnet_min_bw() {
+        // Paper Table III: 11.001 M activations/inference.
+        let bw = mnasnet1_0().min_bandwidth() as f64 / 1e6;
+        assert!((bw - 11.001).abs() < 0.05, "got {bw}");
+    }
+
+    #[test]
+    fn layer_count() {
+        // stem + sep(2) + 16 blocks x 3 + head = 1 + 2 + 48 + 1 = 52
+        assert_eq!(mnasnet1_0().layers.len(), 52);
+    }
+
+    #[test]
+    fn five_by_five_depthwise_present() {
+        let net = mnasnet1_0();
+        assert!(net.layers.iter().any(|l| l.k == 5 && l.is_depthwise()));
+    }
+
+    #[test]
+    fn final_resolution_is_7() {
+        assert_eq!(mnasnet1_0().layers.last().unwrap().wo(), 7);
+    }
+}

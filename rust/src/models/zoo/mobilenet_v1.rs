@@ -1,0 +1,92 @@
+//! MobileNet (V1) — the network the paper actually evaluated.
+//!
+//! Calibration: the paper cites the MobileNetV2 paper [14] but its
+//! Table III value (10.273 M) matches the **V1** architecture
+//! (10.186 M, -0.8%), while torchvision MobileNetV2 gives 13.444 M
+//! (+31%). We therefore expose V1 as the paper's "MobileNet" row and keep
+//! [`super::mobilenet_v2`] available as a ninth network for extensions.
+//!
+//! V1: stem 3->32 k3/s2, then 13 depthwise-separable blocks
+//! (dw 3x3 + pw 1x1): 32->64, /2 ->128, 128, /2 ->256, 256, /2 ->512,
+//! 5x 512, /2 ->1024, 1024.
+
+use crate::models::{ConvLayer, Network};
+
+/// Append one depthwise-separable block; returns output resolution.
+fn dw_sep(
+    layers: &mut Vec<ConvLayer>,
+    id: usize,
+    res: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+) -> usize {
+    layers.push(ConvLayer::grouped(&format!("ds{id}.dw"), res, res, cin, cin, 3, stride, 1, cin));
+    let r = layers.last().unwrap().wo();
+    layers.push(ConvLayer::new(&format!("ds{id}.pw"), r, r, cin, cout, 1, 1, 0));
+    r
+}
+
+pub fn mobilenet_v1() -> Network {
+    let mut layers = vec![ConvLayer::new("stem", 224, 224, 3, 32, 3, 2, 1)]; // ->112
+    // (cout, stride) for the 13 separable blocks.
+    let blocks: &[(usize, usize)] = &[
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    let mut res = 112;
+    let mut cin = 32;
+    for (i, &(cout, s)) in blocks.iter().enumerate() {
+        res = dw_sep(&mut layers, i + 1, res, cin, cout, s);
+        cin = cout;
+    }
+    Network::new("MobileNet", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_mobilenet_min_bw() {
+        // Paper Table III: 10.273; V1 computes 10.186 (-0.8%), the closest
+        // of the MobileNet family by far (V2 is +31%).
+        let bw = mobilenet_v1().min_bandwidth() as f64 / 1e6;
+        assert!((bw - 10.186).abs() < 0.005, "got {bw}");
+        assert!((bw - 10.273).abs() / 10.273 < 0.01, "got {bw} vs paper 10.273");
+    }
+
+    #[test]
+    fn layer_count() {
+        // stem + 13 blocks x 2 = 27
+        assert_eq!(mobilenet_v1().layers.len(), 27);
+    }
+
+    #[test]
+    fn resolution_trace_ends_at_7() {
+        assert_eq!(mobilenet_v1().layers.last().unwrap().wo(), 7);
+    }
+
+    #[test]
+    fn depthwise_alternates_with_pointwise() {
+        let net = mobilenet_v1();
+        for (i, l) in net.layers.iter().enumerate().skip(1) {
+            if i % 2 == 1 {
+                assert!(l.is_depthwise(), "{} should be depthwise", l.name);
+            } else {
+                assert_eq!(l.k, 1, "{} should be pointwise", l.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! torchvision MobileNetV2 (the paper's [14] reference).
+//!
+//! Inverted residual (t, c, n, s) settings from the MobileNetV2 paper:
+//! (1,16,1,1) (6,24,2,2) (6,32,3,2) (6,64,4,2) (6,96,3,1) (6,160,3,2)
+//! (6,320,1,1), stem 3->32 k3/s2, head 320->1280 1x1.
+
+use crate::models::{ConvLayer, Network};
+
+/// Append one inverted-residual block: optional 1x1 expand, depthwise 3x3
+/// (stride s), 1x1 project. Returns (output res, output channels).
+fn inverted_residual(
+    layers: &mut Vec<ConvLayer>,
+    name: &str,
+    res: usize,
+    cin: usize,
+    cout: usize,
+    t: usize,
+    s: usize,
+) -> usize {
+    let hidden = cin * t;
+    if t != 1 {
+        layers.push(ConvLayer::new(&format!("{name}.expand"), res, res, cin, hidden, 1, 1, 0));
+    }
+    layers.push(ConvLayer::grouped(
+        &format!("{name}.dw"),
+        res,
+        res,
+        hidden,
+        hidden,
+        3,
+        s,
+        1,
+        hidden,
+    ));
+    let r = layers.last().unwrap().wo();
+    layers.push(ConvLayer::new(&format!("{name}.project"), r, r, hidden, cout, 1, 1, 0));
+    r
+}
+
+pub fn mobilenet_v2() -> Network {
+    let mut layers = vec![ConvLayer::new("stem", 224, 224, 3, 32, 3, 2, 1)]; // ->112
+    let settings: &[(usize, usize, usize, usize)] = &[
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut res = 112;
+    let mut cin = 32;
+    let mut blk = 0usize;
+    for &(t, c, n, s) in settings {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            res = inverted_residual(&mut layers, &format!("ir{blk}"), res, cin, c, t, stride);
+            cin = c;
+            blk += 1;
+        }
+    }
+    layers.push(ConvLayer::new("head", res, res, 320, 1280, 1, 1, 0));
+    Network::new("MobileNetV2", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v2_min_bw_is_not_the_paper_row() {
+        // The paper's "MobileNet" row (10.273 M) matches V1, not V2 —
+        // V2 computes to 13.444 M. Kept as an extension network.
+        let bw = mobilenet_v2().min_bandwidth() as f64 / 1e6;
+        assert!((bw - 13.444).abs() < 0.001, "got {bw}");
+    }
+
+    #[test]
+    fn layer_count() {
+        // stem + block convs + head. Block convs: first block (t=1) has 2,
+        // the other 16 blocks have 3 => 2 + 48 = 50; total 52.
+        assert_eq!(mobilenet_v2().layers.len(), 52);
+    }
+
+    #[test]
+    fn depthwise_layers_are_depthwise() {
+        let net = mobilenet_v2();
+        let dws: Vec<_> = net.layers.iter().filter(|l| l.name.ends_with(".dw")).collect();
+        assert_eq!(dws.len(), 17);
+        assert!(dws.iter().all(|l| l.is_depthwise()));
+    }
+
+    #[test]
+    fn final_resolution_is_7() {
+        let net = mobilenet_v2();
+        assert_eq!(net.layers.last().unwrap().wo(), 7);
+    }
+}

@@ -1,0 +1,175 @@
+//! torchvision-faithful conv-layer definitions of the eight CNNs the paper
+//! evaluates (Tables I–III), at 224x224 RGB input.
+//!
+//! Why torchvision: the paper's Table III minimum-bandwidth numbers match
+//! the torchvision model definitions exactly for AlexNet (0.823 M
+//! activations requires conv1 = 64 channels, i.e. the torchvision AlexNet,
+//! not the original 96-channel one) and ResNet-18 (4.666 M matches the
+//! v1.5 BasicBlock stack including downsample 1x1 convs). We therefore
+//! encode all eight networks from the torchvision sources; residual
+//! deviations from the paper are recorded in EXPERIMENTS.md.
+//!
+//! Only convolution layers are listed (the paper's analysis covers conv
+//! only); pooling is applied implicitly by giving the next layer the
+//! pooled input resolution. Classifier/aux convs are included only where
+//! calibration against Table III shows the paper counted them.
+
+mod alexnet;
+mod googlenet;
+mod mnasnet;
+mod mobilenet_v1;
+mod mobilenet_v2;
+mod resnet;
+mod squeezenet;
+mod vgg16;
+
+pub use alexnet::alexnet;
+pub use googlenet::googlenet;
+pub use mnasnet::mnasnet1_0;
+pub use mobilenet_v1::mobilenet_v1;
+pub use mobilenet_v2::mobilenet_v2;
+pub use resnet::{resnet18, resnet34, resnet50, resnet50_classic};
+pub use squeezenet::{squeezenet1_0, squeezenet1_1};
+pub use vgg16::{vgg11, vgg13, vgg16, vgg19};
+
+use super::network::Network;
+
+/// The eight networks under their paper labels, with the *calibrated*
+/// shapes that reproduce the published Tables I–III (the "paper profile").
+///
+/// Forensic findings from calibrating against Table III + the Table II
+/// sweep (full derivation in EXPERIMENTS.md §Calibration):
+///
+/// * "AlexNet", "SqueezeNet", "GoogleNet", "ResNet-18": torchvision
+///   definitions, faithful.
+/// * "VGG-16" is actually **VGG-13** (min BW 20.020 vs printed 20.095;
+///   true VGG-16 gives 22.629).
+/// * "ResNet-50" is **ResNeXt-50 32x4d** (exact Table III match at
+///   28.349 M) with groups *ignored* in the partitioning math.
+/// * "MobileNet" is MobileNet**V1** (10.186 vs printed 10.273; V2 gives
+///   13.444), with groups respected.
+/// * "MNASNet" is torchvision mnasnet1_0 with groups *ignored*
+///   (dense-equivalent fits Table II within ~2%; faithful grouping is
+///   ~10x lower).
+pub fn paper_networks() -> Vec<Network> {
+    vec![
+        alexnet(),
+        relabel(vgg13(), "VGG-16"),
+        squeezenet1_0(),
+        googlenet(),
+        resnet18(),
+        resnet50().dense_equivalent(),
+        mobilenet_v1(),
+        mnasnet1_0().dense_equivalent(),
+    ]
+}
+
+/// The same eight networks with their *architecturally faithful* shapes
+/// (true VGG-16, grouped ResNeXt/MNASNet convs). Min bandwidth matches
+/// [`paper_networks`] except VGG; partitioned bandwidth is what a real
+/// accelerator exploiting group structure would see.
+pub fn faithful_networks() -> Vec<Network> {
+    vec![
+        alexnet(),
+        vgg16(),
+        squeezenet1_0(),
+        googlenet(),
+        resnet18(),
+        resnet50(),
+        mobilenet_v1(),
+        mnasnet1_0(),
+    ]
+}
+
+/// Extra networks beyond the paper's eight (extensions/ablations).
+pub fn extra_networks() -> Vec<Network> {
+    vec![
+        mobilenet_v2(),
+        resnet34(),
+        resnet50_classic(),
+        squeezenet1_1(),
+        vgg11(),
+        vgg13(),
+        vgg19(),
+    ]
+}
+
+fn relabel(mut net: Network, name: &str) -> Network {
+    net.name = name.to_string();
+    net
+}
+
+/// Look up a network by (case-insensitive) name — paper profile first,
+/// then the extension networks.
+pub fn by_name(name: &str) -> Option<Network> {
+    let key = name.to_ascii_lowercase().replace(['-', '_', '.'], "");
+    paper_networks()
+        .into_iter()
+        .chain(extra_networks())
+        .find(|n| n.name.to_ascii_lowercase().replace(['-', '_', '.'], "") == key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_networks_in_paper_order() {
+        let names: Vec<String> = paper_networks().into_iter().map(|n| n.name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "AlexNet",
+                "VGG-16",
+                "SqueezeNet",
+                "GoogleNet",
+                "ResNet-18",
+                "ResNet-50",
+                "MobileNet",
+                "MNASNet"
+            ]
+        );
+    }
+
+    #[test]
+    fn lookup_tolerates_punctuation() {
+        assert!(by_name("resnet-18").is_some());
+        assert!(by_name("ResNet_18").is_some());
+        assert!(by_name("RESNET18").is_some());
+        assert!(by_name("resnet34").is_some(), "extras are searchable");
+        assert!(by_name("SqueezeNet1.1").is_some());
+        assert!(by_name("resnet101").is_none());
+    }
+
+    #[test]
+    fn all_layer_names_unique_per_network() {
+        for net in paper_networks() {
+            let mut names: Vec<&str> = net.layers.iter().map(|l| l.name.as_str()).collect();
+            let before = names.len();
+            names.sort();
+            names.dedup();
+            assert_eq!(before, names.len(), "duplicate layer names in {}", net.name);
+        }
+    }
+
+    #[test]
+    fn spatial_chains_are_consistent() {
+        // Within each network, every layer's input resolution must be
+        // reachable from some previous layer's output (or be the 224 image
+        // or a pooled version of a previous output). Weak but useful check:
+        // resolutions never increase along the layer list.
+        for net in paper_networks() {
+            let mut max_seen = 224usize;
+            for l in &net.layers {
+                assert!(
+                    l.wi <= max_seen,
+                    "{}: layer {} input {} exceeds any prior resolution",
+                    net.name,
+                    l.name,
+                    l.wi
+                );
+                max_seen = max_seen.max(l.wo());
+            }
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! torchvision ResNet-18 (BasicBlock) and ResNet-50 (Bottleneck, v1.5:
+//! the stride sits on the 3x3 conv).
+//!
+//! ResNet-18's Table III value (4.666 M) matches this definition exactly,
+//! including the 1x1 downsample convs on the first block of layers 2-4.
+
+use crate::models::{ConvLayer, Network};
+
+/// Two 3x3 convs + optional 1x1 downsample (stride s on conv1).
+fn basic_block(
+    layers: &mut Vec<ConvLayer>,
+    name: &str,
+    res: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+) {
+    layers.push(ConvLayer::new(&format!("{name}.conv1"), res, res, cin, cout, 3, stride, 1));
+    let r2 = layers.last().unwrap().wo();
+    layers.push(ConvLayer::new(&format!("{name}.conv2"), r2, r2, cout, cout, 3, 1, 1));
+    if stride != 1 || cin != cout {
+        layers.push(ConvLayer::new(&format!("{name}.down"), res, res, cin, cout, 1, stride, 0));
+    }
+}
+
+/// 1x1 reduce -> 3x3 (stride here, v1.5; optionally grouped) -> 1x1
+/// expand + downsample. `cout` is the block's output channel count.
+#[allow(clippy::too_many_arguments)]
+fn bottleneck(
+    layers: &mut Vec<ConvLayer>,
+    name: &str,
+    res: usize,
+    cin: usize,
+    width: usize,
+    cout: usize,
+    stride: usize,
+    groups: usize,
+) {
+    layers.push(ConvLayer::new(&format!("{name}.conv1"), res, res, cin, width, 1, 1, 0));
+    layers.push(ConvLayer::grouped(
+        &format!("{name}.conv2"),
+        res,
+        res,
+        width,
+        width,
+        3,
+        stride,
+        1,
+        groups,
+    ));
+    let r2 = layers.last().unwrap().wo();
+    layers.push(ConvLayer::new(&format!("{name}.conv3"), r2, r2, width, cout, 1, 1, 0));
+    if stride != 1 || cin != cout {
+        layers.push(ConvLayer::new(&format!("{name}.down"), res, res, cin, cout, 1, stride, 0));
+    }
+}
+
+/// Shared BasicBlock-stack builder (ResNet-18/34).
+fn basic_net(name: &str, blocks_per_stage: [usize; 4]) -> Network {
+    let mut layers = vec![ConvLayer::new("conv1", 224, 224, 3, 64, 7, 2, 3)]; // ->112
+    // maxpool: 112 -> 56
+    let stages: &[(usize, usize, usize)] = &[(1, 64, 56), (2, 128, 56), (3, 256, 28), (4, 512, 14)];
+    let mut cin = 64;
+    for (si, &(idx, cout, res_in)) in stages.iter().enumerate() {
+        let stride = if idx == 1 { 1 } else { 2 };
+        basic_block(&mut layers, &format!("layer{idx}.0"), res_in, cin, cout, stride);
+        let res = if stride == 2 { res_in / 2 } else { res_in };
+        for b in 1..blocks_per_stage[si] {
+            basic_block(&mut layers, &format!("layer{idx}.{b}"), res, cout, cout, 1);
+        }
+        cin = cout;
+    }
+    Network::new(name, layers)
+}
+
+pub fn resnet18() -> Network {
+    basic_net("ResNet-18", [2, 2, 2, 2])
+}
+
+/// ResNet-34 (extension network — not in the paper's tables).
+pub fn resnet34() -> Network {
+    basic_net("ResNet-34", [3, 4, 6, 3])
+}
+
+/// Shared bottleneck-stack builder for the 50-layer networks.
+/// `width_mult`: bottleneck width = stage_base * width_mult / 64 (64 for
+/// classic ResNet-50, 128 for ResNeXt-50 32x4d), `groups` applies to the
+/// 3x3 conv.
+fn bottleneck_50(name: &str, base_width: usize, groups: usize) -> Network {
+    let mut layers = vec![ConvLayer::new("conv1", 224, 224, 3, 64, 7, 2, 3)]; // ->112
+    // maxpool: 112 -> 56
+    // (stage idx, stage base channels, blocks, input res, first stride)
+    let stages: &[(usize, usize, usize, usize, usize)] = &[
+        (1, 64, 3, 56, 1),
+        (2, 128, 4, 56, 2),
+        (3, 256, 6, 28, 2),
+        (4, 512, 3, 14, 2),
+    ];
+    let mut cin = 64;
+    for &(idx, base, blocks, res_in, stride) in stages {
+        let width = base * base_width / 64;
+        let cout = base * 4;
+        bottleneck(&mut layers, &format!("layer{idx}.0"), res_in, cin, width, cout, stride, groups);
+        let res = if stride == 2 { res_in / 2 } else { res_in };
+        cin = cout;
+        for b in 1..blocks {
+            bottleneck(&mut layers, &format!("layer{idx}.{b}"), res, cin, width, cout, 1, groups);
+        }
+    }
+    Network::new(name, layers)
+}
+
+/// The paper's "ResNet-50" row.
+///
+/// Calibration: the classic torchvision ResNet-50 yields 21.776 M minimum
+/// bandwidth, but the paper's Table III prints 28.349 M — which matches
+/// **ResNeXt-50 32x4d** (torchvision `resnext50_32x4d`) *exactly*
+/// (28.349440 M). The paper evidently pulled the ResNeXt variant; we
+/// reproduce that so the partitioning tables line up, and keep the classic
+/// variant available as [`resnet50_classic`].
+pub fn resnet50() -> Network {
+    bottleneck_50("ResNet-50", 128, 32)
+}
+
+/// Classic torchvision ResNet-50 (kept for extension experiments).
+pub fn resnet50_classic() -> Network {
+    bottleneck_50("ResNet-50-classic", 64, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_resnet18_min_bw() {
+        // Paper Table III: 4.666 M activations/inference (exact match).
+        let bw = resnet18().min_bandwidth() as f64 / 1e6;
+        assert!((bw - 4.666).abs() < 0.001, "got {bw}");
+    }
+
+    #[test]
+    fn table3_resnet50_min_bw() {
+        // Paper Table III: 28.349 M — matches ResNeXt-50 32x4d exactly.
+        let bw = resnet50().min_bandwidth() as f64 / 1e6;
+        assert!((bw - 28.349).abs() < 0.001, "got {bw}");
+    }
+
+    #[test]
+    fn classic_resnet50_differs() {
+        // The classic variant is what "ResNet-50" usually means; the paper's
+        // number matches the ResNeXt shapes instead (see module docs).
+        let bw = resnet50_classic().min_bandwidth() as f64 / 1e6;
+        assert!((bw - 21.776).abs() < 0.001, "got {bw}");
+    }
+
+    #[test]
+    fn resnext_conv2_is_grouped() {
+        let net = resnet50();
+        let c2 = net.layer("layer1.0.conv2").unwrap();
+        assert_eq!(c2.groups, 32);
+        assert_eq!(c2.m, 128);
+        assert_eq!(c2.m_per_group(), 4);
+    }
+
+    #[test]
+    fn resnet34_structure() {
+        let net = resnet34();
+        // conv1 + (3+4+6+3) x 2 convs + 3 downsamples = 1 + 32 + 3 = 36
+        assert_eq!(net.layers.len(), 36);
+        let bw = net.min_bandwidth() as f64 / 1e6;
+        assert!((bw - 7.175).abs() < 0.01, "got {bw}");
+    }
+
+    #[test]
+    fn resnet18_layer_count() {
+        // conv1 + (2+2+2+2) blocks x 2 convs + 3 downsamples = 1+16+3 = 20
+        assert_eq!(resnet18().layers.len(), 20);
+    }
+
+    #[test]
+    fn resnet50_layer_count() {
+        // conv1 + (3+4+6+3) x 3 convs + 4 downsamples = 1 + 48 + 4 = 53
+        assert_eq!(resnet50().layers.len(), 53);
+    }
+
+    #[test]
+    fn resnet50_first_stage_has_stride1_downsample() {
+        let net = resnet50();
+        let d = net.layer("layer1.0.down").unwrap();
+        assert_eq!(d.stride, 1);
+        assert_eq!(d.m, 64);
+        assert_eq!(d.n, 256);
+    }
+
+    #[test]
+    fn v1_5_stride_on_3x3() {
+        let net = resnet50();
+        let c1 = net.layer("layer2.0.conv1").unwrap();
+        let c2 = net.layer("layer2.0.conv2").unwrap();
+        assert_eq!(c1.stride, 1);
+        assert_eq!(c2.stride, 2);
+        assert_eq!(c2.wo(), 28);
+        // ResNeXt widths: layer2 bottleneck width = 128 * 128/64 = 256
+        assert_eq!(c1.n, 256);
+    }
+}

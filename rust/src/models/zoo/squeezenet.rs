@@ -1,0 +1,93 @@
+//! torchvision SqueezeNet 1.0.
+//!
+//! conv1 (k7,s2, no pad) @224 -> 109, max-pools are k3/s2 with
+//! ceil_mode=True: 109 -> 54 -> 27 -> 13. Fire modules: squeeze 1x1 then
+//! parallel expand1x1 + expand3x3(p1), channel-concat. The final 1x1
+//! 512->1000 classifier conv is included — calibration against Table III
+//! (7.304 M) requires it (without it the total is 7.048 M).
+
+use crate::models::{ConvLayer, Network};
+
+/// Append one fire module's three convs.
+fn fire(layers: &mut Vec<ConvLayer>, id: usize, res: usize, cin: usize, s1: usize, e: usize) {
+    layers.push(ConvLayer::new(&format!("fire{id}.squeeze"), res, res, cin, s1, 1, 1, 0));
+    layers.push(ConvLayer::new(&format!("fire{id}.expand1x1"), res, res, s1, e, 1, 1, 0));
+    layers.push(ConvLayer::new(&format!("fire{id}.expand3x3"), res, res, s1, e, 3, 1, 1));
+}
+
+pub fn squeezenet1_0() -> Network {
+    let mut layers = vec![ConvLayer::new("conv1", 224, 224, 3, 96, 7, 2, 0)];
+    // pool1: 109 -> 54 (ceil_mode)
+    fire(&mut layers, 2, 54, 96, 16, 64); // out 128
+    fire(&mut layers, 3, 54, 128, 16, 64); // out 128
+    fire(&mut layers, 4, 54, 128, 32, 128); // out 256
+    // pool2: 54 -> 27
+    fire(&mut layers, 5, 27, 256, 32, 128); // out 256
+    fire(&mut layers, 6, 27, 256, 48, 192); // out 384
+    fire(&mut layers, 7, 27, 384, 48, 192); // out 384
+    fire(&mut layers, 8, 27, 384, 64, 256); // out 512
+    // pool3: 27 -> 13
+    fire(&mut layers, 9, 13, 512, 64, 256); // out 512
+    layers.push(ConvLayer::new("classifier", 13, 13, 512, 1000, 1, 1, 0));
+    Network::new("SqueezeNet", layers)
+}
+
+/// SqueezeNet 1.1 (extension network): 3x3/s2 conv1 with 64 channels and
+/// earlier pooling — same accuracy as 1.0 at ~2.4x less compute.
+pub fn squeezenet1_1() -> Network {
+    let mut layers = vec![ConvLayer::new("conv1", 224, 224, 3, 64, 3, 2, 0)]; // ->111
+    // pool1 (ceil): 111 -> 55
+    fire(&mut layers, 2, 55, 64, 16, 64); // out 128
+    fire(&mut layers, 3, 55, 128, 16, 64); // out 128
+    // pool2: 55 -> 27
+    fire(&mut layers, 4, 27, 128, 32, 128); // out 256
+    fire(&mut layers, 5, 27, 256, 32, 128); // out 256
+    // pool3: 27 -> 13
+    fire(&mut layers, 6, 13, 256, 48, 192); // out 384
+    fire(&mut layers, 7, 13, 384, 48, 192); // out 384
+    fire(&mut layers, 8, 13, 384, 64, 256); // out 512
+    fire(&mut layers, 9, 13, 512, 64, 256); // out 512
+    layers.push(ConvLayer::new("classifier", 13, 13, 512, 1000, 1, 1, 0));
+    Network::new("SqueezeNet1.1", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_squeezenet_min_bw() {
+        // Paper Table III: 7.304 M activations/inference.
+        let bw = squeezenet1_0().min_bandwidth() as f64 / 1e6;
+        assert!((bw - 7.304).abs() < 0.02, "got {bw}");
+    }
+
+    #[test]
+    fn layer_count() {
+        // conv1 + 8 fires x 3 + classifier = 26
+        assert_eq!(squeezenet1_0().layers.len(), 26);
+    }
+
+    #[test]
+    fn squeezenet11_structure() {
+        let net = squeezenet1_1();
+        assert_eq!(net.layers.len(), 26);
+        assert_eq!(net.layers[0].wo(), 111);
+        // 1.1 moves less data than 1.0
+        assert!(net.min_bandwidth() < squeezenet1_0().min_bandwidth());
+    }
+
+    #[test]
+    fn conv1_resolution() {
+        let net = squeezenet1_0();
+        assert_eq!(net.layers[0].wo(), 109);
+    }
+
+    #[test]
+    fn fire_concat_channels_feed_next() {
+        let net = squeezenet1_0();
+        // fire3.squeeze input channels must be fire2's concat = 2 * 64.
+        assert_eq!(net.layer("fire3.squeeze").unwrap().m, 128);
+        assert_eq!(net.layer("fire9.squeeze").unwrap().m, 512);
+    }
+}

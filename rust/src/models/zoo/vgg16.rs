@@ -1,0 +1,152 @@
+//! torchvision VGG-16 (configuration "D"): thirteen 3x3/p1 convs in five
+//! blocks separated by 2x2 max-pools.
+//!
+//! Calibration note: the paper's Table III reports 20.095 M activations
+//! for VGG-16 while this (standard) definition yields 22.629 M. AlexNet,
+//! ResNet-18 and others match the torchvision definitions exactly, so we
+//! keep the canonical config-D stack and record the delta in
+//! EXPERIMENTS.md rather than reverse-engineering a non-standard VGG.
+
+use crate::models::{ConvLayer, Network};
+
+fn vgg_stack(name: &str, cfg: &[(usize, &[usize])]) -> Network {
+    let mut layers = Vec::new();
+    let mut cin = 3usize;
+    for (b, (res, widths)) in cfg.iter().enumerate() {
+        for (i, &cout) in widths.iter().enumerate() {
+            layers.push(ConvLayer::new(
+                &format!("conv{}_{}", b + 1, i + 1),
+                *res,
+                *res,
+                cin,
+                cout,
+                3,
+                1,
+                1,
+            ));
+            cin = cout;
+        }
+    }
+    Network::new(name, layers)
+}
+
+/// Canonical VGG-16 (configuration D, 13 convs).
+pub fn vgg16() -> Network {
+    vgg_stack(
+        "VGG-16",
+        &[
+            (224, &[64, 64]),
+            (112, &[128, 128]),
+            (56, &[256, 256, 256]),
+            (28, &[512, 512, 512]),
+            (14, &[512, 512, 512]),
+        ],
+    )
+}
+
+/// VGG-11 (configuration A, 8 convs) — extension network.
+pub fn vgg11() -> Network {
+    vgg_stack(
+        "VGG-11",
+        &[
+            (224, &[64]),
+            (112, &[128]),
+            (56, &[256, 256]),
+            (28, &[512, 512]),
+            (14, &[512, 512]),
+        ],
+    )
+}
+
+/// VGG-19 (configuration E, 16 convs) — extension network.
+pub fn vgg19() -> Network {
+    vgg_stack(
+        "VGG-19",
+        &[
+            (224, &[64, 64]),
+            (112, &[128, 128]),
+            (56, &[256, 256, 256, 256]),
+            (28, &[512, 512, 512, 512]),
+            (14, &[512, 512, 512, 512]),
+        ],
+    )
+}
+
+/// VGG-13 (configuration B, 10 convs).
+///
+/// Calibration shows the paper's "VGG-16" rows were computed on these
+/// shapes: Table III prints 20.095 M (VGG-13 = 20.020 M, -0.4%; true
+/// VGG-16 = 22.629 M, +12.6%), and the Table II sweep fits within a few
+/// percent for VGG-13 but is ~1.5x off for config D. The paper profile
+/// therefore evaluates VGG-13 under the "VGG-16" label; this function
+/// keeps its honest name.
+pub fn vgg13() -> Network {
+    vgg_stack(
+        "VGG-13",
+        &[
+            (224, &[64, 64]),
+            (112, &[128, 128]),
+            (56, &[256, 256]),
+            (28, &[512, 512]),
+            (14, &[512, 512]),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_convs() {
+        assert_eq!(vgg16().layers.len(), 13);
+    }
+
+    #[test]
+    fn canonical_min_bw() {
+        // Standard config-D value; the paper prints 20.095 (see module doc).
+        let bw = vgg16().min_bandwidth() as f64 / 1e6;
+        assert!((bw - 22.629).abs() < 0.01, "got {bw}");
+    }
+
+    #[test]
+    fn vgg13_matches_paper_table3() {
+        let bw = vgg13().min_bandwidth() as f64 / 1e6;
+        assert!((bw - 20.020).abs() < 0.001, "got {bw}");
+        assert!((bw - 20.095).abs() / 20.095 < 0.005, "got {bw} vs paper 20.095");
+    }
+
+    #[test]
+    fn vgg13_has_ten_convs() {
+        assert_eq!(vgg13().layers.len(), 10);
+    }
+
+    #[test]
+    fn vgg_family_sizes() {
+        assert_eq!(vgg11().layers.len(), 8);
+        assert_eq!(vgg19().layers.len(), 16);
+        // monotone: deeper config -> more bandwidth
+        assert!(vgg11().min_bandwidth() < vgg13().min_bandwidth());
+        assert!(vgg13().min_bandwidth() < vgg16().min_bandwidth());
+        assert!(vgg16().min_bandwidth() < vgg19().min_bandwidth());
+    }
+
+    #[test]
+    fn channel_chain() {
+        let net = vgg16();
+        assert_eq!(net.layers[0].m, 3);
+        assert_eq!(net.layers[12].n, 512);
+        for w in net.layers.windows(2) {
+            // blocks chain: next input channels == previous output channels
+            assert_eq!(w[1].m, w[0].n);
+        }
+    }
+
+    #[test]
+    fn all_same_padding() {
+        for l in vgg16().layers {
+            assert_eq!(l.wo(), l.wi);
+            assert_eq!(l.k, 3);
+        }
+    }
+}

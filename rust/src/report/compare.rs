@@ -1,0 +1,146 @@
+//! Cell-by-cell comparison of this implementation against the paper's
+//! published numbers — the data behind `psim validate` and EXPERIMENTS.md.
+
+use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::paper;
+use crate::analytics::partition::Strategy;
+use crate::analytics::sweep::network_bandwidth;
+use crate::models::zoo;
+use crate::util::mathx::rel_diff;
+use crate::util::tablefmt::Table;
+
+/// One compared cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub table: &'static str,
+    pub network: String,
+    pub setting: String,
+    pub paper: f64,
+    pub ours: f64,
+}
+
+impl Cell {
+    pub fn rel_diff(&self) -> f64 {
+        rel_diff(self.paper, self.ours)
+    }
+}
+
+/// Compare every cell of Tables I, II and III.
+pub fn compare_all() -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for net in zoo::paper_networks() {
+        // Table III
+        cells.push(Cell {
+            table: "III",
+            network: net.name.clone(),
+            setting: "min".into(),
+            paper: paper::table3(&net.name).unwrap(),
+            ours: net.min_bandwidth() as f64 / 1e6,
+        });
+        // Table I
+        for &p in &paper::TABLE1_MACS {
+            let row = paper::table1(&net.name, p).unwrap();
+            for (si, s) in Strategy::TABLE1.iter().enumerate() {
+                let ours =
+                    network_bandwidth(&net, p, *s, ControllerMode::Passive).total() / 1e6;
+                cells.push(Cell {
+                    table: "I",
+                    network: net.name.clone(),
+                    setting: format!("P={p} {}", s.label()),
+                    paper: row[si],
+                    ours,
+                });
+            }
+        }
+        // Table II
+        for &p in &paper::TABLE2_MACS {
+            let (pa, ac) = paper::table2(&net.name, p).unwrap();
+            for (mode, val) in [(ControllerMode::Passive, pa), (ControllerMode::Active, ac)] {
+                let ours = network_bandwidth(&net, p, Strategy::Optimal, mode).total() / 1e6;
+                cells.push(Cell {
+                    table: "II",
+                    network: net.name.clone(),
+                    setting: format!("P={p} {}", mode.label()),
+                    paper: val,
+                    ours,
+                });
+            }
+        }
+    }
+    cells
+}
+
+/// Aggregate statistics of a comparison run.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub cells: usize,
+    pub median_rel_diff: f64,
+    pub mean_rel_diff: f64,
+    pub within_5pct: usize,
+    pub within_15pct: usize,
+    pub worst: f64,
+}
+
+/// Summarize a set of compared cells.
+pub fn summarize(cells: &[Cell]) -> Summary {
+    assert!(!cells.is_empty());
+    let mut diffs: Vec<f64> = cells.iter().map(|c| c.rel_diff()).collect();
+    diffs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        cells: cells.len(),
+        median_rel_diff: diffs[diffs.len() / 2],
+        mean_rel_diff: diffs.iter().sum::<f64>() / diffs.len() as f64,
+        within_5pct: diffs.iter().filter(|d| **d <= 0.05).count(),
+        within_15pct: diffs.iter().filter(|d| **d <= 0.15).count(),
+        worst: *diffs.last().unwrap(),
+    }
+}
+
+/// Render the comparison as a markdown table (sorted worst-first when
+/// `worst_first`, else paper order).
+pub fn to_table(cells: &[Cell], worst_first: bool) -> Table {
+    let mut t = Table::new(vec!["Table", "CNN", "Setting", "Paper", "Ours", "Δ%"]);
+    let mut sorted: Vec<&Cell> = cells.iter().collect();
+    if worst_first {
+        sorted.sort_by(|a, b| b.rel_diff().partial_cmp(&a.rel_diff()).unwrap());
+    }
+    for c in sorted {
+        t.row(vec![
+            c.table.to_string(),
+            c.network.clone(),
+            c.setting.clone(),
+            format!("{:.2}", c.paper),
+            format!("{:.2}", c.ours),
+            format!("{:+.1}", (c.ours - c.paper) / c.paper * 100.0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_published_cell() {
+        let cells = compare_all();
+        // 8 nets x (1 + 3*4 + 6*2) = 8 x 25 = 200 cells
+        assert_eq!(cells.len(), 200);
+    }
+
+    #[test]
+    fn summary_consistency() {
+        let cells = compare_all();
+        let s = summarize(&cells);
+        assert_eq!(s.cells, 200);
+        assert!(s.within_5pct <= s.within_15pct);
+        assert!(s.median_rel_diff <= s.worst);
+    }
+
+    #[test]
+    fn render_is_complete() {
+        let cells = compare_all();
+        let t = to_table(&cells, true);
+        assert_eq!(t.n_rows(), cells.len());
+    }
+}

@@ -1,0 +1,13 @@
+//! Regenerators for every table and figure in the paper's evaluation
+//! (Section IV), plus paper-vs-ours comparison reports.
+//!
+//! * [`tables::table1`] — BW by partitioning strategy x P (Table I).
+//! * [`tables::table2`] — passive vs active controller x P (Table II).
+//! * [`tables::table3`] — minimum BW per network (Table III).
+//! * [`fig2`] — % saving of the active controller (Fig. 2), markdown
+//!   series + CSV + an ASCII chart for terminals.
+//! * [`compare`] — cell-by-cell deviation against the published numbers.
+
+pub mod compare;
+pub mod fig2;
+pub mod tables;

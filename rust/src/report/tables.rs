@@ -1,0 +1,122 @@
+//! Renderers that regenerate the paper's Tables I–III from the analytical
+//! model. Each returns a [`Table`] so callers choose markdown or CSV.
+
+use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::paper;
+use crate::analytics::partition::Strategy;
+use crate::analytics::sweep::network_bandwidth;
+use crate::coordinator::parallel::{default_workers, parallel_map};
+use crate::models::zoo;
+use crate::models::Network;
+use crate::util::tablefmt::{mact, Table};
+
+/// Table I over an explicit network list.
+pub fn table1_for(nets: &[Network]) -> Table {
+    let mut header = vec!["CNN".to_string()];
+    for p in paper::TABLE1_MACS {
+        for s in Strategy::TABLE1 {
+            header.push(format!("P={p} {}", s.label()));
+        }
+    }
+    let mut t = Table::new(header);
+    let rows = parallel_map(nets, default_workers(), |net| {
+        let mut row = vec![net.name.clone()];
+        for p in paper::TABLE1_MACS {
+            for s in Strategy::TABLE1 {
+                let r = network_bandwidth(net, p, s, ControllerMode::Passive);
+                row.push(mact(r.total(), 1));
+            }
+        }
+        row
+    });
+    for row in rows {
+        t.row(row);
+    }
+    t
+}
+
+/// Table I: bandwidth by partitioning strategy for P in `TABLE1_MACS`.
+pub fn table1() -> Table {
+    table1_for(&zoo::paper_networks())
+}
+
+/// Table II over an explicit network list.
+pub fn table2_for(nets: &[Network]) -> Table {
+    let mut header = vec!["CNN".to_string()];
+    for mode in ControllerMode::ALL {
+        for p in paper::TABLE2_MACS {
+            header.push(format!("{} {p}", mode.label()));
+        }
+    }
+    let mut t = Table::new(header);
+    let rows = parallel_map(nets, default_workers(), |net| {
+        let mut row = vec![net.name.clone()];
+        for mode in ControllerMode::ALL {
+            for p in paper::TABLE2_MACS {
+                let r = network_bandwidth(net, p, Strategy::Optimal, mode);
+                row.push(mact(r.total(), 2));
+            }
+        }
+        row
+    });
+    for row in rows {
+        t.row(row);
+    }
+    t
+}
+
+/// Table II: passive vs active controller, optimal partitioning per mode.
+pub fn table2() -> Table {
+    table2_for(&zoo::paper_networks())
+}
+
+/// Table III over an explicit network list.
+pub fn table3_for(nets: &[Network]) -> Table {
+    let mut t = Table::new(vec!["CNN", "BW (M activations/inference)"]);
+    for net in nets {
+        t.row(vec![net.name.clone(), mact(net.min_bandwidth() as f64, 3)]);
+    }
+    t
+}
+
+/// Table III: minimum bandwidth (everything read once + written once).
+pub fn table3() -> Table {
+    table3_for(&zoo::paper_networks())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shape() {
+        let t = table1();
+        assert_eq!(t.n_rows(), 8);
+        let md = t.to_markdown();
+        assert!(md.contains("This Work"));
+        assert!(md.contains("AlexNet"));
+    }
+
+    #[test]
+    fn table2_shape() {
+        let t = table2();
+        assert_eq!(t.n_rows(), 8);
+        assert!(t.to_markdown().contains("passive 512"));
+    }
+
+    #[test]
+    fn table3_matches_paper_within_tolerance() {
+        // Collective regression: six of eight rows match the paper to
+        // <=1%; VGG-16 and MobileNet carry documented deltas (see zoo).
+        let nets = zoo::paper_networks();
+        let mut close = 0;
+        for net in &nets {
+            let ours = net.min_bandwidth() as f64 / 1e6;
+            let theirs = paper::table3(&net.name).unwrap();
+            if (ours - theirs).abs() / theirs < 0.01 {
+                close += 1;
+            }
+        }
+        assert!(close >= 6, "only {close}/8 Table III rows within 1%");
+    }
+}

@@ -1,0 +1,156 @@
+//! Artifact discovery: parse `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) and resolve entry points to HLO text files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor signature in the manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    fn from_json(j: &Json) -> Result<TensorSig> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or_else(|| anyhow!("missing dtype"))?
+            .to_string();
+        Ok(TensorSig { shape, dtype })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry point.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// A parsed artifact directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactDir {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+    pub entries: Vec<Entry>,
+}
+
+impl ArtifactDir {
+    /// Load and validate `dir/manifest.json`.
+    pub fn open(dir: &Path) -> Result<ArtifactDir> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest_path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let fingerprint = j
+            .get("fingerprint")
+            .and_then(|f| f.as_str())
+            .unwrap_or("unknown")
+            .to_string();
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow!("manifest has no entries"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("entry missing name"))?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("entry {name} missing file"))?;
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("artifact {} listed in manifest but missing on disk", path.display());
+            }
+            let sigs = |key: &str| -> Result<Vec<TensorSig>> {
+                e.get(key)
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| anyhow!("entry missing {key}"))?
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect()
+            };
+            let (inputs, outputs) = (sigs("inputs")?, sigs("outputs")?);
+            entries.push(Entry { name, path, inputs, outputs });
+        }
+        Ok(ArtifactDir { dir: dir.to_path_buf(), fingerprint, entries })
+    }
+
+    /// Default location: `$PSIM_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<ArtifactDir> {
+        let dir = std::env::var("PSIM_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(Path::new(&dir))
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("psim_manifest_test_ok");
+        write_manifest(
+            &dir,
+            r#"{"fingerprint":"abc","entries":[
+                {"name":"f","file":"f.hlo.txt",
+                 "inputs":[{"shape":[2,3],"dtype":"float32"}],
+                 "outputs":[{"shape":[2],"dtype":"float32"}]}]}"#,
+        );
+        std::fs::write(dir.join("f.hlo.txt"), "HloModule f").unwrap();
+        let a = ArtifactDir::open(&dir).unwrap();
+        assert_eq!(a.fingerprint, "abc");
+        let e = a.entry("f").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![2, 3]);
+        assert_eq!(e.inputs[0].elements(), 6);
+        assert!(a.entry("missing").is_none());
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = std::env::temp_dir().join("psim_manifest_test_missing");
+        write_manifest(
+            &dir,
+            r#"{"fingerprint":"x","entries":[
+                {"name":"g","file":"g.hlo.txt","inputs":[],"outputs":[]}]}"#,
+        );
+        let _ = std::fs::remove_file(dir.join("g.hlo.txt"));
+        assert!(ArtifactDir::open(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_absent_dir() {
+        assert!(ArtifactDir::open(Path::new("/nonexistent/psim")).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! The PJRT execution client: compile HLO-text artifacts once, cache the
+//! executables, execute with host tensors.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `PjRtClient::compile` -> `execute`.
+//! Entry points were lowered with `return_tuple=True`, so results unwrap
+//! with `to_tuple`.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{ArtifactDir, Entry};
+use super::tensor::Tensor;
+
+/// Compiled-executable cache keyed by entry-point name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: ArtifactDir,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative execution statistics.
+    pub execs: u64,
+    pub exec_nanos: u128,
+    pub compile_nanos: u128,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over an artifact directory.
+    pub fn new(artifacts: ArtifactDir) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, artifacts, cache: HashMap::new(), execs: 0, exec_nanos: 0, compile_nanos: 0 })
+    }
+
+    /// Open `./artifacts` (or `$PSIM_ARTIFACTS`).
+    pub fn open_default() -> Result<Runtime> {
+        Runtime::new(ArtifactDir::open_default()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts(&self) -> &ArtifactDir {
+        &self.artifacts
+    }
+
+    /// Entry-point signature lookup.
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.artifacts
+            .entry(name)
+            .ok_or_else(|| anyhow!("no artifact entry '{name}' (have: {:?})",
+                self.artifacts.entries.iter().map(|e| &e.name).collect::<Vec<_>>()))
+    }
+
+    /// Compile (or fetch from cache) an entry point.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.entry(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", entry.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.compile_nanos += t0.elapsed().as_nanos();
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entry point with shape-checked inputs.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?;
+        let entry = self.entry(name)?;
+        if inputs.len() != entry.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, sig)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if t.shape != sig.shape {
+                return Err(anyhow!(
+                    "{name}: input {i} shape {:?} != expected {:?}",
+                    t.shape,
+                    sig.shape
+                ));
+            }
+        }
+        let n_outputs = entry.outputs.len();
+
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let exe = self.cache.get(name).expect("loaded above");
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        self.exec_nanos += t0.elapsed().as_nanos();
+        self.execs += 1;
+
+        // return_tuple=True: unwrap the tuple into output tensors.
+        let parts = lit.to_tuple()?;
+        if parts.len() != n_outputs {
+            return Err(anyhow!(
+                "{name}: expected {} outputs, got {}",
+                n_outputs,
+                parts.len()
+            ));
+        }
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Mean execution latency so far.
+    pub fn mean_exec_micros(&self) -> f64 {
+        if self.execs == 0 {
+            return 0.0;
+        }
+        self.exec_nanos as f64 / self.execs as f64 / 1000.0
+    }
+
+    /// Prepare a constant tensor once for repeated execution.
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf RT-1): serving re-converts the
+    /// model weights to XLA literals on every call through `execute`
+    /// (two full copies per tensor); preparing them once removes that
+    /// per-request work. True device-buffer residency via `execute_b`
+    /// was attempted and *reverted*: xla_extension 0.5.1 corrupts output
+    /// buffer metadata on the second buffer-based execution
+    /// (`Check failed: literal.size_bytes() == b->size()` in
+    /// abstract_tfrt_cpu_buffer.cc) — see §Perf RT-1's negative result.
+    pub fn prepare(&self, t: &Tensor) -> Result<PreparedTensor> {
+        Ok(PreparedTensor { lit: t.to_literal()?, shape: t.shape.clone() })
+    }
+
+    /// Execute with a mix of fresh host inputs and pre-prepared constant
+    /// inputs. `inputs[i]` must match the entry's i-th signature.
+    pub fn execute_mixed(&mut self, name: &str, inputs: &[Input<'_>]) -> Result<Vec<Tensor>> {
+        self.load(name)?;
+        let entry = self.entry(name)?;
+        if inputs.len() != entry.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (input, sig)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            let shape = match input {
+                Input::Host(t) => &t.shape,
+                Input::Prepared(d) => &d.shape,
+            };
+            if shape != &sig.shape {
+                return Err(anyhow!(
+                    "{name}: input {i} shape {:?} != expected {:?}",
+                    shape,
+                    sig.shape
+                ));
+            }
+        }
+        let n_outputs = entry.outputs.len();
+
+        // Convert only the fresh host inputs; prepared literals are reused.
+        let mut owned: Vec<Option<xla::Literal>> = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            owned.push(match input {
+                Input::Host(t) => Some(t.to_literal()?),
+                Input::Prepared(_) => None,
+            });
+        }
+        let args: Vec<&xla::Literal> = inputs
+            .iter()
+            .zip(&owned)
+            .map(|(input, up)| match (input, up) {
+                (Input::Prepared(d), _) => &d.lit,
+                (Input::Host(_), Some(l)) => l,
+                (Input::Host(_), None) => unreachable!("converted above"),
+            })
+            .collect();
+        let exe = self.cache.get(name).expect("loaded above");
+        let t0 = Instant::now();
+        let result = exe.execute::<&xla::Literal>(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        self.exec_nanos += t0.elapsed().as_nanos();
+        self.execs += 1;
+
+        let parts = lit.to_tuple()?;
+        if parts.len() != n_outputs {
+            return Err(anyhow!("{name}: expected {n_outputs} outputs, got {}", parts.len()));
+        }
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// A constant input converted to XLA-literal form once (see
+/// [`Runtime::prepare`]).
+pub struct PreparedTensor {
+    lit: xla::Literal,
+    shape: Vec<usize>,
+}
+
+impl PreparedTensor {
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+}
+
+/// One input to [`Runtime::execute_mixed`].
+pub enum Input<'a> {
+    /// Fresh per-call host data (converted on the spot).
+    Host(&'a Tensor),
+    /// Pre-converted constant (weights).
+    Prepared(&'a PreparedTensor),
+}
+
+// Tests that need real artifacts live in rust/tests/runtime_artifacts.rs
+// (they require `make artifacts` to have run; unit tests here stay
+// artifact-free).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_lookup_error_is_informative() {
+        let dir = std::env::temp_dir().join("psim_rt_empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"fingerprint":"x","entries":[]}"#).unwrap();
+        let art = ArtifactDir::open(&dir).unwrap();
+        let mut rt = Runtime::new(art).unwrap();
+        let err = rt.execute("nope", &[]).unwrap_err().to_string();
+        assert!(err.contains("no artifact entry"), "{err}");
+    }
+}

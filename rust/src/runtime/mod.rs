@@ -1,0 +1,16 @@
+//! PJRT runtime: load and execute the AOT artifacts from the Rust hot
+//! path. Python never runs here — the HLO text under `artifacts/` is the
+//! entire interface to the build-time JAX/Pallas stack.
+//!
+//! * [`tensor`] — a minimal host tensor (`f32`, row-major) + Literal
+//!   conversion.
+//! * [`artifact`] — `manifest.json` parsing and artifact discovery.
+//! * [`client`] — PJRT client wrapper with a compiled-executable cache.
+
+pub mod artifact;
+pub mod client;
+pub mod tensor;
+
+pub use artifact::{ArtifactDir, Entry};
+pub use client::{Input, PreparedTensor, Runtime};
+pub use tensor::Tensor;

@@ -1,0 +1,103 @@
+//! Host-side tensor: `f32`, row-major, shape-checked — the coordinator's
+//! currency when talking to the PJRT runtime.
+
+use anyhow::{bail, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, want, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Deterministic synthetic tensor (He-style scale) from a seed.
+    pub fn random(shape: &[usize], seed: u64, scale: f32) -> Tensor {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let mut data = vec![0.0f32; shape.iter().product()];
+        rng.fill_f32(&mut data, scale);
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Convert to an XLA literal of the same shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Build from an XLA literal (must be f32).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Tensor::new(dims, data)
+    }
+
+    /// Simple order-dependent checksum used by tests/benches to compare
+    /// runs without shipping an oracle to the Rust side.
+    pub fn checksum(&self) -> f64 {
+        self.data
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v as f64 * ((i % 97) as f64 + 1.0))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn zeros_and_random() {
+        let z = Tensor::zeros(&[4, 4]);
+        assert_eq!(z.len(), 16);
+        assert!(z.data.iter().all(|&v| v == 0.0));
+        let r1 = Tensor::random(&[4, 4], 7, 0.5);
+        let r2 = Tensor::random(&[4, 4], 7, 0.5);
+        assert_eq!(r1, r2);
+        assert!(r1.data.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn checksum_discriminates() {
+        let a = Tensor::random(&[8], 1, 1.0);
+        let b = Tensor::random(&[8], 2, 1.0);
+        assert_ne!(a.checksum(), b.checksum());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::random(&[2, 3, 4], 42, 1.0);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+}

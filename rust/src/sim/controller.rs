@@ -1,0 +1,219 @@
+//! The SRAM memory controller — passive, or *active* per Section III.
+//!
+//! The active controller accepts a command on the write channel's
+//! sideband (AXI4 `awuser`): [`MemOp::Add`] makes it read the stored
+//! partial sum, add the incoming data, and write back — all inside the
+//! controller, so the read never crosses the interconnect.
+//! [`MemOp::AddRelu`] additionally applies the activation on the final
+//! accumulation (the paper's "Activation" offload). [`MemOp::Normal`] is
+//! a plain store; [`MemOp::Init`] is a store that also marks the region
+//! initialized (guards against accumulate-before-init bugs).
+
+use super::sram::{Region, Sram};
+use super::stats::SimStats;
+use crate::analytics::bandwidth::ControllerMode;
+
+/// Sideband command accompanying a write burst (AXI4 `awuser` encoding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemOp {
+    /// Plain write.
+    Normal,
+    /// First psum write of an accumulation chain.
+    Init,
+    /// controller-side read-add-write (active mode).
+    Add,
+    /// Add, then apply ReLU — final accumulation of a layer.
+    AddRelu,
+}
+
+impl MemOp {
+    /// Encoded AWUSER word (2 bits used; modeled as one sideband word).
+    pub fn encode(&self) -> u8 {
+        match self {
+            MemOp::Normal => 0b00,
+            MemOp::Init => 0b01,
+            MemOp::Add => 0b10,
+            MemOp::AddRelu => 0b11,
+        }
+    }
+
+    pub fn decode(bits: u8) -> Option<MemOp> {
+        match bits & 0b11 {
+            0b00 => Some(MemOp::Normal),
+            0b01 => Some(MemOp::Init),
+            0b10 => Some(MemOp::Add),
+            _ => Some(MemOp::AddRelu),
+        }
+    }
+
+    /// Does this op require controller-side arithmetic?
+    pub fn is_accumulate(&self) -> bool {
+        matches!(self, MemOp::Add | MemOp::AddRelu)
+    }
+}
+
+/// The memory controller in front of the SRAM banks.
+#[derive(Clone, Debug)]
+pub struct MemController {
+    mode: ControllerMode,
+    sram: Sram,
+    psum_initialized: bool,
+}
+
+impl MemController {
+    pub fn new(mode: ControllerMode, banks: usize) -> Self {
+        MemController { mode, sram: Sram::new(banks), psum_initialized: false }
+    }
+
+    pub fn mode(&self) -> ControllerMode {
+        self.mode
+    }
+
+    /// Handle a read request arriving over the interconnect.
+    /// Returns the element count that crossed the bus (== `elements`).
+    pub fn bus_read(&mut self, region: Region, elements: u64, stats: &mut SimStats) -> u64 {
+        self.sram.read(region, elements);
+        match region {
+            Region::Input => stats.input_reads += elements,
+            Region::Weight => stats.weight_reads += elements,
+            Region::Psum => {
+                assert!(
+                    self.psum_initialized,
+                    "psum read before any write — scheduler bug"
+                );
+                stats.psum_reads += elements;
+            }
+        }
+        elements
+    }
+
+    /// Handle a write burst arriving over the interconnect with a sideband
+    /// command. Panics if an accumulate op reaches a passive controller —
+    /// the scheduler must not issue commands the hardware lacks.
+    pub fn bus_write(
+        &mut self,
+        region: Region,
+        elements: u64,
+        op: MemOp,
+        stats: &mut SimStats,
+    ) {
+        match op {
+            MemOp::Normal | MemOp::Init => {
+                self.sram.write(region, elements);
+                if region == Region::Psum {
+                    stats.psum_writes += elements;
+                    self.psum_initialized = true;
+                }
+            }
+            MemOp::Add | MemOp::AddRelu => {
+                assert_eq!(
+                    self.mode,
+                    ControllerMode::Active,
+                    "accumulate command sent to a passive controller"
+                );
+                assert_eq!(region, Region::Psum, "accumulate only defined for psums");
+                assert!(self.psum_initialized, "accumulate before init");
+                // Internal read-modify-write: the read hits the array but
+                // not the interconnect — the paper's saved bandwidth.
+                self.sram.read(region, elements);
+                self.sram.write(region, elements);
+                stats.internal_psum_reads += elements;
+                stats.psum_writes += elements;
+                stats.controller_adds += elements;
+                if op == MemOp::AddRelu {
+                    stats.controller_relus += elements;
+                }
+            }
+        }
+    }
+
+    /// Finish a layer: fold the SRAM-side counters into `stats` and reset
+    /// per-layer state.
+    pub fn finish_layer(&mut self, stats: &mut SimStats) {
+        stats.sram_accesses += self.sram.total_accesses();
+        let banks = self.sram.banks();
+        // array occupancy folds into the bus-side time model downstream
+        stats.bus_cycles = stats.bus_cycles.max(self.sram.bank_cycles());
+        self.sram = Sram::new(banks);
+        self.psum_initialized = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for op in [MemOp::Normal, MemOp::Init, MemOp::Add, MemOp::AddRelu] {
+            assert_eq!(MemOp::decode(op.encode()), Some(op));
+        }
+    }
+
+    #[test]
+    fn active_add_keeps_read_off_the_bus() {
+        let mut c = MemController::new(ControllerMode::Active, 8);
+        let mut s = SimStats::default();
+        c.bus_write(Region::Psum, 100, MemOp::Init, &mut s);
+        c.bus_write(Region::Psum, 100, MemOp::Add, &mut s);
+        assert_eq!(s.psum_reads, 0); // nothing crossed the bus as a read
+        assert_eq!(s.internal_psum_reads, 100);
+        assert_eq!(s.psum_writes, 200);
+        assert_eq!(s.controller_adds, 100);
+    }
+
+    #[test]
+    fn passive_roundtrips_over_the_bus() {
+        let mut c = MemController::new(ControllerMode::Passive, 8);
+        let mut s = SimStats::default();
+        c.bus_write(Region::Psum, 100, MemOp::Init, &mut s);
+        c.bus_read(Region::Psum, 100, &mut s);
+        c.bus_write(Region::Psum, 100, MemOp::Normal, &mut s);
+        assert_eq!(s.psum_reads, 100);
+        assert_eq!(s.psum_writes, 200);
+        assert_eq!(s.internal_psum_reads, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "accumulate command sent to a passive controller")]
+    fn passive_rejects_add() {
+        let mut c = MemController::new(ControllerMode::Passive, 8);
+        let mut s = SimStats::default();
+        c.bus_write(Region::Psum, 10, MemOp::Init, &mut s);
+        c.bus_write(Region::Psum, 10, MemOp::Add, &mut s);
+    }
+
+    #[test]
+    #[should_panic(expected = "accumulate before init")]
+    fn add_requires_init() {
+        let mut c = MemController::new(ControllerMode::Active, 8);
+        let mut s = SimStats::default();
+        c.bus_write(Region::Psum, 10, MemOp::Add, &mut s);
+    }
+
+    #[test]
+    fn relu_counted_once_on_final_pass() {
+        let mut c = MemController::new(ControllerMode::Active, 8);
+        let mut s = SimStats::default();
+        c.bus_write(Region::Psum, 50, MemOp::Init, &mut s);
+        c.bus_write(Region::Psum, 50, MemOp::Add, &mut s);
+        c.bus_write(Region::Psum, 50, MemOp::AddRelu, &mut s);
+        assert_eq!(s.controller_relus, 50);
+        assert_eq!(s.controller_adds, 100);
+    }
+
+    #[test]
+    fn finish_layer_accumulates_and_resets() {
+        let mut c = MemController::new(ControllerMode::Active, 8);
+        let mut s = SimStats::default();
+        c.bus_write(Region::Psum, 100, MemOp::Init, &mut s);
+        c.finish_layer(&mut s);
+        assert_eq!(s.sram_accesses, 100);
+        // after reset, accumulate-before-init fires again
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut s2 = SimStats::default();
+            c.bus_write(Region::Psum, 1, MemOp::Add, &mut s2);
+        }));
+        assert!(r.is_err());
+    }
+}

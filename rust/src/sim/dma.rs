@@ -1,0 +1,59 @@
+//! DMA burst planner: turns tile-shaped tensor requests into interconnect
+//! bursts. Tensors are stored channel-major (CHW), so a tile of `c`
+//! channels over the full `W x H` plane is `c` contiguous runs — one burst
+//! chain per channel, subject to the bus's max burst length.
+
+use super::interconnect::{BusConfig, Interconnect};
+
+/// A planned transfer: total elements and the burst count it needs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Transfer {
+    pub elements: u64,
+    pub bursts: u64,
+}
+
+/// Plan reading/writing `channels` full planes of `w*h` elements.
+pub fn plane_transfer(cfg: &BusConfig, channels: usize, w: usize, h: usize) -> Transfer {
+    let per_chan = (w * h) as u64;
+    let bursts_per_chan = Interconnect::bursts(cfg, per_chan);
+    Transfer {
+        elements: per_chan * channels as u64,
+        bursts: bursts_per_chan * channels as u64,
+    }
+}
+
+/// Plan a weight-tile transfer: `n * m * k * k` contiguous elements.
+pub fn weight_transfer(cfg: &BusConfig, m: usize, n: usize, k: usize) -> Transfer {
+    let elements = (n * m * k * k) as u64;
+    Transfer { elements, bursts: Interconnect::bursts(cfg, elements) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plane_transfer_counts() {
+        let cfg = BusConfig::default(); // 8 elems/beat, 256 beats/burst
+        let t = plane_transfer(&cfg, 4, 13, 13);
+        assert_eq!(t.elements, 4 * 169);
+        // 169 elems = 22 beats -> 1 burst per channel
+        assert_eq!(t.bursts, 4);
+    }
+
+    #[test]
+    fn long_planes_split() {
+        let cfg = BusConfig::default();
+        // 224*224 = 50176 elems = 6272 beats -> ceil(6272/256) = 25 bursts
+        let t = plane_transfer(&cfg, 1, 224, 224);
+        assert_eq!(t.bursts, 25);
+    }
+
+    #[test]
+    fn weight_tiles_are_one_chain() {
+        let cfg = BusConfig::default();
+        let t = weight_transfer(&cfg, 12, 4, 3);
+        assert_eq!(t.elements, 432);
+        assert_eq!(t.bursts, 1); // 54 beats
+    }
+}

@@ -1,0 +1,97 @@
+//! Per-access energy model.
+//!
+//! The paper's closing argument is that fewer memory accesses means less
+//! power. We attach first-order per-event energies (45 nm CACTI-class
+//! ratios, normalized to a 32-bit SRAM read = 5 pJ; the *ratios* are what
+//! matter, as with the bandwidth model). Interconnect transfers are priced
+//! several times an SRAM access, consistent with the paper's preference
+//! for keeping psum updates inside the controller.
+
+/// Energy cost constants in picojoules per event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyModel {
+    /// SRAM array read, per element.
+    pub sram_read_pj: f64,
+    /// SRAM array write, per element.
+    pub sram_write_pj: f64,
+    /// Interconnect transfer, per data beat (bus-width word).
+    pub bus_beat_pj: f64,
+    /// One MAC operation.
+    pub mac_pj: f64,
+    /// Controller-internal add (active mode), per element.
+    pub ctrl_add_pj: f64,
+    /// Controller-internal ReLU (active mode), per element.
+    pub ctrl_relu_pj: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            sram_read_pj: 5.0,
+            sram_write_pj: 5.5,
+            bus_beat_pj: 20.0,
+            mac_pj: 0.9,
+            ctrl_add_pj: 0.4,
+            ctrl_relu_pj: 0.1,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Energy of a whole run given its counters.
+    pub fn energy_pj(&self, s: &crate::sim::stats::SimStats) -> f64 {
+        // Every element that crossed the bus also touched the SRAM array
+        // (read on its way out, write on its way in); internal psum reads
+        // touch the array only.
+        let sram_reads =
+            s.input_reads + s.psum_reads + s.weight_reads + s.internal_psum_reads;
+        let sram_writes = s.psum_writes;
+        sram_reads as f64 * self.sram_read_pj
+            + sram_writes as f64 * self.sram_write_pj
+            + s.bus_beats as f64 * self.bus_beat_pj
+            + s.macs as f64 * self.mac_pj
+            + s.controller_adds as f64 * self.ctrl_add_pj
+            + s.controller_relus as f64 * self.ctrl_relu_pj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::stats::SimStats;
+
+    #[test]
+    fn zero_run_zero_energy() {
+        assert_eq!(EnergyModel::default().energy_pj(&SimStats::default()), 0.0);
+    }
+
+    #[test]
+    fn active_controller_saves_energy_for_same_work() {
+        let e = EnergyModel::default();
+        // Passive: psum crosses the bus twice (read + write).
+        let passive = SimStats {
+            psum_reads: 1000,
+            psum_writes: 1000,
+            bus_beats: 2000,
+            ..Default::default()
+        };
+        // Active: read stays internal; only writes cross the bus.
+        let active = SimStats {
+            psum_writes: 1000,
+            internal_psum_reads: 1000,
+            controller_adds: 1000,
+            bus_beats: 1000,
+            ..Default::default()
+        };
+        assert!(e.energy_pj(&active) < e.energy_pj(&passive));
+    }
+
+    #[test]
+    fn energy_scales_linearly() {
+        let e = EnergyModel::default();
+        let s1 = SimStats { input_reads: 100, bus_beats: 100, ..Default::default() };
+        let s2 = SimStats { input_reads: 200, bus_beats: 200, ..Default::default() };
+        let (e1, e2) = (e.energy_pj(&s1), e.energy_pj(&s2));
+        assert!((e2 - 2.0 * e1).abs() < 1e-9);
+    }
+}

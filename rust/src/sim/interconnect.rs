@@ -1,0 +1,123 @@
+//! AXI4-like interconnect model.
+//!
+//! Five channels (AW/W/B/AR/R) with a configurable data width. We model
+//! throughput, not per-beat timing: a burst of `E` elements of `elem_bytes`
+//! each takes `ceil(E*elem_bytes / bus_bytes)` data beats plus one
+//! address handshake; write bursts additionally carry one AWUSER sideband
+//! word (the active-controller command — the paper's point is that this
+//! costs *no extra data bandwidth* because user signals ride the existing
+//! infrastructure). Read and write channels are independent (full-duplex),
+//! so bus occupancy is the max of the two directions.
+
+use super::controller::MemOp;
+use super::stats::SimStats;
+
+/// Interconnect configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BusConfig {
+    /// Data bytes per beat (AXI data-bus width), e.g. 16 = 128-bit.
+    pub bus_bytes: usize,
+    /// Bytes per element (activation/weight), e.g. 2 = fp16/int16.
+    pub elem_bytes: usize,
+    /// Max beats per burst (AXI4: 256). Longer transfers split.
+    pub max_burst_beats: usize,
+}
+
+impl Default for BusConfig {
+    fn default() -> Self {
+        BusConfig { bus_bytes: 16, elem_bytes: 2, max_burst_beats: 256 }
+    }
+}
+
+/// Tracks channel occupancy for one simulation.
+#[derive(Clone, Debug, Default)]
+pub struct Interconnect {
+    read_beats: u64,
+    write_beats: u64,
+}
+
+impl Interconnect {
+    /// Beats needed to move `elements`.
+    pub fn beats(cfg: &BusConfig, elements: u64) -> u64 {
+        (elements * cfg.elem_bytes as u64).div_ceil(cfg.bus_bytes as u64)
+    }
+
+    /// Transactions (bursts) needed to move `elements` given max burst len.
+    pub fn bursts(cfg: &BusConfig, elements: u64) -> u64 {
+        Self::beats(cfg, elements).div_ceil(cfg.max_burst_beats as u64).max(
+            if elements == 0 { 0 } else { 1 },
+        )
+    }
+
+    /// Account a read burst (AR + R beats).
+    pub fn read(&mut self, cfg: &BusConfig, elements: u64, stats: &mut SimStats) {
+        let beats = Self::beats(cfg, elements);
+        self.read_beats += beats;
+        stats.bus_beats += beats;
+        stats.bus_transactions += Self::bursts(cfg, elements);
+    }
+
+    /// Account a write burst (AW + W beats + B), carrying `op` on AWUSER.
+    pub fn write(&mut self, cfg: &BusConfig, elements: u64, op: MemOp, stats: &mut SimStats) {
+        let beats = Self::beats(cfg, elements);
+        self.write_beats += beats;
+        stats.bus_beats += beats;
+        let bursts = Self::bursts(cfg, elements);
+        stats.bus_transactions += bursts;
+        // One sideband command word per burst; Normal writes don't need
+        // a command (the controller defaults to store).
+        if op != MemOp::Normal {
+            stats.sideband_words += bursts;
+        }
+    }
+
+    /// Bus busy cycles: channels are independent, so the max direction.
+    pub fn busy_cycles(&self) -> u64 {
+        self.read_beats.max(self.write_beats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BusConfig {
+        BusConfig::default() // 16B bus, 2B elements -> 8 elems/beat
+    }
+
+    #[test]
+    fn beats_round_up() {
+        assert_eq!(Interconnect::beats(&cfg(), 8), 1);
+        assert_eq!(Interconnect::beats(&cfg(), 9), 2);
+        assert_eq!(Interconnect::beats(&cfg(), 0), 0);
+    }
+
+    #[test]
+    fn bursts_split_at_max_len() {
+        // 256 beats/burst * 8 elems/beat = 2048 elements per burst
+        assert_eq!(Interconnect::bursts(&cfg(), 2048), 1);
+        assert_eq!(Interconnect::bursts(&cfg(), 2049), 2);
+        assert_eq!(Interconnect::bursts(&cfg(), 0), 0);
+    }
+
+    #[test]
+    fn sideband_rides_writes_only_when_commanded() {
+        let mut ic = Interconnect::default();
+        let mut s = SimStats::default();
+        ic.write(&cfg(), 100, MemOp::Normal, &mut s);
+        assert_eq!(s.sideband_words, 0);
+        ic.write(&cfg(), 100, MemOp::Add, &mut s);
+        assert_eq!(s.sideband_words, 1);
+        ic.read(&cfg(), 100, &mut s);
+        assert_eq!(s.sideband_words, 1); // reads never carry commands
+    }
+
+    #[test]
+    fn full_duplex_occupancy() {
+        let mut ic = Interconnect::default();
+        let mut s = SimStats::default();
+        ic.read(&cfg(), 800, &mut s); // 100 beats
+        ic.write(&cfg(), 240, MemOp::Normal, &mut s); // 30 beats
+        assert_eq!(ic.busy_cycles(), 100); // max(100, 30)
+    }
+}

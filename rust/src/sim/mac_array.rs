@@ -1,0 +1,68 @@
+//! The compute engine: a `P`-MAC array executing one `(m, n)` tile per
+//! pass over the output plane.
+//!
+//! Occupancy model: the array sustains `K^2 * m * n` useful MACs/cycle
+//! (the tile's footprint), so one iteration over a `Wo x Ho` output block
+//! takes `Wo*Ho` cycles regardless of how full the array is — utilization
+//! is `K^2*m*n / P`, which is exactly the PE-utilization the paper says
+//! partitioning trades against bandwidth.
+
+/// Per-iteration compute accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct MacArray {
+    p_macs: usize,
+}
+
+impl MacArray {
+    pub fn new(p_macs: usize) -> Self {
+        assert!(p_macs > 0);
+        MacArray { p_macs }
+    }
+
+    pub fn p_macs(&self) -> usize {
+        self.p_macs
+    }
+
+    /// Cycles to sweep one tile iteration: `Wo*Ho` output positions, one
+    /// column of the systolic array per position per cycle.
+    pub fn iteration_cycles(&self, wo: usize, ho: usize) -> u64 {
+        (wo * ho) as u64
+    }
+
+    /// Useful MACs in one iteration: every output position accumulates
+    /// `K^2 * m_eff` products for each of `n_eff` output maps.
+    pub fn iteration_macs(&self, wo: usize, ho: usize, k: usize, m_eff: usize, n_eff: usize) -> u64 {
+        (wo * ho) as u64 * (k * k * m_eff * n_eff) as u64
+    }
+
+    /// Whether a tile fits the array (eq. 1).
+    pub fn fits(&self, k: usize, m: usize, n: usize) -> bool {
+        k * k * m * n <= self.p_macs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_is_eq1() {
+        let a = MacArray::new(512);
+        assert!(a.fits(3, 8, 7)); // 9*56 = 504
+        assert!(!a.fits(3, 8, 8)); // 9*64 = 576
+        assert!(a.fits(11, 3, 1)); // 363
+    }
+
+    #[test]
+    fn cycle_and_mac_accounting() {
+        let a = MacArray::new(1024);
+        assert_eq!(a.iteration_cycles(13, 13), 169);
+        assert_eq!(a.iteration_macs(13, 13, 3, 12, 4), 169 * 9 * 48);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_macs_rejected() {
+        MacArray::new(0);
+    }
+}

@@ -1,0 +1,45 @@
+//! Event-level accelerator simulator — the substrate the paper assumes.
+//!
+//! The paper's analysis is first-order arithmetic; a credible system needs
+//! the machine it describes. This module models the Fig. 1 SoC:
+//!
+//! ```text
+//!   +----------------+   AXI4-like bus    +-------------------+
+//!   | Compute engine |<==================>| SRAM controller   |
+//!   |  (MAC array,   |   AW/W/B/AR/R +    |  passive | ACTIVE |
+//!   |   tile sched.) |   AWUSER sideband  |  + SRAM banks     |
+//!   +----------------+                    +-------------------+
+//! ```
+//!
+//! * [`mac_array`] — the P-MAC compute engine: occupancy and cycle model.
+//! * [`sram`] — banked SRAM with per-bank read/write counters.
+//! * [`controller`] — the memory controller; the **active** variant folds
+//!   `Add`/`AddRelu` commands (from the AWUSER sideband) into a local
+//!   read-modify-write so psum read-backs never cross the interconnect.
+//! * [`interconnect`] — the bus: channel beats, sideband signals, cycle
+//!   accounting and contention.
+//! * [`scheduler`] — executes the tiled loop nest of Section II for a
+//!   layer partitioned as `(m, n)`, emitting every transaction.
+//! * [`dma`] — burst planner turning tile requests into bus bursts.
+//! * [`energy`] — per-access energy model (the paper's power argument).
+//! * [`stats`] — roll-up counters; the quantities Tables I/II tabulate.
+//! * [`trace`] — optional transaction trace for debugging/golden tests.
+//!
+//! The headline invariant, enforced by `rust/tests/sim_vs_model.rs` and
+//! unit tests here: **simulated activation traffic equals the analytical
+//! model of [`crate::analytics`] exactly** for every (layer, partition,
+//! controller mode).
+
+pub mod controller;
+pub mod dma;
+pub mod energy;
+pub mod interconnect;
+pub mod mac_array;
+pub mod scheduler;
+pub mod sram;
+pub mod stats;
+pub mod trace;
+
+pub use controller::{MemController, MemOp};
+pub use scheduler::{simulate_layer, simulate_network, SimConfig, SimResult};
+pub use stats::SimStats;

@@ -1,0 +1,343 @@
+//! The tiled loop-nest executor: runs Section II's partitioned convolution
+//! on the modeled machine, emitting every interconnect transaction.
+//!
+//! Loop order (the paper's code listing, output-block outermost):
+//!
+//! ```text
+//! for g in groups:
+//!   for co_block in ceil(N_g / n):          # output-map partition
+//!     for ci_block in ceil(M_g / m):        # input-map partition
+//!       DMA-in  input tile  (m_eff planes)  -> Bi
+//!       DMA-in  weight tile (n_eff x m_eff x K^2)
+//!       compute Wo x Ho positions on the MAC array
+//!       psum update:
+//!         passive: [read psums] + write psums
+//!         active:  write psums with Add/AddRelu sideband command
+//! ```
+//!
+//! The per-transaction counts reproduce eqs. (2)–(3) *exactly* — that is
+//! the simulator's contract with [`crate::analytics`], enforced by
+//! `rust/tests/sim_vs_model.rs`.
+
+use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::partition::{partition_layer, Partition, Strategy};
+use crate::models::{ConvLayer, Network};
+use crate::util::mathx::ceil_div;
+
+use super::controller::{MemController, MemOp};
+use super::energy::EnergyModel;
+use super::interconnect::{BusConfig, Interconnect};
+use super::mac_array::MacArray;
+use super::sram::Region;
+use super::stats::SimStats;
+use super::trace::{Event, Kind, Trace};
+
+/// Full simulator configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// MAC budget `P`.
+    pub p_macs: usize,
+    /// Memory-controller capability.
+    pub mode: ControllerMode,
+    /// Partitioning strategy choosing `(m, n)` per layer.
+    pub strategy: Strategy,
+    /// Interconnect geometry.
+    pub bus: BusConfig,
+    /// SRAM banks (power of two).
+    pub banks: usize,
+    /// Energy constants.
+    pub energy: EnergyModel,
+    /// Trace capacity (0 = off).
+    pub trace_cap: usize,
+}
+
+impl SimConfig {
+    pub fn new(p_macs: usize, mode: ControllerMode, strategy: Strategy) -> Self {
+        SimConfig {
+            p_macs,
+            mode,
+            strategy,
+            bus: BusConfig::default(),
+            banks: 32,
+            energy: EnergyModel::default(),
+            trace_cap: 0,
+        }
+    }
+}
+
+/// Result of simulating one layer (or a merged network run).
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub stats: SimStats,
+    /// The partition the strategy chose (per layer; `None` for merged).
+    pub partition: Option<Partition>,
+    pub trace: Trace,
+}
+
+/// Simulate one layer under `cfg`. Every bus transaction is accounted;
+/// activation traffic matches `analytics::layer_bandwidth` exactly.
+pub fn simulate_layer(layer: &ConvLayer, cfg: &SimConfig) -> SimResult {
+    let partition = partition_layer(layer, cfg.p_macs, cfg.strategy, cfg.mode);
+    simulate_layer_with(layer, cfg, partition)
+}
+
+/// Simulate one layer with an explicit `(m, n)` tile.
+pub fn simulate_layer_with(layer: &ConvLayer, cfg: &SimConfig, part: Partition) -> SimResult {
+    let mut stats = SimStats::default();
+    let mut trace = Trace::new(cfg.trace_cap);
+    let mut bus = Interconnect::default();
+    let mut ctrl = MemController::new(cfg.mode, cfg.banks);
+    let mac = MacArray::new(cfg.p_macs);
+
+    let mg = layer.m_per_group();
+    let ng = layer.n_per_group();
+    let (wo, ho) = (layer.wo(), layer.ho());
+    let ci_blocks = ceil_div(mg, part.m);
+    let co_blocks = ceil_div(ng, part.n);
+
+    // Identical-groups fast path (EXPERIMENTS.md §Perf L3-2): every group
+    // of a grouped conv runs the same (co, ci) schedule over the same
+    // shapes, so we simulate ONE group and scale the counters by `g` —
+    // exact, and turns depthwise layers (g up to 1152) from g full loop
+    // nests into one. The per-group loop is kept only when tracing, so
+    // traces still show group boundaries.
+    let sim_groups = if cfg.trace_cap > 0 { layer.groups } else { 1 };
+    for _g in 0..sim_groups {
+        for co in 0..co_blocks {
+            let n_eff = part.n.min(ng - co * part.n);
+            for ci in 0..ci_blocks {
+                let m_eff = part.m.min(mg - ci * part.m);
+                let iter = (co * ci_blocks + ci) as u32;
+
+                // --- input tile in (full input planes of the m_eff maps) ---
+                let in_elems = (layer.wi * layer.hi * m_eff) as u64;
+                bus.read(&cfg.bus, in_elems, &mut stats);
+                ctrl.bus_read(Region::Input, in_elems, &mut stats);
+                trace.record(Event {
+                    iter,
+                    kind: Kind::Read,
+                    region: Region::Input,
+                    elements: in_elems,
+                    op: MemOp::Normal,
+                });
+
+                // --- weight tile in ---
+                let w_elems = (n_eff * m_eff * layer.k * layer.k) as u64;
+                bus.read(&cfg.bus, w_elems, &mut stats);
+                ctrl.bus_read(Region::Weight, w_elems, &mut stats);
+
+                // --- compute ---
+                stats.compute_cycles += mac.iteration_cycles(wo, ho);
+                stats.macs += mac.iteration_macs(wo, ho, layer.k, m_eff, n_eff);
+
+                // --- psum update ---
+                let ps_elems = (wo * ho * n_eff) as u64;
+                let first = ci == 0;
+                let last = ci == ci_blocks - 1;
+                match (cfg.mode, first) {
+                    (_, true) => {
+                        // First pass initializes; no previous psum exists.
+                        bus.write(&cfg.bus, ps_elems, MemOp::Init, &mut stats);
+                        ctrl.bus_write(Region::Psum, ps_elems, MemOp::Init, &mut stats);
+                        trace.record(Event {
+                            iter,
+                            kind: Kind::Write,
+                            region: Region::Psum,
+                            elements: ps_elems,
+                            op: MemOp::Init,
+                        });
+                    }
+                    (ControllerMode::Passive, false) => {
+                        // Read-back over the bus, then write the update.
+                        bus.read(&cfg.bus, ps_elems, &mut stats);
+                        ctrl.bus_read(Region::Psum, ps_elems, &mut stats);
+                        trace.record(Event {
+                            iter,
+                            kind: Kind::Read,
+                            region: Region::Psum,
+                            elements: ps_elems,
+                            op: MemOp::Normal,
+                        });
+                        bus.write(&cfg.bus, ps_elems, MemOp::Normal, &mut stats);
+                        ctrl.bus_write(Region::Psum, ps_elems, MemOp::Normal, &mut stats);
+                        trace.record(Event {
+                            iter,
+                            kind: Kind::Write,
+                            region: Region::Psum,
+                            elements: ps_elems,
+                            op: MemOp::Normal,
+                        });
+                    }
+                    (ControllerMode::Active, false) => {
+                        // Single write with a sideband command; the read
+                        // happens inside the controller.
+                        let op = if last { MemOp::AddRelu } else { MemOp::Add };
+                        bus.write(&cfg.bus, ps_elems, op, &mut stats);
+                        ctrl.bus_write(Region::Psum, ps_elems, op, &mut stats);
+                        trace.record(Event {
+                            iter,
+                            kind: Kind::Write,
+                            region: Region::Psum,
+                            elements: ps_elems,
+                            op,
+                        });
+                    }
+                }
+            }
+        }
+        // Groups are independent accumulation domains.
+        ctrl.finish_layer(&mut stats);
+    }
+
+    stats.bus_cycles = stats.bus_cycles.max(bus.busy_cycles());
+    if sim_groups != layer.groups {
+        stats.scale(layer.groups as u64 / sim_groups as u64);
+    }
+    stats.energy_pj = cfg.energy.energy_pj(&stats);
+    SimResult { stats, partition: Some(part), trace }
+}
+
+/// Simulate every layer of a network and merge the counters.
+pub fn simulate_network(net: &Network, cfg: &SimConfig) -> SimResult {
+    let mut stats = SimStats::default();
+    let mut bus_cycles = 0u64;
+    for layer in &net.layers {
+        let r = simulate_layer(layer, cfg);
+        bus_cycles += r.stats.bus_cycles;
+        let mut s = r.stats;
+        // bus_cycles must *sum* across layers (they run sequentially);
+        // merge() sums everything already, but each layer's bus_cycles was
+        // max()ed against SRAM occupancy inside — keep the sum.
+        s.bus_cycles = 0;
+        stats.merge(&s);
+    }
+    stats.bus_cycles = bus_cycles;
+    stats.energy_pj = cfg.energy.energy_pj(&stats);
+    SimResult { stats, partition: None, trace: Trace::off() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::bandwidth::layer_bandwidth;
+
+    fn conv3() -> ConvLayer {
+        ConvLayer::new("conv3", 13, 13, 192, 384, 3, 1, 1)
+    }
+
+    #[test]
+    fn matches_analytics_exactly_passive() {
+        let l = conv3();
+        let cfg = SimConfig::new(512, ControllerMode::Passive, Strategy::Optimal);
+        let r = simulate_layer(&l, &cfg);
+        let p = r.partition.unwrap();
+        let bw = layer_bandwidth(&l, p.m, p.n, ControllerMode::Passive);
+        assert_eq!(r.stats.input_reads as f64, bw.input);
+        assert_eq!(r.stats.output_traffic() as f64, bw.output);
+    }
+
+    #[test]
+    fn matches_analytics_exactly_active() {
+        let l = conv3();
+        let cfg = SimConfig::new(512, ControllerMode::Active, Strategy::Optimal);
+        let r = simulate_layer(&l, &cfg);
+        let p = r.partition.unwrap();
+        let bw = layer_bandwidth(&l, p.m, p.n, ControllerMode::Active);
+        assert_eq!(r.stats.input_reads as f64, bw.input);
+        assert_eq!(r.stats.output_traffic() as f64, bw.output);
+        // the reads the active controller absorbed:
+        assert_eq!(r.stats.internal_psum_reads, r.stats.controller_adds);
+        assert!(r.stats.psum_reads == 0);
+    }
+
+    #[test]
+    fn non_divisor_partition_still_exact() {
+        // m=9 does not divide 192 (ceil blocks, ragged tail); n=7 ragged.
+        let l = conv3();
+        let cfg = SimConfig::new(1 << 20, ControllerMode::Passive, Strategy::Optimal);
+        let part = Partition { m: 9, n: 7 };
+        let r = simulate_layer_with(&l, &cfg, part);
+        let bw = layer_bandwidth(&l, 9, 7, ControllerMode::Passive);
+        // Bi uses ceil(N/n) full-input passes; effective channel counts
+        // make the last block smaller — totals must still match the
+        // analytical ceil formulation on the output side, and the input
+        // side re-reads all M maps per output block.
+        assert_eq!(r.stats.input_reads as f64, bw.input);
+        assert_eq!(r.stats.output_traffic() as f64, bw.output);
+    }
+
+    #[test]
+    fn grouped_layer_sums_groups() {
+        let dw = ConvLayer::grouped("dw", 56, 56, 64, 64, 3, 1, 1, 64);
+        let cfg = SimConfig::new(512, ControllerMode::Passive, Strategy::Optimal);
+        let r = simulate_layer(&dw, &cfg);
+        let p = r.partition.unwrap();
+        let bw = layer_bandwidth(&dw, p.m, p.n, ControllerMode::Passive);
+        assert_eq!(r.stats.activation_traffic() as f64, bw.total());
+    }
+
+    #[test]
+    fn relu_applied_once_per_output_element_active() {
+        let l = conv3();
+        let cfg = SimConfig::new(512, ControllerMode::Active, Strategy::Optimal);
+        let r = simulate_layer(&l, &cfg);
+        let p = r.partition.unwrap();
+        // ReLU fires on the last ci block only -> once per output element,
+        // unless the layer needed a single pass (then Init wrote it all).
+        if ceil_div(l.m_per_group(), p.m) > 1 {
+            assert_eq!(r.stats.controller_relus, l.output_activations());
+        }
+    }
+
+    #[test]
+    fn weights_counted_but_separate() {
+        let l = conv3();
+        let cfg = SimConfig::new(512, ControllerMode::Passive, Strategy::Optimal);
+        let r = simulate_layer(&l, &cfg);
+        let p = r.partition.unwrap();
+        // Each (co, ci) iteration moves n_eff*m_eff*K^2 weights; with
+        // divisor m and floor n the blocks are mostly uniform — just check
+        // the total equals blocks x tile (ragged-aware lower bound).
+        assert!(r.stats.weight_reads >= l.weights());
+        assert!(!matches!(p.m, 0));
+    }
+
+    #[test]
+    fn mac_count_is_layer_macs() {
+        // MACs executed must equal the layer's true MAC count regardless
+        // of partitioning (work is conserved).
+        let l = conv3();
+        for p in [512usize, 2048, 16384] {
+            let cfg = SimConfig::new(p, ControllerMode::Passive, Strategy::Optimal);
+            let r = simulate_layer(&l, &cfg);
+            assert_eq!(r.stats.macs, l.macs(), "P={p}");
+        }
+    }
+
+    #[test]
+    fn network_run_sums_layers() {
+        let net = crate::models::zoo::alexnet();
+        let cfg = SimConfig::new(2048, ControllerMode::Active, Strategy::Optimal);
+        let whole = simulate_network(&net, &cfg);
+        let mut manual = 0u64;
+        for l in &net.layers {
+            manual += simulate_layer(l, &cfg).stats.activation_traffic();
+        }
+        assert_eq!(whole.stats.activation_traffic(), manual);
+        assert_eq!(whole.stats.macs, net.total_macs());
+    }
+
+    #[test]
+    fn trace_records_psum_protocol() {
+        let l = ConvLayer::new("c", 8, 8, 8, 8, 3, 1, 1);
+        let mut cfg = SimConfig::new(72, ControllerMode::Active, Strategy::Optimal);
+        cfg.trace_cap = 1024;
+        let r = simulate_layer(&l, &cfg);
+        let evs = r.trace.events();
+        // first psum event is Init, subsequent are Add/AddRelu
+        let psums: Vec<_> =
+            evs.iter().filter(|e| e.region == Region::Psum).collect();
+        assert!(psums[0].op == MemOp::Init);
+        assert!(psums.iter().skip(1).all(|e| e.op.is_accumulate() || e.op == MemOp::Init));
+    }
+}

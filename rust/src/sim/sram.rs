@@ -1,0 +1,128 @@
+//! Banked SRAM model with per-bank access counters.
+//!
+//! Addresses are interleaved across banks at word granularity. The model
+//! tracks access counts (the paper's power proxy) and bank conflicts under
+//! a simple simultaneous-access model: a burst of `E` elements spread over
+//! `B` banks completes in `ceil(E/B)` bank cycles.
+
+/// Region tags used for accounting (which tensor a access belongs to).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Region {
+    Input,
+    Weight,
+    Psum,
+}
+
+impl Region {
+    pub const ALL: [Region; 3] = [Region::Input, Region::Weight, Region::Psum];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Region::Input => "input",
+            Region::Weight => "weight",
+            Region::Psum => "psum",
+        }
+    }
+}
+
+/// Per-region, per-direction access counters over a banked array.
+#[derive(Clone, Debug)]
+pub struct Sram {
+    banks: usize,
+    reads: [u64; 3],
+    writes: [u64; 3],
+    bank_cycles: u64,
+}
+
+impl Sram {
+    /// `banks` must be a power of two (word-interleaved banking).
+    pub fn new(banks: usize) -> Self {
+        assert!(banks > 0 && banks.is_power_of_two(), "banks must be a power of two");
+        Sram { banks, reads: [0; 3], writes: [0; 3], bank_cycles: 0 }
+    }
+
+    fn idx(region: Region) -> usize {
+        match region {
+            Region::Input => 0,
+            Region::Weight => 1,
+            Region::Psum => 2,
+        }
+    }
+
+    /// Record a read burst of `elements` from `region`.
+    pub fn read(&mut self, region: Region, elements: u64) {
+        self.reads[Self::idx(region)] += elements;
+        self.bank_cycles += elements.div_ceil(self.banks as u64);
+    }
+
+    /// Record a write burst of `elements` into `region`.
+    pub fn write(&mut self, region: Region, elements: u64) {
+        self.writes[Self::idx(region)] += elements;
+        self.bank_cycles += elements.div_ceil(self.banks as u64);
+    }
+
+    /// Total reads of a region.
+    pub fn reads(&self, region: Region) -> u64 {
+        self.reads[Self::idx(region)]
+    }
+
+    /// Total writes to a region.
+    pub fn writes(&self, region: Region) -> u64 {
+        self.writes[Self::idx(region)]
+    }
+
+    /// Every array access (read + write), all regions.
+    pub fn total_accesses(&self) -> u64 {
+        self.reads.iter().sum::<u64>() + self.writes.iter().sum::<u64>()
+    }
+
+    /// Bank-cycle occupancy (the array-side time model).
+    pub fn bank_cycles(&self) -> u64 {
+        self.bank_cycles
+    }
+
+    pub fn banks(&self) -> usize {
+        self.banks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_per_region() {
+        let mut s = Sram::new(8);
+        s.read(Region::Input, 100);
+        s.read(Region::Input, 50);
+        s.write(Region::Psum, 30);
+        assert_eq!(s.reads(Region::Input), 150);
+        assert_eq!(s.writes(Region::Psum), 30);
+        assert_eq!(s.reads(Region::Psum), 0);
+        assert_eq!(s.total_accesses(), 180);
+    }
+
+    #[test]
+    fn bank_cycles_ceil() {
+        let mut s = Sram::new(8);
+        s.read(Region::Weight, 17); // ceil(17/8) = 3
+        assert_eq!(s.bank_cycles(), 3);
+        s.write(Region::Psum, 8); // +1
+        assert_eq!(s.bank_cycles(), 4);
+    }
+
+    #[test]
+    fn more_banks_fewer_cycles() {
+        let mut a = Sram::new(4);
+        let mut b = Sram::new(32);
+        a.read(Region::Input, 1000);
+        b.read(Region::Input, 1000);
+        assert!(b.bank_cycles() < a.bank_cycles());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        Sram::new(12);
+    }
+}

@@ -1,0 +1,148 @@
+//! Roll-up counters for a simulation run. Units are *elements*
+//! (activations/weights) for traffic counters — the unit the paper
+//! tabulates — with byte/beat/cycle/energy derived views.
+
+/// Counters accumulated while simulating one layer or a whole network.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SimStats {
+    /// Input activations read across the interconnect (eq. 2's `B_i`).
+    pub input_reads: u64,
+    /// Partial sums read across the interconnect (passive mode only).
+    pub psum_reads: u64,
+    /// Partial sums / outputs written across the interconnect.
+    pub psum_writes: u64,
+    /// Weight elements read across the interconnect.
+    pub weight_reads: u64,
+    /// Reads the *active* controller performed internally (these hit the
+    /// SRAM array but never the interconnect — the paper's saved traffic).
+    pub internal_psum_reads: u64,
+    /// Additions folded into the controller (active mode).
+    pub controller_adds: u64,
+    /// ReLU activations folded into the controller (active mode).
+    pub controller_relus: u64,
+    /// Data beats that crossed the interconnect.
+    pub bus_beats: u64,
+    /// Address/command handshakes on the interconnect.
+    pub bus_transactions: u64,
+    /// Sideband (AWUSER) command words carried.
+    pub sideband_words: u64,
+    /// MAC operations executed.
+    pub macs: u64,
+    /// Compute-engine cycles (MAC array occupancy model).
+    pub compute_cycles: u64,
+    /// Interconnect busy cycles (beat count / channel width model).
+    pub bus_cycles: u64,
+    /// SRAM accesses (reads + writes, incl. controller-internal ones).
+    pub sram_accesses: u64,
+    /// Energy estimate in picojoules.
+    pub energy_pj: f64,
+}
+
+impl SimStats {
+    /// Activation traffic that crossed the interconnect — the quantity
+    /// Tables I/II report (`B_i + B_o`). Weights excluded, as in the paper.
+    pub fn activation_traffic(&self) -> u64 {
+        self.input_reads + self.psum_reads + self.psum_writes
+    }
+
+    /// Output-side traffic (`B_o`): psum reads + writes on the bus.
+    pub fn output_traffic(&self) -> u64 {
+        self.psum_reads + self.psum_writes
+    }
+
+    /// Total wall-clock cycles under the max(compute, bus) overlap model.
+    pub fn total_cycles(&self) -> u64 {
+        self.compute_cycles.max(self.bus_cycles)
+    }
+
+    /// MAC-array utilization in [0, 1]: useful MACs per issued capacity.
+    pub fn mac_utilization(&self, p_macs: usize) -> f64 {
+        if self.compute_cycles == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / (self.compute_cycles as f64 * p_macs as f64)
+    }
+
+    /// Scale every counter by `f` — used by the scheduler's identical-
+    /// groups fast path (a grouped conv's `g` groups are indistinguishable
+    /// accumulation domains, so one simulated group times `g` is exact).
+    /// `energy_pj` is intentionally untouched: it is derived *after*
+    /// scaling by the energy model.
+    pub fn scale(&mut self, f: u64) {
+        self.input_reads *= f;
+        self.psum_reads *= f;
+        self.psum_writes *= f;
+        self.weight_reads *= f;
+        self.internal_psum_reads *= f;
+        self.controller_adds *= f;
+        self.controller_relus *= f;
+        self.bus_beats *= f;
+        self.bus_transactions *= f;
+        self.sideband_words *= f;
+        self.macs *= f;
+        self.compute_cycles *= f;
+        self.bus_cycles *= f;
+        self.sram_accesses *= f;
+    }
+
+    /// Merge another run's counters into this one.
+    pub fn merge(&mut self, other: &SimStats) {
+        self.input_reads += other.input_reads;
+        self.psum_reads += other.psum_reads;
+        self.psum_writes += other.psum_writes;
+        self.weight_reads += other.weight_reads;
+        self.internal_psum_reads += other.internal_psum_reads;
+        self.controller_adds += other.controller_adds;
+        self.controller_relus += other.controller_relus;
+        self.bus_beats += other.bus_beats;
+        self.bus_transactions += other.bus_transactions;
+        self.sideband_words += other.sideband_words;
+        self.macs += other.macs;
+        self.compute_cycles += other.compute_cycles;
+        self.bus_cycles += other.bus_cycles;
+        self.sram_accesses += other.sram_accesses;
+        self.energy_pj += other.energy_pj;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_counters() {
+        let mut a = SimStats { input_reads: 10, psum_writes: 5, energy_pj: 1.5, ..Default::default() };
+        let b = SimStats { input_reads: 3, psum_reads: 2, energy_pj: 0.5, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.input_reads, 13);
+        assert_eq!(a.psum_reads, 2);
+        assert_eq!(a.psum_writes, 5);
+        assert!((a.energy_pj - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn traffic_views() {
+        let s = SimStats {
+            input_reads: 100,
+            psum_reads: 40,
+            psum_writes: 50,
+            weight_reads: 7,
+            ..Default::default()
+        };
+        assert_eq!(s.activation_traffic(), 190);
+        assert_eq!(s.output_traffic(), 90);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let s = SimStats { macs: 512 * 100, compute_cycles: 100, ..Default::default() };
+        assert!((s.mac_utilization(512) - 1.0).abs() < 1e-12);
+        assert_eq!(SimStats::default().mac_utilization(512), 0.0);
+    }
+
+    #[test]
+    fn overlap_cycle_model() {
+        let s = SimStats { compute_cycles: 10, bus_cycles: 25, ..Default::default() };
+        assert_eq!(s.total_cycles(), 25);
+    }
+}

@@ -1,0 +1,119 @@
+//! Optional transaction trace — a ring buffer of the most recent bus
+//! transactions, used by golden tests and `psim simulate --trace`.
+
+use super::controller::MemOp;
+use super::sram::Region;
+
+/// One recorded bus transaction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Iteration index (co_block * ci_blocks + ci_block).
+    pub iter: u32,
+    pub kind: Kind,
+    pub region: Region,
+    pub elements: u64,
+    pub op: MemOp,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Read,
+    Write,
+}
+
+/// Bounded trace recorder (keeps the last `cap` events).
+#[derive(Clone, Debug)]
+pub struct Trace {
+    cap: usize,
+    events: Vec<Event>,
+    dropped: u64,
+}
+
+impl Trace {
+    pub fn new(cap: usize) -> Self {
+        Trace { cap, events: Vec::new(), dropped: 0 }
+    }
+
+    /// A disabled trace that records nothing.
+    pub fn off() -> Self {
+        Trace::new(0)
+    }
+
+    pub fn record(&mut self, e: Event) {
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.events.len() == self.cap {
+            self.events.remove(0);
+            self.dropped += 1;
+        }
+        self.events.push(e);
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Render a human-readable dump.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        if self.dropped > 0 {
+            out.push_str(&format!("... {} earlier events dropped ...\n", self.dropped));
+        }
+        for e in &self.events {
+            out.push_str(&format!(
+                "iter {:>5} {:5} {:6} {:>8} elems  op={:?}\n",
+                e.iter,
+                match e.kind {
+                    Kind::Read => "READ",
+                    Kind::Write => "WRITE",
+                },
+                e.region.label(),
+                e.elements,
+                e.op
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(iter: u32) -> Event {
+        Event { iter, kind: Kind::Read, region: Region::Input, elements: 8, op: MemOp::Normal }
+    }
+
+    #[test]
+    fn ring_buffer_keeps_latest() {
+        let mut t = Trace::new(3);
+        for i in 0..5 {
+            t.record(ev(i));
+        }
+        assert_eq!(t.events().len(), 3);
+        assert_eq!(t.events()[0].iter, 2);
+        assert_eq!(t.dropped(), 2);
+    }
+
+    #[test]
+    fn off_records_nothing() {
+        let mut t = Trace::off();
+        t.record(ev(0));
+        assert!(t.events().is_empty());
+        assert_eq!(t.dropped(), 1);
+    }
+
+    #[test]
+    fn dump_mentions_drops() {
+        let mut t = Trace::new(1);
+        t.record(ev(0));
+        t.record(ev(1));
+        assert!(t.dump().contains("1 earlier events dropped"));
+    }
+}

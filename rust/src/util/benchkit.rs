@@ -1,0 +1,197 @@
+//! A criterion-like micro-benchmark harness (criterion is not available in
+//! the offline vendor set). Warmup, fixed sample count, mean/median/stddev,
+//! optional throughput. Used by all `rust/benches/*.rs` targets
+//! (`harness = false`).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<u64>,
+}
+
+impl Stats {
+    /// Elements per second, if `elements` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / self.mean.as_secs_f64())
+    }
+}
+
+/// Benchmark runner with uniform reporting.
+pub struct Bench {
+    warmup: Duration,
+    samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Honour the libtest `--bench` / filter args passively: we accept
+        // and ignore them so `cargo bench` works unmodified.
+        let quick = std::env::var("PSIM_BENCH_QUICK").is_ok();
+        Bench {
+            warmup: if quick { Duration::from_millis(20) } else { Duration::from_millis(200) },
+            samples: if quick { 10 } else { 30 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which is run repeatedly; returns and records stats.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        self.run_with_elements(name, None, &mut f)
+    }
+
+    /// Time `f` and report throughput as `elements`/iteration/second.
+    pub fn run_throughput<T>(&mut self, name: &str, elements: u64, mut f: impl FnMut() -> T) -> &Stats {
+        self.run_with_elements(name, Some(elements), &mut f)
+    }
+
+    fn run_with_elements<T>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        f: &mut impl FnMut() -> T,
+    ) -> &Stats {
+        // Warmup until the warmup budget elapses (at least one iteration).
+        let wstart = Instant::now();
+        let mut warm_iters = 0u64;
+        while wstart.elapsed() < self.warmup || warm_iters == 0 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        // Choose an inner iteration count so each sample is >= ~1ms.
+        let per_iter = wstart.elapsed().as_secs_f64() / warm_iters as f64;
+        let inner = ((1.0e-3 / per_iter.max(1e-9)).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..inner {
+                black_box(f());
+            }
+            times.push(t0.elapsed() / inner as u32);
+        }
+        times.sort();
+        let mean_ns = times.iter().map(|d| d.as_nanos()).sum::<u128>() / times.len() as u128;
+        let mean = Duration::from_nanos(mean_ns as u64);
+        let median = times[times.len() / 2];
+        let var = times
+            .iter()
+            .map(|d| {
+                let x = d.as_nanos() as f64 - mean_ns as f64;
+                x * x
+            })
+            .sum::<f64>()
+            / times.len() as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            samples: self.samples,
+            mean,
+            median,
+            stddev: Duration::from_nanos(var.sqrt() as u64),
+            min: times[0],
+            max: *times.last().unwrap(),
+            elements: elements.map(|e| e * inner).map(|_| elements.unwrap()),
+        };
+        println!("{}", format_stats(&stats));
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Print a closing summary table.
+    pub fn finish(&self) {
+        println!("\n== bench summary ({} benchmarks) ==", self.results.len());
+        for s in &self.results {
+            println!("{}", format_stats(s));
+        }
+    }
+}
+
+fn human(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+fn format_stats(s: &Stats) -> String {
+    let tp = match s.throughput() {
+        Some(t) if t >= 1e9 => format!("  [{:.2} Gelem/s]", t / 1e9),
+        Some(t) if t >= 1e6 => format!("  [{:.2} Melem/s]", t / 1e6),
+        Some(t) if t >= 1e3 => format!("  [{:.2} Kelem/s]", t / 1e3),
+        Some(t) => format!("  [{t:.2} elem/s]"),
+        None => String::new(),
+    };
+    format!(
+        "bench {:<44} mean {:>10}  median {:>10}  sd {:>10}  (min {} / max {}, n={}){}",
+        s.name,
+        human(s.mean),
+        human(s.median),
+        human(s.stddev),
+        human(s.min),
+        human(s.max),
+        s.samples,
+        tp
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_records_stats() {
+        std::env::set_var("PSIM_BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        let s = b.run("noop-ish", || 1 + 1).clone();
+        assert_eq!(s.samples, 10);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        std::env::set_var("PSIM_BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        let s = b.run_throughput("sum-1k", 1000, || (0..1000u64).sum::<u64>()).clone();
+        assert!(s.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn human_units() {
+        assert_eq!(human(Duration::from_nanos(12)), "12 ns");
+        assert!(human(Duration::from_micros(12)).ends_with("µs"));
+        assert!(human(Duration::from_millis(12)).ends_with("ms"));
+        assert!(human(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

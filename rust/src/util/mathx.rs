@@ -1,0 +1,118 @@
+//! Small numeric helpers shared by the analytics engine.
+
+/// All positive divisors of `x`, ascending. `divisors(12) = [1,2,3,4,6,12]`.
+pub fn divisors(x: usize) -> Vec<usize> {
+    assert!(x > 0, "divisors of 0 undefined");
+    let mut lo = Vec::new();
+    let mut hi = Vec::new();
+    let mut d = 1usize;
+    while d * d <= x {
+        if x % d == 0 {
+            lo.push(d);
+            if d != x / d {
+                hi.push(x / d);
+            }
+        }
+        d += 1;
+    }
+    hi.reverse();
+    lo.extend(hi);
+    lo
+}
+
+/// The divisor of `x` nearest to `target` in log-space (ties -> smaller).
+///
+/// Log-space distance is the natural metric here: bandwidth terms scale as
+/// `m` and `1/m`, so being 2x over is as bad as being 2x under.
+pub fn nearest_divisor_log(x: usize, target: f64) -> usize {
+    assert!(x > 0);
+    let t = target.max(1e-12).ln();
+    let mut best = 1usize;
+    let mut best_d = f64::INFINITY;
+    for d in divisors(x) {
+        let dist = ((d as f64).ln() - t).abs();
+        if dist < best_d {
+            best_d = dist;
+            best = d;
+        }
+    }
+    best
+}
+
+/// Greatest common divisor.
+pub fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Ceiling division for usize.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Relative difference |a-b| / max(|a|,|b|,eps).
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    (a - b).abs() / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(13), vec![1, 13]);
+        assert_eq!(divisors(64), vec![1, 2, 4, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn divisors_cover_product_pairs() {
+        for x in 1..200usize {
+            let ds = divisors(x);
+            for &d in &ds {
+                assert_eq!(x % d, 0);
+                assert!(ds.contains(&(x / d)));
+            }
+            // sorted ascending, unique
+            assert!(ds.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn nearest_divisor_log_cases() {
+        // divisors of 96: 1,2,3,4,6,8,12,16,24,32,48,96
+        assert_eq!(nearest_divisor_log(96, 5.0), 6); // |ln5-ln6| < |ln5-ln4|
+        assert_eq!(nearest_divisor_log(96, 100.0), 96);
+        assert_eq!(nearest_divisor_log(96, 0.2), 1);
+        assert_eq!(nearest_divisor_log(7, 3.0), 7); // ln3 vs ln1/ln7: 1.099 vs 0.847 -> 7
+    }
+
+    #[test]
+    fn gcd_cases() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(7, 13), 1);
+        assert_eq!(gcd(0, 5), 5);
+        assert_eq!(gcd(5, 0), 5);
+    }
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 100), 1);
+    }
+
+    #[test]
+    fn rel_diff_cases() {
+        assert!(rel_diff(100.0, 100.0) < 1e-12);
+        assert!((rel_diff(100.0, 90.0) - 0.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,21 @@
+//! Self-contained utility substrate.
+//!
+//! The offline build environment ships only the `xla` crate's vendored
+//! dependency closure, so the usual ecosystem crates (serde, rand, clap,
+//! criterion, proptest) are unavailable. Everything the rest of the crate
+//! needs from them is implemented here, small and auditable:
+//!
+//! * [`prng`] — splitmix64/xoshiro256** deterministic PRNG.
+//! * [`json`] — minimal JSON writer + parser (artifact manifests, reports).
+//! * [`tablefmt`] — aligned markdown/CSV table rendering.
+//! * [`quickcheck`] — a tiny property-based testing harness.
+//! * [`benchkit`] — a criterion-like micro-benchmark harness
+//!   (warmup, N samples, mean/median/stddev, throughput).
+//! * [`mathx`] — small numeric helpers (divisors, log-space distance).
+
+pub mod benchkit;
+pub mod json;
+pub mod mathx;
+pub mod prng;
+pub mod quickcheck;
+pub mod tablefmt;

@@ -1,0 +1,107 @@
+//! Coordinator end-to-end: batcher + engine + metrics over real PJRT.
+//! Skips when artifacts are absent (run `make artifacts`).
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use psim::coordinator::{InferenceService, ServiceConfig};
+use psim::runtime::{ArtifactDir, Tensor};
+
+/// xla_extension 0.5.1's CPU plugin aborts (`literal.size_bytes() ==
+/// b->size()` check) when several PJRT clients in one process mix
+/// `buffer_from_host_literal` + `execute_b` concurrently. Each test
+/// therefore takes this lock — tests stay independent but serialized.
+static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+fn pjrt_guard() -> MutexGuard<'static, ()> {
+    PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn service_or_skip(cfg: ServiceConfig) -> Option<InferenceService> {
+    match ArtifactDir::open_default() {
+        Ok(a) => Some(InferenceService::start(a, cfg).expect("service start")),
+        Err(e) => {
+            eprintln!("SKIP coordinator tests: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn single_request_roundtrip() {
+    let _g = pjrt_guard();
+    let Some(svc) = service_or_skip(ServiceConfig::default()) else { return };
+    let resp = svc.infer(Tensor::random(&[3, 32, 32], 1, 1.0)).unwrap();
+    assert_eq!(resp.logits.len(), 10);
+    assert!(resp.logits.iter().all(|v| v.is_finite()));
+    assert!(resp.latency_us > 0);
+}
+
+#[test]
+fn concurrent_load_all_answered_and_batched() {
+    let _g = pjrt_guard();
+    let Some(svc) = service_or_skip(ServiceConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(5),
+        weight_seed: 7,
+    }) else {
+        return;
+    };
+    // Warm up so compilation doesn't skew the run.
+    svc.infer(Tensor::random(&[3, 32, 32], 0, 1.0)).unwrap();
+
+    let n = 48usize;
+    let rxs: Vec<_> = (0..n).map(|i| svc.submit(Tensor::random(&[3, 32, 32], i as u64, 1.0))).collect();
+    let mut got = 0;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert_eq!(resp.logits.len(), 10);
+        got += 1;
+    }
+    assert_eq!(got, n);
+    // Burst submissions must have coalesced into real batches.
+    let mean_batch = svc.metrics.mean_batch_size();
+    assert!(mean_batch > 1.5, "no batching observed: mean {mean_batch}");
+    let total = svc.metrics.responses.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(total, (n + 1) as u64);
+}
+
+#[test]
+fn deterministic_across_service_restarts() {
+    let _g = pjrt_guard();
+    let cfg = ServiceConfig { weight_seed: 99, ..ServiceConfig::default() };
+    let Some(svc1) = service_or_skip(cfg.clone()) else { return };
+    let img = Tensor::random(&[3, 32, 32], 1234, 1.0);
+    let a = svc1.infer(img.clone()).unwrap();
+    drop(svc1);
+    let svc2 = service_or_skip(cfg).unwrap();
+    let b = svc2.infer(img).unwrap();
+    assert_eq!(a.logits, b.logits, "same seed + image must reproduce logits");
+}
+
+#[test]
+fn different_weight_seeds_change_outputs() {
+    let _g = pjrt_guard();
+    let Some(svc1) = service_or_skip(ServiceConfig { weight_seed: 1, ..Default::default() })
+    else {
+        return;
+    };
+    let img = Tensor::random(&[3, 32, 32], 5, 1.0);
+    let a = svc1.infer(img.clone()).unwrap();
+    drop(svc1);
+    let svc2 = service_or_skip(ServiceConfig { weight_seed: 2, ..Default::default() }).unwrap();
+    let b = svc2.infer(img).unwrap();
+    assert_ne!(a.logits, b.logits);
+}
+
+#[test]
+fn rejects_malformed_images() {
+    let _g = pjrt_guard();
+    let Some(svc) = service_or_skip(ServiceConfig::default()) else { return };
+    // wrong shape: the engine drops the batch; the reply channel closes.
+    let rx = svc.submit(Tensor::zeros(&[3, 8, 8]));
+    assert!(rx.recv_timeout(Duration::from_secs(60)).is_err());
+    // the service remains healthy afterwards
+    let ok = svc.infer(Tensor::random(&[3, 32, 32], 9, 1.0)).unwrap();
+    assert_eq!(ok.logits.len(), 10);
+}

@@ -1,0 +1,247 @@
+//! Property-based invariants over randomized layers and partitions,
+//! using the in-tree quickcheck harness (deterministic, replayable).
+
+use psim::analytics::bandwidth::{layer_bandwidth, ControllerMode};
+use psim::analytics::optimizer;
+use psim::analytics::partition::{partition_layer, Strategy};
+use psim::models::ConvLayer;
+use psim::prop_assert;
+use psim::sim::scheduler::{simulate_layer_with, SimConfig};
+use psim::util::mathx::{divisors, nearest_divisor_log};
+use psim::util::prng::Rng;
+use psim::util::quickcheck::forall;
+
+/// Random-but-plausible conv layer: channels in [1, 256], spatial in
+/// [k, 64], kernel in {1,3,5,7}, optional grouping.
+fn gen_layer(r: &mut Rng) -> ConvLayer {
+    let k = *r.pick(&[1usize, 3, 5, 7]);
+    let wi = r.range(k.max(4), 64);
+    let hi = r.range(k.max(4), 64);
+    let mut m = r.range(1, 256);
+    let mut n = r.range(1, 256);
+    let pad = r.range(0, k / 2);
+    // sometimes grouped (including depthwise)
+    let groups = if r.chance(0.25) {
+        let g = *r.pick(&[2usize, 4, 8]);
+        m = (m / g).max(1) * g;
+        n = (n / g).max(1) * g;
+        g
+    } else if r.chance(0.1) {
+        m = m.max(2);
+        n = m; // depthwise
+        m
+    } else {
+        1
+    };
+    ConvLayer::grouped("rand", wi, hi, m, n, k, 1, pad, groups)
+}
+
+fn gen_budget(r: &mut Rng) -> usize {
+    *r.pick(&[128usize, 512, 1024, 2048, 4096, 16384])
+}
+
+#[test]
+fn prop_sim_matches_model_on_random_layers() {
+    forall(
+        "sim == model",
+        192,
+        |r| (gen_layer(r), gen_budget(r)),
+        |(layer, p)| {
+            for mode in ControllerMode::ALL {
+                let part = partition_layer(layer, *p, Strategy::Optimal, mode);
+                let sim = simulate_layer_with(layer, &SimConfig::new(*p, mode, Strategy::Optimal), part)
+                    .stats;
+                let model = layer_bandwidth(layer, part.m, part.n, mode);
+                prop_assert!(
+                    sim.activation_traffic() as f64 == model.total(),
+                    "sim {} != model {} for {layer} at P={p} {mode:?} {part:?}",
+                    sim.activation_traffic(),
+                    model.total()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_active_never_worse_than_passive() {
+    forall(
+        "active <= passive",
+        256,
+        |r| {
+            let layer = gen_layer(r);
+            let mg = layer.m_per_group();
+            let ng = layer.n_per_group();
+            let m = *r.pick(&divisors(mg));
+            let n = r.range(1, ng);
+            (layer, m, n)
+        },
+        |(layer, m, n)| {
+            let p = layer_bandwidth(layer, *m, *n, ControllerMode::Passive);
+            let a = layer_bandwidth(layer, *m, *n, ControllerMode::Active);
+            prop_assert!(a.total() <= p.total(), "active {} > passive {}", a.total(), p.total());
+            prop_assert!(a.input == p.input, "input side must not change");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_search_is_discrete_optimum() {
+    // The search result must beat every feasible (divisor-m, any-n) pair
+    // we can sample.
+    forall(
+        "search optimal",
+        96,
+        |r| {
+            let layer = gen_layer(r);
+            let p = gen_budget(r);
+            let mode = if r.chance(0.5) { ControllerMode::Passive } else { ControllerMode::Active };
+            // a random feasible alternative
+            let k2 = layer.k * layer.k;
+            let mg = layer.m_per_group();
+            let cap_m: Vec<usize> =
+                divisors(mg).into_iter().filter(|&d| k2 * d <= p || d == 1).collect();
+            let m = *r.pick(&cap_m);
+            let n_cap = (p / (k2 * m)).max(1).min(layer.n_per_group());
+            let n = r.range(1, n_cap);
+            (layer, p, mode, m, n)
+        },
+        |(layer, p, mode, m, n)| {
+            let best = optimizer::search_partition(layer, *p, *mode);
+            let best_bw = layer_bandwidth(layer, best.m, best.n, *mode).total();
+            let alt_bw = layer_bandwidth(layer, *m, *n, *mode).total();
+            prop_assert!(
+                best_bw <= alt_bw + 1e-9,
+                "search {best:?}={best_bw} beaten by ({m},{n})={alt_bw} on {layer} P={p}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bandwidth_floor_and_monotonicity() {
+    forall(
+        "floor + monotone in m",
+        192,
+        |r| gen_layer(r),
+        |layer| {
+            let floor = (layer.input_activations() + layer.output_activations()) as f64;
+            let mg = layer.m_per_group();
+            let ng = layer.n_per_group();
+            // full residency hits the floor
+            let full = layer_bandwidth(layer, mg, ng, ControllerMode::Passive);
+            prop_assert!(full.total() == floor, "full tile {} != floor {floor}", full.total());
+            // growing m (n fixed = N) monotonically lowers output traffic
+            let mut prev = f64::INFINITY;
+            for m in divisors(mg) {
+                let bw = layer_bandwidth(layer, m, ng, ControllerMode::Passive);
+                prop_assert!(
+                    bw.output <= prev + 1e-9,
+                    "output traffic rose at m={m}: {} > {prev}",
+                    bw.output
+                );
+                prev = bw.output;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_eq7_stationary_point() {
+    // The real-valued m* from eq. (7) minimizes the continuous relaxation
+    // B(m) = a*m + b/m - c: check neighbours are no better.
+    forall(
+        "eq7 is the continuous optimum",
+        128,
+        |r| (gen_layer(r), gen_budget(r)),
+        |(layer, p)| {
+            let wi_hi = (layer.wi * layer.hi) as f64;
+            let wo_ho = (layer.wo() * layer.ho()) as f64;
+            let k2 = (layer.k * layer.k) as f64;
+            let mg = layer.m_per_group() as f64;
+            let ng = layer.n_per_group() as f64;
+            let b_cont = |m: f64| {
+                // eq. (6): Bi with n = P/(K^2 m), Bo passive
+                wi_hi * mg * ng * k2 * m / (*p as f64) + wo_ho * ng * (2.0 * mg / m - 1.0)
+            };
+            let m_star = optimizer::optimal_m_real(layer, *p, ControllerMode::Passive);
+            let b0 = b_cont(m_star);
+            for factor in [0.5, 0.9, 1.1, 2.0] {
+                let m = m_star * factor;
+                prop_assert!(
+                    b_cont(m) >= b0 - 1e-6 * b0.abs(),
+                    "B({m}) = {} < B(m*={m_star}) = {b0}",
+                    b_cont(m)
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_divisor_helpers() {
+    forall(
+        "divisor helpers",
+        256,
+        |r| (r.range(1, 4096), r.f64() * 100.0),
+        |(x, target)| {
+            let ds = divisors(*x);
+            prop_assert!(ds.first() == Some(&1) && ds.last() == Some(x), "ends wrong for {x}");
+            for d in &ds {
+                prop_assert!(x % d == 0, "{d} does not divide {x}");
+            }
+            let nd = nearest_divisor_log(*x, *target);
+            prop_assert!(x % nd == 0, "nearest {nd} not a divisor of {x}");
+            // no other divisor is strictly closer in log space
+            let t = target.max(1e-12).ln();
+            let best = (nd as f64).ln() - t;
+            for d in &ds {
+                let dist = (*d as f64).ln() - t;
+                prop_assert!(
+                    dist.abs() >= best.abs() - 1e-12,
+                    "divisor {d} closer than {nd} to {target} for {x}"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use psim::util::json::Json;
+    fn gen_json(r: &mut Rng, depth: usize) -> Json {
+        if depth == 0 || r.chance(0.4) {
+            match r.range(0, 3) {
+                0 => Json::Num((r.range(0, 10_000) as f64) / 8.0),
+                1 => Json::Bool(r.chance(0.5)),
+                2 => Json::Str(format!("s{}-\"q\"", r.range(0, 99))),
+                _ => Json::Null,
+            }
+        } else if r.chance(0.5) {
+            Json::Arr((0..r.range(0, 4)).map(|_| gen_json(r, depth - 1)).collect())
+        } else {
+            Json::Obj(
+                (0..r.range(0, 4))
+                    .map(|i| (format!("k{i}"), gen_json(r, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+    forall(
+        "json print->parse roundtrip",
+        256,
+        |r| gen_json(r, 3),
+        |j| {
+            let text = j.to_string();
+            let back = Json::parse(&text).map_err(|e| format!("{e} in {text}"))?;
+            prop_assert!(&back == j, "roundtrip changed {j:?} -> {back:?}");
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,75 @@
+//! Golden tests on report formatting: the emitted tables must keep the
+//! paper's row/column structure (these strings are what EXPERIMENTS.md
+//! embeds).
+
+use psim::report::{compare, fig2, tables};
+
+#[test]
+fn table3_golden() {
+    let md = tables::table3().to_markdown();
+    // exact paper-profile values, formatted at 3 decimals
+    for needle in [
+        "| AlexNet    | 0.823",
+        "| VGG-16     | 20.020",
+        "| SqueezeNet | 7.304",
+        "| GoogleNet  | 7.889",
+        "| ResNet-18  | 4.666",
+        "| ResNet-50  | 28.349",
+        "| MobileNet  | 10.186",
+        "| MNASNet    | 11.001",
+    ] {
+        assert!(md.contains(needle), "missing row {needle:?} in:\n{md}");
+    }
+}
+
+#[test]
+fn table1_structure() {
+    let t = tables::table1();
+    assert_eq!(t.n_rows(), 8);
+    let md = t.to_markdown();
+    for h in ["P=512 Max Input", "P=2048 Equal MACs", "P=16384 This Work"] {
+        assert!(md.contains(h), "missing column {h}");
+    }
+    // markdown is rectangular
+    let widths: Vec<usize> = md.lines().map(|l| l.chars().count()).collect();
+    assert!(widths.windows(2).all(|w| w[0] == w[1]));
+}
+
+#[test]
+fn table2_structure() {
+    let t = tables::table2();
+    let csv = t.to_csv();
+    let header = csv.lines().next().unwrap();
+    assert_eq!(header.split(',').count(), 13); // CNN + 6 passive + 6 active
+    assert_eq!(csv.lines().count(), 9); // header + 8 networks
+}
+
+#[test]
+fn fig2_csv_plottable() {
+    let csv = fig2::fig2_table().to_csv();
+    assert_eq!(csv.lines().count(), 9);
+    let header = csv.lines().next().unwrap();
+    assert!(header.contains("512 MACs") && header.contains("16384 MACs"));
+    // every data cell is a percentage
+    for line in csv.lines().skip(1) {
+        for cell in line.split(',').skip(1) {
+            assert!(cell.ends_with('%'), "cell {cell} not a percentage");
+        }
+    }
+}
+
+#[test]
+fn compare_table_has_signed_deltas() {
+    let cells = compare::compare_all();
+    let md = compare::to_table(&cells[..10], false).to_markdown();
+    assert!(md.contains('+') || md.contains('-'));
+    assert!(md.lines().count() == 12); // header + sep + 10 rows
+}
+
+#[test]
+fn stable_across_invocations() {
+    // Table generation must be deterministic (parallel_map preserves order).
+    let a = tables::table1().to_markdown();
+    let b = tables::table1().to_markdown();
+    assert_eq!(a, b);
+}

@@ -1,0 +1,150 @@
+//! Runtime integration over the real AOT artifacts. Requires
+//! `make artifacts`; tests skip (with a loud note) when artifacts are
+//! absent so `cargo test` still works in a fresh checkout.
+
+use psim::runtime::{ArtifactDir, Runtime, Tensor};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match ArtifactDir::open_default() {
+        Ok(a) => Some(Runtime::new(a).expect("PJRT CPU client")),
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_expected_entries() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in ["psimnet_b1", "psimnet_b8", "conv_step_l0", "conv_step_l1", "conv_step_l2", "active_update"]
+    {
+        assert!(rt.artifacts().entry(name).is_some(), "missing {name}");
+    }
+}
+
+#[test]
+fn conv_step_zero_weights_is_identity() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let psum = Tensor::random(&[16, 32, 32], 3, 1.0);
+    let x = Tensor::random(&[3, 34, 34], 4, 1.0);
+    let w = Tensor::zeros(&[16, 3, 3, 3]);
+    let out = rt.execute("conv_step_l0", &[psum.clone(), x, w]).unwrap();
+    assert_eq!(out[0], psum, "zero weights must pass the psum through");
+}
+
+#[test]
+fn conv_step_is_linear_in_psum() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let psum = Tensor::random(&[32, 16, 16], 5, 1.0);
+    let x = Tensor::random(&[8, 18, 18], 6, 1.0);
+    let w = Tensor::random(&[32, 8, 3, 3], 7, 0.3);
+    let with_p = rt.execute("conv_step_l1", &[psum.clone(), x.clone(), w.clone()]).unwrap();
+    let without = rt.execute("conv_step_l1", &[Tensor::zeros(&[32, 16, 16]), x, w]).unwrap();
+    let max_err = with_p[0]
+        .data
+        .iter()
+        .zip(without[0].data.iter().zip(&psum.data))
+        .map(|(a, (b, p))| (a - (b + p)).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-4, "linearity violated: {max_err}");
+}
+
+#[test]
+fn conv_step_additivity_in_x() {
+    // conv is linear in the input: f(0,x1,w) + f(0,x2,w) == f(0,x1+x2,w).
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let zero = Tensor::zeros(&[64, 8, 8]);
+    let x1 = Tensor::random(&[8, 10, 10], 8, 1.0);
+    let x2 = Tensor::random(&[8, 10, 10], 9, 1.0);
+    let sum = Tensor::new(
+        vec![8, 10, 10],
+        x1.data.iter().zip(&x2.data).map(|(a, b)| a + b).collect(),
+    )
+    .unwrap();
+    let w = Tensor::random(&[64, 8, 3, 3], 10, 0.3);
+    let f1 = rt.execute("conv_step_l2", &[zero.clone(), x1, w.clone()]).unwrap();
+    let f2 = rt.execute("conv_step_l2", &[zero.clone(), x2, w.clone()]).unwrap();
+    let fs = rt.execute("conv_step_l2", &[zero, sum, w]).unwrap();
+    let max_err = fs[0]
+        .data
+        .iter()
+        .zip(f1[0].data.iter().zip(&f2[0].data))
+        .map(|(s, (a, b))| (s - (a + b)).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "additivity violated: {max_err}");
+}
+
+#[test]
+fn active_update_matches_rust_oracle() {
+    // relu(a + b) is trivially computable here — an exact oracle.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = Tensor::random(&[64, 30, 30], 11, 2.0);
+    let b = Tensor::random(&[64, 30, 30], 12, 2.0);
+    let out = rt.execute("active_update", &[a.clone(), b.clone()]).unwrap();
+    for (got, (x, y)) in out[0].data.iter().zip(a.data.iter().zip(&b.data)) {
+        let want = (x + y).max(0.0);
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+}
+
+#[test]
+fn psimnet_batching_invariance() {
+    // Row i of a b8 batch equals the same image through the b1 artifact.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let weights: Vec<Tensor> = rt
+        .entry("psimnet_b1")
+        .unwrap()
+        .inputs[1..]
+        .iter()
+        .enumerate()
+        .map(|(i, sig)| Tensor::random(&sig.shape, 100 + i as u64, 0.2))
+        .collect();
+
+    let img = Tensor::random(&[3, 32, 32], 55, 1.0);
+    let mut b1_in = vec![Tensor::new(vec![1, 3, 32, 32], img.data.clone()).unwrap()];
+    b1_in.extend(weights.iter().cloned());
+    let solo = rt.execute("psimnet_b1", &b1_in).unwrap();
+
+    let mut batch = vec![0.0f32; 8 * 3072];
+    for row in 0..8 {
+        let filler = Tensor::random(&[3, 32, 32], 200 + row as u64, 1.0);
+        let src = if row == 5 { &img } else { &filler };
+        batch[row * 3072..(row + 1) * 3072].copy_from_slice(&src.data);
+    }
+    let mut b8_in = vec![Tensor::new(vec![8, 3, 32, 32], batch).unwrap()];
+    b8_in.extend(weights.iter().cloned());
+    let batched = rt.execute("psimnet_b8", &b8_in).unwrap();
+
+    let solo_row = &solo[0].data[..10];
+    let batch_row = &batched[0].data[5 * 10..6 * 10];
+    for (a, b) in solo_row.iter().zip(batch_row) {
+        assert!((a - b).abs() < 1e-4, "batching changed logits: {a} vs {b}");
+    }
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let err = rt
+        .execute("active_update", &[Tensor::zeros(&[2, 2]), Tensor::zeros(&[64, 30, 30])])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("shape"), "unhelpful error: {err}");
+    let err = rt.execute("active_update", &[Tensor::zeros(&[64, 30, 30])]).unwrap_err().to_string();
+    assert!(err.contains("inputs"), "unhelpful error: {err}");
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = Tensor::zeros(&[64, 30, 30]);
+    let b = Tensor::zeros(&[64, 30, 30]);
+    rt.execute("active_update", &[a.clone(), b.clone()]).unwrap();
+    let compile_after_first = rt.compile_nanos;
+    for _ in 0..3 {
+        rt.execute("active_update", &[a.clone(), b.clone()]).unwrap();
+    }
+    assert_eq!(rt.compile_nanos, compile_after_first, "recompiled a cached executable");
+    assert_eq!(rt.execs, 4);
+}

@@ -1,0 +1,126 @@
+//! The simulator's contract: transaction-counted activation traffic
+//! equals the analytical model **exactly** — every network, every
+//! strategy, both controller modes, all Table I MAC budgets.
+
+use psim::analytics::bandwidth::{layer_bandwidth, ControllerMode};
+use psim::analytics::partition::{partition_layer, Strategy};
+use psim::models::zoo;
+use psim::sim::scheduler::{simulate_layer, simulate_network, SimConfig};
+
+#[test]
+fn exhaustive_sim_equals_model() {
+    let strategies = [
+        Strategy::MaxInput,
+        Strategy::MaxOutput,
+        Strategy::EqualMacs,
+        Strategy::Optimal,
+        Strategy::OptimalSearch,
+    ];
+    for net in zoo::paper_networks() {
+        for &p in &[512usize, 2048, 16384] {
+            for s in strategies {
+                for mode in ControllerMode::ALL {
+                    let cfg = SimConfig::new(p, mode, s);
+                    let sim = simulate_network(&net, &cfg).stats;
+                    let mut model_total = 0.0;
+                    for layer in &net.layers {
+                        let part = partition_layer(layer, p, s, mode);
+                        model_total += layer_bandwidth(layer, part.m, part.n, mode).total();
+                    }
+                    assert_eq!(
+                        sim.activation_traffic() as f64,
+                        model_total,
+                        "{} P={p} {:?} {:?}",
+                        net.name,
+                        s,
+                        mode
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn active_controller_absorbs_exactly_the_psum_rereads() {
+    // For the same partition, passive bus traffic - active bus traffic
+    // must equal the internal reads the active controller performed.
+    for net in [zoo::alexnet(), zoo::resnet18()] {
+        for &p in &[512usize, 4096] {
+            for layer in &net.layers {
+                let part = partition_layer(layer, p, Strategy::Optimal, ControllerMode::Passive);
+                let cfg_p = SimConfig::new(p, ControllerMode::Passive, Strategy::Optimal);
+                let cfg_a = SimConfig::new(p, ControllerMode::Active, Strategy::Optimal);
+                let sp = psim::sim::scheduler::simulate_layer_with(layer, &cfg_p, part).stats;
+                let sa = psim::sim::scheduler::simulate_layer_with(layer, &cfg_a, part).stats;
+                assert_eq!(
+                    sp.activation_traffic() - sa.activation_traffic(),
+                    sa.internal_psum_reads,
+                    "{}/{} P={p}",
+                    net.name,
+                    layer.name
+                );
+                // and the SRAM array does the same total work either way
+                assert_eq!(sp.sram_accesses, sa.sram_accesses, "{}", layer.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn mac_work_is_conserved() {
+    // Total MACs executed never depends on partitioning or controller.
+    let net = zoo::squeezenet1_0();
+    let expected = net.total_macs();
+    for s in [Strategy::MaxInput, Strategy::Optimal, Strategy::OptimalSearch] {
+        for mode in ControllerMode::ALL {
+            let sim = simulate_network(&net, &SimConfig::new(1024, mode, s)).stats;
+            assert_eq!(sim.macs, expected, "{s:?} {mode:?}");
+        }
+    }
+}
+
+#[test]
+fn energy_tracks_traffic_direction() {
+    // More MACs -> less traffic -> less energy (for the optimal strategy).
+    let net = zoo::resnet18();
+    let mut prev = f64::INFINITY;
+    for p in [512usize, 2048, 8192] {
+        let sim =
+            simulate_network(&net, &SimConfig::new(p, ControllerMode::Active, Strategy::OptimalSearch))
+                .stats;
+        assert!(sim.energy_pj < prev, "energy rose at P={p}");
+        prev = sim.energy_pj;
+    }
+}
+
+#[test]
+fn sideband_words_only_in_active_mode() {
+    let net = zoo::alexnet();
+    let passive =
+        simulate_network(&net, &SimConfig::new(2048, ControllerMode::Passive, Strategy::Optimal))
+            .stats;
+    let active =
+        simulate_network(&net, &SimConfig::new(2048, ControllerMode::Active, Strategy::Optimal))
+            .stats;
+    // Passive writes carry Init commands on the first pass only; active
+    // carries Add/AddRelu on every subsequent pass as well.
+    assert!(active.sideband_words > passive.sideband_words);
+    assert!(active.bus_beats < passive.bus_beats);
+}
+
+#[test]
+fn per_layer_equals_whole_network() {
+    let net = zoo::googlenet();
+    let cfg = SimConfig::new(4096, ControllerMode::Active, Strategy::Optimal);
+    let whole = simulate_network(&net, &cfg).stats;
+    let mut input = 0u64;
+    let mut out = 0u64;
+    for layer in &net.layers {
+        let s = simulate_layer(layer, &cfg).stats;
+        input += s.input_reads;
+        out += s.output_traffic();
+    }
+    assert_eq!(whole.input_reads, input);
+    assert_eq!(whole.output_traffic(), out);
+}
