@@ -1,7 +1,10 @@
 //! Paper-evaluation bench: regenerates every table and figure of
-//! Section IV and times the full regeneration. `cargo bench` prints the
-//! tables themselves (the reproduction artifact) followed by timings.
+//! Section IV and times the full regeneration, then measures the unified
+//! sweep engine (cold vs warm cache, worker scaling) on the full paper
+//! grid. `cargo bench` prints the tables themselves (the reproduction
+//! artifact) followed by timings.
 
+use psim::analytics::grid::{GridEngine, SweepSpec};
 use psim::report::{compare, fig2, tables};
 use psim::util::benchkit::Bench;
 
@@ -27,11 +30,41 @@ fn main() {
         s.worst * 100.0
     );
 
+    let full = SweepSpec::paper_grid();
+    println!(
+        "================ SWEEP ENGINE (paper grid, {} cells) ==========",
+        full.cell_count()
+    );
+    {
+        let engine = GridEngine::new();
+        engine.run(&full);
+        let (hits, misses) = engine.cache_stats();
+        println!(
+            "layer cache on one cold run: {hits} hits / {misses} misses \
+             ({:.1}% of layer evaluations collapsed)\n",
+            hits as f64 / (hits + misses).max(1) as f64 * 100.0
+        );
+    }
+
     let mut b = Bench::new();
     b.run("table3 (8 networks)", tables::table3);
     b.run("table1 (96 cells, 4 strategies)", tables::table1);
     b.run("table2 (96 cells, 2 modes)", tables::table2);
     b.run("fig2 (48 saving points)", fig2::fig2_table);
     b.run("validate (200-cell comparison)", compare::compare_all);
+    let cells = full.cell_count() as u64;
+    b.run_throughput("grid cold engine+run, 1 worker (cells/s)", cells, || {
+        GridEngine::new().run_with_workers(&full, 1)
+    });
+    b.run_throughput("grid cold engine+run, default workers (cells/s)", cells, || {
+        GridEngine::new().run(&full)
+    });
+    let warm = GridEngine::new();
+    warm.run(&full);
+    b.run_throughput("grid warm rerun, default workers (cells/s)", cells, || warm.run(&full));
+    b.run("grid jsonl encode (384 cells)", {
+        let grid = GridEngine::new().run(&full);
+        move || grid.to_jsonl()
+    });
     b.finish();
 }

@@ -56,6 +56,21 @@ impl Bandwidth {
 /// are accepted in the first-order spirit of the paper: iteration counts
 /// are the *ceilings* `ceil(M_g/m)`/`ceil(N_g/n)` (a partial tile costs a
 /// full pass over the data it touches — matching what the simulator does).
+///
+/// ```
+/// use psim::analytics::bandwidth::{layer_bandwidth, layer_min_bandwidth, ControllerMode};
+/// use psim::models::ConvLayer;
+///
+/// // AlexNet conv3: 13x13, 192 -> 384, k3/p1.
+/// let l = ConvLayer::new("conv3", 13, 13, 192, 384, 3, 1, 1);
+/// // Full residency (m = M, n = N): everything read once, written once.
+/// let bw = layer_bandwidth(&l, 192, 384, ControllerMode::Passive);
+/// assert_eq!(bw.total(), layer_min_bandwidth(&l));
+/// // The active controller halves the psum traffic of a 16-pass split.
+/// let p = layer_bandwidth(&l, 12, 4, ControllerMode::Passive);
+/// let a = layer_bandwidth(&l, 12, 4, ControllerMode::Active);
+/// assert!(a.output < p.output);
+/// ```
 pub fn layer_bandwidth(layer: &ConvLayer, m: usize, n: usize, mode: ControllerMode) -> Bandwidth {
     let mg = layer.m_per_group();
     let ng = layer.n_per_group();

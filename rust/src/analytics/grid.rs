@@ -1,0 +1,649 @@
+//! The unified scenario-sweep engine: one declarative description of a
+//! design-space grid (networks × MAC budgets × strategies × controller
+//! modes × batch sizes), one parallel, memoizing executor, one
+//! deterministic JSONL output format.
+//!
+//! Everything the paper tabulates is a slice of this grid — Table I is
+//! `TABLE1_MACS × Strategy::TABLE1 × passive`, Table II is
+//! `TABLE2_MACS × optimal × both modes`, Fig. 2 is derived from Table II —
+//! so `report::{tables, compare, fig2}`, the `tables`/`analyze`/`sweep`
+//! CLI commands and the `serve` protocol's `{"cmd":"sweep"}` request all
+//! run on this engine instead of re-deriving cells ad hoc.
+//!
+//! Two properties make the engine fast and trustworthy:
+//!
+//! * **Shape memoization** — per-layer results are cached by layer *shape*
+//!   (not name), and CNNs repeat conv shapes heavily (VGG's 3×3 stacks,
+//!   ResNet's repeated blocks, the zoo across a grid), so the full paper
+//!   grid collapses to a fraction of its raw layer-evaluation count.
+//! * **Determinism** — every quantity is exact integer-valued `f64`
+//!   arithmetic and [`parallel_map`] preserves input order, so the JSONL
+//!   stream is byte-identical for any worker count (pinned by
+//!   `rust/tests/grid_engine.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::parallel::{default_workers, parallel_map};
+use crate::models::{ConvLayer, Network};
+use crate::util::json::Json;
+
+use super::bandwidth::{layer_bandwidth, Bandwidth, ControllerMode};
+use super::paper;
+use super::partition::{partition_layer, Partition, Strategy};
+
+/// A declarative sweep: the Cartesian product of five axes.
+///
+/// [`SweepSpec::paper_grid`] gives the paper's full evaluation grid
+/// (8 zoo networks × 6 MAC budgets × 4 strategies × 2 controller modes);
+/// builder methods narrow or extend any axis.
+///
+/// ```
+/// use psim::analytics::grid::{GridEngine, SweepSpec};
+/// use psim::analytics::{ControllerMode, Strategy};
+/// use psim::models::zoo;
+///
+/// let spec = SweepSpec::new(vec![zoo::alexnet()])
+///     .with_macs(vec![512, 2048])
+///     .with_strategies(vec![Strategy::Optimal])
+///     .with_modes(vec![ControllerMode::Passive]);
+/// assert_eq!(spec.cell_count(), 2);
+///
+/// let grid = GridEngine::new().run(&spec);
+/// assert_eq!(grid.cells.len(), 2);
+/// // More MACs -> fewer re-reads -> less traffic (paper Table II).
+/// assert!(grid.cells[1].total() < grid.cells[0].total());
+/// ```
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Networks to evaluate (resolved descriptors, not names).
+    pub networks: Vec<Network>,
+    /// MAC budgets `P` (eq. 1's constraint bound).
+    pub mac_budgets: Vec<usize>,
+    /// Partitioning strategies (Table I columns).
+    pub strategies: Vec<Strategy>,
+    /// Memory-controller modes (Table II columns).
+    pub modes: Vec<ControllerMode>,
+    /// Batch sizes (beyond the paper: weights amortize across a batch,
+    /// activations do not — see [`crate::analytics::extensions`]).
+    pub batch_sizes: Vec<usize>,
+}
+
+impl SweepSpec {
+    /// A spec over explicit networks with paper-grid defaults on the other
+    /// axes: `TABLE2_MACS` budgets, the four Table I strategies, both
+    /// controller modes, batch 1.
+    pub fn new(networks: Vec<Network>) -> SweepSpec {
+        SweepSpec {
+            networks,
+            mac_budgets: paper::TABLE2_MACS.to_vec(),
+            strategies: Strategy::TABLE1.to_vec(),
+            modes: ControllerMode::ALL.to_vec(),
+            batch_sizes: vec![1],
+        }
+    }
+
+    /// The paper's full evaluation grid over the eight zoo networks.
+    pub fn paper_grid() -> SweepSpec {
+        SweepSpec::new(crate::models::zoo::paper_networks())
+    }
+
+    pub fn with_macs(mut self, macs: Vec<usize>) -> SweepSpec {
+        self.mac_budgets = macs;
+        self
+    }
+
+    pub fn with_strategies(mut self, strategies: Vec<Strategy>) -> SweepSpec {
+        self.strategies = strategies;
+        self
+    }
+
+    pub fn with_modes(mut self, modes: Vec<ControllerMode>) -> SweepSpec {
+        self.modes = modes;
+        self
+    }
+
+    pub fn with_batches(mut self, batch_sizes: Vec<usize>) -> SweepSpec {
+        self.batch_sizes = batch_sizes;
+        self
+    }
+
+    /// Number of grid cells this spec expands to.
+    pub fn cell_count(&self) -> usize {
+        self.networks.len()
+            * self.mac_budgets.len()
+            * self.strategies.len()
+            * self.modes.len()
+            * self.batch_sizes.len()
+    }
+
+    /// Every axis non-empty and numerically sane.
+    pub fn validate(&self) -> Result<()> {
+        if self.networks.is_empty() {
+            bail!("sweep spec has no networks");
+        }
+        if self.mac_budgets.is_empty() || self.mac_budgets.contains(&0) {
+            bail!("sweep spec needs at least one MAC budget, all > 0");
+        }
+        if self.strategies.is_empty() {
+            bail!("sweep spec has no strategies");
+        }
+        if self.modes.is_empty() {
+            bail!("sweep spec has no controller modes");
+        }
+        if self.batch_sizes.is_empty() || self.batch_sizes.contains(&0) {
+            bail!("sweep spec needs at least one batch size, all > 0");
+        }
+        Ok(())
+    }
+
+    /// Build a spec from a JSON request object (the `serve` protocol's
+    /// `{"cmd":"sweep", ...}` body). Every axis is optional and defaults
+    /// to the paper grid; network names resolve through the zoo.
+    ///
+    /// Recognized axis keys: `networks` (names), `macs`, `strategies`,
+    /// `modes`, `batches` (plus the protocol's `cmd` and `workers`).
+    /// Unknown keys are rejected so a typo'd axis fails loudly instead of
+    /// silently sweeping its full default.
+    pub fn from_json(msg: &Json) -> Result<SweepSpec> {
+        const KNOWN: [&str; 7] =
+            ["cmd", "networks", "macs", "strategies", "modes", "batches", "workers"];
+        if let Json::Obj(map) = msg {
+            for key in map.keys() {
+                if !KNOWN.contains(&key.as_str()) {
+                    bail!("unknown sweep key '{key}' (known: {KNOWN:?})");
+                }
+            }
+        }
+        let mut spec = SweepSpec::paper_grid();
+        if let Some(nets) = msg.get("networks") {
+            let names = nets.as_arr().ok_or_else(|| anyhow!("'networks' must be an array"))?;
+            spec.networks = names
+                .iter()
+                .map(|n| {
+                    let name =
+                        n.as_str().ok_or_else(|| anyhow!("'networks' entries must be strings"))?;
+                    crate::models::zoo::by_name(name)
+                        .ok_or_else(|| anyhow!("unknown network '{name}' — see `psim networks`"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(macs) = msg.get("macs") {
+            let arr = macs.as_arr().ok_or_else(|| anyhow!("'macs' must be an array"))?;
+            spec.mac_budgets = arr
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| anyhow!("'macs' entries must be non-negative integers"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(strats) = msg.get("strategies") {
+            let arr = strats.as_arr().ok_or_else(|| anyhow!("'strategies' must be an array"))?;
+            spec.strategies = arr
+                .iter()
+                .map(|v| {
+                    let s =
+                        v.as_str().ok_or_else(|| anyhow!("'strategies' entries must be strings"))?;
+                    crate::config::accel::parse_strategy(s)
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(modes) = msg.get("modes") {
+            let arr = modes.as_arr().ok_or_else(|| anyhow!("'modes' must be an array"))?;
+            spec.modes = arr
+                .iter()
+                .map(|v| {
+                    let s = v.as_str().ok_or_else(|| anyhow!("'modes' entries must be strings"))?;
+                    crate::config::accel::parse_mode(s)
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(batches) = msg.get("batches") {
+            let arr = batches.as_arr().ok_or_else(|| anyhow!("'batches' must be an array"))?;
+            spec.batch_sizes = arr
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| anyhow!("'batches' entries must be positive integers"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+impl Default for SweepSpec {
+    fn default() -> SweepSpec {
+        SweepSpec::paper_grid()
+    }
+}
+
+/// One evaluated grid cell: a whole network under one scenario.
+#[derive(Clone, Debug)]
+pub struct GridCell {
+    pub network: String,
+    pub p_macs: usize,
+    pub strategy: Strategy,
+    pub mode: ControllerMode,
+    pub batch: usize,
+    /// Input-activation traffic, activations (eq. 2 summed over layers).
+    pub input: f64,
+    /// Output/psum traffic, activations (eq. 3 or active variant, summed).
+    pub output: f64,
+    /// Conv weight parameters of the network (amortize across `batch`).
+    pub weights: u64,
+    /// Table III floor for this network, activations.
+    pub min_bw: f64,
+}
+
+impl GridCell {
+    /// Total activation traffic (the paper's tabulated quantity, raw
+    /// activations). Exactly equals
+    /// [`network_bandwidth`](super::sweep::network_bandwidth)`.total()`
+    /// for the same scenario — all terms are exact integer-valued `f64`s.
+    pub fn total(&self) -> f64 {
+        self.input + self.output
+    }
+
+    /// Weight traffic per image at this cell's batch size.
+    pub fn weights_per_image(&self) -> f64 {
+        self.weights as f64 / self.batch as f64
+    }
+
+    /// Activations + amortized weights per image (the extension metric).
+    pub fn per_image_traffic(&self) -> f64 {
+        super::extensions::per_image_traffic(self.total(), self.weights, self.batch)
+    }
+
+    /// Human/filterable cell key, e.g. `AlexNet|P2048|optimal|active|b1`.
+    pub fn key(&self) -> String {
+        format!(
+            "{}|P{}|{}|{}|b{}",
+            self.network,
+            self.p_macs,
+            self.strategy.slug(),
+            self.mode.label(),
+            self.batch
+        )
+    }
+
+    /// Stable JSON encoding (object keys sort alphabetically, numbers are
+    /// exact integers where integral) — one JSONL record.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("network", Json::Str(self.network.clone())),
+            ("p_macs", Json::Num(self.p_macs as f64)),
+            ("strategy", Json::Str(self.strategy.slug().to_string())),
+            ("mode", Json::Str(self.mode.label().to_string())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("input", Json::Num(self.input)),
+            ("output", Json::Num(self.output)),
+            ("total", Json::Num(self.total())),
+            ("total_mact", Json::Num(self.total() / 1.0e6)),
+            ("weights_per_image", Json::Num(self.weights_per_image())),
+            ("min_bw", Json::Num(self.min_bw)),
+        ])
+    }
+}
+
+/// The outcome of running a [`SweepSpec`]: cells in spec enumeration order
+/// (networks, then budgets, then strategies, then modes, then batches).
+#[derive(Clone, Debug)]
+pub struct GridResult {
+    pub cells: Vec<GridCell>,
+}
+
+impl GridResult {
+    /// Look up one cell.
+    pub fn find(
+        &self,
+        network: &str,
+        p_macs: usize,
+        strategy: Strategy,
+        mode: ControllerMode,
+        batch: usize,
+    ) -> Option<&GridCell> {
+        self.cells.iter().find(|c| {
+            c.network == network
+                && c.p_macs == p_macs
+                && c.strategy == strategy
+                && c.mode == mode
+                && c.batch == batch
+        })
+    }
+
+    /// The whole grid as JSON-lines text (one object per cell, trailing
+    /// newline). Byte-identical across worker counts.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for cell in &self.cells {
+            out.push_str(&cell.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+}
+
+/// Per-layer outcome, memoized by shape.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerEval {
+    pub partition: Partition,
+    pub bandwidth: Bandwidth,
+}
+
+/// Memo key: the layer's *shape* (name erased) plus the scenario knobs
+/// that determine its partition and bandwidth.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct ShapeKey {
+    wi: usize,
+    hi: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    p_macs: usize,
+    strategy: Strategy,
+    mode: ControllerMode,
+}
+
+impl ShapeKey {
+    fn new(layer: &ConvLayer, p_macs: usize, strategy: Strategy, mode: ControllerMode) -> ShapeKey {
+        ShapeKey {
+            wi: layer.wi,
+            hi: layer.hi,
+            m: layer.m,
+            n: layer.n,
+            k: layer.k,
+            stride: layer.stride,
+            pad: layer.pad,
+            groups: layer.groups,
+            p_macs,
+            strategy,
+            mode,
+        }
+    }
+}
+
+/// Upper bound on memoized layer evaluations. Long-lived engines (the
+/// `serve` process) see arbitrary client-chosen `p_macs` values, so the
+/// cache is epoch-flushed at this size instead of growing without limit.
+/// Results are unaffected — a flush only costs recomputation.
+const CACHE_CAP: usize = 1 << 18;
+
+/// The sweep executor: a shared shape-memo cache plus a parallel runner.
+///
+/// Create one engine and reuse it across runs — the layer cache persists,
+/// so later (overlapping) specs get answered mostly from memory (bounded
+/// by `CACHE_CAP` entries). The engine is `Sync`; `run` fans cells out
+/// over [`parallel_map`] worker threads that share the cache.
+pub struct GridEngine {
+    cache: Mutex<HashMap<ShapeKey, LayerEval>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl GridEngine {
+    pub fn new() -> GridEngine {
+        GridEngine {
+            cache: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Evaluate one layer under one scenario, through the shape cache.
+    ///
+    /// Two layers with identical shapes (any names, any networks) share
+    /// one computation. A racing double-compute stores the same value, so
+    /// results never depend on thread interleaving.
+    pub fn layer_eval(
+        &self,
+        layer: &ConvLayer,
+        p_macs: usize,
+        strategy: Strategy,
+        mode: ControllerMode,
+    ) -> LayerEval {
+        let key = ShapeKey::new(layer, p_macs, strategy, mode);
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *hit;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let partition = partition_layer(layer, p_macs, strategy, mode);
+        let bandwidth = layer_bandwidth(layer, partition.m, partition.n, mode);
+        let eval = LayerEval { partition, bandwidth };
+        let mut cache = self.cache.lock().unwrap();
+        if cache.len() >= CACHE_CAP {
+            cache.clear();
+        }
+        cache.insert(key, eval);
+        eval
+    }
+
+    /// Evaluate one grid cell (a whole network under one scenario).
+    pub fn cell(
+        &self,
+        net: &Network,
+        p_macs: usize,
+        strategy: Strategy,
+        mode: ControllerMode,
+        batch: usize,
+    ) -> GridCell {
+        let mut input = 0.0;
+        let mut output = 0.0;
+        for layer in &net.layers {
+            let eval = self.layer_eval(layer, p_macs, strategy, mode);
+            input += eval.bandwidth.input;
+            output += eval.bandwidth.output;
+        }
+        GridCell {
+            network: net.name.clone(),
+            p_macs,
+            strategy,
+            mode,
+            batch,
+            input,
+            output,
+            weights: net.total_weights(),
+            min_bw: net.min_bandwidth() as f64,
+        }
+    }
+
+    /// Run a spec with the default worker count.
+    pub fn run(&self, spec: &SweepSpec) -> GridResult {
+        self.run_with_workers(spec, default_workers())
+    }
+
+    /// Run a spec over `workers` threads. Output order and content are
+    /// independent of `workers`.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the spec fails [`SweepSpec::validate`] (empty axis, zero
+    /// MAC budget or batch size) — invalid specs would otherwise produce
+    /// division-by-zero artifacts in the JSONL stream.
+    pub fn run_with_workers(&self, spec: &SweepSpec, workers: usize) -> GridResult {
+        spec.validate().expect("invalid sweep spec");
+        let mut jobs: Vec<(usize, usize, Strategy, ControllerMode, usize)> = Vec::new();
+        for ni in 0..spec.networks.len() {
+            for &p in &spec.mac_budgets {
+                for &s in &spec.strategies {
+                    for &mode in &spec.modes {
+                        for &b in &spec.batch_sizes {
+                            jobs.push((ni, p, s, mode, b));
+                        }
+                    }
+                }
+            }
+        }
+        let cells = parallel_map(&jobs, workers.max(1), |&(ni, p, s, mode, b)| {
+            self.cell(&spec.networks[ni], p, s, mode, b)
+        });
+        GridResult { cells }
+    }
+
+    /// `(hits, misses)` of the layer-shape cache since construction.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for GridEngine {
+    fn default() -> GridEngine {
+        GridEngine::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::sweep::network_bandwidth;
+    use crate::models::zoo;
+
+    #[test]
+    fn cell_matches_direct_computation() {
+        let engine = GridEngine::new();
+        let net = zoo::alexnet();
+        for &p in &[512usize, 2048] {
+            for mode in ControllerMode::ALL {
+                let cell = engine.cell(&net, p, Strategy::Optimal, mode, 1);
+                let direct = network_bandwidth(&net, p, Strategy::Optimal, mode);
+                assert_eq!(cell.total(), direct.total());
+                let di: f64 = direct.layers.iter().map(|l| l.bandwidth.input).sum();
+                assert_eq!(cell.input, di);
+            }
+        }
+    }
+
+    #[test]
+    fn shape_cache_collapses_repeats() {
+        let engine = GridEngine::new();
+        let spec = SweepSpec::new(vec![zoo::vgg16()])
+            .with_macs(vec![2048])
+            .with_strategies(vec![Strategy::Optimal])
+            .with_modes(vec![ControllerMode::Passive]);
+        let grid = engine.run_with_workers(&spec, 1);
+        assert_eq!(grid.len(), 1);
+        let (_, misses) = engine.cache_stats();
+        // VGG-16 has 13 conv layers but only 9 distinct shapes.
+        assert!(
+            misses < zoo::vgg16().layers.len() as u64,
+            "no shape sharing: {misses} misses"
+        );
+        // A second identical run is answered entirely from cache.
+        engine.run_with_workers(&spec, 1);
+        let (hits2, misses2) = engine.cache_stats();
+        assert_eq!(misses2, misses);
+        assert!(hits2 > 0);
+    }
+
+    #[test]
+    fn batch_amortizes_weights_only() {
+        let engine = GridEngine::new();
+        let net = zoo::alexnet();
+        let b1 = engine.cell(&net, 2048, Strategy::Optimal, ControllerMode::Passive, 1);
+        let b8 = engine.cell(&net, 2048, Strategy::Optimal, ControllerMode::Passive, 8);
+        assert_eq!(b1.total(), b8.total());
+        assert_eq!(b1.weights_per_image(), 8.0 * b8.weights_per_image());
+        assert!(b8.per_image_traffic() < b1.per_image_traffic());
+    }
+
+    #[test]
+    fn run_orders_cells_deterministically() {
+        let spec = SweepSpec::new(vec![zoo::alexnet()])
+            .with_macs(vec![512, 2048])
+            .with_strategies(vec![Strategy::MaxInput, Strategy::Optimal])
+            .with_modes(vec![ControllerMode::Passive]);
+        let grid = GridEngine::new().run_with_workers(&spec, 4);
+        let keys: Vec<String> = grid.cells.iter().map(|c| c.key()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "AlexNet|P512|max-input|passive|b1",
+                "AlexNet|P512|optimal|passive|b1",
+                "AlexNet|P2048|max-input|passive|b1",
+                "AlexNet|P2048|optimal|passive|b1",
+            ]
+        );
+        let find = |p| grid.find("AlexNet", p, Strategy::Optimal, ControllerMode::Passive, 1);
+        assert!(find(2048).is_some());
+        assert!(find(4096).is_none());
+    }
+
+    #[test]
+    fn spec_from_json_defaults_and_overrides() {
+        let msg = Json::parse(
+            r#"{"cmd":"sweep","networks":["AlexNet","resnet18"],"macs":[512,1024],
+                "strategies":["optimal","max-input"],"modes":["active"],"batches":[1,8]}"#,
+        )
+        .unwrap();
+        let spec = SweepSpec::from_json(&msg).unwrap();
+        assert_eq!(spec.networks.len(), 2);
+        assert_eq!(spec.networks[1].name, "ResNet-18");
+        assert_eq!(spec.mac_budgets, vec![512, 1024]);
+        assert_eq!(spec.strategies, vec![Strategy::Optimal, Strategy::MaxInput]);
+        assert_eq!(spec.modes, vec![ControllerMode::Active]);
+        assert_eq!(spec.batch_sizes, vec![1, 8]);
+        assert_eq!(spec.cell_count(), 2 * 2 * 2 * 2);
+
+        let defaults = SweepSpec::from_json(&Json::parse(r#"{"cmd":"sweep"}"#).unwrap()).unwrap();
+        assert_eq!(defaults.cell_count(), 8 * 6 * 4 * 2);
+    }
+
+    #[test]
+    fn spec_from_json_rejects_bad_input() {
+        for bad in [
+            r#"{"networks":["NoSuchNet"]}"#,
+            r#"{"macs":[0]}"#,
+            r#"{"macs":[]}"#,
+            r#"{"strategies":["voodoo"]}"#,
+            r#"{"modes":["quantum"]}"#,
+            r#"{"batches":[0]}"#,
+            r#"{"networks":"AlexNet"}"#,
+            r#"{"mac":[512]}"#,
+            r#"{"cmd":"sweep","strategy":["optimal"]}"#,
+        ] {
+            let msg = Json::parse(bad).unwrap();
+            assert!(SweepSpec::from_json(&msg).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid sweep spec")]
+    fn run_rejects_invalid_spec() {
+        let spec = SweepSpec::new(vec![zoo::alexnet()]).with_batches(vec![0]);
+        GridEngine::new().run_with_workers(&spec, 1);
+    }
+
+    #[test]
+    fn jsonl_is_stable_and_parseable() {
+        let spec = SweepSpec::new(vec![zoo::alexnet()])
+            .with_macs(vec![512])
+            .with_strategies(vec![Strategy::Optimal])
+            .with_modes(vec![ControllerMode::Passive]);
+        let engine = GridEngine::new();
+        let a = engine.run_with_workers(&spec, 1).to_jsonl();
+        let b = engine.run_with_workers(&spec, 3).to_jsonl();
+        assert_eq!(a, b);
+        for line in a.lines() {
+            let v = Json::parse(line).unwrap();
+            assert!(v.get("network").is_some());
+            assert!(v.get("total").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+}

@@ -9,6 +9,10 @@
 //! * [`partition`] — the four partitioning strategies of Table I.
 //! * [`optimizer`] — eq. (7) closed form + the divisor-constrained search.
 //! * [`sweep`] — network-level aggregation over MAC budgets/strategies.
+//! * [`grid`] — the unified scenario-sweep engine: declarative
+//!   [`grid::SweepSpec`] grids executed in parallel with per-shape
+//!   memoization, streamed as deterministic JSONL. Every table/figure
+//!   renderer and the `sweep` CLI/server command run on it.
 //! * [`extensions`] — beyond the paper: fusion bound, weight traffic,
 //!   batch amortization.
 //! * [`spatial`] — beyond the paper: spatial (row-stripe) tiling with
@@ -17,6 +21,7 @@
 
 pub mod bandwidth;
 pub mod extensions;
+pub mod grid;
 pub mod optimizer;
 pub mod paper;
 pub mod partition;
@@ -24,5 +29,6 @@ pub mod spatial;
 pub mod sweep;
 
 pub use bandwidth::{layer_bandwidth, Bandwidth, ControllerMode};
+pub use grid::{GridCell, GridEngine, GridResult, SweepSpec};
 pub use partition::{partition_layer, Partition, Strategy};
 pub use sweep::{network_bandwidth, NetworkReport};

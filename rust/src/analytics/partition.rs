@@ -54,6 +54,19 @@ impl Strategy {
             Strategy::OptimalSearch => "Search",
         }
     }
+
+    /// Machine-friendly identifier that round-trips through
+    /// [`crate::config::accel::parse_strategy`] — used by the sweep
+    /// engine's JSONL output and the `serve` protocol.
+    pub fn slug(&self) -> &'static str {
+        match self {
+            Strategy::MaxInput => "max-input",
+            Strategy::MaxOutput => "max-output",
+            Strategy::EqualMacs => "equal-macs",
+            Strategy::Optimal => "optimal",
+            Strategy::OptimalSearch => "search",
+        }
+    }
 }
 
 /// Largest divisor of `x` that is `<= cap` (falls back to 1).
@@ -148,6 +161,19 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn slugs_round_trip_through_parser() {
+        for s in [
+            Strategy::MaxInput,
+            Strategy::MaxOutput,
+            Strategy::EqualMacs,
+            Strategy::Optimal,
+            Strategy::OptimalSearch,
+        ] {
+            assert_eq!(crate::config::accel::parse_strategy(s.slug()).unwrap(), s);
         }
     }
 

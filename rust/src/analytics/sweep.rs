@@ -44,6 +44,18 @@ impl NetworkReport {
 }
 
 /// Partition every layer of `net` and report the summed bandwidth.
+///
+/// ```
+/// use psim::analytics::sweep::network_bandwidth;
+/// use psim::analytics::{ControllerMode, Strategy};
+/// use psim::models::zoo;
+///
+/// let net = zoo::alexnet();
+/// let r = network_bandwidth(&net, 2048, Strategy::Optimal, ControllerMode::Passive);
+/// assert_eq!(r.layers.len(), 5);
+/// // Partitioned traffic can never beat the read-once/write-once floor.
+/// assert!(r.total() >= net.min_bandwidth() as f64);
+/// ```
 pub fn network_bandwidth(
     net: &Network,
     p_macs: usize,

@@ -2,9 +2,10 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::analytics::bandwidth::{layer_bandwidth, ControllerMode};
+use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::grid::GridEngine;
 use crate::analytics::optimizer;
-use crate::analytics::partition::{partition_layer, Strategy};
+use crate::analytics::partition::Strategy;
 use crate::cli::args::Args;
 use crate::config::accel::{parse_mode, parse_strategy};
 use crate::models::zoo;
@@ -59,10 +60,13 @@ pub fn analyze(args: &Args) -> Result<i32> {
     let mut t = Table::new(vec![
         "layer", "shape", "m", "n", "m* (eq.7)", "MAC util", "B_i (M)", "B_o (M)", "B (M)",
     ]);
+    // Per-layer rows come from the sweep engine's memoized evaluator, so
+    // repeated shapes (ResNet blocks, VGG stacks) are computed once.
+    let engine = GridEngine::new();
     let mut total = 0.0;
     for layer in &net.layers {
-        let part = partition_layer(layer, p_macs, strategy, mode);
-        let bw = layer_bandwidth(layer, part.m, part.n, mode);
+        let eval = engine.layer_eval(layer, p_macs, strategy, mode);
+        let (part, bw) = (eval.partition, eval.bandwidth);
         let m_star = optimizer::optimal_m_real(layer, p_macs, mode);
         total += bw.total();
         t.row(vec![

@@ -4,4 +4,5 @@ pub mod analyze;
 pub mod infer;
 pub mod serve;
 pub mod simulate;
+pub mod sweep;
 pub mod tables;

@@ -1,10 +1,21 @@
-//! `serve` / `client`: a TCP JSON-lines inference server + load generator.
+//! `serve` / `client`: a TCP JSON-lines server + load generator.
+//!
+//! The server answers both functional inference and analytical
+//! design-space queries on one connection, so a deployed instance can
+//! serve traffic and explore accelerator configurations side by side.
+//! When the PJRT artifacts are absent the server starts in
+//! *analytics-only* mode: sweeps work, inference requests return an error.
 //!
 //! Protocol (one JSON object per line):
 //!   request : {"image": [3072 floats]}            -> inference
+//!             {"cmd": "sweep", ...}               -> design-space sweep
+//!               optional keys: networks, macs, strategies, modes,
+//!               batches (see analytics::grid::SweepSpec::from_json),
+//!               workers
 //!             {"cmd": "metrics"}                  -> server metrics
 //!             {"cmd": "shutdown"}                 -> stop the server
 //!   response: {"id": n, "class": c, "logits": [...], "latency_us": n}
+//!             {"cells": [...], "count": n, "cache_hits": h, ...}
 //!             {"metrics": "..."} / {"ok": true} / {"error": "..."}
 
 use std::io::{BufRead, BufReader, Write};
@@ -14,12 +25,51 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::analytics::grid::{GridEngine, SweepSpec};
 use crate::cli::args::Args;
+use crate::coordinator::parallel::default_workers;
 use crate::coordinator::{InferenceService, ServiceConfig};
 use crate::runtime::{ArtifactDir, Tensor};
 use crate::util::json::Json;
 
 const IMAGE_ELEMS: usize = 3 * 32 * 32;
+
+/// Largest grid a single sweep request may expand to.
+const MAX_SWEEP_CELLS: usize = 100_000;
+
+/// Shared server state: the (optional) inference stack plus the sweep
+/// engine, whose layer-shape cache warms up across requests.
+pub struct ServerState {
+    service: Option<InferenceService>,
+    /// Why inference is unavailable (the real artifact-load error), so
+    /// per-request failures report the actual cause, not a guess.
+    inference_error: Option<String>,
+    grid: GridEngine,
+}
+
+impl ServerState {
+    /// Build the state, degrading to analytics-only when the artifact
+    /// directory is unavailable.
+    fn start(max_batch: usize) -> Result<ServerState> {
+        let (service, inference_error) = match ArtifactDir::open_default() {
+            Ok(artifacts) => (
+                Some(InferenceService::start(
+                    artifacts,
+                    ServiceConfig { max_batch, ..ServiceConfig::default() },
+                )?),
+                None,
+            ),
+            Err(e) => {
+                eprintln!(
+                    "psim serve: inference disabled ({e:#}); \
+                     serving design-space queries only"
+                );
+                (None, Some(format!("{e:#}")))
+            }
+        };
+        Ok(ServerState { service, inference_error, grid: GridEngine::new() })
+    }
+}
 
 /// `psim serve [--port P] [--max-batch B]`
 pub fn serve(args: &Args) -> Result<i32> {
@@ -27,13 +77,13 @@ pub fn serve(args: &Args) -> Result<i32> {
     let max_batch = args.opt_usize("max-batch")?.unwrap_or(8).clamp(1, 8);
     args.reject_unknown()?;
 
-    let service = Arc::new(InferenceService::start(
-        ArtifactDir::open_default()?,
-        ServiceConfig { max_batch, ..ServiceConfig::default() },
-    )?);
+    let state = Arc::new(ServerState::start(max_batch)?);
     let listener =
         TcpListener::bind(("127.0.0.1", port)).with_context(|| format!("binding port {port}"))?;
-    println!("psim serve: listening on 127.0.0.1:{port} (max_batch={max_batch})");
+    println!(
+        "psim serve: listening on 127.0.0.1:{port} (max_batch={max_batch}, inference {})",
+        if state.service.is_some() { "enabled" } else { "disabled" }
+    );
     let shutdown = Arc::new(AtomicBool::new(false));
 
     std::thread::scope(|scope| -> Result<()> {
@@ -42,25 +92,25 @@ pub fn serve(args: &Args) -> Result<i32> {
                 break;
             }
             let stream = stream?;
-            let service = service.clone();
+            let state = state.clone();
             let shutdown = shutdown.clone();
             scope.spawn(move || {
-                if let Err(e) = handle_conn(stream, &service, &shutdown) {
+                if let Err(e) = handle_conn(stream, &state, &shutdown) {
                     eprintln!("psim serve: connection error: {e:#}");
                 }
             });
         }
         Ok(())
     })?;
-    println!("psim serve: shut down. {}", service.metrics.summary());
+    let (hits, misses) = state.grid.cache_stats();
+    match &state.service {
+        Some(service) => println!("psim serve: shut down. {}", service.metrics.summary()),
+        None => println!("psim serve: shut down. sweep cache {hits} hits / {misses} misses"),
+    }
     Ok(0)
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    service: &InferenceService,
-    shutdown: &AtomicBool,
-) -> Result<()> {
+fn handle_conn(stream: TcpStream, state: &ServerState, shutdown: &AtomicBool) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -69,7 +119,7 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match handle_line(&line, service, shutdown) {
+        let reply = match handle_line(&line, state, shutdown) {
             Ok(j) => j,
             Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
         };
@@ -84,11 +134,20 @@ fn handle_conn(
     Ok(())
 }
 
-fn handle_line(line: &str, service: &InferenceService, shutdown: &AtomicBool) -> Result<Json> {
+/// Dispatch one request line. Public within the crate for direct testing
+/// without a TCP round-trip.
+fn handle_line(line: &str, state: &ServerState, shutdown: &AtomicBool) -> Result<Json> {
     let msg = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
     if let Some(cmd) = msg.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
-            "metrics" => Ok(Json::obj(vec![("metrics", Json::Str(service.metrics.summary()))])),
+            "metrics" => {
+                let summary = match &state.service {
+                    Some(service) => service.metrics.summary(),
+                    None => "inference disabled (analytics-only mode)".to_string(),
+                };
+                Ok(Json::obj(vec![("metrics", Json::Str(summary))]))
+            }
+            "sweep" => handle_sweep(&msg, state),
             "shutdown" => {
                 shutdown.store(true, Ordering::SeqCst);
                 Ok(Json::obj(vec![("ok", Json::Bool(true))]))
@@ -100,13 +159,18 @@ fn handle_line(line: &str, service: &InferenceService, shutdown: &AtomicBool) ->
         .get("image")
         .and_then(|i| i.as_arr())
         .ok_or_else(|| anyhow::anyhow!("missing 'image' array"))?;
+    let service = state.service.as_ref().ok_or_else(|| {
+        anyhow::anyhow!(
+            "inference unavailable: {}",
+            state.inference_error.as_deref().unwrap_or("service not started")
+        )
+    })?;
     anyhow::ensure!(
         image.len() == IMAGE_ELEMS,
         "image must have {IMAGE_ELEMS} floats, got {}",
         image.len()
     );
-    let data: Vec<f32> =
-        image.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
+    let data: Vec<f32> = image.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
     let tensor = Tensor::new(vec![3, 32, 32], data)?;
     let resp = service.infer(tensor)?;
     Ok(Json::obj(vec![
@@ -114,6 +178,37 @@ fn handle_line(line: &str, service: &InferenceService, shutdown: &AtomicBool) ->
         ("class", Json::Num(resp.top_class() as f64)),
         ("logits", Json::Arr(resp.logits.iter().map(|&v| Json::Num(v as f64)).collect())),
         ("latency_us", Json::Num(resp.latency_us as f64)),
+    ]))
+}
+
+/// `{"cmd":"sweep", ...}` — run a design-space grid and return its cells.
+///
+/// `cache_hits`/`cache_misses` are the deltas observed around this
+/// request's run (approximate if sweeps run concurrently, since the
+/// layer cache is shared — that sharing is the point).
+fn handle_sweep(msg: &Json, state: &ServerState) -> Result<Json> {
+    let spec = SweepSpec::from_json(msg)?;
+    anyhow::ensure!(
+        spec.cell_count() <= MAX_SWEEP_CELLS,
+        "sweep expands to {} cells (limit {MAX_SWEEP_CELLS})",
+        spec.cell_count()
+    );
+    let workers = msg
+        .get("workers")
+        .map(|w| {
+            w.as_usize().ok_or_else(|| anyhow::anyhow!("'workers' must be a positive integer"))
+        })
+        .transpose()?
+        .unwrap_or_else(default_workers)
+        .clamp(1, 64);
+    let (hits_before, misses_before) = state.grid.cache_stats();
+    let grid = state.grid.run_with_workers(&spec, workers);
+    let (hits_after, misses_after) = state.grid.cache_stats();
+    Ok(Json::obj(vec![
+        ("cells", Json::Arr(grid.cells.iter().map(|c| c.to_json()).collect())),
+        ("count", Json::Num(grid.len() as f64)),
+        ("cache_hits", Json::Num(hits_after.saturating_sub(hits_before) as f64)),
+        ("cache_misses", Json::Num(misses_after.saturating_sub(misses_before) as f64)),
     ]))
 }
 
@@ -157,4 +252,85 @@ pub fn client(args: &Args) -> Result<i32> {
     reader.read_line(&mut line)?;
     println!("server: {line}");
     Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Analytics-only state (no artifacts needed) for protocol tests.
+    fn analytics_state() -> ServerState {
+        ServerState {
+            service: None,
+            inference_error: Some("no artifacts (test fixture)".to_string()),
+            grid: GridEngine::new(),
+        }
+    }
+
+    #[test]
+    fn sweep_request_returns_cells() {
+        let state = analytics_state();
+        let shutdown = AtomicBool::new(false);
+        let reply = handle_line(
+            r#"{"cmd":"sweep","networks":["AlexNet"],"macs":[512,2048],
+               "strategies":["optimal"],"modes":["passive","active"],"workers":2}"#,
+            &state,
+            &shutdown,
+        )
+        .unwrap();
+        assert_eq!(reply.get("count").unwrap().as_usize(), Some(4));
+        let cells = reply.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].get("network").unwrap().as_str(), Some("AlexNet"));
+        assert!(cells[0].get("total").unwrap().as_f64().unwrap() > 0.0);
+        assert!(!shutdown.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn sweep_cache_warms_across_requests() {
+        let state = analytics_state();
+        let shutdown = AtomicBool::new(false);
+        let req = r#"{"cmd":"sweep","networks":["resnet18"],"macs":[1024],
+                      "strategies":["optimal"],"modes":["passive"]}"#;
+        let first = handle_line(req, &state, &shutdown).unwrap();
+        let second = handle_line(req, &state, &shutdown).unwrap();
+        // Per-request deltas: the first sweep populates the cache, the
+        // second identical one computes nothing new.
+        assert!(first.get("cache_misses").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(second.get("cache_misses").unwrap().as_f64().unwrap(), 0.0);
+        assert!(second.get("cache_hits").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn sweep_request_validation() {
+        let state = analytics_state();
+        let shutdown = AtomicBool::new(false);
+        assert!(handle_line(r#"{"cmd":"sweep","networks":["Nope"]}"#, &state, &shutdown).is_err());
+        assert!(handle_line(r#"{"cmd":"sweep","macs":[0]}"#, &state, &shutdown).is_err());
+        assert!(handle_line(r#"{"cmd":"bogus"}"#, &state, &shutdown).is_err());
+        assert!(handle_line("not json", &state, &shutdown).is_err());
+    }
+
+    #[test]
+    fn inference_without_artifacts_is_a_clean_error() {
+        let state = analytics_state();
+        let shutdown = AtomicBool::new(false);
+        let img = format!(
+            r#"{{"image":[{}]}}"#,
+            std::iter::repeat("0").take(IMAGE_ELEMS).collect::<Vec<_>>().join(",")
+        );
+        let err = handle_line(&img, &state, &shutdown).unwrap_err().to_string();
+        assert!(err.contains("inference unavailable"), "{err}");
+    }
+
+    #[test]
+    fn metrics_and_shutdown_work_without_service() {
+        let state = analytics_state();
+        let shutdown = AtomicBool::new(false);
+        let m = handle_line(r#"{"cmd":"metrics"}"#, &state, &shutdown).unwrap();
+        assert!(m.get("metrics").unwrap().as_str().unwrap().contains("disabled"));
+        let s = handle_line(r#"{"cmd":"shutdown"}"#, &state, &shutdown).unwrap();
+        assert_eq!(s.get("ok"), Some(&Json::Bool(true)));
+        assert!(shutdown.load(Ordering::SeqCst));
+    }
 }

@@ -1,4 +1,7 @@
-//! `simulate` and `sweep`: the event-level simulator from the CLI.
+//! `simulate` and `simsweep`: the event-level simulator from the CLI.
+//! (The analytical grid sweep lives in [`super::sweep`]; `simsweep` is
+//! its simulator-backed counterpart, adding the counters only the
+//! event-level machine can produce — energy, cycles, MAC utilization.)
 
 use anyhow::{anyhow, Result};
 
@@ -9,7 +12,7 @@ use crate::cli::args::Args;
 use crate::config::{AccelConfig, ConfigDoc};
 use crate::coordinator::parallel::{default_workers, parallel_map};
 use crate::models::zoo;
-use crate::sim::scheduler::{simulate_layer, simulate_network};
+use crate::sim::scheduler::{simulate_layer, simulate_network, SimConfig};
 use crate::util::tablefmt::{mact, pct, Table};
 
 use super::analyze::{mode_from, strategy_from};
@@ -71,10 +74,11 @@ pub fn simulate(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `psim sweep [--networks a,b] [--macs 512,...] [--strategy S] [--mode M]`
+/// `psim simsweep [--networks a,b] [--macs 512,...] [--strategy S]
+/// [--mode M]` — the simulator-backed bulk sweep.
 /// CSV: network,p_macs,mode,strategy,total_mact,input_mact,output_mact,
 ///      energy_mj,cycles,mac_util
-pub fn sweep(args: &Args) -> Result<i32> {
+pub fn simsweep(args: &Args) -> Result<i32> {
     let networks: Vec<String> = match args.opt("networks") {
         Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
         None => zoo::paper_networks().iter().map(|n| n.name.clone()).collect(),
@@ -95,7 +99,7 @@ pub fn sweep(args: &Args) -> Result<i32> {
         }
     }
     let rows = parallel_map(&jobs, default_workers(), |(net, p)| {
-        let cfg = crate::sim::scheduler::SimConfig::new(*p, mode, strategy);
+        let cfg = SimConfig::new(*p, mode, strategy);
         let r = simulate_network(net, &cfg);
         let s = r.stats;
         vec![

@@ -1,0 +1,105 @@
+//! `sweep`: the unified scenario-sweep engine from the CLI — the paper's
+//! full evaluation grid (or any slice of it) as deterministic JSONL.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::analytics::grid::{GridEngine, SweepSpec};
+use crate::cli::args::Args;
+use crate::config::accel::{parse_mode, parse_strategy};
+use crate::coordinator::parallel::default_workers;
+use crate::models::zoo;
+use crate::models::Network;
+
+/// Resolve one `--networks` entry. With `--faithful`, the eight faithful
+/// architectures shadow their paper-profile namesakes (so
+/// `--faithful --networks resnet50` really is grouped ResNeXt-50);
+/// anything else falls back to the general zoo lookup.
+fn resolve_network(name: &str, faithful: bool) -> Result<Network> {
+    if faithful {
+        if let Some(net) = zoo::faithful_by_name(name) {
+            return Ok(net);
+        }
+    }
+    zoo::by_name(name).ok_or_else(|| anyhow!("unknown network '{name}' — see `psim networks`"))
+}
+
+/// `psim sweep [--networks a,b] [--macs 512,...] [--strategies s1,s2]
+/// [--modes passive,active] [--batches 1,8] [--workers N]
+/// [--filter SUBSTR] [--out FILE] [--faithful]`
+///
+/// Emits one JSON object per grid cell (JSONL) on stdout (or `--out`),
+/// byte-identical for any `--workers` value; a run summary goes to stderr
+/// so stdout stays pipeable.
+pub fn sweep(args: &Args) -> Result<i32> {
+    let faithful = args.flag("faithful");
+    let networks = match args.opt("networks") {
+        Some(list) => list
+            .split(',')
+            .map(|raw| resolve_network(raw.trim(), faithful))
+            .collect::<Result<Vec<_>>>()?,
+        None => {
+            if faithful {
+                zoo::faithful_networks()
+            } else {
+                zoo::paper_networks()
+            }
+        }
+    };
+    let mut spec = SweepSpec::new(networks);
+    if let Some(macs) = args.opt_usize_list("macs")? {
+        spec.mac_budgets = macs;
+    }
+    if let Some(list) = args.opt("strategies").or_else(|| args.opt("strategy")) {
+        spec.strategies =
+            list.split(',').map(|s| parse_strategy(s.trim())).collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(list) = args.opt("modes").or_else(|| args.opt("mode")) {
+        spec.modes = list.split(',').map(|s| parse_mode(s.trim())).collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(batches) = args.opt_usize_list("batches")? {
+        spec.batch_sizes = batches;
+    }
+    let workers = args.opt_usize("workers")?.unwrap_or_else(default_workers).max(1);
+    let filter = args.opt("filter").map(|f| f.to_ascii_lowercase());
+    let out = args.opt("out").map(std::path::PathBuf::from);
+    args.reject_unknown()?;
+    spec.validate()?;
+
+    let engine = GridEngine::new();
+    let t0 = Instant::now();
+    let grid = engine.run_with_workers(&spec, workers);
+    let elapsed = t0.elapsed();
+
+    let mut jsonl = String::new();
+    let mut kept = 0usize;
+    for cell in &grid.cells {
+        let keep = match &filter {
+            Some(f) => cell.key().to_ascii_lowercase().contains(f.as_str()),
+            None => true,
+        };
+        if keep {
+            jsonl.push_str(&cell.to_json().to_string());
+            jsonl.push('\n');
+            kept += 1;
+        }
+    }
+
+    match &out {
+        Some(path) => {
+            std::fs::write(path, &jsonl)
+                .with_context(|| format!("writing sweep output to {}", path.display()))?;
+        }
+        None => print!("{jsonl}"),
+    }
+    let (hits, misses) = engine.cache_stats();
+    eprintln!(
+        "sweep: {} cells ({kept} emitted{}) in {:.3}s on {workers} workers; \
+         layer cache {hits} hits / {misses} misses",
+        grid.len(),
+        out.as_ref().map(|p| format!(" -> {}", p.display())).unwrap_or_default(),
+        elapsed.as_secs_f64(),
+    );
+    Ok(0)
+}

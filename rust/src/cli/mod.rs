@@ -36,14 +36,24 @@ Exploration:
   simulate            run the event-level simulator, cross-check analytics
      options: --network NAME [--macs P] [--strategy S] [--mode M]
               [--config FILE] [--trace]
-  sweep               network x MAC-budget sweep to CSV
+  sweep               unified design-space sweep engine -> JSONL
+                      (default: the full paper grid, 8 networks x 6 MAC
+                      budgets x 4 strategies x 2 controller modes)
+     options: [--networks a,b,c] [--macs 512,1024,...]
+              [--strategies s1,s2] [--modes passive,active]
+              [--batches 1,8] [--workers N] [--filter SUBSTR]
+              [--out FILE] [--faithful]
+  simsweep            simulator-backed bulk sweep to CSV (adds energy,
+                      cycles and MAC utilization per cell)
      options: [--networks a,b,c] [--macs 512,1024,...] [--strategy S]
               [--mode M]
 
 Functional stack (PJRT over artifacts/; run `make artifacts` first):
   infer               batched PsimNet inference benchmark
      options: [--requests N] [--concurrency C] [--max-batch B] [--seed S]
-  serve               TCP JSON-lines inference server
+  serve               TCP JSON-lines server: inference + design-space
+                      queries ({\"cmd\":\"sweep\", ...}); runs without
+                      artifacts in analytics-only mode
      options: [--port P] [--max-batch B]
   client              load generator against a running server
      options: [--port P] [--requests N]
@@ -67,7 +77,8 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "networks" => commands::analyze::networks(&args),
         "analyze" => commands::analyze::analyze(&args),
         "simulate" => commands::simulate::simulate(&args),
-        "sweep" => commands::simulate::sweep(&args),
+        "simsweep" => commands::simulate::simsweep(&args),
+        "sweep" => commands::sweep::sweep(&args),
         "infer" => commands::infer::infer(&args),
         "serve" => commands::serve::serve(&args),
         "client" => commands::serve::client(&args),
@@ -132,6 +143,87 @@ mod tests {
             run(&sv(&["sweep", "--networks", "AlexNet", "--macs", "512,2048"])).unwrap(),
             0
         );
+    }
+
+    #[test]
+    fn simsweep_runs() {
+        assert_eq!(
+            run(&sv(&["simsweep", "--networks", "AlexNet", "--macs", "512,2048"])).unwrap(),
+            0
+        );
+        assert!(run(&sv(&["simsweep", "--networks", "NoSuchNet"])).is_err());
+    }
+
+    #[test]
+    fn sweep_grid_flags() {
+        assert_eq!(
+            run(&sv(&[
+                "sweep",
+                "--networks",
+                "AlexNet",
+                "--macs",
+                "512",
+                "--strategies",
+                "optimal,max-input",
+                "--modes",
+                "active",
+                "--batches",
+                "1,8",
+                "--workers",
+                "2",
+                "--filter",
+                "optimal",
+            ]))
+            .unwrap(),
+            0
+        );
+        assert!(run(&sv(&["sweep", "--strategies", "voodoo"])).is_err());
+        assert!(run(&sv(&["sweep", "--networks", "NoSuchNet"])).is_err());
+        assert!(run(&sv(&["sweep", "--macs", "0"])).is_err());
+        // --faithful composes with --networks (resolves the faithful zoo)
+        assert_eq!(
+            run(&sv(&[
+                "sweep",
+                "--faithful",
+                "--networks",
+                "resnet50,MNASNet",
+                "--macs",
+                "512",
+                "--strategies",
+                "optimal",
+                "--modes",
+                "passive",
+            ]))
+            .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn sweep_out_writes_jsonl() {
+        let path = std::env::temp_dir().join("psim_cli_sweep_out.jsonl");
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(
+            run(&sv(&[
+                "sweep",
+                "--networks",
+                "AlexNet",
+                "--macs",
+                "512,2048",
+                "--strategies",
+                "optimal",
+                "--modes",
+                "passive",
+                "--out",
+                path.to_str().unwrap(),
+            ]))
+            .unwrap(),
+            0
+        );
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("\"network\":\"AlexNet\""));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //!
 //! * [`models`] — conv-layer descriptors + the eight evaluated CNNs.
 //! * [`analytics`] — the paper's first-order bandwidth model: partitioning
-//!   strategies (eqs. 1–7), active-memory-controller model, sweeps.
+//!   strategies (eqs. 1–7), active-memory-controller model, sweeps, and
+//!   the unified [`analytics::grid`] scenario-sweep engine (declarative
+//!   grids, parallel execution, per-shape memoization, JSONL output).
 //! * [`sim`] — an event-level accelerator simulator (MAC array, SRAM,
 //!   AXI-like interconnect with sideband commands, passive/active memory
 //!   controller) that validates the analytical model transaction-by-

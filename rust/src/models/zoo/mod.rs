@@ -99,14 +99,26 @@ fn relabel(mut net: Network, name: &str) -> Network {
     net
 }
 
+/// Canonical form for name matching: lowercase, punctuation stripped.
+fn normalize(name: &str) -> String {
+    name.to_ascii_lowercase().replace(['-', '_', '.'], "")
+}
+
 /// Look up a network by (case-insensitive) name — paper profile first,
 /// then the extension networks.
 pub fn by_name(name: &str) -> Option<Network> {
-    let key = name.to_ascii_lowercase().replace(['-', '_', '.'], "");
+    let key = normalize(name);
     paper_networks()
         .into_iter()
         .chain(extra_networks())
-        .find(|n| n.name.to_ascii_lowercase().replace(['-', '_', '.'], "") == key)
+        .find(|n| normalize(&n.name) == key)
+}
+
+/// Look up among the *architecturally faithful* eight (same matching
+/// rules as [`by_name`]); `None` if the name isn't one of them.
+pub fn faithful_by_name(name: &str) -> Option<Network> {
+    let key = normalize(name);
+    faithful_networks().into_iter().find(|n| normalize(&n.name) == key)
 }
 
 #[cfg(test)]
@@ -139,6 +151,16 @@ mod tests {
         assert!(by_name("resnet34").is_some(), "extras are searchable");
         assert!(by_name("SqueezeNet1.1").is_some());
         assert!(by_name("resnet101").is_none());
+    }
+
+    #[test]
+    fn faithful_lookup_shadows_paper_profile() {
+        // Faithful ResNet-50 is grouped ResNeXt; the paper profile erases
+        // groups. The faithful lookup must return the grouped one.
+        let f = faithful_by_name("resnet50").unwrap();
+        assert!(f.layers.iter().any(|l| l.groups > 1));
+        assert!(faithful_by_name("resnet34").is_none(), "extras are not in the faithful eight");
+        assert!(faithful_by_name("VGG-16").unwrap().layers.len() == 13, "true config D");
     }
 
     #[test]

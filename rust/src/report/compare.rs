@@ -2,9 +2,9 @@
 //! published numbers — the data behind `psim validate` and EXPERIMENTS.md.
 
 use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::grid::{GridEngine, SweepSpec};
 use crate::analytics::paper;
 use crate::analytics::partition::Strategy;
-use crate::analytics::sweep::network_bandwidth;
 use crate::models::zoo;
 use crate::util::mathx::rel_diff;
 use crate::util::tablefmt::Table;
@@ -26,9 +26,28 @@ impl Cell {
 }
 
 /// Compare every cell of Tables I, II and III.
+///
+/// Both table grids run through one [`GridEngine`], so the overlapping
+/// scenarios (Table II's passive/optimal cells at the Table I budgets)
+/// and every repeated conv shape are computed once.
 pub fn compare_all() -> Vec<Cell> {
+    let nets = zoo::paper_networks();
+    let engine = GridEngine::new();
+    let grid1 = engine.run(
+        &SweepSpec::new(nets.clone())
+            .with_macs(paper::TABLE1_MACS.to_vec())
+            .with_strategies(Strategy::TABLE1.to_vec())
+            .with_modes(vec![ControllerMode::Passive]),
+    );
+    let grid2 = engine.run(
+        &SweepSpec::new(nets.clone())
+            .with_macs(paper::TABLE2_MACS.to_vec())
+            .with_strategies(vec![Strategy::Optimal])
+            .with_modes(ControllerMode::ALL.to_vec()),
+    );
+
     let mut cells = Vec::new();
-    for net in zoo::paper_networks() {
+    for net in &nets {
         // Table III
         cells.push(Cell {
             table: "III",
@@ -41,14 +60,14 @@ pub fn compare_all() -> Vec<Cell> {
         for &p in &paper::TABLE1_MACS {
             let row = paper::table1(&net.name, p).unwrap();
             for (si, s) in Strategy::TABLE1.iter().enumerate() {
-                let ours =
-                    network_bandwidth(&net, p, *s, ControllerMode::Passive).total() / 1e6;
+                let cell =
+                    grid1.find(&net.name, p, *s, ControllerMode::Passive, 1).expect("grid cell");
                 cells.push(Cell {
                     table: "I",
                     network: net.name.clone(),
                     setting: format!("P={p} {}", s.label()),
                     paper: row[si],
-                    ours,
+                    ours: cell.total() / 1e6,
                 });
             }
         }
@@ -56,13 +75,14 @@ pub fn compare_all() -> Vec<Cell> {
         for &p in &paper::TABLE2_MACS {
             let (pa, ac) = paper::table2(&net.name, p).unwrap();
             for (mode, val) in [(ControllerMode::Passive, pa), (ControllerMode::Active, ac)] {
-                let ours = network_bandwidth(&net, p, Strategy::Optimal, mode).total() / 1e6;
+                let cell =
+                    grid2.find(&net.name, p, Strategy::Optimal, mode, 1).expect("grid cell");
                 cells.push(Cell {
                     table: "II",
                     network: net.name.clone(),
                     setting: format!("P={p} {}", mode.label()),
                     paper: val,
-                    ours,
+                    ours: cell.total() / 1e6,
                 });
             }
         }

@@ -2,9 +2,9 @@
 //! versus a passive one, per network, over the MAC budget sweep.
 
 use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::grid::{GridEngine, SweepSpec};
 use crate::analytics::paper;
 use crate::analytics::partition::Strategy;
-use crate::analytics::sweep::network_bandwidth;
 use crate::models::zoo;
 use crate::util::tablefmt::Table;
 
@@ -16,18 +16,29 @@ pub struct SavingSeries {
     pub points: Vec<(usize, f64)>,
 }
 
-/// Compute the Fig. 2 series for all eight networks.
+/// Compute the Fig. 2 series for all eight networks (one sweep-engine run
+/// over `TABLE2_MACS x optimal x both modes`).
 pub fn fig2_series() -> Vec<SavingSeries> {
-    zoo::paper_networks()
-        .into_iter()
+    let nets = zoo::paper_networks();
+    let engine = GridEngine::new();
+    let grid = engine.run(
+        &SweepSpec::new(nets.clone())
+            .with_macs(paper::TABLE2_MACS.to_vec())
+            .with_strategies(vec![Strategy::Optimal])
+            .with_modes(ControllerMode::ALL.to_vec()),
+    );
+    nets.iter()
         .map(|net| {
             let points = paper::TABLE2_MACS
                 .iter()
                 .map(|&p| {
-                    let pa =
-                        network_bandwidth(&net, p, Strategy::Optimal, ControllerMode::Passive)
-                            .total();
-                    let ac = network_bandwidth(&net, p, Strategy::Optimal, ControllerMode::Active)
+                    let pa = grid
+                        .find(&net.name, p, Strategy::Optimal, ControllerMode::Passive, 1)
+                        .expect("grid cell")
+                        .total();
+                    let ac = grid
+                        .find(&net.name, p, Strategy::Optimal, ControllerMode::Active, 1)
+                        .expect("grid cell")
                         .total();
                     (p, (pa - ac) / pa * 100.0)
                 })

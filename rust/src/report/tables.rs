@@ -1,11 +1,14 @@
 //! Renderers that regenerate the paper's Tables I–III from the analytical
 //! model. Each returns a [`Table`] so callers choose markdown or CSV.
+//!
+//! Tables I and II are slices of the unified sweep grid: both build a
+//! [`SweepSpec`] and format what [`GridEngine`] returns (parallel workers,
+//! shared layer-shape cache), instead of re-deriving cells locally.
 
 use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::grid::{GridEngine, SweepSpec};
 use crate::analytics::paper;
 use crate::analytics::partition::Strategy;
-use crate::analytics::sweep::network_bandwidth;
-use crate::coordinator::parallel::{default_workers, parallel_map};
 use crate::models::zoo;
 use crate::models::Network;
 use crate::util::tablefmt::{mact, Table};
@@ -19,17 +22,21 @@ pub fn table1_for(nets: &[Network]) -> Table {
         }
     }
     let mut t = Table::new(header);
-    let rows = parallel_map(nets, default_workers(), |net| {
+    let engine = GridEngine::new();
+    let spec = SweepSpec::new(nets.to_vec())
+        .with_macs(paper::TABLE1_MACS.to_vec())
+        .with_strategies(Strategy::TABLE1.to_vec())
+        .with_modes(vec![ControllerMode::Passive]);
+    let grid = engine.run(&spec);
+    for net in nets {
         let mut row = vec![net.name.clone()];
         for p in paper::TABLE1_MACS {
             for s in Strategy::TABLE1 {
-                let r = network_bandwidth(net, p, s, ControllerMode::Passive);
-                row.push(mact(r.total(), 1));
+                let cell =
+                    grid.find(&net.name, p, s, ControllerMode::Passive, 1).expect("grid cell");
+                row.push(mact(cell.total(), 1));
             }
         }
-        row
-    });
-    for row in rows {
         t.row(row);
     }
     t
@@ -49,17 +56,20 @@ pub fn table2_for(nets: &[Network]) -> Table {
         }
     }
     let mut t = Table::new(header);
-    let rows = parallel_map(nets, default_workers(), |net| {
+    let engine = GridEngine::new();
+    let spec = SweepSpec::new(nets.to_vec())
+        .with_macs(paper::TABLE2_MACS.to_vec())
+        .with_strategies(vec![Strategy::Optimal])
+        .with_modes(ControllerMode::ALL.to_vec());
+    let grid = engine.run(&spec);
+    for net in nets {
         let mut row = vec![net.name.clone()];
         for mode in ControllerMode::ALL {
             for p in paper::TABLE2_MACS {
-                let r = network_bandwidth(net, p, Strategy::Optimal, mode);
-                row.push(mact(r.total(), 2));
+                let cell = grid.find(&net.name, p, Strategy::Optimal, mode, 1).expect("grid cell");
+                row.push(mact(cell.total(), 2));
             }
         }
-        row
-    });
-    for row in rows {
         t.row(row);
     }
     t

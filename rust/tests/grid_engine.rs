@@ -1,0 +1,119 @@
+//! Grid-engine contract tests:
+//!
+//! * golden JSONL for AlexNet — hand-computed cell values pinned byte-
+//!   for-byte (eqs. 2–3 evaluated on paper for the MaxInput/MaxOutput
+//!   partitions at P=512);
+//! * memoized grid results equal direct `network_bandwidth` computation
+//!   exactly for every cell of the full paper grid;
+//! * the JSONL stream is byte-identical between `--workers 1` and
+//!   `--workers 8`.
+
+use psim::analytics::bandwidth::ControllerMode;
+use psim::analytics::grid::{GridEngine, SweepSpec};
+use psim::analytics::partition::Strategy;
+use psim::analytics::sweep::network_bandwidth;
+use psim::models::zoo;
+
+/// Hand-verified AlexNet cells at P=512 (budget = P/K² per layer; see the
+/// derivation in the comments of each constant).
+///
+/// MaxInput/passive: per layer (m, n) = conv1 (3,1), conv2 (16,1),
+/// conv3 (48,1), conv4 (48,1), conv5 (32,1); inputs re-read N times,
+/// psum passes 1/4/4/8/8.
+const GOLDEN_512: [&str; 4] = [
+    // MaxInput, passive: input 58 740 736, output 2 925 568
+    r#"{"batch":1,"input":58740736,"min_bw":822784,"mode":"passive","network":"AlexNet","output":2925568,"p_macs":512,"strategy":"max-input","total":61666304,"total_mact":61.666304,"weights_per_image":2468544}"#,
+    // MaxInput, active: psum read-backs absorbed -> output 1 705 280
+    r#"{"batch":1,"input":58740736,"min_bw":822784,"mode":"active","network":"AlexNet","output":1705280,"p_macs":512,"strategy":"max-input","total":60446016,"total_mact":60.446016,"weights_per_image":2468544}"#,
+    // MaxOutput, passive: (m, n) = (1,4)/(1,16)/(1,48)/(1,32)/(1,32);
+    // input 4 093 184, output 98 890 496
+    r#"{"batch":1,"input":4093184,"min_bw":822784,"mode":"passive","network":"AlexNet","output":98890496,"p_macs":512,"strategy":"max-output","total":102983680,"total_mact":102.98368,"weights_per_image":2468544}"#,
+    // MaxOutput, active
+    r#"{"batch":1,"input":4093184,"min_bw":822784,"mode":"active","network":"AlexNet","output":49687744,"p_macs":512,"strategy":"max-output","total":53780928,"total_mact":53.780928,"weights_per_image":2468544}"#,
+];
+
+#[test]
+fn alexnet_jsonl_golden() {
+    let spec = SweepSpec::new(vec![zoo::alexnet()])
+        .with_macs(vec![512])
+        .with_strategies(vec![Strategy::MaxInput, Strategy::MaxOutput])
+        .with_modes(vec![ControllerMode::Passive, ControllerMode::Active])
+        .with_batches(vec![1]);
+    let jsonl = GridEngine::new().run_with_workers(&spec, 1).to_jsonl();
+    let lines: Vec<&str> = jsonl.lines().collect();
+    assert_eq!(lines.len(), 4);
+    for (line, golden) in lines.iter().zip(GOLDEN_512) {
+        assert_eq!(*line, golden);
+    }
+}
+
+#[test]
+fn alexnet_batch_amortization_golden() {
+    // Batch changes only `batch` and `weights_per_image` (2468544 / 8).
+    let spec = SweepSpec::new(vec![zoo::alexnet()])
+        .with_macs(vec![512])
+        .with_strategies(vec![Strategy::MaxInput])
+        .with_modes(vec![ControllerMode::Passive])
+        .with_batches(vec![8]);
+    let jsonl = GridEngine::new().run_with_workers(&spec, 1).to_jsonl();
+    assert_eq!(
+        jsonl.trim_end(),
+        r#"{"batch":8,"input":58740736,"min_bw":822784,"mode":"passive","network":"AlexNet","output":2925568,"p_macs":512,"strategy":"max-input","total":61666304,"total_mact":61.666304,"weights_per_image":308568}"#
+    );
+}
+
+#[test]
+fn alexnet_full_grid_shape() {
+    // Paper-default axes for one network: 6 budgets x 4 strategies x 2
+    // modes = 48 JSONL records, all parseable, totals above the floor.
+    let spec = SweepSpec::new(vec![zoo::alexnet()]);
+    let grid = GridEngine::new().run_with_workers(&spec, 4);
+    assert_eq!(grid.len(), 48);
+    let jsonl = grid.to_jsonl();
+    assert_eq!(jsonl.lines().count(), 48);
+    let floor = zoo::alexnet().min_bandwidth() as f64;
+    for line in jsonl.lines() {
+        let v = psim::util::json::Json::parse(line).expect("valid json");
+        assert_eq!(v.get("network").unwrap().as_str(), Some("AlexNet"));
+        assert!(v.get("total").unwrap().as_f64().unwrap() >= floor - 1e-6);
+    }
+}
+
+#[test]
+fn memoized_grid_equals_direct_computation_everywhere() {
+    // Every cell of the full paper grid (8 networks x 6 budgets x 4
+    // strategies x 2 modes): the cached/shared-shape path must reproduce
+    // the direct, cache-free computation bit-for-bit (all quantities are
+    // exact integer-valued f64 arithmetic).
+    let spec = SweepSpec::paper_grid();
+    let engine = GridEngine::new();
+    let grid = engine.run(&spec);
+    assert_eq!(grid.len(), spec.cell_count());
+    for cell in &grid.cells {
+        let net = spec.networks.iter().find(|n| n.name == cell.network).unwrap();
+        let direct = network_bandwidth(net, cell.p_macs, cell.strategy, cell.mode);
+        assert_eq!(
+            cell.total(),
+            direct.total(),
+            "{}: memoized != direct",
+            cell.key()
+        );
+        let di: f64 = direct.layers.iter().map(|l| l.bandwidth.input).sum();
+        let dout: f64 = direct.layers.iter().map(|l| l.bandwidth.output).sum();
+        assert_eq!(cell.input, di, "{}: input mismatch", cell.key());
+        assert_eq!(cell.output, dout, "{}: output mismatch", cell.key());
+    }
+    // The cache must actually collapse work: far fewer layer evaluations
+    // than cells x layers.
+    let (hits, misses) = engine.cache_stats();
+    assert!(hits > misses, "cache ineffective: {hits} hits / {misses} misses");
+}
+
+#[test]
+fn jsonl_identical_across_worker_counts() {
+    let spec = SweepSpec::paper_grid();
+    let one = GridEngine::new().run_with_workers(&spec, 1).to_jsonl();
+    let eight = GridEngine::new().run_with_workers(&spec, 8).to_jsonl();
+    assert_eq!(one, eight, "sweep output depends on worker count");
+    assert_eq!(one.lines().count(), 384);
+}

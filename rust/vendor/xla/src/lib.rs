@@ -1,0 +1,228 @@
+//! In-tree stand-in for the `xla` PJRT bindings (xla-rs / xla_extension).
+//!
+//! The offline build environment does not ship the real crate, so this stub
+//! provides the exact API surface `psim::runtime` consumes:
+//!
+//! * [`Literal`] — fully functional host-side f32 literals (`vec1`,
+//!   `reshape`, `array_shape`, `to_vec`, `to_tuple`), so tensor round-trip
+//!   conversion and its tests work without any native library.
+//! * [`PjRtClient`] / [`PjRtLoadedExecutable`] / [`HloModuleProto`] — the
+//!   execution path. Constructing a client succeeds (it is just a handle);
+//!   anything that would require the native PJRT runtime (parsing HLO,
+//!   compiling, executing) returns [`Error`] with a clear message.
+//!
+//! Swap the `xla` path dependency in `rust/Cargo.toml` for the real crate
+//! to enable actual execution; no `psim` source changes are needed.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type (message-only, mirrors the real crate's `Error` enough
+/// for `anyhow` conversion via `?`).
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str =
+    "PJRT is unavailable in this build (in-tree xla stub); link the real xla crate to execute";
+
+/// Element types convertible out of a [`Literal`] (f32 only — the only
+/// dtype `psim` uses).
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Repr {
+    Array { dims: Vec<i64>, data: Vec<f32> },
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side XLA literal: an f32 array with a shape, or a tuple of
+/// literals. Fully functional in the stub.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal(Repr);
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal(Repr::Array { dims: vec![data.len() as i64], data: data.to_vec() })
+    }
+
+    /// Tuple literal (what `return_tuple=True` entry points produce).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal(Repr::Tuple(parts))
+    }
+
+    /// Reshape to `dims`; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match &self.0 {
+            Repr::Array { data, .. } => {
+                let want: i64 = dims.iter().product();
+                if want < 0 || want as usize != data.len() {
+                    return Err(Error::new(format!(
+                        "reshape to {:?} ({} elements) from {} elements",
+                        dims,
+                        want,
+                        data.len()
+                    )));
+                }
+                Ok(Literal(Repr::Array { dims: dims.to_vec(), data: data.clone() }))
+            }
+            Repr::Tuple(_) => Err(Error::new("cannot reshape a tuple literal")),
+        }
+    }
+
+    /// Array shape of a non-tuple literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.0 {
+            Repr::Array { dims, .. } => Ok(ArrayShape { dims: dims.clone() }),
+            Repr::Tuple(_) => Err(Error::new("tuple literal has no array shape")),
+        }
+    }
+
+    /// Copy the elements out (f32 only in the stub).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match &self.0 {
+            Repr::Array { data, .. } => Ok(data.iter().map(|&v| T::from_f32(v)).collect()),
+            Repr::Tuple(_) => Err(Error::new("tuple literal has no flat data")),
+        }
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.0 {
+            Repr::Tuple(parts) => Ok(parts.clone()),
+            Repr::Array { .. } => Err(Error::new("literal is not a tuple")),
+        }
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (never constructible in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// XLA computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle. Creation succeeds (cheap handle); compilation and
+/// execution report the stub's unavailability.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (PJRT unavailable)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// Compiled executable handle (never constructible in the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// Device buffer handle (never constructible in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0]), Literal::vec1(&[2.0, 3.0])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.array_shape().is_err());
+        assert!(parts[0].to_tuple().is_err());
+    }
+
+    #[test]
+    fn execution_path_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_ok());
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("stub"));
+        assert!(c.compile(&XlaComputation::from_proto(&HloModuleProto)).is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+        let e = HloModuleProto::from_text_file("x").unwrap_err();
+        assert!(e.to_string().contains("PJRT is unavailable"));
+    }
+}
