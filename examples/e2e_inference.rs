@@ -74,7 +74,12 @@ fn main() -> anyhow::Result<()> {
     println!("batching invariance      : OK (max logit dev {max_dev:.2e})");
     let again = service.infer(img(777))?;
     anyhow::ensure!(again.logits == solo.logits || {
-        let d = again.logits.iter().zip(&solo.logits).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        let d = again
+            .logits
+            .iter()
+            .zip(&solo.logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
         d < 1e-5
     });
     println!("determinism              : OK");

@@ -63,7 +63,12 @@ fn main() {
     // ---- A3: fusion extension ----------------------------------------
     println!("\n== A3: perfect-fusion floor (relaxing the paper's assumption 1) ==");
     let mut t = Table::new(vec![
-        "CNN", "unfused floor (M)", "fused floor (M)", "saving", "buffer (M elems)", "w/ batch-8 weights (M/img)",
+        "CNN",
+        "unfused floor (M)",
+        "fused floor (M)",
+        "saving",
+        "buffer (M elems)",
+        "w/ batch-8 weights (M/img)",
     ]);
     for net in zoo::paper_networks() {
         let f = fusion_bound(&net);

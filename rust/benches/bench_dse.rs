@@ -1,0 +1,50 @@
+//! Design-space explorer bench: pruning effectiveness on the full paper
+//! space, cold vs warm layer-cache runs, and worker scaling.
+
+use psim::analytics::grid::GridEngine;
+use psim::coordinator::parallel::default_workers;
+use psim::dse::explore::explore;
+use psim::dse::space::ExploreSpec;
+use psim::models::zoo;
+use psim::util::benchkit::Bench;
+
+fn main() {
+    let paper = ExploreSpec::paper_space();
+    {
+        let engine = GridEngine::new();
+        let r = explore(&engine, &paper, default_workers());
+        let (hits, misses) = engine.cache_stats();
+        println!(
+            "explore paper space: {} candidates -> {} evaluated, {} pruned ({:.1}%), \
+             {} infeasible, {} frontier points; layer cache {hits} hits / {misses} misses\n",
+            r.candidates,
+            r.evaluated,
+            r.pruned.len(),
+            r.pruned.len() as f64 / r.candidates as f64 * 100.0,
+            r.infeasible,
+            r.frontier.len()
+        );
+    }
+
+    let mut b = Bench::new();
+    let alex = ExploreSpec::new(vec![zoo::alexnet()]);
+    b.run("explore alexnet cold (192 candidates, 1 worker)", || {
+        explore(&GridEngine::new(), &alex, 1)
+    });
+    let warm = GridEngine::new();
+    explore(&warm, &alex, 1);
+    b.run("explore alexnet warm cache (1 worker)", || explore(&warm, &alex, 1));
+
+    let cells = paper.candidate_count() as u64;
+    b.run_throughput("explore paper space cold, 1 worker (candidates/s)", cells, || {
+        explore(&GridEngine::new(), &paper, 1)
+    });
+    b.run_throughput("explore paper space cold, default workers (candidates/s)", cells, || {
+        explore(&GridEngine::new(), &paper, default_workers())
+    });
+    b.run("frontier jsonl encode", {
+        let result = explore(&GridEngine::new(), &paper, default_workers());
+        move || result.to_jsonl()
+    });
+    b.finish();
+}

@@ -17,7 +17,14 @@ fn main() {
     let mut b = Bench::new();
 
     // Warm compiles out of band so benches time execution only.
-    for name in ["conv_step_l0", "conv_step_l1", "conv_step_l2", "active_update", "psimnet_b1", "psimnet_b8"] {
+    for name in [
+        "conv_step_l0",
+        "conv_step_l1",
+        "conv_step_l2",
+        "active_update",
+        "psimnet_b1",
+        "psimnet_b8",
+    ] {
         rt.load(name).expect(name);
     }
     println!(

@@ -20,6 +20,23 @@ fn input_rows_for_stripe(layer: &ConvLayer, t: usize) -> usize {
     t * layer.stride + layer.k.saturating_sub(layer.stride)
 }
 
+/// Input rows touched per full pass over the output plane when striped at
+/// height `t`: each stripe pulls its rows (with `K - stride` halo),
+/// clamped to the physical row count. With a single stripe (`t = Ho`)
+/// this is at most `Hi`. Shared with [`crate::dse::metrics`], whose halo
+/// model is `rows_per_pass(t) - Hi` extra re-read rows (clamped at 0).
+pub fn rows_per_pass(layer: &ConvLayer, t: usize) -> usize {
+    let ho = layer.ho();
+    debug_assert!(t >= 1 && t <= ho);
+    let stripes = (ho + t - 1) / t;
+    let mut rows = 0usize;
+    for s in 0..stripes {
+        let t_eff = t.min(ho - s * t);
+        rows += input_rows_for_stripe(layer, t_eff).min(layer.hi);
+    }
+    rows
+}
+
 /// Bandwidth of `layer` tiled as `(m, n)` channels x `t` output rows per
 /// stripe. `t = Ho` reproduces [`super::bandwidth::layer_bandwidth`]
 /// exactly (no halo).
@@ -40,18 +57,8 @@ pub fn layer_bandwidth_spatial(
 
     let out_iters = (ng + n - 1) / n;
     let psum_iters = (mg + m - 1) / m;
-    let stripes = (ho + t - 1) / t;
 
-    // Input rows touched per full pass over the plane: each stripe pulls
-    // its rows (with halos), bounded by the physical row count per pass
-    // only when t == ho (single stripe).
-    let mut rows_per_pass = 0usize;
-    for s in 0..stripes {
-        let t_eff = t.min(ho - s * t);
-        rows_per_pass += input_rows_for_stripe(layer, t_eff).min(layer.hi);
-    }
-
-    let input = (layer.wi * rows_per_pass * mg) as f64 * out_iters as f64 * g;
+    let input = (layer.wi * rows_per_pass(layer, t) * mg) as f64 * out_iters as f64 * g;
     let wo_ho_ng = (layer.wo() * ho * ng) as f64;
     let output = match mode {
         ControllerMode::Passive => wo_ho_ng * (2 * psum_iters - 1) as f64 * g,
@@ -63,10 +70,9 @@ pub fn layer_bandwidth_spatial(
 /// Halo overhead of stripe height `t`: extra input traffic relative to
 /// the unstriped plane, as a fraction (0 = free).
 pub fn halo_overhead(layer: &ConvLayer, t: usize) -> f64 {
-    let full = layer_bandwidth_spatial(layer, layer.m_per_group(), layer.n_per_group(), layer.ho(),
-        ControllerMode::Passive);
-    let tiled = layer_bandwidth_spatial(layer, layer.m_per_group(), layer.n_per_group(), t,
-        ControllerMode::Passive);
+    let (mg, ng) = (layer.m_per_group(), layer.n_per_group());
+    let full = layer_bandwidth_spatial(layer, mg, ng, layer.ho(), ControllerMode::Passive);
+    let tiled = layer_bandwidth_spatial(layer, mg, ng, t, ControllerMode::Passive);
     (tiled.input - full.input) / full.input
 }
 
@@ -131,6 +137,18 @@ mod tests {
         // K=3,s=1: t=1 stripes read 3 rows per output row (≈3x near edges)
         assert!(halo_overhead(&l, 1) > 1.0);
         assert!(halo_overhead(&l, 56) < 1e-12);
+    }
+
+    #[test]
+    fn rows_per_pass_caps_at_physical_rows() {
+        let l = layer(); // 56x56, k3, s1, p1
+        assert_eq!(rows_per_pass(&l, l.ho()), 56);
+        // 2 stripes of 28: each pulls 28 + 2 halo rows, capped at 56
+        assert_eq!(rows_per_pass(&l, 28), 60);
+        // p=0 strided conv: a single full-height stripe touches fewer
+        // rows than Hi (the floor-cropped tail row is never read).
+        let s = ConvLayer::new("s", 224, 224, 3, 64, 7, 2, 0);
+        assert!(rows_per_pass(&s, s.ho()) <= 224);
     }
 
     #[test]

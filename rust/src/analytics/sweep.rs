@@ -147,8 +147,8 @@ mod tests {
         let net = zoo::resnet18();
         let mut prev = f64::INFINITY;
         for p in [512usize, 1024, 2048, 4096, 8192, 16384] {
-            let t =
-                network_bandwidth(&net, p, Strategy::OptimalSearch, ControllerMode::Passive).total();
+            let t = network_bandwidth(&net, p, Strategy::OptimalSearch, ControllerMode::Passive)
+                .total();
             assert!(t <= prev + 1e-6, "P={p}: {t} > {prev}");
             prev = t;
         }

@@ -17,7 +17,8 @@ pub struct Args {
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
-        let mut args = Args { command: argv.first().cloned().unwrap_or_default(), ..Default::default() };
+        let mut args =
+            Args { command: argv.first().cloned().unwrap_or_default(), ..Default::default() };
         let mut i = 1;
         while i < argv.len() {
             let a = &argv[i];

@@ -1,0 +1,82 @@
+//! `explore`: the design-space explorer from the CLI — Pareto frontiers
+//! over MAC budget × SRAM capacity × strategy × controller mode, as
+//! deterministic JSONL (or a markdown table with `--table`).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::analytics::grid::GridEngine;
+use crate::cli::args::Args;
+use crate::coordinator::parallel::default_workers;
+use crate::dse::budget::apply_constraints;
+use crate::dse::explore as dse_explore;
+use crate::dse::pareto::parse_objectives;
+use crate::dse::space::ExploreSpec;
+use crate::models::zoo;
+use crate::report::frontier;
+
+use super::sweep::resolve_network;
+
+/// `psim explore [--networks a,b]
+/// [--constraints macs=512:2048,sram=64k:unlimited,strategies=optimal,modes=active]
+/// [--objectives bandwidth,energy] [--workers N] [--out FILE] [--table]
+/// [--faithful]`
+///
+/// Emits one JSON object per Pareto-frontier point (JSONL) on stdout (or
+/// `--out`), byte-identical for any `--workers` value; a run summary goes
+/// to stderr so stdout stays pipeable.
+pub fn explore(args: &Args) -> Result<i32> {
+    let faithful = args.flag("faithful");
+    let networks = match args.opt("networks") {
+        Some(list) => list
+            .split(',')
+            .map(|raw| resolve_network(raw.trim(), faithful))
+            .collect::<Result<Vec<_>>>()?,
+        None => {
+            if faithful {
+                zoo::faithful_networks()
+            } else {
+                zoo::paper_networks()
+            }
+        }
+    };
+    let mut spec = ExploreSpec::new(networks);
+    if let Some(text) = args.opt("constraints") {
+        apply_constraints(&mut spec, text)?;
+    }
+    if let Some(list) = args.opt("objectives") {
+        spec.objectives = parse_objectives(list)?;
+    }
+    let workers = args.opt_usize("workers")?.unwrap_or_else(default_workers).max(1);
+    let out = args.opt("out").map(std::path::PathBuf::from);
+    let table = args.flag("table");
+    args.reject_unknown()?;
+    spec.validate()?;
+
+    let engine = GridEngine::new();
+    let t0 = Instant::now();
+    let result = dse_explore::explore(&engine, &spec, workers);
+    let elapsed = t0.elapsed();
+
+    let text = if table {
+        frontier::frontier_table(&result).to_markdown()
+    } else {
+        result.to_jsonl()
+    };
+    match &out {
+        Some(path) => {
+            std::fs::write(path, &text)
+                .with_context(|| format!("writing frontier to {}", path.display()))?;
+        }
+        None => print!("{text}"),
+    }
+    let (hits, misses) = engine.cache_stats();
+    eprintln!(
+        "{}{} in {:.3}s on {workers} workers; layer cache {hits} hits / {misses} misses",
+        frontier::summarize(&result),
+        out.as_ref().map(|p| format!(" -> {}", p.display())).unwrap_or_default(),
+        elapsed.as_secs_f64(),
+    );
+    Ok(0)
+}

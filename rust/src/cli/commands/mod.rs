@@ -1,6 +1,7 @@
 //! Command implementations, one module per command family.
 
 pub mod analyze;
+pub mod explore;
 pub mod infer;
 pub mod serve;
 pub mod simulate;

@@ -12,10 +12,15 @@
 //!               optional keys: networks, macs, strategies, modes,
 //!               batches (see analytics::grid::SweepSpec::from_json),
 //!               workers
+//!             {"cmd": "explore", ...}             -> Pareto exploration
+//!               optional keys: networks, macs, sram, strategies, modes,
+//!               objectives (see dse::space::ExploreSpec::from_json),
+//!               workers
 //!             {"cmd": "metrics"}                  -> server metrics
 //!             {"cmd": "shutdown"}                 -> stop the server
 //!   response: {"id": n, "class": c, "logits": [...], "latency_us": n}
 //!             {"cells": [...], "count": n, "cache_hits": h, ...}
+//!             {"frontier": [...], "count": n, "evaluated": e, ...}
 //!             {"metrics": "..."} / {"ok": true} / {"error": "..."}
 
 use std::io::{BufRead, BufReader, Write};
@@ -29,6 +34,8 @@ use crate::analytics::grid::{GridEngine, SweepSpec};
 use crate::cli::args::Args;
 use crate::coordinator::parallel::default_workers;
 use crate::coordinator::{InferenceService, ServiceConfig};
+use crate::dse::explore as dse_explore;
+use crate::dse::space::ExploreSpec;
 use crate::runtime::{ArtifactDir, Tensor};
 use crate::util::json::Json;
 
@@ -148,6 +155,7 @@ fn handle_line(line: &str, state: &ServerState, shutdown: &AtomicBool) -> Result
                 Ok(Json::obj(vec![("metrics", Json::Str(summary))]))
             }
             "sweep" => handle_sweep(&msg, state),
+            "explore" => handle_explore(&msg, state),
             "shutdown" => {
                 shutdown.store(true, Ordering::SeqCst);
                 Ok(Json::obj(vec![("ok", Json::Bool(true))]))
@@ -181,6 +189,20 @@ fn handle_line(line: &str, state: &ServerState, shutdown: &AtomicBool) -> Result
     ]))
 }
 
+/// Parse a request's optional `workers` field (default: machine
+/// parallelism), clamped to the server's per-request cap. Shared by the
+/// `sweep` and `explore` handlers so the policy cannot drift.
+fn request_workers(msg: &Json) -> Result<usize> {
+    Ok(msg
+        .get("workers")
+        .map(|w| {
+            w.as_usize().ok_or_else(|| anyhow::anyhow!("'workers' must be a positive integer"))
+        })
+        .transpose()?
+        .unwrap_or_else(default_workers)
+        .clamp(1, 64))
+}
+
 /// `{"cmd":"sweep", ...}` — run a design-space grid and return its cells.
 ///
 /// `cache_hits`/`cache_misses` are the deltas observed around this
@@ -193,14 +215,7 @@ fn handle_sweep(msg: &Json, state: &ServerState) -> Result<Json> {
         "sweep expands to {} cells (limit {MAX_SWEEP_CELLS})",
         spec.cell_count()
     );
-    let workers = msg
-        .get("workers")
-        .map(|w| {
-            w.as_usize().ok_or_else(|| anyhow::anyhow!("'workers' must be a positive integer"))
-        })
-        .transpose()?
-        .unwrap_or_else(default_workers)
-        .clamp(1, 64);
+    let workers = request_workers(msg)?;
     let (hits_before, misses_before) = state.grid.cache_stats();
     let grid = state.grid.run_with_workers(&spec, workers);
     let (hits_after, misses_after) = state.grid.cache_stats();
@@ -209,6 +224,28 @@ fn handle_sweep(msg: &Json, state: &ServerState) -> Result<Json> {
         ("count", Json::Num(grid.len() as f64)),
         ("cache_hits", Json::Num(hits_after.saturating_sub(hits_before) as f64)),
         ("cache_misses", Json::Num(misses_after.saturating_sub(misses_before) as f64)),
+    ]))
+}
+
+/// `{"cmd":"explore", ...}` — run the design-space explorer and return
+/// the Pareto frontier. The long-lived grid engine serves the partition/
+/// bandwidth memo cache, so repeated explorations get warmer.
+fn handle_explore(msg: &Json, state: &ServerState) -> Result<Json> {
+    let spec = ExploreSpec::from_json(msg)?;
+    anyhow::ensure!(
+        spec.candidate_count() <= MAX_SWEEP_CELLS,
+        "explore expands to {} candidates (limit {MAX_SWEEP_CELLS})",
+        spec.candidate_count()
+    );
+    let workers = request_workers(msg)?;
+    let result = dse_explore::explore(&state.grid, &spec, workers);
+    Ok(Json::obj(vec![
+        ("frontier", Json::Arr(result.frontier.iter().map(|f| f.to_json()).collect())),
+        ("count", Json::Num(result.frontier.len() as f64)),
+        ("candidates", Json::Num(result.candidates as f64)),
+        ("evaluated", Json::Num(result.evaluated as f64)),
+        ("pruned", Json::Num(result.pruned.len() as f64)),
+        ("infeasible", Json::Num(result.infeasible as f64)),
     ]))
 }
 
@@ -299,6 +336,45 @@ mod tests {
         assert!(first.get("cache_misses").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(second.get("cache_misses").unwrap().as_f64().unwrap(), 0.0);
         assert!(second.get("cache_hits").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn explore_request_returns_frontier() {
+        let state = analytics_state();
+        let shutdown = AtomicBool::new(false);
+        let reply = handle_line(
+            r#"{"cmd":"explore","networks":["AlexNet"],"macs":[512,1024],
+               "sram":["unlimited","64k"],"strategies":["optimal"],
+               "modes":["passive","active"],"workers":2}"#,
+            &state,
+            &shutdown,
+        )
+        .unwrap();
+        let frontier = reply.get("frontier").unwrap().as_arr().unwrap();
+        assert!(!frontier.is_empty());
+        assert_eq!(reply.get("count").unwrap().as_usize(), Some(frontier.len()));
+        assert_eq!(reply.get("candidates").unwrap().as_usize(), Some(8));
+        let evaluated = reply.get("evaluated").unwrap().as_usize().unwrap();
+        let pruned = reply.get("pruned").unwrap().as_usize().unwrap();
+        assert_eq!(evaluated + pruned, 8);
+        assert_eq!(frontier[0].get("network").unwrap().as_str(), Some("AlexNet"));
+        assert!(frontier[0].get("bandwidth").unwrap().as_f64().unwrap() > 0.0);
+        // the same engine cache serves sweeps and explorations
+        assert!(state.grid.cache_stats().1 > 0);
+    }
+
+    #[test]
+    fn explore_request_validation() {
+        let state = analytics_state();
+        let shutdown = AtomicBool::new(false);
+        for bad in [
+            r#"{"cmd":"explore","networks":["Nope"]}"#,
+            r#"{"cmd":"explore","sram":[0]}"#,
+            r#"{"cmd":"explore","objectives":["latency"]}"#,
+            r#"{"cmd":"explore","strategy":["optimal"]}"#,
+        ] {
+            assert!(handle_line(bad, &state, &shutdown).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::cli::args::Args;
 use crate::config::{AccelConfig, ConfigDoc};
 use crate::coordinator::parallel::{default_workers, parallel_map};
 use crate::models::zoo;
-use crate::sim::scheduler::{simulate_layer, simulate_network, SimConfig};
+use crate::sim::scheduler::{simulate_layer, simulate_network, simulate_network_detailed, SimConfig};
 use crate::util::tablefmt::{mact, pct, Table};
 
 use super::analyze::{mode_from, strategy_from};
@@ -44,27 +44,71 @@ pub fn simulate(args: &Args) -> Result<i32> {
         cfg.trace_cap = 64;
     }
 
-    let r = simulate_network(&net, &cfg);
+    // One pass over the network; with --trace the per-layer results are
+    // kept so their ring buffers can be dumped without re-simulating.
+    let (r, layer_results) = if trace {
+        simulate_network_detailed(&net, &cfg)
+    } else {
+        (simulate_network(&net, &cfg), Vec::new())
+    };
     let s = &r.stats;
     let analytic = network_bandwidth(&net, accel.p_macs, accel.strategy, accel.mode).total();
-    println!("== {} on P={} ({} controller, {} strategy) ==", net.name, accel.p_macs,
-        accel.mode.label(), accel.strategy.label());
-    println!("activation traffic : {} M (analytical model: {} M)",
-        mact(s.activation_traffic() as f64, 3), mact(analytic, 3));
+    println!(
+        "== {} on P={} ({} controller, {} strategy) ==",
+        net.name,
+        accel.p_macs,
+        accel.mode.label(),
+        accel.strategy.label()
+    );
+    println!(
+        "activation traffic : {} M (analytical model: {} M)",
+        mact(s.activation_traffic() as f64, 3),
+        mact(analytic, 3)
+    );
     println!("  input reads      : {} M", mact(s.input_reads as f64, 3));
     println!("  psum reads (bus) : {} M", mact(s.psum_reads as f64, 3));
     println!("  psum writes      : {} M", mact(s.psum_writes as f64, 3));
-    println!("  psum reads (ctrl): {} M  <- absorbed by the active controller",
-        mact(s.internal_psum_reads as f64, 3));
+    println!(
+        "  psum reads (ctrl): {} M  <- absorbed by the active controller",
+        mact(s.internal_psum_reads as f64, 3)
+    );
     println!("weight reads       : {} M", mact(s.weight_reads as f64, 3));
-    println!("bus                : {} beats, {} bursts, {} sideband words",
-        s.bus_beats, s.bus_transactions, s.sideband_words);
+    println!(
+        "bus                : {} beats, {} bursts, {} sideband words",
+        s.bus_beats, s.bus_transactions, s.sideband_words
+    );
     println!("sram accesses      : {} M", mact(s.sram_accesses as f64, 3));
-    println!("macs               : {:.3} G ({} cycles, {:.1}% array utilization)",
-        s.macs as f64 / 1e9, s.compute_cycles, s.mac_utilization(accel.p_macs) * 100.0);
-    println!("cycles             : {} (compute {}, bus {})",
-        s.total_cycles(), s.compute_cycles, s.bus_cycles);
+    println!(
+        "macs               : {:.3} G ({} cycles, {:.1}% array utilization)",
+        s.macs as f64 / 1e9,
+        s.compute_cycles,
+        s.mac_utilization(accel.p_macs) * 100.0
+    );
+    println!(
+        "cycles             : {} (compute {}, bus {})",
+        s.total_cycles(),
+        s.compute_cycles,
+        s.bus_cycles
+    );
     println!("energy             : {:.3} mJ", s.energy_pj / 1e9);
+    if trace {
+        // Per-layer transaction dumps. The ring keeps the *last*
+        // `trace_cap` events per layer; evicted counts are reported so a
+        // truncated trace is visible instead of silently capped.
+        println!(
+            "trace              : ring cap {} events/layer, {} dropped in total",
+            cfg.trace_cap, s.trace_dropped
+        );
+        for (layer, lr) in net.layers.iter().zip(&layer_results) {
+            println!(
+                "-- trace {} ({} events kept, {} dropped) --",
+                layer.name,
+                lr.trace.events().len(),
+                lr.trace.dropped()
+            );
+            print!("{}", lr.trace.dump());
+        }
+    }
     let d = (s.activation_traffic() as f64 - analytic).abs() / analytic.max(1.0);
     println!("sim-vs-model delta : {}", pct(d));
     if d > 1e-9 {

@@ -15,8 +15,9 @@ use crate::models::Network;
 /// Resolve one `--networks` entry. With `--faithful`, the eight faithful
 /// architectures shadow their paper-profile namesakes (so
 /// `--faithful --networks resnet50` really is grouped ResNeXt-50);
-/// anything else falls back to the general zoo lookup.
-fn resolve_network(name: &str, faithful: bool) -> Result<Network> {
+/// anything else falls back to the general zoo lookup. Shared with the
+/// `explore` command.
+pub(crate) fn resolve_network(name: &str, faithful: bool) -> Result<Network> {
     if faithful {
         if let Some(net) = zoo::faithful_by_name(name) {
             return Ok(net);

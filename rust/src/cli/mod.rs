@@ -47,6 +47,16 @@ Exploration:
                       cycles and MAC utilization per cell)
      options: [--networks a,b,c] [--macs 512,1024,...] [--strategy S]
               [--mode M]
+  explore             design-space explorer -> Pareto frontier JSONL
+                      over MAC budget x SRAM capacity x strategy x
+                      controller mode, scored on (bandwidth, SRAM
+                      accesses, energy, MAC utilization); closed-form
+                      bound pruning, per network + whole-zoo frontiers
+     options: [--networks a,b,c]
+              [--constraints macs=512:2048,sram=64k:unlimited,
+                             strategies=optimal:search,modes=active]
+              [--objectives bandwidth,energy,...] [--workers N]
+              [--out FILE] [--table] [--faithful]
 
 Functional stack (PJRT over artifacts/; run `make artifacts` first):
   infer               batched PsimNet inference benchmark
@@ -79,6 +89,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "simulate" => commands::simulate::simulate(&args),
         "simsweep" => commands::simulate::simsweep(&args),
         "sweep" => commands::sweep::sweep(&args),
+        "explore" => commands::explore::explore(&args),
         "infer" => commands::infer::infer(&args),
         "serve" => commands::serve::serve(&args),
         "client" => commands::serve::client(&args),
@@ -124,6 +135,16 @@ mod tests {
         assert_eq!(
             run(&sv(&["simulate", "--network", "resnet18", "--macs", "1024", "--mode", "active"]))
                 .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn simulate_trace_runs() {
+        // --trace dumps ring-buffer excerpts + dropped counts and must
+        // not disturb the sim-vs-model cross-check (exit code 0).
+        assert_eq!(
+            run(&sv(&["simulate", "--network", "AlexNet", "--macs", "512", "--trace"])).unwrap(),
             0
         );
     }
@@ -197,6 +218,53 @@ mod tests {
             .unwrap(),
             0
         );
+    }
+
+    #[test]
+    fn explore_flags() {
+        assert_eq!(
+            run(&sv(&[
+                "explore",
+                "--networks",
+                "AlexNet",
+                "--constraints",
+                "macs=512:1024,sram=unlimited:64k,strategies=optimal,modes=active",
+                "--objectives",
+                "bandwidth,energy",
+                "--workers",
+                "2",
+            ]))
+            .unwrap(),
+            0
+        );
+        assert_eq!(run(&sv(&["explore", "--networks", "AlexNet", "--table"])).unwrap(), 0);
+        assert!(run(&sv(&["explore", "--networks", "NoSuchNet"])).is_err());
+        assert!(run(&sv(&["explore", "--constraints", "volts=3"])).is_err());
+        assert!(run(&sv(&["explore", "--objectives", "latency"])).is_err());
+        assert!(run(&sv(&["explore", "--frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn explore_out_writes_frontier_jsonl() {
+        let path = std::env::temp_dir().join("psim_cli_explore_out.jsonl");
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(
+            run(&sv(&[
+                "explore",
+                "--networks",
+                "AlexNet",
+                "--constraints",
+                "macs=1024,sram=unlimited",
+                "--out",
+                path.to_str().unwrap(),
+            ]))
+            .unwrap(),
+            0
+        );
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.is_empty());
+        assert!(text.lines().all(|l| l.contains("\"network\":\"AlexNet\"")));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

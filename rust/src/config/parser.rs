@@ -59,7 +59,10 @@ impl ConfigDoc {
             if let Some(rest) = line.strip_prefix('[') {
                 let name = rest
                     .strip_suffix(']')
-                    .ok_or_else(|| ConfigError { line: ln + 1, msg: "unterminated section".into() })?
+                    .ok_or_else(|| ConfigError {
+                        line: ln + 1,
+                        msg: "unterminated section".into(),
+                    })?
                     .trim();
                 if name.is_empty() {
                     return Err(ConfigError { line: ln + 1, msg: "empty section name".into() });
@@ -74,8 +77,10 @@ impl ConfigDoc {
             if key.is_empty() {
                 return Err(ConfigError { line: ln + 1, msg: "empty key".into() });
             }
-            let value = Self::parse_value(val.trim())
-                .ok_or_else(|| ConfigError { line: ln + 1, msg: format!("bad value: {}", val.trim()) })?;
+            let value = Self::parse_value(val.trim()).ok_or_else(|| ConfigError {
+                line: ln + 1,
+                msg: format!("bad value: {}", val.trim()),
+            })?;
             doc.values.insert((section.clone(), key.to_string()), value);
         }
         Ok(doc)

@@ -131,7 +131,8 @@ pub fn execute_batch_on(
     use crate::runtime::Input;
     debug_assert!(!batch.is_empty() && batch.len() <= MAX_BATCH);
     let _t0 = Instant::now();
-    let (entry, padded) = if batch.len() == 1 { ("psimnet_b1", 1) } else { ("psimnet_b8", MAX_BATCH) };
+    let (entry, padded) =
+        if batch.len() == 1 { ("psimnet_b1", 1) } else { ("psimnet_b8", MAX_BATCH) };
     let images = pack_images(batch, padded)?;
     let mut inputs: Vec<Input<'_>> = vec![Input::Host(&images)];
     inputs.extend(device_weights.iter().map(Input::Prepared));
@@ -147,7 +148,8 @@ pub fn execute_batch(
     batch: &[InferRequest],
 ) -> Result<Vec<Vec<f32>>> {
     debug_assert!(!batch.is_empty() && batch.len() <= MAX_BATCH);
-    let (entry, padded) = if batch.len() == 1 { ("psimnet_b1", 1) } else { ("psimnet_b8", MAX_BATCH) };
+    let (entry, padded) =
+        if batch.len() == 1 { ("psimnet_b1", 1) } else { ("psimnet_b8", MAX_BATCH) };
     let mut inputs = vec![pack_images(batch, padded)?];
     inputs.extend(weights.tensors.iter().cloned());
     let out = runtime.execute(entry, &inputs)?;

@@ -1,0 +1,173 @@
+//! Hardware budgets beyond the MAC count: the on-chip SRAM capacity axis
+//! and the textual constraint grammar shared by `psim explore
+//! --constraints` and the serve protocol's `{"cmd":"explore"}` request.
+//!
+//! SRAM capacity is measured in *elements* (the unit of the whole
+//! bandwidth model — bytes divide out everywhere). A budget constrains
+//! each layer's resident working set (input stripe + psum stripe + weight
+//! tile, [`crate::analytics::spatial::stripe_working_set`]); the explorer
+//! picks the tallest output stripe that fits and pays the halo re-reads.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::accel::{parse_mode, parse_strategy};
+
+use super::space::ExploreSpec;
+
+/// On-chip SRAM capacity, in elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SramBudget {
+    /// No capacity constraint: every layer runs unstriped (`t = Ho`).
+    Unlimited,
+    /// At most this many resident elements per layer working set.
+    Elems(u64),
+}
+
+impl SramBudget {
+    /// Stable textual form — also the JSONL `sram` field value and the
+    /// token [`parse_sram`] accepts back.
+    pub fn label(&self) -> String {
+        match self {
+            SramBudget::Unlimited => "unlimited".to_string(),
+            SramBudget::Elems(e) => e.to_string(),
+        }
+    }
+
+    /// The element cap, `None` when unconstrained.
+    pub fn elems(&self) -> Option<u64> {
+        match self {
+            SramBudget::Unlimited => None,
+            SramBudget::Elems(e) => Some(*e),
+        }
+    }
+}
+
+/// Default SRAM axis: unconstrained, plus three capacities bracketing
+/// realistic on-chip buffers (at 2 B/element, 64Ki elements = 128 KiB).
+pub const DEFAULT_SRAM_BUDGETS: [SramBudget; 4] = [
+    SramBudget::Unlimited,
+    SramBudget::Elems(1 << 20),
+    SramBudget::Elems(1 << 18),
+    SramBudget::Elems(1 << 16),
+];
+
+/// Parse one SRAM budget token: `unlimited` (or `inf`/`none`), or an
+/// element count with an optional binary suffix (`64k`, `1m`, `2g`).
+pub fn parse_sram(s: &str) -> Result<SramBudget> {
+    let t = s.trim().to_ascii_lowercase();
+    if matches!(t.as_str(), "unlimited" | "inf" | "none") {
+        return Ok(SramBudget::Unlimited);
+    }
+    let (digits, mult): (&str, u64) = if let Some(p) = t.strip_suffix('k') {
+        (p, 1 << 10)
+    } else if let Some(p) = t.strip_suffix('m') {
+        (p, 1 << 20)
+    } else if let Some(p) = t.strip_suffix('g') {
+        (p, 1 << 30)
+    } else {
+        (t.as_str(), 1)
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("bad SRAM budget '{s}' (elements, e.g. 65536, 64k or 'unlimited')"))?;
+    if n == 0 {
+        bail!("SRAM budget must be > 0 elements (use 'unlimited' for no cap)");
+    }
+    let elems = n.checked_mul(mult).ok_or_else(|| anyhow!("SRAM budget '{s}' overflows u64"))?;
+    Ok(SramBudget::Elems(elems))
+}
+
+/// Apply a `--constraints` string onto a spec.
+///
+/// Grammar: comma-separated `axis=v1:v2:...` pairs; axes are `macs`,
+/// `sram`, `strategies`, `modes`. Example:
+/// `macs=512:2048:16384,sram=64k:unlimited,modes=active`.
+/// Axes not mentioned keep their defaults; unknown axes fail loudly.
+pub fn apply_constraints(spec: &mut ExploreSpec, text: &str) -> Result<()> {
+    for part in text.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (axis, values) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("constraint '{part}' is not of the form axis=v1:v2:..."))?;
+        let values: Vec<&str> =
+            values.split(':').map(str::trim).filter(|v| !v.is_empty()).collect();
+        if values.is_empty() {
+            bail!("constraint '{part}' has no values");
+        }
+        match axis.trim().to_ascii_lowercase().as_str() {
+            "macs" => {
+                spec.mac_budgets = values
+                    .iter()
+                    .map(|v| v.parse::<usize>().map_err(|_| anyhow!("bad MAC budget '{v}'")))
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            "sram" => {
+                spec.sram_budgets =
+                    values.iter().map(|v| parse_sram(v)).collect::<Result<Vec<_>>>()?;
+            }
+            "strategies" => {
+                spec.strategies =
+                    values.iter().map(|v| parse_strategy(v)).collect::<Result<Vec<_>>>()?;
+            }
+            "modes" => {
+                spec.modes = values.iter().map(|v| parse_mode(v)).collect::<Result<Vec<_>>>()?;
+            }
+            other => bail!("unknown constraint axis '{other}' (macs|sram|strategies|modes)"),
+        }
+    }
+    spec.validate()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::bandwidth::ControllerMode;
+    use crate::analytics::partition::Strategy;
+    use crate::models::zoo;
+
+    #[test]
+    fn parse_sram_tokens() {
+        assert_eq!(parse_sram("unlimited").unwrap(), SramBudget::Unlimited);
+        assert_eq!(parse_sram("inf").unwrap(), SramBudget::Unlimited);
+        assert_eq!(parse_sram("65536").unwrap(), SramBudget::Elems(65536));
+        assert_eq!(parse_sram("64k").unwrap(), SramBudget::Elems(65536));
+        assert_eq!(parse_sram("1m").unwrap(), SramBudget::Elems(1 << 20));
+        assert_eq!(parse_sram(" 2G ").unwrap(), SramBudget::Elems(2 << 30));
+        assert!(parse_sram("0").is_err());
+        assert!(parse_sram("lots").is_err());
+        assert!(parse_sram("").is_err());
+    }
+
+    #[test]
+    fn labels_round_trip() {
+        for b in DEFAULT_SRAM_BUDGETS {
+            assert_eq!(parse_sram(&b.label()).unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn constraints_override_axes() {
+        let mut spec = ExploreSpec::new(vec![zoo::alexnet()]);
+        apply_constraints(&mut spec, "macs=512:2048,sram=64k:unlimited,modes=active").unwrap();
+        assert_eq!(spec.mac_budgets, vec![512, 2048]);
+        assert_eq!(spec.sram_budgets, vec![SramBudget::Elems(65536), SramBudget::Unlimited]);
+        assert_eq!(spec.modes, vec![ControllerMode::Active]);
+        // strategies untouched
+        assert_eq!(spec.strategies, Strategy::TABLE1.to_vec());
+    }
+
+    #[test]
+    fn constraints_reject_garbage() {
+        let mut spec = ExploreSpec::new(vec![zoo::alexnet()]);
+        assert!(apply_constraints(&mut spec, "volts=3").is_err());
+        assert!(apply_constraints(&mut spec, "macs").is_err());
+        assert!(apply_constraints(&mut spec, "macs=").is_err());
+        assert!(apply_constraints(&mut spec, "macs=zero").is_err());
+        assert!(apply_constraints(&mut spec, "strategies=voodoo").is_err());
+        assert!(apply_constraints(&mut spec, "macs=0").is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! The explorer: admissible bound → prune → exact evaluation → Pareto
+//! frontier, fanned out over [`crate::coordinator::parallel`] workers
+//! with byte-identical output for any worker count.
+//!
+//! Algorithm, per scope (each network alone, plus the whole-zoo
+//! aggregate when several networks are explored):
+//!
+//! 1. **Bound** every candidate with the channel-only eqs. 2–3 cost
+//!    ([`super::metrics::scope_bound_stats`], served by the grid
+//!    engine's layer-shape memo cache) — a vector that is component-wise
+//!    `<=` the exact one, computed in parallel for all candidates.
+//! 2. **Prune** a candidate when its bound is already dominated by an
+//!    exactly-evaluated design: since `bound <= exact`, dominance over
+//!    the bound implies dominance over the exact vector — the prune is
+//!    lossless (pinned by `rust/tests/dse_frontier.rs`).
+//! 3. **Evaluate** the survivors exactly (SRAM-striped metrics) in
+//!    fixed-size chunks over the worker pool; the archive of exact
+//!    vectors grows in candidate order, so decisions are deterministic.
+//! 4. **Extract** the frontier: the non-dominated archive entries, in
+//!    candidate order.
+
+use crate::analytics::grid::GridEngine;
+use crate::coordinator::parallel::parallel_map;
+use crate::models::Network;
+use crate::sim::interconnect::BusConfig;
+use crate::util::json::Json;
+
+use super::budget::SramBudget;
+use super::metrics::{scope_bound_stats, scope_stats};
+use super::pareto::{dominates, pareto_indices, Objectives};
+use super::space::{DesignPoint, ExploreSpec};
+
+/// Scope label of the whole-zoo aggregate frontier (objectives summed
+/// over every network in the spec).
+pub const ZOO_SCOPE: &str = "zoo";
+
+/// Candidates considered per pruning round. Fixed (not worker-derived) so
+/// prune decisions — and therefore the output bytes — are identical for
+/// any `--workers` value.
+const CHUNK: usize = 16;
+
+/// One frontier member.
+#[derive(Clone, Debug)]
+pub struct FrontierPoint {
+    /// Network name, or [`ZOO_SCOPE`] for the whole-zoo aggregate.
+    pub scope: String,
+    pub point: DesignPoint,
+    pub objectives: Objectives,
+}
+
+impl FrontierPoint {
+    /// Stable JSONL record. Every number is integer-valued (energy in
+    /// whole picojoules, utilization in parts-per-million), so the bytes
+    /// are platform- and worker-count-independent.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("network", Json::Str(self.scope.clone())),
+            ("p_macs", Json::Num(self.point.p_macs as f64)),
+            ("sram", Json::Str(self.point.sram.label())),
+            ("strategy", Json::Str(self.point.strategy.slug().to_string())),
+            ("mode", Json::Str(self.point.mode.label().to_string())),
+            ("bandwidth", Json::Num(self.objectives.bandwidth)),
+            ("sram_accesses", Json::Num(self.objectives.sram_accesses)),
+            ("energy_pj", Json::Num(self.objectives.energy_pj.round())),
+            ("mac_util_ppm", Json::Num((self.objectives.mac_utilization * 1e6).round())),
+        ])
+    }
+}
+
+/// A candidate skipped because its admissible bound was already dominated
+/// by an exactly-evaluated design.
+#[derive(Clone, Debug)]
+pub struct PrunedPoint {
+    pub scope: String,
+    pub point: DesignPoint,
+}
+
+/// Everything one exploration produced.
+#[derive(Clone, Debug)]
+pub struct ExploreResult {
+    /// Frontier members: per-scope frontiers concatenated in scope order
+    /// (networks in spec order, then the zoo aggregate), candidate
+    /// enumeration order within each scope.
+    pub frontier: Vec<FrontierPoint>,
+    /// Exact evaluations performed (including infeasible discoveries).
+    pub evaluated: usize,
+    /// Candidates pruned on their bound, without exact evaluation.
+    pub pruned: Vec<PrunedPoint>,
+    /// Candidates whose SRAM budget cannot hold even one-row stripes.
+    pub infeasible: usize,
+    /// Total candidates considered (scopes × design points).
+    pub candidates: usize,
+}
+
+impl ExploreResult {
+    /// The frontier as JSON-lines text (one record per point, trailing
+    /// newline). Byte-identical across worker counts.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for fp in &self.frontier {
+            out.push_str(&fp.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Frontier members of one scope, in candidate order.
+    pub fn frontier_for(&self, scope: &str) -> Vec<&FrontierPoint> {
+        self.frontier.iter().filter(|f| f.scope == scope).collect()
+    }
+}
+
+/// Explore `spec` over `workers` threads. Output order and content are
+/// independent of `workers`.
+///
+/// # Panics
+///
+/// Panics if the spec fails [`ExploreSpec::validate`] — CLI and serve
+/// validate first, so an invalid spec here is a programming error.
+pub fn explore(engine: &GridEngine, spec: &ExploreSpec, workers: usize) -> ExploreResult {
+    spec.validate().expect("invalid explore spec");
+    let bus = BusConfig::default();
+    let points = spec.points();
+    let workers = workers.max(1);
+
+    // Scopes: each network alone, plus the whole-zoo aggregate.
+    let mut scopes: Vec<(String, Vec<&Network>)> =
+        spec.networks.iter().map(|n| (n.name.clone(), vec![n])).collect();
+    if spec.networks.len() > 1 {
+        scopes.push((ZOO_SCOPE.to_string(), spec.networks.iter().collect()));
+    }
+
+    // Phase 1: admissible bounds for every (scope, point), in parallel.
+    let mut bound_jobs: Vec<(usize, usize)> = Vec::with_capacity(scopes.len() * points.len());
+    for si in 0..scopes.len() {
+        for pi in 0..points.len() {
+            bound_jobs.push((si, pi));
+        }
+    }
+    let bounds: Vec<Objectives> = parallel_map(&bound_jobs, workers, |&(si, pi)| {
+        let stats = scope_bound_stats(engine, &scopes[si].1, &points[pi], &bus);
+        Objectives::from_stats(&stats, points[pi].p_macs)
+    });
+
+    // Phase 2: chunked exact evaluation with archive-based pruning.
+    let mut frontier = Vec::new();
+    let mut pruned = Vec::new();
+    let mut evaluated = 0usize;
+    let mut infeasible = 0usize;
+
+    for (si, (scope_name, nets)) in scopes.iter().enumerate() {
+        // Exact vectors in candidate order: (point index, objectives).
+        let mut archive: Vec<(usize, Objectives)> = Vec::new();
+        for chunk_start in (0..points.len()).step_by(CHUNK) {
+            let chunk_end = (chunk_start + CHUNK).min(points.len());
+            let mut survivors: Vec<usize> = Vec::new();
+            for pi in chunk_start..chunk_end {
+                let bound = &bounds[si * points.len() + pi];
+                if archive.iter().any(|(_, e)| dominates(e, bound, &spec.objectives)) {
+                    pruned.push(PrunedPoint { scope: scope_name.clone(), point: points[pi] });
+                } else {
+                    survivors.push(pi);
+                }
+            }
+            let exacts: Vec<Option<Objectives>> = parallel_map(&survivors, workers, |&pi| {
+                // An unconstrained candidate's bound IS its exact vector
+                // (no striping to apply) — don't evaluate it twice.
+                if points[pi].sram == SramBudget::Unlimited {
+                    return Some(bounds[si * points.len() + pi]);
+                }
+                scope_stats(engine, nets, &points[pi], &bus)
+                    .map(|s| Objectives::from_stats(&s, points[pi].p_macs))
+            });
+            for (pi, exact) in survivors.iter().zip(&exacts) {
+                evaluated += 1;
+                match exact {
+                    Some(o) => archive.push((*pi, *o)),
+                    None => infeasible += 1,
+                }
+            }
+        }
+        let objs: Vec<Objectives> = archive.iter().map(|(_, o)| *o).collect();
+        for idx in pareto_indices(&objs, &spec.objectives) {
+            let (pi, o) = archive[idx];
+            frontier.push(FrontierPoint {
+                scope: scope_name.clone(),
+                point: points[pi],
+                objectives: o,
+            });
+        }
+    }
+
+    ExploreResult {
+        frontier,
+        evaluated,
+        pruned,
+        infeasible,
+        candidates: scopes.len() * points.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::bandwidth::ControllerMode;
+    use crate::analytics::partition::Strategy;
+    use crate::dse::budget::SramBudget;
+    use crate::models::zoo;
+
+    #[test]
+    fn active_dominates_passive_for_fixed_partition() {
+        // MaxInput picks the same (m, n) in both modes; the active
+        // controller then strictly wins on bandwidth and energy at equal
+        // utilization and SRAM accesses, so only 'active' can survive.
+        let spec = ExploreSpec::new(vec![zoo::alexnet()])
+            .with_macs(vec![512])
+            .with_sram(vec![SramBudget::Unlimited])
+            .with_strategies(vec![Strategy::MaxInput]);
+        let result = explore(&GridEngine::new(), &spec, 1);
+        assert_eq!(result.candidates, 2);
+        let modes: Vec<&str> = result.frontier.iter().map(|f| f.point.mode.label()).collect();
+        assert_eq!(modes, vec!["active"]);
+    }
+
+    #[test]
+    fn frontier_covers_every_scope_and_zoo() {
+        let spec = ExploreSpec::new(vec![zoo::alexnet(), zoo::resnet18()])
+            .with_macs(vec![512, 2048])
+            .with_sram(vec![SramBudget::Unlimited])
+            .with_strategies(vec![Strategy::Optimal]);
+        let result = explore(&GridEngine::new(), &spec, 2);
+        assert_eq!(result.candidates, 3 * 4);
+        for scope in ["AlexNet", "ResNet-18", ZOO_SCOPE] {
+            assert!(!result.frontier_for(scope).is_empty(), "no frontier for {scope}");
+        }
+        // a bigger MAC budget strictly improves bandwidth, so at least
+        // two points (P=512 high-util vs P=2048 low-bandwidth) coexist
+        assert!(result.frontier_for("AlexNet").len() >= 2);
+    }
+
+    #[test]
+    fn tiny_sram_counts_infeasible() {
+        let spec = ExploreSpec::new(vec![zoo::alexnet()])
+            .with_macs(vec![1024])
+            .with_sram(vec![SramBudget::Elems(16)])
+            .with_strategies(vec![Strategy::Optimal])
+            .with_modes(vec![ControllerMode::Passive]);
+        let result = explore(&GridEngine::new(), &spec, 1);
+        assert_eq!(result.infeasible, 1);
+        assert!(result.frontier.is_empty());
+    }
+
+    #[test]
+    fn accounting_adds_up() {
+        let spec = ExploreSpec::new(vec![zoo::squeezenet1_0()]);
+        let result = explore(&GridEngine::new(), &spec, 3);
+        assert_eq!(result.candidates, spec.candidate_count());
+        assert_eq!(result.evaluated + result.pruned.len(), result.candidates);
+        // the admissible bound must actually prune something on the
+        // default axes (dominated passive/heuristic cells abound)
+        assert!(!result.pruned.is_empty(), "bound pruned nothing");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid explore spec")]
+    fn invalid_spec_panics() {
+        let spec = ExploreSpec::new(vec![zoo::alexnet()]).with_macs(vec![]);
+        explore(&GridEngine::new(), &spec, 1);
+    }
+}

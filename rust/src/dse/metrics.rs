@@ -1,0 +1,283 @@
+//! Closed-form candidate metrics: the event simulator's [`SimStats`]
+//! derived analytically from a layer's partition — no loop nest executed.
+//!
+//! Contract (pinned by `rust/tests/dse_frontier.rs`): for an unstriped
+//! layer (`t = Ho`) every counter equals what
+//! [`crate::sim::scheduler::simulate_layer_with`] produces, field for
+//! field — the DSE scores candidates with simulator-exact numbers at
+//! analytical cost. The ragged tails of non-divisor partitions are
+//! reproduced by grouping the `(co, ci)` blocks into at most four
+//! distinct `(m_eff, n_eff)` combinations.
+//!
+//! When an SRAM budget forces striping (`t < Ho`), the stripes' halo
+//! rows are modeled as `rows_per_pass(t) - Hi` extra input rows per
+//! `(co, ci)` pass (clamped at 0), carried as one extra read burst. Every
+//! delta is non-negative, so an SRAM-constrained candidate can never
+//! score better than its unconstrained counterpart — which is what makes
+//! the explorer's channel-only bound admissible for pruning.
+
+use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::grid::GridEngine;
+use crate::analytics::spatial::{max_stripe_within, rows_per_pass};
+use crate::models::{ConvLayer, Network};
+use crate::sim::energy::EnergyModel;
+use crate::sim::interconnect::{BusConfig, Interconnect};
+use crate::sim::stats::SimStats;
+use crate::util::mathx::ceil_div;
+
+use super::budget::SramBudget;
+use super::space::DesignPoint;
+
+/// Exact counters for one layer tiled as `(m, n)` channels with output
+/// stripes of height `t` (`t = Ho` means unstriped). `bus_cycles` and
+/// `energy_pj` are left 0 — energy is priced once over a whole scope.
+pub fn layer_stats(
+    layer: &ConvLayer,
+    m: usize,
+    n: usize,
+    t: usize,
+    mode: ControllerMode,
+    bus: &BusConfig,
+) -> SimStats {
+    let mg = layer.m_per_group();
+    let ng = layer.n_per_group();
+    let (wo, ho) = (layer.wo(), layer.ho());
+    let k2 = (layer.k * layer.k) as u64;
+
+    let ci_blocks = ceil_div(mg, m);
+    let co_blocks = ceil_div(ng, n);
+    // Ragged-tail structure: (channels, occurrences) per block kind.
+    let m_tail = mg - (ci_blocks - 1) * m;
+    let n_tail = ng - (co_blocks - 1) * n;
+    let m_blocks = [(m as u64, (ci_blocks - 1) as u64), (m_tail as u64, 1u64)];
+    let n_blocks = [(n as u64, (co_blocks - 1) as u64), (n_tail as u64, 1u64)];
+
+    let wi_hi = (layer.wi * layer.hi) as u64;
+    let wo_ho = (wo * ho) as u64;
+    let halo_rows = rows_per_pass(layer, t).saturating_sub(layer.hi) as u64;
+
+    let mut s = SimStats::default();
+
+    // Input tiles: one burst of `m_eff` full planes per (co, ci), plus
+    // one halo re-read burst when striping re-reads rows.
+    for &(me, count) in &m_blocks {
+        let occ = count * co_blocks as u64;
+        let elems = wi_hi * me;
+        s.input_reads += occ * elems;
+        s.bus_beats += occ * Interconnect::beats(bus, elems);
+        s.bus_transactions += occ * Interconnect::bursts(bus, elems);
+        if halo_rows > 0 {
+            let halo = layer.wi as u64 * halo_rows * me;
+            s.input_reads += occ * halo;
+            s.bus_beats += occ * Interconnect::beats(bus, halo);
+            s.bus_transactions += occ * Interconnect::bursts(bus, halo);
+        }
+    }
+
+    // Weight tiles: one burst of `n_eff * m_eff * K^2` per (co, ci).
+    for &(ne, cn) in &n_blocks {
+        for &(me, cm) in &m_blocks {
+            let occ = cn * cm;
+            let elems = ne * me * k2;
+            s.weight_reads += occ * elems;
+            s.bus_beats += occ * Interconnect::beats(bus, elems);
+            s.bus_transactions += occ * Interconnect::bursts(bus, elems);
+        }
+    }
+
+    // Psum protocol per co block: an Init write, then per later ci pass
+    // either a bus read + write (passive) or one Add/AddRelu write whose
+    // read stays inside the controller (active).
+    for &(ne, cn) in &n_blocks {
+        let elems = wo_ho * ne;
+        let wbeats = Interconnect::beats(bus, elems);
+        let wbursts = Interconnect::bursts(bus, elems);
+        let later = (ci_blocks - 1) as u64;
+        s.psum_writes += cn * ci_blocks as u64 * elems;
+        s.bus_beats += cn * ci_blocks as u64 * wbeats;
+        s.bus_transactions += cn * ci_blocks as u64 * wbursts;
+        match mode {
+            ControllerMode::Passive => {
+                // Only the Init write carries a sideband command.
+                s.sideband_words += cn * wbursts;
+                s.psum_reads += cn * later * elems;
+                s.bus_beats += cn * later * wbeats;
+                s.bus_transactions += cn * later * wbursts;
+            }
+            ControllerMode::Active => {
+                // Every write carries a command (Init, Add or AddRelu).
+                s.sideband_words += cn * ci_blocks as u64 * wbursts;
+                s.internal_psum_reads += cn * later * elems;
+                s.controller_adds += cn * later * elems;
+                if ci_blocks > 1 {
+                    s.controller_relus += cn * elems;
+                }
+            }
+        }
+    }
+
+    // Compute: work is conserved across partitions; each (co, ci) pass
+    // sweeps the whole output plane.
+    s.macs = wo_ho * k2 * mg as u64 * ng as u64;
+    s.compute_cycles = (co_blocks * ci_blocks) as u64 * wo_ho;
+
+    // SRAM array accesses: every bus element touches the array once; the
+    // active controller's internal read-modify-write adds its reads (the
+    // matching write is the bus write, already counted in psum_writes).
+    s.sram_accesses =
+        s.input_reads + s.weight_reads + s.psum_reads + s.psum_writes + s.internal_psum_reads;
+
+    // Groups are identical accumulation domains (the simulator's
+    // fast path): one group's counters times g.
+    s.scale(layer.groups as u64);
+    s
+}
+
+/// The stripe height for `layer` under `sram`: `Ho` when unconstrained,
+/// otherwise the tallest stripe whose working set fits. `None` when even
+/// a one-row stripe exceeds the budget (the candidate is infeasible).
+pub fn stripe_height(layer: &ConvLayer, m: usize, n: usize, sram: SramBudget) -> Option<usize> {
+    match sram {
+        SramBudget::Unlimited => Some(layer.ho()),
+        SramBudget::Elems(b) => max_stripe_within(layer, m, n, b).map(|(t, _)| t),
+    }
+}
+
+/// Evaluate one candidate over a scope (one network, or several for the
+/// whole-zoo aggregate): partitions come from the grid engine's
+/// layer-shape memo cache, counters from [`layer_stats`], energy from
+/// [`crate::sim::energy::EnergyModel`] priced once over the merged
+/// counters. `None` when any layer cannot fit the SRAM budget.
+pub fn scope_stats(
+    engine: &GridEngine,
+    nets: &[&Network],
+    point: &DesignPoint,
+    bus: &BusConfig,
+) -> Option<SimStats> {
+    let mut total = SimStats::default();
+    for net in nets {
+        for layer in &net.layers {
+            let eval = engine.layer_eval(layer, point.p_macs, point.strategy, point.mode);
+            let (m, n) = (eval.partition.m, eval.partition.n);
+            let t = stripe_height(layer, m, n, point.sram)?;
+            total.merge(&layer_stats(layer, m, n, t, point.mode, bus));
+        }
+    }
+    total.energy_pj = EnergyModel::default().energy_pj(&total);
+    Some(total)
+}
+
+/// The candidate's admissible lower bound: the same evaluation with the
+/// SRAM constraint lifted (channel-only eqs. 2–3 traffic, no halo).
+/// Component-wise `bound <= exact`, and utilization is identical, so a
+/// candidate whose bound is dominated by an exactly-evaluated design is
+/// provably dominated itself.
+pub fn scope_bound_stats(
+    engine: &GridEngine,
+    nets: &[&Network],
+    point: &DesignPoint,
+    bus: &BusConfig,
+) -> SimStats {
+    let unconstrained = DesignPoint { sram: SramBudget::Unlimited, ..*point };
+    scope_stats(engine, nets, &unconstrained, bus).expect("unstriped evaluation always feasible")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::bandwidth::layer_bandwidth;
+    use crate::analytics::partition::{Partition, Strategy};
+    use crate::models::zoo;
+    use crate::sim::scheduler::{simulate_layer_with, SimConfig};
+
+    fn assert_matches_sim(layer: &ConvLayer, part: Partition, mode: ControllerMode, p: usize) {
+        let cfg = SimConfig::new(p, mode, Strategy::Optimal);
+        let mut sim = simulate_layer_with(layer, &cfg, part).stats;
+        // Out of the closed form's scope: per-layer time/energy roll-ups.
+        sim.bus_cycles = 0;
+        sim.energy_pj = 0.0;
+        let dse = layer_stats(layer, part.m, part.n, layer.ho(), mode, &cfg.bus);
+        assert_eq!(dse, sim, "{} {:?} P={p} {:?}", layer.name, part, mode);
+    }
+
+    #[test]
+    fn unstriped_counters_equal_simulator() {
+        let conv3 = ConvLayer::new("conv3", 13, 13, 192, 384, 3, 1, 1);
+        for mode in ControllerMode::ALL {
+            // divisor partition, ragged partition, single-pass partition
+            assert_matches_sim(&conv3, Partition { m: 12, n: 4 }, mode, 512);
+            assert_matches_sim(&conv3, Partition { m: 9, n: 7 }, mode, 1 << 20);
+            assert_matches_sim(&conv3, Partition { m: 192, n: 384 }, mode, 1 << 22);
+        }
+        // grouped conv exercises the g-scaling path
+        let dw = ConvLayer::grouped("dw", 56, 56, 64, 64, 3, 1, 1, 64);
+        for mode in ControllerMode::ALL {
+            assert_matches_sim(&dw, Partition { m: 1, n: 1 }, mode, 512);
+        }
+    }
+
+    #[test]
+    fn unstriped_bandwidth_equals_eq2_eq3() {
+        let l = ConvLayer::new("c", 27, 27, 64, 192, 5, 1, 2);
+        for mode in ControllerMode::ALL {
+            let s = layer_stats(&l, 16, 4, l.ho(), mode, &BusConfig::default());
+            let bw = layer_bandwidth(&l, 16, 4, mode);
+            assert_eq!(s.input_reads as f64, bw.input);
+            assert_eq!((s.psum_reads + s.psum_writes) as f64, bw.output);
+        }
+    }
+
+    #[test]
+    fn striping_only_adds() {
+        let l = ConvLayer::new("c", 56, 56, 64, 128, 3, 1, 1);
+        let bus = BusConfig::default();
+        let free = layer_stats(&l, 16, 8, l.ho(), ControllerMode::Passive, &bus);
+        let mut prev = free;
+        for t in [28usize, 7, 1] {
+            let tight = layer_stats(&l, 16, 8, t, ControllerMode::Passive, &bus);
+            assert!(tight.input_reads >= prev.input_reads, "t={t}");
+            assert!(tight.bus_beats >= prev.bus_beats, "t={t}");
+            assert!(tight.sram_accesses >= prev.sram_accesses, "t={t}");
+            // psum/compute sides are stripe-invariant
+            assert_eq!(tight.psum_writes, free.psum_writes);
+            assert_eq!(tight.compute_cycles, free.compute_cycles);
+            prev = tight;
+        }
+    }
+
+    #[test]
+    fn scope_bound_is_admissible() {
+        let net = zoo::alexnet();
+        let engine = GridEngine::new();
+        let bus = BusConfig::default();
+        let nets = [&net];
+        for mode in ControllerMode::ALL {
+            let point = DesignPoint {
+                p_macs: 1024,
+                sram: SramBudget::Elems(1 << 16),
+                strategy: Strategy::Optimal,
+                mode,
+            };
+            let bound = scope_bound_stats(&engine, &nets, &point, &bus);
+            let exact = scope_stats(&engine, &nets, &point, &bus).expect("feasible");
+            assert!(bound.activation_traffic() <= exact.activation_traffic());
+            assert!(bound.sram_accesses <= exact.sram_accesses);
+            assert!(bound.energy_pj <= exact.energy_pj);
+            assert_eq!(bound.compute_cycles, exact.compute_cycles);
+            assert_eq!(bound.macs, exact.macs);
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_reports_none() {
+        let net = zoo::alexnet();
+        let engine = GridEngine::new();
+        let point = DesignPoint {
+            p_macs: 1024,
+            sram: SramBudget::Elems(16),
+            strategy: Strategy::Optimal,
+            mode: ControllerMode::Passive,
+        };
+        assert!(scope_stats(&engine, &[&net], &point, &BusConfig::default()).is_none());
+    }
+}

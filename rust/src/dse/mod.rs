@@ -1,0 +1,37 @@
+//! Design-space exploration (DSE): Pareto frontiers over hardware
+//! budgets × partitioning policy.
+//!
+//! The paper evaluates a fixed grid — eight networks × six MAC budgets ×
+//! four strategies × two controller modes — and reports single-objective
+//! bandwidth tables. This subsystem *searches* a richer space instead:
+//! MAC budget × on-chip SRAM capacity × partitioning strategy ×
+//! controller mode (per-layer `(m, n)` tiles and stripe heights chosen
+//! within each point), scoring every candidate on four objectives at
+//! once — interconnect bandwidth, SRAM array accesses, energy
+//! ([`crate::sim::energy`]) and MAC utilization — and keeping only the
+//! Pareto-optimal designs, per network and for the whole zoo.
+//!
+//! * [`space`] — [`DesignPoint`]/[`ExploreSpec`]: the axes, their
+//!   deterministic enumeration, the serve-protocol parser.
+//! * [`budget`] — the SRAM capacity axis ([`SramBudget`]) and the
+//!   `--constraints` grammar.
+//! * [`pareto`] — objective vectors, dominance, frontier extraction.
+//! * [`metrics`] — closed-form [`crate::sim::stats::SimStats`] for a
+//!   candidate: simulator-exact unstriped, conservative halo model when
+//!   SRAM-striped.
+//! * [`explore`] — bound → prune → exact → frontier over
+//!   [`crate::coordinator::parallel`] workers, byte-deterministic.
+//!
+//! Surfaces: `psim explore` (CLI), `{"cmd":"explore"}` (serve),
+//! [`crate::report::frontier`] (rendering), `benches/bench_dse.rs`.
+
+pub mod budget;
+pub mod explore;
+pub mod metrics;
+pub mod pareto;
+pub mod space;
+
+pub use budget::SramBudget;
+pub use explore::{explore, ExploreResult, FrontierPoint, ZOO_SCOPE};
+pub use pareto::{Objective, Objectives};
+pub use space::{DesignPoint, ExploreSpec};

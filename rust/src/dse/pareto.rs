@@ -1,0 +1,214 @@
+//! Objective vectors and Pareto dominance for the design-space explorer.
+//!
+//! Four objectives, three minimized (interconnect bandwidth, SRAM array
+//! accesses, energy) and one maximized (MAC-array utilization). Dominance
+//! and frontier extraction work over any non-empty subset of them — the
+//! `--objectives` knob.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::sim::stats::SimStats;
+
+/// One optimization objective.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Objective {
+    /// Activation traffic over the interconnect (minimize).
+    Bandwidth,
+    /// SRAM array accesses, including controller-internal ones (minimize).
+    SramAccesses,
+    /// Energy estimate from [`crate::sim::energy`] (minimize).
+    Energy,
+    /// MAC-array utilization (maximize).
+    Utilization,
+}
+
+impl Objective {
+    pub const ALL: [Objective; 4] = [
+        Objective::Bandwidth,
+        Objective::SramAccesses,
+        Objective::Energy,
+        Objective::Utilization,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Objective::Bandwidth => "bandwidth",
+            Objective::SramAccesses => "sram-accesses",
+            Objective::Energy => "energy",
+            Objective::Utilization => "utilization",
+        }
+    }
+}
+
+/// Parse one objective name (punctuation-insensitive, common aliases).
+pub fn parse_objective(s: &str) -> Result<Objective> {
+    match s.trim().to_ascii_lowercase().replace(['-', '_'], "").as_str() {
+        "bandwidth" | "bw" => Ok(Objective::Bandwidth),
+        "sramaccesses" | "sram" | "accesses" => Ok(Objective::SramAccesses),
+        "energy" => Ok(Objective::Energy),
+        "utilization" | "util" | "macutilization" => Ok(Objective::Utilization),
+        other => bail!("unknown objective '{other}' (bandwidth|sram-accesses|energy|utilization)"),
+    }
+}
+
+/// Parse a comma-separated objective list; duplicates collapse, order is
+/// kept.
+pub fn parse_objectives(list: &str) -> Result<Vec<Objective>> {
+    let mut out: Vec<Objective> = Vec::new();
+    for part in list.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let o = parse_objective(part)?;
+        if !out.contains(&o) {
+            out.push(o);
+        }
+    }
+    if out.is_empty() {
+        return Err(anyhow!("objective list '{list}' is empty"));
+    }
+    Ok(out)
+}
+
+/// The explorer's objective vector for one candidate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Objectives {
+    /// Activation traffic over the interconnect (elements).
+    pub bandwidth: f64,
+    /// SRAM array accesses (elements).
+    pub sram_accesses: f64,
+    /// Energy estimate (picojoules).
+    pub energy_pj: f64,
+    /// MAC-array utilization in [0, 1].
+    pub mac_utilization: f64,
+}
+
+impl Objectives {
+    /// Derive the vector from simulated-or-derived counters.
+    pub fn from_stats(stats: &SimStats, p_macs: usize) -> Objectives {
+        Objectives {
+            bandwidth: stats.activation_traffic() as f64,
+            sram_accesses: stats.sram_accesses as f64,
+            energy_pj: stats.energy_pj,
+            mac_utilization: stats.mac_utilization(p_macs),
+        }
+    }
+
+    /// The objective's value under minimization (utilization negated, so
+    /// "smaller is better" holds uniformly).
+    pub fn min_value(&self, o: Objective) -> f64 {
+        match o {
+            Objective::Bandwidth => self.bandwidth,
+            Objective::SramAccesses => self.sram_accesses,
+            Objective::Energy => self.energy_pj,
+            Objective::Utilization => -self.mac_utilization,
+        }
+    }
+}
+
+/// `a` dominates `b` over `objectives`: no objective worse, at least one
+/// strictly better. Equal vectors dominate neither way.
+pub fn dominates(a: &Objectives, b: &Objectives, objectives: &[Objective]) -> bool {
+    let mut strictly = false;
+    for &o in objectives {
+        let (va, vb) = (a.min_value(o), b.min_value(o));
+        if va > vb {
+            return false;
+        }
+        if va < vb {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Indices of the non-dominated points, preserving input order (the
+/// explorer's determinism contract rides on this).
+pub fn pareto_indices(points: &[Objectives], objectives: &[Objective]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            !points
+                .iter()
+                .enumerate()
+                .any(|(j, p)| j != i && dominates(p, &points[i], objectives))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj(bw: f64, sram: f64, e: f64, util: f64) -> Objectives {
+        Objectives { bandwidth: bw, sram_accesses: sram, energy_pj: e, mac_utilization: util }
+    }
+
+    #[test]
+    fn dominance_basics() {
+        let all = &Objective::ALL[..];
+        let a = obj(1.0, 1.0, 1.0, 0.9);
+        let b = obj(2.0, 1.0, 1.0, 0.9);
+        assert!(dominates(&a, &b, all));
+        assert!(!dominates(&b, &a, all));
+        // equal vectors: neither dominates
+        assert!(!dominates(&a, &a, all));
+        // utilization is maximized
+        let c = obj(1.0, 1.0, 1.0, 0.5);
+        assert!(dominates(&a, &c, all));
+        // trade-off: incomparable
+        let d = obj(0.5, 9.0, 1.0, 0.9);
+        assert!(!dominates(&a, &d, all) && !dominates(&d, &a, all));
+    }
+
+    #[test]
+    fn objective_mask_changes_dominance() {
+        let a = obj(1.0, 9.0, 1.0, 0.9);
+        let b = obj(2.0, 1.0, 1.0, 0.9);
+        assert!(!dominates(&a, &b, &Objective::ALL));
+        assert!(dominates(&a, &b, &[Objective::Bandwidth]));
+        assert!(dominates(&b, &a, &[Objective::SramAccesses]));
+    }
+
+    #[test]
+    fn frontier_keeps_nondominated_in_order() {
+        let pts = vec![
+            obj(3.0, 3.0, 3.0, 0.5), // dominated by the next two
+            obj(1.0, 2.0, 2.0, 0.5),
+            obj(2.0, 1.0, 1.0, 0.5),
+            obj(1.0, 2.0, 2.0, 0.5), // duplicate of [1]: kept (no strict win)
+        ];
+        assert_eq!(pareto_indices(&pts, &Objective::ALL), vec![1, 2, 3]);
+        assert!(pareto_indices(&[], &Objective::ALL).is_empty());
+    }
+
+    #[test]
+    fn parse_objective_aliases() {
+        assert_eq!(parse_objective("BW").unwrap(), Objective::Bandwidth);
+        assert_eq!(parse_objective("sram-accesses").unwrap(), Objective::SramAccesses);
+        assert_eq!(parse_objective("mac_utilization").unwrap(), Objective::Utilization);
+        assert!(parse_objective("latency").is_err());
+        let list = parse_objectives("bandwidth, energy,bw").unwrap();
+        assert_eq!(list, vec![Objective::Bandwidth, Objective::Energy]);
+        assert!(parse_objectives(" , ").is_err());
+    }
+
+    #[test]
+    fn from_stats_maps_counters() {
+        let s = SimStats {
+            input_reads: 70,
+            psum_reads: 10,
+            psum_writes: 20,
+            sram_accesses: 200,
+            energy_pj: 1234.5,
+            macs: 512 * 50,
+            compute_cycles: 100,
+            ..Default::default()
+        };
+        let o = Objectives::from_stats(&s, 512);
+        assert_eq!(o.bandwidth, 100.0);
+        assert_eq!(o.sram_accesses, 200.0);
+        assert_eq!(o.energy_pj, 1234.5);
+        assert!((o.mac_utilization - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,362 @@
+//! The design space: hardware/policy axes, their deterministic
+//! enumeration, and the serve-protocol spec parser.
+//!
+//! A [`DesignPoint`] is one hardware/policy candidate — MAC budget `P`,
+//! on-chip SRAM capacity, partitioning strategy, controller mode. The
+//! per-layer partition parameters `(m, n)` and stripe height `t` are not
+//! axes: they are chosen *within* each point (strategy under eq. 1 for
+//! the channels, tallest-fitting stripe under the SRAM budget for the
+//! plane), exactly as a compiler would configure a fixed chip.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::paper;
+use crate::analytics::partition::Strategy;
+use crate::models::Network;
+use crate::util::json::Json;
+
+use super::budget::{parse_sram, SramBudget, DEFAULT_SRAM_BUDGETS};
+use super::pareto::{parse_objective, Objective};
+
+/// One hardware/policy candidate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DesignPoint {
+    /// MAC budget `P` (eq. 1's constraint bound).
+    pub p_macs: usize,
+    /// On-chip SRAM capacity.
+    pub sram: SramBudget,
+    /// Per-layer channel-partitioning policy.
+    pub strategy: Strategy,
+    /// Memory-controller capability.
+    pub mode: ControllerMode,
+}
+
+impl DesignPoint {
+    /// Human/filterable key, e.g. `P1024|sram:unlimited|optimal|active`.
+    pub fn key(&self) -> String {
+        format!(
+            "P{}|sram:{}|{}|{}",
+            self.p_macs,
+            self.sram.label(),
+            self.strategy.slug(),
+            self.mode.label()
+        )
+    }
+}
+
+/// A declarative exploration space: the Cartesian product of four
+/// hardware/policy axes over a set of networks, plus the objective mask
+/// the Pareto frontier is computed over.
+///
+/// ```
+/// use psim::dse::space::ExploreSpec;
+/// use psim::models::zoo;
+///
+/// let spec = ExploreSpec::new(vec![zoo::alexnet()]);
+/// // 6 MAC budgets x 4 SRAM budgets x 4 strategies x 2 modes
+/// assert_eq!(spec.points_per_network(), 192);
+/// assert_eq!(spec.points().len(), 192);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ExploreSpec {
+    /// Networks to explore (resolved descriptors, not names).
+    pub networks: Vec<Network>,
+    /// MAC budgets `P`.
+    pub mac_budgets: Vec<usize>,
+    /// On-chip SRAM capacities.
+    pub sram_budgets: Vec<SramBudget>,
+    /// Partitioning strategies.
+    pub strategies: Vec<Strategy>,
+    /// Memory-controller modes.
+    pub modes: Vec<ControllerMode>,
+    /// Objectives the frontier is computed over (default: all four).
+    pub objectives: Vec<Objective>,
+}
+
+impl ExploreSpec {
+    /// A spec over explicit networks with default axes: the paper's six
+    /// Table II MAC budgets, [`DEFAULT_SRAM_BUDGETS`], the four Table I
+    /// strategies, both controller modes, all four objectives.
+    pub fn new(networks: Vec<Network>) -> ExploreSpec {
+        ExploreSpec {
+            networks,
+            mac_budgets: paper::TABLE2_MACS.to_vec(),
+            sram_budgets: DEFAULT_SRAM_BUDGETS.to_vec(),
+            strategies: Strategy::TABLE1.to_vec(),
+            modes: ControllerMode::ALL.to_vec(),
+            objectives: Objective::ALL.to_vec(),
+        }
+    }
+
+    /// The default space over the paper's eight networks.
+    pub fn paper_space() -> ExploreSpec {
+        ExploreSpec::new(crate::models::zoo::paper_networks())
+    }
+
+    pub fn with_macs(mut self, macs: Vec<usize>) -> ExploreSpec {
+        self.mac_budgets = macs;
+        self
+    }
+
+    pub fn with_sram(mut self, sram: Vec<SramBudget>) -> ExploreSpec {
+        self.sram_budgets = sram;
+        self
+    }
+
+    pub fn with_strategies(mut self, strategies: Vec<Strategy>) -> ExploreSpec {
+        self.strategies = strategies;
+        self
+    }
+
+    pub fn with_modes(mut self, modes: Vec<ControllerMode>) -> ExploreSpec {
+        self.modes = modes;
+        self
+    }
+
+    pub fn with_objectives(mut self, objectives: Vec<Objective>) -> ExploreSpec {
+        self.objectives = objectives;
+        self
+    }
+
+    /// Design points in enumeration order (MACs, then SRAM, then
+    /// strategy, then mode) — the order frontier output follows.
+    pub fn points(&self) -> Vec<DesignPoint> {
+        let mut out = Vec::with_capacity(self.points_per_network());
+        for &p_macs in &self.mac_budgets {
+            for &sram in &self.sram_budgets {
+                for &strategy in &self.strategies {
+                    for &mode in &self.modes {
+                        out.push(DesignPoint { p_macs, sram, strategy, mode });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Candidates per exploration scope.
+    pub fn points_per_network(&self) -> usize {
+        self.mac_budgets.len() * self.sram_budgets.len() * self.strategies.len() * self.modes.len()
+    }
+
+    /// Total candidates the explorer will consider: one scope per network
+    /// plus, with several networks, the whole-zoo aggregate scope.
+    pub fn candidate_count(&self) -> usize {
+        let scopes = self.networks.len() + usize::from(self.networks.len() > 1);
+        scopes * self.points_per_network()
+    }
+
+    /// Every axis non-empty and numerically sane.
+    pub fn validate(&self) -> Result<()> {
+        if self.networks.is_empty() {
+            bail!("explore spec has no networks");
+        }
+        if self.mac_budgets.is_empty() || self.mac_budgets.contains(&0) {
+            bail!("explore spec needs at least one MAC budget, all > 0");
+        }
+        if self.sram_budgets.is_empty() {
+            bail!("explore spec has no SRAM budgets");
+        }
+        if self.sram_budgets.iter().any(|s| s.elems() == Some(0)) {
+            bail!("SRAM budgets must be > 0 elements");
+        }
+        if self.strategies.is_empty() {
+            bail!("explore spec has no strategies");
+        }
+        if self.modes.is_empty() {
+            bail!("explore spec has no controller modes");
+        }
+        if self.objectives.is_empty() {
+            bail!("explore spec has no objectives");
+        }
+        Ok(())
+    }
+
+    /// Build a spec from a JSON request object (the serve protocol's
+    /// `{"cmd":"explore", ...}` body). Every axis is optional and
+    /// defaults to the paper space; unknown keys are rejected.
+    ///
+    /// Axis keys: `networks` (names), `macs`, `sram` (element counts or
+    /// strings like `"64k"`/`"unlimited"`), `strategies`, `modes`,
+    /// `objectives` (plus the protocol's `cmd` and `workers`).
+    pub fn from_json(msg: &Json) -> Result<ExploreSpec> {
+        const KNOWN: [&str; 8] =
+            ["cmd", "networks", "macs", "sram", "strategies", "modes", "objectives", "workers"];
+        if let Json::Obj(map) = msg {
+            for key in map.keys() {
+                if !KNOWN.contains(&key.as_str()) {
+                    bail!("unknown explore key '{key}' (known: {KNOWN:?})");
+                }
+            }
+        }
+        let mut spec = ExploreSpec::paper_space();
+        if let Some(nets) = msg.get("networks") {
+            let names = nets.as_arr().ok_or_else(|| anyhow!("'networks' must be an array"))?;
+            spec.networks = names
+                .iter()
+                .map(|n| {
+                    let name =
+                        n.as_str().ok_or_else(|| anyhow!("'networks' entries must be strings"))?;
+                    crate::models::zoo::by_name(name)
+                        .ok_or_else(|| anyhow!("unknown network '{name}' — see `psim networks`"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(macs) = msg.get("macs") {
+            let arr = macs.as_arr().ok_or_else(|| anyhow!("'macs' must be an array"))?;
+            spec.mac_budgets = arr
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| anyhow!("'macs' entries must be non-negative integers"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(sram) = msg.get("sram") {
+            let arr = sram.as_arr().ok_or_else(|| anyhow!("'sram' must be an array"))?;
+            spec.sram_budgets = arr
+                .iter()
+                .map(|v| match v {
+                    Json::Num(_) => v
+                        .as_usize()
+                        .map(|e| SramBudget::Elems(e as u64))
+                        .ok_or_else(|| anyhow!("'sram' numbers must be non-negative integers")),
+                    Json::Str(s) => parse_sram(s),
+                    _ => Err(anyhow!("'sram' entries must be numbers or strings")),
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(strats) = msg.get("strategies") {
+            let arr = strats.as_arr().ok_or_else(|| anyhow!("'strategies' must be an array"))?;
+            spec.strategies = arr
+                .iter()
+                .map(|v| {
+                    let s =
+                        v.as_str().ok_or_else(|| anyhow!("'strategies' entries must be strings"))?;
+                    crate::config::accel::parse_strategy(s)
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(modes) = msg.get("modes") {
+            let arr = modes.as_arr().ok_or_else(|| anyhow!("'modes' must be an array"))?;
+            spec.modes = arr
+                .iter()
+                .map(|v| {
+                    let s = v.as_str().ok_or_else(|| anyhow!("'modes' entries must be strings"))?;
+                    crate::config::accel::parse_mode(s)
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(objs) = msg.get("objectives") {
+            let arr = objs.as_arr().ok_or_else(|| anyhow!("'objectives' must be an array"))?;
+            spec.objectives = arr
+                .iter()
+                .map(|v| {
+                    let s =
+                        v.as_str().ok_or_else(|| anyhow!("'objectives' entries must be strings"))?;
+                    parse_objective(s)
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+impl Default for ExploreSpec {
+    fn default() -> ExploreSpec {
+        ExploreSpec::paper_space()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn points_enumerate_in_axis_order() {
+        let spec = ExploreSpec::new(vec![zoo::alexnet()])
+            .with_macs(vec![512, 2048])
+            .with_sram(vec![SramBudget::Unlimited, SramBudget::Elems(65536)])
+            .with_strategies(vec![Strategy::Optimal])
+            .with_modes(vec![ControllerMode::Passive, ControllerMode::Active]);
+        let keys: Vec<String> = spec.points().iter().map(|p| p.key()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "P512|sram:unlimited|optimal|passive",
+                "P512|sram:unlimited|optimal|active",
+                "P512|sram:65536|optimal|passive",
+                "P512|sram:65536|optimal|active",
+                "P2048|sram:unlimited|optimal|passive",
+                "P2048|sram:unlimited|optimal|active",
+                "P2048|sram:65536|optimal|passive",
+                "P2048|sram:65536|optimal|active",
+            ]
+        );
+        assert_eq!(spec.points_per_network(), 8);
+        // single network: no zoo scope
+        assert_eq!(spec.candidate_count(), 8);
+    }
+
+    #[test]
+    fn zoo_scope_counts_once_extra() {
+        let spec = ExploreSpec::paper_space();
+        assert_eq!(spec.points_per_network(), 6 * 4 * 4 * 2);
+        assert_eq!(spec.candidate_count(), (8 + 1) * 192);
+    }
+
+    #[test]
+    fn from_json_defaults_and_overrides() {
+        let msg = Json::parse(
+            r#"{"cmd":"explore","networks":["AlexNet"],"macs":[1024],
+                "sram":["unlimited",65536,"64k"],"strategies":["optimal"],
+                "modes":["active"],"objectives":["bandwidth","energy"]}"#,
+        )
+        .unwrap();
+        let spec = ExploreSpec::from_json(&msg).unwrap();
+        assert_eq!(spec.networks.len(), 1);
+        assert_eq!(spec.mac_budgets, vec![1024]);
+        assert_eq!(
+            spec.sram_budgets,
+            vec![SramBudget::Unlimited, SramBudget::Elems(65536), SramBudget::Elems(65536)]
+        );
+        assert_eq!(spec.objectives, vec![Objective::Bandwidth, Objective::Energy]);
+
+        let defaults =
+            ExploreSpec::from_json(&Json::parse(r#"{"cmd":"explore"}"#).unwrap()).unwrap();
+        assert_eq!(defaults.points_per_network(), 192);
+        assert_eq!(defaults.objectives, Objective::ALL.to_vec());
+    }
+
+    #[test]
+    fn from_json_rejects_bad_input() {
+        for bad in [
+            r#"{"networks":["NoSuchNet"]}"#,
+            r#"{"macs":[0]}"#,
+            r#"{"sram":[0]}"#,
+            r#"{"sram":[true]}"#,
+            r#"{"sram":"64k"}"#,
+            r#"{"objectives":["latency"]}"#,
+            r#"{"objectives":[]}"#,
+            r#"{"cmd":"explore","mac":[512]}"#,
+        ] {
+            let msg = Json::parse(bad).unwrap();
+            assert!(ExploreSpec::from_json(&msg).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn validate_catches_empty_axes() {
+        assert!(ExploreSpec::new(vec![]).validate().is_err());
+        assert!(ExploreSpec::new(vec![zoo::alexnet()]).with_macs(vec![]).validate().is_err());
+        assert!(ExploreSpec::new(vec![zoo::alexnet()])
+            .with_sram(vec![SramBudget::Elems(0)])
+            .validate()
+            .is_err());
+        assert!(ExploreSpec::new(vec![zoo::alexnet()]).with_objectives(vec![]).validate().is_err());
+        assert!(ExploreSpec::paper_space().validate().is_ok());
+    }
+}

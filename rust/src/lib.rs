@@ -15,6 +15,9 @@
 //!   AXI-like interconnect with sideband commands, passive/active memory
 //!   controller) that validates the analytical model transaction-by-
 //!   transaction.
+//! * [`dse`] — the design-space explorer: Pareto frontiers over MAC
+//!   budget × SRAM capacity × strategy × controller mode, with
+//!   admissible-bound pruning over the grid engine's memo cache.
 //! * [`coordinator`] + [`runtime`] — a Rust execution stack that runs the
 //!   tiled convolutions *functionally* through AOT-compiled XLA artifacts
 //!   (JAX/Pallas at build time, PJRT at run time; Python never on the
@@ -29,6 +32,7 @@ pub mod analytics;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod dse;
 pub mod models;
 pub mod report;
 pub mod runtime;

@@ -57,7 +57,8 @@ pub fn mnasnet1_0() -> Network {
     for &(exp, k, s, cout, n) in stacks {
         for i in 0..n {
             let stride = if i == 0 { s } else { 1 };
-            res = inverted_residual(&mut layers, &format!("ir{blk}"), res, cin, cout, exp, k, stride);
+            res =
+                inverted_residual(&mut layers, &format!("ir{blk}"), res, cin, cout, exp, k, stride);
             cin = cout;
             blk += 1;
         }

@@ -1,0 +1,69 @@
+//! Frontier rendering: the `psim explore --table` markdown table and the
+//! one-line run summary shared by the CLI and serve logs.
+
+use crate::dse::explore::ExploreResult;
+use crate::util::tablefmt::{mact, pct, Table};
+
+/// One row per frontier point: scope, design point, all four objectives.
+pub fn frontier_table(result: &ExploreResult) -> Table {
+    let mut t = Table::new(vec![
+        "network",
+        "P",
+        "SRAM",
+        "strategy",
+        "mode",
+        "BW (M)",
+        "SRAM acc (M)",
+        "energy (mJ)",
+        "MAC util",
+    ]);
+    for fp in &result.frontier {
+        t.row(vec![
+            fp.scope.clone(),
+            fp.point.p_macs.to_string(),
+            fp.point.sram.label(),
+            fp.point.strategy.slug().to_string(),
+            fp.point.mode.label().to_string(),
+            mact(fp.objectives.bandwidth, 2),
+            mact(fp.objectives.sram_accesses, 2),
+            format!("{:.3}", fp.objectives.energy_pj / 1e9),
+            pct(fp.objectives.mac_utilization),
+        ]);
+    }
+    t
+}
+
+/// One-line run summary (stderr / serve shutdown line).
+pub fn summarize(result: &ExploreResult) -> String {
+    format!(
+        "explore: {} candidates, {} evaluated, {} pruned, {} infeasible; frontier {} points",
+        result.candidates,
+        result.evaluated,
+        result.pruned.len(),
+        result.infeasible,
+        result.frontier.len()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::grid::GridEngine;
+    use crate::dse::explore::explore;
+    use crate::dse::space::ExploreSpec;
+    use crate::models::zoo;
+
+    #[test]
+    fn table_and_summary_render() {
+        let spec = ExploreSpec::new(vec![zoo::alexnet()]).with_macs(vec![512, 2048]);
+        let result = explore(&GridEngine::new(), &spec, 2);
+        let t = frontier_table(&result);
+        assert_eq!(t.n_rows(), result.frontier.len());
+        let md = t.to_markdown();
+        assert!(md.contains("AlexNet"));
+        assert!(md.contains("MAC util"));
+        let s = summarize(&result);
+        assert!(s.starts_with("explore: "));
+        assert!(s.contains("frontier"));
+    }
+}

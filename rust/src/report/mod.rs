@@ -7,7 +7,9 @@
 //! * [`fig2`] — % saving of the active controller (Fig. 2), markdown
 //!   series + CSV + an ASCII chart for terminals.
 //! * [`compare`] — cell-by-cell deviation against the published numbers.
+//! * [`frontier`] — Pareto-frontier table/summary for `psim explore`.
 
 pub mod compare;
 pub mod fig2;
+pub mod frontier;
 pub mod tables;

@@ -57,8 +57,9 @@ impl ArtifactDir {
     /// Load and validate `dir/manifest.json`.
     pub fn open(dir: &Path) -> Result<ArtifactDir> {
         let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {} (run `make artifacts`)", manifest_path.display()))?;
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("reading {} (run `make artifacts`)", manifest_path.display())
+        })?;
         let j = Json::parse(&text).context("parsing manifest.json")?;
         let fingerprint = j
             .get("fingerprint")

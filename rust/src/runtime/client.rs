@@ -29,7 +29,14 @@ impl Runtime {
     /// Create a CPU PJRT client over an artifact directory.
     pub fn new(artifacts: ArtifactDir) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, artifacts, cache: HashMap::new(), execs: 0, exec_nanos: 0, compile_nanos: 0 })
+        Ok(Runtime {
+            client,
+            artifacts,
+            cache: HashMap::new(),
+            execs: 0,
+            exec_nanos: 0,
+            compile_nanos: 0,
+        })
     }
 
     /// Open `./artifacts` (or `$PSIM_ARTIFACTS`).

@@ -31,7 +31,14 @@ impl MacArray {
 
     /// Useful MACs in one iteration: every output position accumulates
     /// `K^2 * m_eff` products for each of `n_eff` output maps.
-    pub fn iteration_macs(&self, wo: usize, ho: usize, k: usize, m_eff: usize, n_eff: usize) -> u64 {
+    pub fn iteration_macs(
+        &self,
+        wo: usize,
+        ho: usize,
+        k: usize,
+        m_eff: usize,
+        n_eff: usize,
+    ) -> u64 {
         (wo * ho) as u64 * (k * k * m_eff * n_eff) as u64
     }
 

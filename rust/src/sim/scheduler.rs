@@ -193,14 +193,27 @@ pub fn simulate_layer_with(layer: &ConvLayer, cfg: &SimConfig, part: Partition) 
     if sim_groups != layer.groups {
         stats.scale(layer.groups as u64 / sim_groups as u64);
     }
+    // Surface ring-buffer truncation only when tracing is on: a disabled
+    // trace "drops" every event by design, which is not a signal.
+    if cfg.trace_cap > 0 {
+        stats.trace_dropped = trace.dropped();
+    }
     stats.energy_pj = cfg.energy.energy_pj(&stats);
     SimResult { stats, partition: Some(part), trace }
 }
 
 /// Simulate every layer of a network and merge the counters.
 pub fn simulate_network(net: &Network, cfg: &SimConfig) -> SimResult {
+    simulate_network_detailed(net, cfg).0
+}
+
+/// Like [`simulate_network`], but also return each layer's individual
+/// result — `psim simulate --trace` shows per-layer traces without
+/// paying for a second full simulation pass.
+pub fn simulate_network_detailed(net: &Network, cfg: &SimConfig) -> (SimResult, Vec<SimResult>) {
     let mut stats = SimStats::default();
     let mut bus_cycles = 0u64;
+    let mut layers = Vec::with_capacity(net.layers.len());
     for layer in &net.layers {
         let r = simulate_layer(layer, cfg);
         bus_cycles += r.stats.bus_cycles;
@@ -210,10 +223,11 @@ pub fn simulate_network(net: &Network, cfg: &SimConfig) -> SimResult {
         // max()ed against SRAM occupancy inside — keep the sum.
         s.bus_cycles = 0;
         stats.merge(&s);
+        layers.push(r);
     }
     stats.bus_cycles = bus_cycles;
     stats.energy_pj = cfg.energy.energy_pj(&stats);
-    SimResult { stats, partition: None, trace: Trace::off() }
+    (SimResult { stats, partition: None, trace: Trace::off() }, layers)
 }
 
 #[cfg(test)]
@@ -325,6 +339,24 @@ mod tests {
         }
         assert_eq!(whole.stats.activation_traffic(), manual);
         assert_eq!(whole.stats.macs, net.total_macs());
+        // the detailed variant merges to the same totals and keeps one
+        // result per layer (the --trace path rides on this)
+        let (whole2, layers) = simulate_network_detailed(&net, &cfg);
+        assert_eq!(whole2.stats, whole.stats);
+        assert_eq!(layers.len(), net.layers.len());
+    }
+
+    #[test]
+    fn trace_dropped_surfaces_in_stats() {
+        let l = conv3();
+        let mut cfg = SimConfig::new(512, ControllerMode::Passive, Strategy::Optimal);
+        cfg.trace_cap = 4;
+        let r = simulate_layer(&l, &cfg);
+        assert_eq!(r.stats.trace_dropped, r.trace.dropped());
+        assert!(r.stats.trace_dropped > 0, "a 4-slot ring must overflow here");
+        // tracing off: nothing is "lost", so nothing is reported
+        let cfg_off = SimConfig::new(512, ControllerMode::Passive, Strategy::Optimal);
+        assert_eq!(simulate_layer(&l, &cfg_off).stats.trace_dropped, 0);
     }
 
     #[test]

@@ -34,6 +34,11 @@ pub struct SimStats {
     pub bus_cycles: u64,
     /// SRAM accesses (reads + writes, incl. controller-internal ones).
     pub sram_accesses: u64,
+    /// Trace events evicted by the bounded ring buffer (0 when tracing is
+    /// disabled — an off trace loses nothing worth reporting). Surfaced
+    /// so `psim simulate --trace` shows truncation instead of silently
+    /// capping.
+    pub trace_dropped: u64,
     /// Energy estimate in picojoules.
     pub energy_pj: f64,
 }
@@ -83,6 +88,7 @@ impl SimStats {
         self.compute_cycles *= f;
         self.bus_cycles *= f;
         self.sram_accesses *= f;
+        self.trace_dropped *= f;
     }
 
     /// Merge another run's counters into this one.
@@ -101,6 +107,7 @@ impl SimStats {
         self.compute_cycles += other.compute_cycles;
         self.bus_cycles += other.bus_cycles;
         self.sram_accesses += other.sram_accesses;
+        self.trace_dropped += other.trace_dropped;
         self.energy_pj += other.energy_pj;
     }
 }
@@ -111,7 +118,8 @@ mod tests {
 
     #[test]
     fn merge_adds_counters() {
-        let mut a = SimStats { input_reads: 10, psum_writes: 5, energy_pj: 1.5, ..Default::default() };
+        let mut a =
+            SimStats { input_reads: 10, psum_writes: 5, energy_pj: 1.5, ..Default::default() };
         let b = SimStats { input_reads: 3, psum_reads: 2, energy_pj: 0.5, ..Default::default() };
         a.merge(&b);
         assert_eq!(a.input_reads, 13);

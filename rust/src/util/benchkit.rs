@@ -58,7 +58,12 @@ impl Bench {
     }
 
     /// Time `f` and report throughput as `elements`/iteration/second.
-    pub fn run_throughput<T>(&mut self, name: &str, elements: u64, mut f: impl FnMut() -> T) -> &Stats {
+    pub fn run_throughput<T>(
+        &mut self,
+        name: &str,
+        elements: u64,
+        mut f: impl FnMut() -> T,
+    ) -> &Stats {
         self.run_with_elements(name, Some(elements), &mut f)
     }
 

@@ -83,8 +83,9 @@ fn fig2_savings_structure() {
 fn optimal_dominates_heuristics() {
     for net in zoo::paper_networks() {
         for p in [512usize, 2048, 16384] {
-            let search = network_bandwidth(&net, p, Strategy::OptimalSearch, ControllerMode::Passive)
-                .total();
+            let search =
+                network_bandwidth(&net, p, Strategy::OptimalSearch, ControllerMode::Passive)
+                    .total();
             for s in [Strategy::MaxInput, Strategy::MaxOutput, Strategy::EqualMacs] {
                 let other = network_bandwidth(&net, p, s, ControllerMode::Passive).total();
                 assert!(
@@ -111,8 +112,9 @@ fn optimal_dominates_heuristics() {
 fn bandwidth_approaches_floor_with_macs() {
     for net in zoo::paper_networks() {
         let floor = net.min_bandwidth() as f64;
-        let huge = network_bandwidth(&net, 1 << 28, Strategy::OptimalSearch, ControllerMode::Passive)
-            .total();
+        let huge =
+            network_bandwidth(&net, 1 << 28, Strategy::OptimalSearch, ControllerMode::Passive)
+                .total();
         assert!(
             (huge - floor) / floor < 0.001,
             "{}: {huge} does not approach floor {floor}",

@@ -51,7 +51,8 @@ fn concurrent_load_all_answered_and_batched() {
     svc.infer(Tensor::random(&[3, 32, 32], 0, 1.0)).unwrap();
 
     let n = 48usize;
-    let rxs: Vec<_> = (0..n).map(|i| svc.submit(Tensor::random(&[3, 32, 32], i as u64, 1.0))).collect();
+    let rxs: Vec<_> =
+        (0..n).map(|i| svc.submit(Tensor::random(&[3, 32, 32], i as u64, 1.0))).collect();
     let mut got = 0;
     for rx in rxs {
         let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");

@@ -49,8 +49,8 @@ fn prop_sim_matches_model_on_random_layers() {
         |(layer, p)| {
             for mode in ControllerMode::ALL {
                 let part = partition_layer(layer, *p, Strategy::Optimal, mode);
-                let sim = simulate_layer_with(layer, &SimConfig::new(*p, mode, Strategy::Optimal), part)
-                    .stats;
+                let cfg = SimConfig::new(*p, mode, Strategy::Optimal);
+                let sim = simulate_layer_with(layer, &cfg, part).stats;
                 let model = layer_bandwidth(layer, part.m, part.n, mode);
                 prop_assert!(
                     sim.activation_traffic() as f64 == model.total(),

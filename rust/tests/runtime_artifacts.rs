@@ -17,8 +17,14 @@ fn runtime_or_skip() -> Option<Runtime> {
 #[test]
 fn manifest_lists_expected_entries() {
     let Some(rt) = runtime_or_skip() else { return };
-    for name in ["psimnet_b1", "psimnet_b8", "conv_step_l0", "conv_step_l1", "conv_step_l2", "active_update"]
-    {
+    for name in [
+        "psimnet_b1",
+        "psimnet_b8",
+        "conv_step_l0",
+        "conv_step_l1",
+        "conv_step_l2",
+        "active_update",
+    ] {
         assert!(rt.artifacts().entry(name).is_some(), "missing {name}");
     }
 }

@@ -86,9 +86,8 @@ fn energy_tracks_traffic_direction() {
     let net = zoo::resnet18();
     let mut prev = f64::INFINITY;
     for p in [512usize, 2048, 8192] {
-        let sim =
-            simulate_network(&net, &SimConfig::new(p, ControllerMode::Active, Strategy::OptimalSearch))
-                .stats;
+        let cfg = SimConfig::new(p, ControllerMode::Active, Strategy::OptimalSearch);
+        let sim = simulate_network(&net, &cfg).stats;
         assert!(sim.energy_pj < prev, "energy rose at P={p}");
         prev = sim.energy_pj;
     }
