@@ -79,8 +79,8 @@ pub fn layer_bandwidth(layer: &ConvLayer, m: usize, n: usize, mode: ControllerMo
     let g = layer.groups as f64;
 
     // Iteration counts within a group.
-    let out_iters = (ng + n - 1) / n; // N_g / n, ceil
-    let psum_iters = (mg + m - 1) / m; // M_g / m, ceil
+    let out_iters = ng.div_ceil(n); // N_g / n, ceil
+    let psum_iters = mg.div_ceil(m); // M_g / m, ceil
 
     let wi_hi_mg = (layer.wi * layer.hi * mg) as f64;
     let wo_ho_ng = (layer.wo() * layer.ho() * ng) as f64;

@@ -1,0 +1,366 @@
+//! Inter-layer fusion: a first-order traffic model of *fused layer
+//! chains*, extending the paper's per-layer analysis (eqs. 2–3) across
+//! layer boundaries.
+//!
+//! The paper models each convolution in isolation: every intermediate
+//! feature map is written to SRAM over the interconnect and read back by
+//! the next layer. If `d` consecutive layers are instead evaluated in
+//! fused spatial tiles — the direction of Shao et al. (interlayer
+//! feature-map compression) and Stoutchinin et al. (optimal CNN
+//! scheduling) — intermediates never cross the interconnect at all:
+//!
+//! * the final output plane is processed in horizontal stripes of height
+//!   `t` (full width), like [`super::spatial`];
+//! * each stripe's receptive field is back-propagated through the chain
+//!   (stride/kernel-aware halo growth, [`stripe_spans`]) to find the rows
+//!   of every intermediate plane — and of the chain input — it needs;
+//! * interconnect traffic is charged only for the chain's first input
+//!   (re-read `ceil(N_1/n_1)` times per stripe, eq. 2 applied to the
+//!   stripe's rows), the last layer's psum protocol (eq. 3 or its active
+//!   variant — stripe-invariant), and per-layer **weight reloads per
+//!   stripe** (each stripe sweeps every `(co, ci)` tile of every layer);
+//! * intermediates are free on the interconnect but must be *resident*:
+//!   [`chain_working_set`] sizes the live stripe of every plane so an
+//!   SRAM budget can veto a chain height ([`max_chain_stripe`]).
+//!
+//! A depth-1 chain with a single stripe degenerates to the per-layer
+//! model: the input span covers the whole (used) plane, there is one
+//! weight load, and the psum term is exactly eq. 3. The one caveat is a
+//! floor-cropped strided head (`pad < (Hi + 2·pad − K) mod stride`):
+//! eq. 2 charges the full `Wi·Hi` plane including tail rows the
+//! convolution never touches, while the receptive-field model counts
+//! only touched rows. The sweep engine therefore routes singleton chains
+//! through [`layer_bandwidth`](super::bandwidth::layer_bandwidth)
+//! directly, keeping depth-1 sweeps byte-identical to the unfused model.
+
+use std::ops::Range;
+
+use crate::models::{ConvLayer, Network};
+
+use super::bandwidth::ControllerMode;
+use super::partition::Partition;
+
+/// Whether `next` can be fused directly after `prev`: the planes must
+/// chain exactly (no pooling/reshape in between) and the channel counts
+/// must agree.
+pub fn can_chain(prev: &ConvLayer, next: &ConvLayer) -> bool {
+    prev.wo() == next.wi && prev.ho() == next.hi && prev.n == next.m
+}
+
+/// Greedy maximal fusion chains of length `<= depth`, left to right, as
+/// index ranges into `net.layers`. Every layer belongs to exactly one
+/// chain; `depth <= 1` yields all singletons (the unfused model).
+pub fn chains(net: &Network, depth: usize) -> Vec<Range<usize>> {
+    let depth = depth.max(1);
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < net.layers.len() {
+        let mut end = start + 1;
+        while end < net.layers.len()
+            && end - start < depth
+            && can_chain(&net.layers[end - 1], &net.layers[end])
+        {
+            end += 1;
+        }
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// The input-row interval (inclusive, clamped to the physical plane)
+/// that the contiguous output rows `[out_lo, out_hi]` of `layer` need:
+/// `[out_lo·s − p, out_hi·s + K − 1 − p]` ∩ `[0, Hi − 1]`.
+pub fn input_row_span(layer: &ConvLayer, out_lo: usize, out_hi: usize) -> (usize, usize) {
+    debug_assert!(out_lo <= out_hi && out_hi < layer.ho());
+    let last = layer.hi as i64 - 1;
+    let lo = ((out_lo * layer.stride) as i64 - layer.pad as i64).clamp(0, last);
+    let hi = ((out_hi * layer.stride + layer.k - 1) as i64 - layer.pad as i64).clamp(lo, last);
+    (lo as usize, hi as usize)
+}
+
+/// Rows in an inclusive span.
+pub fn span_rows(span: (usize, usize)) -> usize {
+    span.1 - span.0 + 1
+}
+
+/// Required row spans, per plane, for the stripe `[y0, y1]` of the
+/// chain's final output: `spans[d]` is the output stripe itself and
+/// `spans[i]` (`i < d`) the rows of layer `i`'s *input* plane — so
+/// `spans[0]` is the chain-input span. Each span is clamped to its
+/// physical plane, so halo growth saturates at plane edges.
+pub fn stripe_spans(chain: &[ConvLayer], y0: usize, y1: usize) -> Vec<(usize, usize)> {
+    let d = chain.len();
+    let mut spans = vec![(0, 0); d + 1];
+    spans[d] = (y0, y1);
+    for i in (0..d).rev() {
+        let (lo, hi) = spans[i + 1];
+        spans[i] = input_row_span(&chain[i], lo, hi);
+    }
+    spans
+}
+
+/// Interconnect traffic of one fused chain (activations + weights moved).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FusedBandwidth {
+    /// Chain-input traffic: eq. 2 applied per stripe to the first layer.
+    pub input: f64,
+    /// Last layer's psum traffic: eq. 3 (or active variant) — the stripe
+    /// split does not change the total element count.
+    pub output: f64,
+    /// Weight elements loaded: the whole chain's weights, once per stripe.
+    pub weights: f64,
+    /// Number of output stripes the chain was split into.
+    pub stripes: usize,
+}
+
+impl FusedBandwidth {
+    /// Activation traffic (the paper's tabulated unit, weights excluded).
+    pub fn activations(&self) -> f64 {
+        self.input + self.output
+    }
+
+    /// Everything that crossed the interconnect.
+    pub fn total(&self) -> f64 {
+        self.input + self.output + self.weights
+    }
+}
+
+/// Traffic of `chain` partitioned per layer as `parts`, processed in
+/// final-output stripes of height `t` (`t = Ho_d` means a single stripe).
+///
+/// All quantities are exact integer-valued `f64` arithmetic, so results
+/// are platform- and worker-count-independent.
+pub fn chain_bandwidth(
+    chain: &[ConvLayer],
+    parts: &[Partition],
+    t: usize,
+    mode: ControllerMode,
+) -> FusedBandwidth {
+    assert!(!chain.is_empty(), "empty fusion chain");
+    assert_eq!(chain.len(), parts.len(), "one partition per chain layer");
+    let first = &chain[0];
+    let last = chain.last().unwrap();
+    let ho = last.ho();
+    assert!(t >= 1 && t <= ho, "t out of range [1,{ho}]");
+
+    let stripes = ho.div_ceil(t);
+    let mut input_rows = 0usize;
+    for s in 0..stripes {
+        let y0 = s * t;
+        let y1 = (y0 + t - 1).min(ho - 1);
+        input_rows += span_rows(stripe_spans(chain, y0, y1)[0]);
+    }
+    let out_iters_1 = first.n_per_group().div_ceil(parts[0].n);
+    let input = (first.wi * input_rows * first.m_per_group()) as f64
+        * out_iters_1 as f64
+        * first.groups as f64;
+
+    let psum_iters_d = last.m_per_group().div_ceil(parts[parts.len() - 1].m);
+    let wo_ho_ng = (last.wo() * ho * last.n_per_group()) as f64;
+    let output = match mode {
+        ControllerMode::Passive => wo_ho_ng * (2 * psum_iters_d - 1) as f64 * last.groups as f64,
+        ControllerMode::Active => wo_ho_ng * psum_iters_d as f64 * last.groups as f64,
+    };
+
+    let chain_weights: u64 = chain.iter().map(|l| l.weights()).sum();
+    FusedBandwidth {
+        input,
+        output,
+        weights: (stripes as u64 * chain_weights) as f64,
+        stripes,
+    }
+}
+
+/// Live on-chip working set (elements) of the fused stripe `[y0, y1]`:
+/// the streamed chain-input tile (`m_1` channels of its row span), every
+/// intermediate plane at **full channel depth** (produced once, consumed
+/// by every pass of its consumer), the final psum stripe (`n_d` channels)
+/// and one weight tile per layer.
+pub fn chain_working_set(chain: &[ConvLayer], parts: &[Partition], y0: usize, y1: usize) -> u64 {
+    assert_eq!(chain.len(), parts.len());
+    let d = chain.len();
+    let spans = stripe_spans(chain, y0, y1);
+    let mut ws = (chain[0].wi * span_rows(spans[0]) * parts[0].m) as u64;
+    for i in 0..d - 1 {
+        ws += (chain[i].wo() * span_rows(spans[i + 1]) * chain[i].n) as u64;
+    }
+    ws += (chain[d - 1].wo() * span_rows((y0, y1)) * parts[d - 1].n) as u64;
+    for (l, p) in chain.iter().zip(parts) {
+        ws += (p.m * p.n * l.k * l.k) as u64;
+    }
+    ws
+}
+
+/// Tallest final-output stripe height whose *worst* stripe working set
+/// fits `budget_elems`. `None` when even one-row stripes do not fit (the
+/// chain is infeasible at this SRAM capacity).
+pub fn max_chain_stripe(
+    chain: &[ConvLayer],
+    parts: &[Partition],
+    budget_elems: u64,
+) -> Option<usize> {
+    let ho = chain.last().expect("empty fusion chain").ho();
+    (1..=ho).rev().find(|&t| {
+        (0..ho.div_ceil(t)).all(|s| {
+            let y0 = s * t;
+            let y1 = (y0 + t - 1).min(ho - 1);
+            chain_working_set(chain, parts, y0, y1) <= budget_elems
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::bandwidth::layer_bandwidth;
+    use crate::models::zoo;
+
+    fn pair() -> Vec<ConvLayer> {
+        vec![
+            ConvLayer::new("a", 13, 13, 192, 384, 3, 1, 1),
+            ConvLayer::new("b", 13, 13, 384, 256, 3, 1, 1),
+        ]
+    }
+
+    #[test]
+    fn chain_compatibility() {
+        let net = zoo::alexnet();
+        // conv3 -> conv4 -> conv5 chain (13x13, channels agree); pooling
+        // breaks conv1 -> conv2 and conv2 -> conv3.
+        assert!(!can_chain(&net.layers[0], &net.layers[1]));
+        assert!(!can_chain(&net.layers[1], &net.layers[2]));
+        assert!(can_chain(&net.layers[2], &net.layers[3]));
+        assert!(can_chain(&net.layers[3], &net.layers[4]));
+    }
+
+    #[test]
+    fn greedy_chains_partition_the_network() {
+        let net = zoo::alexnet();
+        assert_eq!(chains(&net, 1), vec![0..1, 1..2, 2..3, 3..4, 4..5]);
+        assert_eq!(chains(&net, 2), vec![0..1, 1..2, 2..4, 4..5]);
+        assert_eq!(chains(&net, 3), vec![0..1, 1..2, 2..5]);
+        assert_eq!(chains(&net, 99), vec![0..1, 1..2, 2..5]);
+        // every depth covers every layer exactly once
+        for d in 1..=4 {
+            let total: usize = chains(&net, d).iter().map(|r| r.len()).sum();
+            assert_eq!(total, net.layers.len());
+        }
+    }
+
+    #[test]
+    fn spans_grow_backward_and_clamp() {
+        let chain = pair();
+        // one output row of b needs 3 rows of a's output, which needs 5
+        // rows of the chain input (k3/s1 halo growth), clamped at edges.
+        let spans = stripe_spans(&chain, 6, 6);
+        assert_eq!(spans[2], (6, 6));
+        assert_eq!(spans[1], (5, 7));
+        assert_eq!(spans[0], (4, 8));
+        // edge stripes saturate at the plane boundary
+        let top = stripe_spans(&chain, 0, 0);
+        assert_eq!(top[1], (0, 1));
+        assert_eq!(top[0], (0, 2));
+    }
+
+    #[test]
+    fn strided_span_arithmetic() {
+        // k5/s2/p2 @28 -> 14 outputs; rows [3,4] need inputs [4, 10].
+        let l = ConvLayer::new("s", 28, 28, 8, 8, 5, 2, 2);
+        assert_eq!(input_row_span(&l, 3, 4), (4, 10));
+        assert_eq!(input_row_span(&l, 0, 0), (0, 2)); // pad-clamped
+        assert_eq!(input_row_span(&l, 13, 13), (24, 27)); // tail-clamped
+    }
+
+    #[test]
+    fn singleton_single_stripe_matches_eq2_eq3() {
+        // stride-1 layers: the receptive-field model reproduces the
+        // per-layer eqs. 2-3 exactly at t = Ho.
+        let l = ConvLayer::new("c", 27, 27, 64, 192, 5, 1, 2);
+        for mode in ControllerMode::ALL {
+            for (m, n) in [(16, 1), (1, 16), (8, 12), (64, 192)] {
+                let fused =
+                    chain_bandwidth(std::slice::from_ref(&l), &[Partition { m, n }], l.ho(), mode);
+                let bw = layer_bandwidth(&l, m, n, mode);
+                assert_eq!(fused.input, bw.input);
+                assert_eq!(fused.output, bw.output);
+                assert_eq!(fused.stripes, 1);
+                assert_eq!(fused.weights, l.weights() as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_pair_drops_intermediate_traffic() {
+        let chain = pair();
+        let parts = [Partition { m: 48, n: 1 }, Partition { m: 48, n: 1 }];
+        for mode in ControllerMode::ALL {
+            let fused = chain_bandwidth(&chain, &parts, chain[1].ho(), mode);
+            let a = layer_bandwidth(&chain[0], 48, 1, mode);
+            let b = layer_bandwidth(&chain[1], 48, 1, mode);
+            // first input + last output only; the intermediate's write
+            // (a.output) and re-read (b.input) vanish.
+            assert_eq!(fused.input, a.input);
+            assert_eq!(fused.output, b.output);
+            assert!(fused.activations() < a.total() + b.total());
+        }
+    }
+
+    #[test]
+    fn striping_reloads_weights_and_adds_halo() {
+        let chain = pair();
+        let parts = [Partition { m: 48, n: 4 }, Partition { m: 48, n: 4 }];
+        let full = chain_bandwidth(&chain, &parts, 13, ControllerMode::Passive);
+        let mut prev = full;
+        for t in [7usize, 4, 2, 1] {
+            let s = chain_bandwidth(&chain, &parts, t, ControllerMode::Passive);
+            assert!(s.input >= prev.input, "halo not monotone at t={t}");
+            assert!(s.weights > prev.weights || s.stripes == prev.stripes, "t={t}");
+            // psum totals are stripe-invariant
+            assert_eq!(s.output, full.output);
+            prev = s;
+        }
+        let one = chain_bandwidth(&chain, &parts, 1, ControllerMode::Passive);
+        assert_eq!(one.stripes, 13);
+        assert_eq!(one.weights, (13u64 * (chain[0].weights() + chain[1].weights())) as f64);
+    }
+
+    #[test]
+    fn working_set_and_stripe_search() {
+        let chain = pair();
+        let parts = [Partition { m: 48, n: 4 }, Partition { m: 48, n: 4 }];
+        // monotone in stripe height at fixed origin
+        let mut prev = 0;
+        for t in 1..=13 {
+            let ws = chain_working_set(&chain, &parts, 0, t - 1);
+            assert!(ws >= prev, "t={t}");
+            prev = ws;
+        }
+        assert_eq!(max_chain_stripe(&chain, &parts, u64::MAX), Some(13));
+        assert_eq!(max_chain_stripe(&chain, &parts, 0), None);
+        // a mid-size budget yields some 1 <= t < 13
+        let mid = chain_working_set(&chain, &parts, 0, 5);
+        let t = max_chain_stripe(&chain, &parts, mid).unwrap();
+        assert!((1..13).contains(&t));
+        // the returned height actually fits everywhere
+        for s in 0..13usize.div_ceil(t) {
+            let y0 = s * t;
+            let y1 = (y0 + t - 1).min(12);
+            assert!(chain_working_set(&chain, &parts, y0, y1) <= mid);
+        }
+    }
+
+    #[test]
+    fn depthwise_layers_chain_too() {
+        // MobileNet-style: pointwise feeding a depthwise of equal plane.
+        let pw = ConvLayer::new("pw", 28, 28, 64, 128, 1, 1, 0);
+        let dw = ConvLayer::grouped("dw", 28, 28, 128, 128, 3, 1, 1, 128);
+        assert!(can_chain(&pw, &dw));
+        let parts = [Partition { m: 16, n: 8 }, Partition { m: 1, n: 1 }];
+        let fused = chain_bandwidth(&[pw.clone(), dw.clone()], &parts, 28, ControllerMode::Active);
+        let a = layer_bandwidth(&pw, 16, 8, ControllerMode::Active);
+        let b = layer_bandwidth(&dw, 1, 1, ControllerMode::Active);
+        assert_eq!(fused.input, a.input);
+        assert_eq!(fused.output, b.output);
+    }
+}

@@ -1,7 +1,7 @@
 //! The unified scenario-sweep engine: one declarative description of a
 //! design-space grid (networks × MAC budgets × strategies × controller
-//! modes × batch sizes), one parallel, memoizing executor, one
-//! deterministic JSONL output format.
+//! modes × batch sizes × fusion depths), one parallel, memoizing
+//! executor, one deterministic JSONL output format.
 //!
 //! Everything the paper tabulates is a slice of this grid — Table I is
 //! `TABLE1_MACS × Strategy::TABLE1 × passive`, Table II is
@@ -32,10 +32,11 @@ use crate::models::{ConvLayer, Network};
 use crate::util::json::Json;
 
 use super::bandwidth::{layer_bandwidth, Bandwidth, ControllerMode};
+use super::fusion;
 use super::paper;
 use super::partition::{partition_layer, Partition, Strategy};
 
-/// A declarative sweep: the Cartesian product of five axes.
+/// A declarative sweep: the Cartesian product of six axes.
 ///
 /// [`SweepSpec::paper_grid`] gives the paper's full evaluation grid
 /// (8 zoo networks × 6 MAC budgets × 4 strategies × 2 controller modes);
@@ -70,6 +71,12 @@ pub struct SweepSpec {
     /// Batch sizes (beyond the paper: weights amortize across a batch,
     /// activations do not — see [`crate::analytics::extensions`]).
     pub batch_sizes: Vec<usize>,
+    /// Fusion depths (beyond the paper: chains of up to `d` consecutive
+    /// layers evaluated in fused tiles keep intermediates on chip — see
+    /// [`crate::analytics::fusion`]). Depth 1 is the paper's unfused
+    /// model; it is the default and reproduces the unfused output
+    /// byte-for-byte.
+    pub fusion_depths: Vec<usize>,
 }
 
 impl SweepSpec {
@@ -83,6 +90,7 @@ impl SweepSpec {
             strategies: Strategy::TABLE1.to_vec(),
             modes: ControllerMode::ALL.to_vec(),
             batch_sizes: vec![1],
+            fusion_depths: vec![1],
         }
     }
 
@@ -111,6 +119,11 @@ impl SweepSpec {
         self
     }
 
+    pub fn with_fusion(mut self, fusion_depths: Vec<usize>) -> SweepSpec {
+        self.fusion_depths = fusion_depths;
+        self
+    }
+
     /// Number of grid cells this spec expands to.
     pub fn cell_count(&self) -> usize {
         self.networks.len()
@@ -118,6 +131,7 @@ impl SweepSpec {
             * self.strategies.len()
             * self.modes.len()
             * self.batch_sizes.len()
+            * self.fusion_depths.len()
     }
 
     /// Every axis non-empty and numerically sane.
@@ -137,6 +151,9 @@ impl SweepSpec {
         if self.batch_sizes.is_empty() || self.batch_sizes.contains(&0) {
             bail!("sweep spec needs at least one batch size, all > 0");
         }
+        if self.fusion_depths.is_empty() || self.fusion_depths.contains(&0) {
+            bail!("sweep spec needs at least one fusion depth, all >= 1");
+        }
         Ok(())
     }
 
@@ -145,12 +162,21 @@ impl SweepSpec {
     /// to the paper grid; network names resolve through the zoo.
     ///
     /// Recognized axis keys: `networks` (names), `macs`, `strategies`,
-    /// `modes`, `batches` (plus the protocol's `cmd` and `workers`).
-    /// Unknown keys are rejected so a typo'd axis fails loudly instead of
-    /// silently sweeping its full default.
+    /// `modes`, `batches`, `fusion_depth` (a number or an array of
+    /// depths), plus the protocol's `cmd` and `workers`. Unknown keys are
+    /// rejected so a typo'd axis fails loudly instead of silently
+    /// sweeping its full default.
     pub fn from_json(msg: &Json) -> Result<SweepSpec> {
-        const KNOWN: [&str; 7] =
-            ["cmd", "networks", "macs", "strategies", "modes", "batches", "workers"];
+        const KNOWN: [&str; 8] = [
+            "cmd",
+            "networks",
+            "macs",
+            "strategies",
+            "modes",
+            "batches",
+            "fusion_depth",
+            "workers",
+        ];
         if let Json::Obj(map) = msg {
             for key in map.keys() {
                 if !KNOWN.contains(&key.as_str()) {
@@ -212,6 +238,9 @@ impl SweepSpec {
                 })
                 .collect::<Result<Vec<_>>>()?;
         }
+        if let Some(fusion) = msg.get("fusion_depth") {
+            spec.fusion_depths = parse_fusion_depths(fusion)?;
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -223,6 +252,21 @@ impl Default for SweepSpec {
     }
 }
 
+/// Parse a fusion-depth request value: a single positive integer or an
+/// array of them. Shared by the sweep (`fusion_depth`) and explore
+/// (`fusion`) protocol parsers.
+pub(crate) fn parse_fusion_depths(v: &Json) -> Result<Vec<usize>> {
+    let bad = || anyhow!("fusion depth must be a positive integer or an array of them");
+    match v {
+        Json::Num(_) => Ok(vec![v.as_usize().filter(|d| *d > 0).ok_or_else(bad)?]),
+        Json::Arr(arr) => arr
+            .iter()
+            .map(|d| d.as_usize().filter(|d| *d > 0).ok_or_else(bad))
+            .collect::<Result<Vec<_>>>(),
+        _ => Err(bad()),
+    }
+}
+
 /// One evaluated grid cell: a whole network under one scenario.
 #[derive(Clone, Debug)]
 pub struct GridCell {
@@ -231,9 +275,13 @@ pub struct GridCell {
     pub strategy: Strategy,
     pub mode: ControllerMode,
     pub batch: usize,
-    /// Input-activation traffic, activations (eq. 2 summed over layers).
+    /// Fusion depth (1 = the paper's unfused per-layer model).
+    pub fusion_depth: usize,
+    /// Input-activation traffic, activations (eq. 2 summed over layers;
+    /// at fusion depth > 1, summed over chain inputs only).
     pub input: f64,
-    /// Output/psum traffic, activations (eq. 3 or active variant, summed).
+    /// Output/psum traffic, activations (eq. 3 or active variant, summed;
+    /// at fusion depth > 1, summed over chain outputs only).
     pub output: f64,
     /// Conv weight parameters of the network (amortize across `batch`).
     pub weights: u64,
@@ -260,22 +308,29 @@ impl GridCell {
         super::extensions::per_image_traffic(self.total(), self.weights, self.batch)
     }
 
-    /// Human/filterable cell key, e.g. `AlexNet|P2048|optimal|active|b1`.
+    /// Human/filterable cell key, e.g. `AlexNet|P2048|optimal|active|b1`
+    /// (fused cells append `|fused2` etc.).
     pub fn key(&self) -> String {
-        format!(
+        let mut key = format!(
             "{}|P{}|{}|{}|b{}",
             self.network,
             self.p_macs,
             self.strategy.slug(),
             self.mode.label(),
             self.batch
-        )
+        );
+        if self.fusion_depth > 1 {
+            key.push_str(&format!("|fused{}", self.fusion_depth));
+        }
+        key
     }
 
     /// Stable JSON encoding (object keys sort alphabetically, numbers are
-    /// exact integers where integral) — one JSONL record.
+    /// exact integers where integral) — one JSONL record. The
+    /// `fusion_depth` key appears only on fused cells (depth > 1), so
+    /// unfused sweeps stay byte-identical to the pre-fusion format.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("network", Json::Str(self.network.clone())),
             ("p_macs", Json::Num(self.p_macs as f64)),
             ("strategy", Json::Str(self.strategy.slug().to_string())),
@@ -287,19 +342,25 @@ impl GridCell {
             ("total_mact", Json::Num(self.total() / 1.0e6)),
             ("weights_per_image", Json::Num(self.weights_per_image())),
             ("min_bw", Json::Num(self.min_bw)),
-        ])
+        ];
+        if self.fusion_depth > 1 {
+            pairs.push(("fusion_depth", Json::Num(self.fusion_depth as f64)));
+        }
+        Json::obj(pairs)
     }
 }
 
 /// The outcome of running a [`SweepSpec`]: cells in spec enumeration order
-/// (networks, then budgets, then strategies, then modes, then batches).
+/// (networks, then budgets, then strategies, then modes, then batches,
+/// then fusion depths).
 #[derive(Clone, Debug)]
 pub struct GridResult {
     pub cells: Vec<GridCell>,
 }
 
 impl GridResult {
-    /// Look up one cell.
+    /// Look up one cell (the first match in enumeration order — i.e. the
+    /// lowest fusion depth when a spec sweeps several).
     pub fn find(
         &self,
         network: &str,
@@ -435,7 +496,8 @@ impl GridEngine {
         eval
     }
 
-    /// Evaluate one grid cell (a whole network under one scenario).
+    /// Evaluate one grid cell (a whole network under one unfused
+    /// scenario). Equivalent to [`GridEngine::cell_fused`] at depth 1.
     pub fn cell(
         &self,
         net: &Network,
@@ -444,12 +506,42 @@ impl GridEngine {
         mode: ControllerMode,
         batch: usize,
     ) -> GridCell {
+        self.cell_fused(net, p_macs, strategy, mode, batch, 1)
+    }
+
+    /// Evaluate one grid cell with layers fused in chains of up to
+    /// `fusion_depth`. Singleton chains go through the per-layer eq. 2–3
+    /// model (the shape memo cache), so depth 1 *is* the unfused cell;
+    /// longer chains charge only the chain input, the chain output and
+    /// the (unstriped, so once-loaded) weights — see
+    /// [`crate::analytics::fusion`].
+    pub fn cell_fused(
+        &self,
+        net: &Network,
+        p_macs: usize,
+        strategy: Strategy,
+        mode: ControllerMode,
+        batch: usize,
+        fusion_depth: usize,
+    ) -> GridCell {
         let mut input = 0.0;
         let mut output = 0.0;
-        for layer in &net.layers {
-            let eval = self.layer_eval(layer, p_macs, strategy, mode);
-            input += eval.bandwidth.input;
-            output += eval.bandwidth.output;
+        for range in fusion::chains(net, fusion_depth) {
+            let layers = &net.layers[range];
+            if layers.len() == 1 {
+                let eval = self.layer_eval(&layers[0], p_macs, strategy, mode);
+                input += eval.bandwidth.input;
+                output += eval.bandwidth.output;
+            } else {
+                let parts: Vec<Partition> = layers
+                    .iter()
+                    .map(|l| self.layer_eval(l, p_macs, strategy, mode).partition)
+                    .collect();
+                let ho = layers.last().unwrap().ho();
+                let fused = fusion::chain_bandwidth(layers, &parts, ho, mode);
+                input += fused.input;
+                output += fused.output;
+            }
         }
         GridCell {
             network: net.name.clone(),
@@ -457,6 +549,7 @@ impl GridEngine {
             strategy,
             mode,
             batch,
+            fusion_depth,
             input,
             output,
             weights: net.total_weights(),
@@ -479,20 +572,22 @@ impl GridEngine {
     /// division-by-zero artifacts in the JSONL stream.
     pub fn run_with_workers(&self, spec: &SweepSpec, workers: usize) -> GridResult {
         spec.validate().expect("invalid sweep spec");
-        let mut jobs: Vec<(usize, usize, Strategy, ControllerMode, usize)> = Vec::new();
+        let mut jobs: Vec<(usize, usize, Strategy, ControllerMode, usize, usize)> = Vec::new();
         for ni in 0..spec.networks.len() {
             for &p in &spec.mac_budgets {
                 for &s in &spec.strategies {
                     for &mode in &spec.modes {
                         for &b in &spec.batch_sizes {
-                            jobs.push((ni, p, s, mode, b));
+                            for &f in &spec.fusion_depths {
+                                jobs.push((ni, p, s, mode, b, f));
+                            }
                         }
                     }
                 }
             }
         }
-        let cells = parallel_map(&jobs, workers.max(1), |&(ni, p, s, mode, b)| {
-            self.cell(&spec.networks[ni], p, s, mode, b)
+        let cells = parallel_map(&jobs, workers.max(1), |&(ni, p, s, mode, b, f)| {
+            self.cell_fused(&spec.networks[ni], p, s, mode, b, f)
         });
         GridResult { cells }
     }
@@ -603,6 +698,60 @@ mod tests {
 
         let defaults = SweepSpec::from_json(&Json::parse(r#"{"cmd":"sweep"}"#).unwrap()).unwrap();
         assert_eq!(defaults.cell_count(), 8 * 6 * 4 * 2);
+    }
+
+    #[test]
+    fn fused_cells_save_traffic_and_tag_their_records() {
+        let engine = GridEngine::new();
+        let net = zoo::alexnet();
+        let unfused = engine.cell(&net, 512, Strategy::Optimal, ControllerMode::Passive, 1);
+        let fused = engine.cell_fused(&net, 512, Strategy::Optimal, ControllerMode::Passive, 1, 2);
+        // conv3->conv4 fuse: the intermediate's write + re-read vanish.
+        assert!(fused.total() < unfused.total());
+        assert_eq!(unfused.fusion_depth, 1);
+        assert_eq!(fused.fusion_depth, 2);
+        assert_eq!(fused.key(), "AlexNet|P512|optimal|passive|b1|fused2");
+        assert!(!unfused.key().contains("fused"));
+        // depth-1 JSONL carries no fusion key; fused records do.
+        assert!(unfused.to_json().get("fusion_depth").is_none());
+        assert_eq!(fused.to_json().get("fusion_depth").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn fusion_axis_sweeps_and_orders() {
+        let spec = SweepSpec::new(vec![zoo::alexnet()])
+            .with_macs(vec![512])
+            .with_strategies(vec![Strategy::Optimal])
+            .with_modes(vec![ControllerMode::Passive])
+            .with_fusion(vec![1, 2]);
+        assert_eq!(spec.cell_count(), 2);
+        let engine = GridEngine::new();
+        let a = engine.run_with_workers(&spec, 1);
+        let b = engine.run_with_workers(&spec, 4);
+        assert_eq!(a.to_jsonl(), b.to_jsonl());
+        assert_eq!(a.cells[0].fusion_depth, 1);
+        assert_eq!(a.cells[1].fusion_depth, 2);
+        assert!(a.cells[1].total() < a.cells[0].total());
+    }
+
+    #[test]
+    fn spec_from_json_fusion_depth() {
+        let one =
+            SweepSpec::from_json(&Json::parse(r#"{"cmd":"sweep","fusion_depth":2}"#).unwrap())
+                .unwrap();
+        assert_eq!(one.fusion_depths, vec![2]);
+        let many =
+            SweepSpec::from_json(&Json::parse(r#"{"cmd":"sweep","fusion_depth":[1,2,3]}"#).unwrap())
+                .unwrap();
+        assert_eq!(many.fusion_depths, vec![1, 2, 3]);
+        for bad in [
+            r#"{"cmd":"sweep","fusion_depth":0}"#,
+            r#"{"cmd":"sweep","fusion_depth":[0]}"#,
+            r#"{"cmd":"sweep","fusion_depth":[]}"#,
+            r#"{"cmd":"sweep","fusion_depth":"two"}"#,
+        ] {
+            assert!(SweepSpec::from_json(&Json::parse(bad).unwrap()).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

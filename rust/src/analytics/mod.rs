@@ -13,14 +13,18 @@
 //!   [`grid::SweepSpec`] grids executed in parallel with per-shape
 //!   memoization, streamed as deterministic JSONL. Every table/figure
 //!   renderer and the `sweep` CLI/server command run on it.
-//! * [`extensions`] — beyond the paper: fusion bound, weight traffic,
-//!   batch amortization.
+//! * [`extensions`] — beyond the paper: perfect-fusion bound, weight
+//!   traffic, batch amortization.
 //! * [`spatial`] — beyond the paper: spatial (row-stripe) tiling with
 //!   halo re-reads, and the SRAM-budget -> stripe-height tradeoff.
+//! * [`fusion`] — beyond the paper: fused layer chains — receptive-field
+//!   back-propagation, chain traffic (first input + last output + weight
+//!   reloads per stripe) and the live-working-set feasibility check.
 //! * [`paper`] — the published Tables I/II/III + Fig. 2 reference data.
 
 pub mod bandwidth;
 pub mod extensions;
+pub mod fusion;
 pub mod grid;
 pub mod optimizer;
 pub mod paper;
@@ -29,6 +33,7 @@ pub mod spatial;
 pub mod sweep;
 
 pub use bandwidth::{layer_bandwidth, Bandwidth, ControllerMode};
+pub use fusion::{chain_bandwidth, chains, FusedBandwidth};
 pub use grid::{GridCell, GridEngine, GridResult, SweepSpec};
 pub use partition::{partition_layer, Partition, Strategy};
 pub use sweep::{network_bandwidth, NetworkReport};

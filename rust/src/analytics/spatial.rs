@@ -28,7 +28,7 @@ fn input_rows_for_stripe(layer: &ConvLayer, t: usize) -> usize {
 pub fn rows_per_pass(layer: &ConvLayer, t: usize) -> usize {
     let ho = layer.ho();
     debug_assert!(t >= 1 && t <= ho);
-    let stripes = (ho + t - 1) / t;
+    let stripes = ho.div_ceil(t);
     let mut rows = 0usize;
     for s in 0..stripes {
         let t_eff = t.min(ho - s * t);
@@ -55,8 +55,8 @@ pub fn layer_bandwidth_spatial(
     assert!(t >= 1 && t <= ho, "t out of range [1,{ho}]");
     let g = layer.groups as f64;
 
-    let out_iters = (ng + n - 1) / n;
-    let psum_iters = (mg + m - 1) / m;
+    let out_iters = ng.div_ceil(n);
+    let psum_iters = mg.div_ceil(m);
 
     let input = (layer.wi * rows_per_pass(layer, t) * mg) as f64 * out_iters as f64 * g;
     let wo_ho_ng = (layer.wo() * ho * ng) as f64;

@@ -6,6 +6,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::analytics::fusion;
 use crate::analytics::grid::GridEngine;
 use crate::cli::args::Args;
 use crate::coordinator::parallel::default_workers;
@@ -18,10 +19,28 @@ use crate::report::frontier;
 
 use super::sweep::resolve_network;
 
+/// Longest fusable chain across `networks` — the useful upper bound for
+/// the `--fusion` depth expansion.
+fn max_chain_len(networks: &[crate::models::Network]) -> usize {
+    networks
+        .iter()
+        .flat_map(|n| fusion::chains(n, usize::MAX))
+        .map(|r| r.len())
+        .max()
+        .unwrap_or(1)
+}
+
 /// `psim explore [--networks a,b]
 /// [--constraints macs=512:2048,sram=64k:unlimited,strategies=optimal,modes=active]
-/// [--objectives bandwidth,energy] [--workers N] [--out FILE] [--table]
-/// [--faithful]`
+/// [--objectives bandwidth,energy] [--fusion [D]] [--workers N]
+/// [--out FILE] [--table] [--faithful]`
+///
+/// `--fusion` adds the inter-layer fusion axis: bare, it explores depths
+/// 1–2; with a value `D`, depths 1..=D (so fused and unfused candidates
+/// compete on the same frontier). Either form is capped at the longest
+/// fusable chain of the selected networks — deeper candidates would be
+/// byte-identical duplicates. `--constraints fusion=...` overrides both
+/// with an explicit depth list.
 ///
 /// Emits one JSON object per Pareto-frontier point (JSONL) on stdout (or
 /// `--out`), byte-identical for any `--workers` value; a run summary goes
@@ -42,6 +61,15 @@ pub fn explore(args: &Args) -> Result<i32> {
         }
     };
     let mut spec = ExploreSpec::new(networks);
+    if let Some(depth) = args.opt_usize("fusion")? {
+        anyhow::ensure!(depth >= 1, "--fusion depth must be >= 1");
+        // Depths beyond the longest fusable chain evaluate to identical
+        // candidates (equal objective vectors all survive Pareto), so cap
+        // the expansion at the useful maximum.
+        spec.fusion_depths = (1..=depth.min(max_chain_len(&spec.networks))).collect();
+    } else if args.flag("fusion") {
+        spec.fusion_depths = (1..=max_chain_len(&spec.networks).min(2)).collect();
+    }
     if let Some(text) = args.opt("constraints") {
         apply_constraints(&mut spec, text)?;
     }
@@ -79,4 +107,18 @@ pub fn explore(args: &Args) -> Result<i32> {
         elapsed.as_secs_f64(),
     );
     Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn fusion_depth_expansion_caps_at_longest_chain() {
+        // AlexNet's longest fusable chain is conv3 -> conv4 -> conv5;
+        // VGG-16's stacks also top out at three layers.
+        assert_eq!(max_chain_len(&[zoo::alexnet()]), 3);
+        assert_eq!(max_chain_len(&[zoo::alexnet(), zoo::vgg16()]), 3);
+    }
 }

@@ -1,0 +1,57 @@
+//! `fusion`: per-network fused-vs-unfused bandwidth report — the
+//! [`crate::report::fusion`] table from the command line.
+
+use anyhow::Result;
+
+use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::grid::GridEngine;
+use crate::analytics::partition::Strategy;
+use crate::cli::args::Args;
+use crate::config::accel::{parse_mode, parse_strategy};
+use crate::models::zoo;
+use crate::report::fusion as report_fusion;
+
+use super::sweep::resolve_network;
+
+/// `psim fusion [--networks a,b] [--depth N] [--macs P] [--strategy S]
+/// [--mode passive|active] [--csv] [--faithful]`
+///
+/// Renders the fused-vs-unfused comparison: chains of up to `--depth`
+/// consecutive layers keep intermediates on chip; the table shows each
+/// network's chain structure and the activation traffic saved.
+pub fn fusion(args: &Args) -> Result<i32> {
+    let faithful = args.flag("faithful");
+    let networks = match args.opt("networks") {
+        Some(list) => list
+            .split(',')
+            .map(|raw| resolve_network(raw.trim(), faithful))
+            .collect::<Result<Vec<_>>>()?,
+        None => {
+            if faithful {
+                zoo::faithful_networks()
+            } else {
+                zoo::paper_networks()
+            }
+        }
+    };
+    let depth = args.opt_usize("depth")?.unwrap_or(2);
+    let p_macs = args.opt_usize("macs")?.unwrap_or(1024);
+    let strategy = match args.opt("strategy") {
+        Some(s) => parse_strategy(s)?,
+        None => Strategy::Optimal,
+    };
+    let mode = match args.opt("mode") {
+        Some(m) => parse_mode(m)?,
+        None => ControllerMode::Passive,
+    };
+    let csv = args.flag("csv");
+    args.reject_unknown()?;
+    anyhow::ensure!(depth >= 1, "--depth must be >= 1");
+    anyhow::ensure!(p_macs > 0, "--macs must be > 0");
+
+    let engine = GridEngine::new();
+    let table = report_fusion::fusion_table(&engine, &networks, depth, p_macs, strategy, mode);
+    print!("{}", if csv { table.to_csv() } else { table.to_markdown() });
+    eprintln!("{}", report_fusion::summarize(networks.len(), depth, p_macs));
+    Ok(0)
+}

@@ -1,5 +1,6 @@
 //! `infer`: closed-loop batched inference benchmark over the PJRT stack.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -10,9 +11,10 @@ use crate::runtime::{ArtifactDir, Tensor};
 
 /// `psim infer [--requests N] [--concurrency C] [--max-batch B] [--seed S]`
 ///
-/// Spawns C client threads that each fire requests back-to-back until N
-/// total responses arrive; reports throughput, latency percentiles and
-/// the realized batch-size distribution.
+/// Spawns C client threads that together fire exactly N requests
+/// back-to-back (the remainder of N/C is spread one-per-client, not
+/// rounded up); reports failures separately and computes throughput from
+/// the requests actually served.
 pub fn infer(args: &Args) -> Result<i32> {
     let requests = args.opt_usize("requests")?.unwrap_or(64);
     let concurrency = args.opt_usize("concurrency")?.unwrap_or(8).max(1);
@@ -39,14 +41,23 @@ pub fn infer(args: &Args) -> Result<i32> {
     println!("warmup: class={} latency={}us", warm.top_class(), warm.latency_us);
 
     let t0 = Instant::now();
-    let per_client = requests.div_ceil(concurrency);
+    let failures = AtomicUsize::new(0);
     std::thread::scope(|scope| {
         for c in 0..concurrency {
+            // Exact distribution: the first `requests % concurrency`
+            // clients take one extra request; the total is always N.
+            let n = requests / concurrency + usize::from(c < requests % concurrency);
             let service = &service;
+            let failures = &failures;
             scope.spawn(move || {
-                for i in 0..per_client {
-                    let img = Tensor::random(&[3, 32, 32], seed ^ ((c * 1000 + i) as u64), 1.0);
-                    let _ = service.infer(img);
+                for i in 0..n {
+                    // Collision-free per-request seed: client id in the
+                    // high bits, request index in the low bits.
+                    let mix = ((c as u64) << 32) | i as u64;
+                    let img = Tensor::random(&[3, 32, 32], seed ^ mix, 1.0);
+                    if service.infer(img).is_err() {
+                        failures.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
             });
         }
@@ -54,11 +65,14 @@ pub fn infer(args: &Args) -> Result<i32> {
     let wall = t0.elapsed();
 
     let m = &service.metrics;
-    let served = per_client * concurrency;
+    let failed = failures.into_inner();
+    let served = requests - failed;
     println!("\n== e2e inference over PJRT (PsimNet, batch<= {max_batch}) ==");
-    println!("requests          : {served}");
+    println!("requests          : {requests}");
+    println!("served            : {served}");
+    println!("failed            : {failed}");
     println!("wall time         : {:.3} s", wall.as_secs_f64());
     println!("throughput        : {:.1} img/s", served as f64 / wall.as_secs_f64());
     println!("metrics           : {}", m.summary());
-    Ok(0)
+    Ok(if failed == 0 { 0 } else { 1 })
 }

@@ -2,6 +2,7 @@
 
 pub mod analyze;
 pub mod explore;
+pub mod fusion;
 pub mod infer;
 pub mod serve;
 pub mod simulate;

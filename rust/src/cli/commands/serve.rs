@@ -10,12 +10,12 @@
 //!   request : {"image": [3072 floats]}            -> inference
 //!             {"cmd": "sweep", ...}               -> design-space sweep
 //!               optional keys: networks, macs, strategies, modes,
-//!               batches (see analytics::grid::SweepSpec::from_json),
-//!               workers
+//!               batches, fusion_depth (see
+//!               analytics::grid::SweepSpec::from_json), workers
 //!             {"cmd": "explore", ...}             -> Pareto exploration
 //!               optional keys: networks, macs, sram, strategies, modes,
-//!               objectives (see dse::space::ExploreSpec::from_json),
-//!               workers
+//!               fusion, objectives (see
+//!               dse::space::ExploreSpec::from_json), workers
 //!             {"cmd": "metrics"}                  -> server metrics
 //!             {"cmd": "shutdown"}                 -> stop the server
 //!   response: {"id": n, "class": c, "logits": [...], "latency_us": n}
@@ -23,10 +23,11 @@
 //!             {"frontier": [...], "count": n, "evaluated": e, ...}
 //!             {"metrics": "..."} / {"ok": true} / {"error": "..."}
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -52,6 +53,43 @@ pub struct ServerState {
     /// per-request failures report the actual cause, not a guess.
     inference_error: Option<String>,
     grid: GridEngine,
+}
+
+/// Live connection sockets, so `{"cmd":"shutdown"}` can unblock peers
+/// parked in a blocking read. Without this, `thread::scope` in
+/// [`serve_on`] waits forever on idle keep-alive clients (their handler
+/// threads sit in `reader.lines()` until the *client* hangs up).
+#[derive(Default)]
+struct ConnRegistry {
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_id: AtomicU64,
+}
+
+impl ConnRegistry {
+    /// Track a connection; returns the handle to deregister with.
+    /// `None` (a failed `try_clone`) means the connection CANNOT be
+    /// tracked — the caller must refuse to serve it, because an untracked
+    /// idle reader would be unreachable by [`ConnRegistry::shutdown_all`]
+    /// and reintroduce the shutdown hang.
+    fn register(&self, stream: &TcpStream) -> Option<u64> {
+        let clone = stream.try_clone().ok()?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.conns.lock().unwrap().insert(id, clone);
+        Some(id)
+    }
+
+    fn deregister(&self, id: u64) {
+        self.conns.lock().unwrap().remove(&id);
+    }
+
+    /// Shut down every tracked socket: blocked readers see EOF/error and
+    /// their handler threads exit. Sockets stay registered until their
+    /// handler deregisters; double-shutdown is harmless.
+    fn shutdown_all(&self) {
+        for conn in self.conns.lock().unwrap().values() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+    }
 }
 
 impl ServerState {
@@ -91,7 +129,23 @@ pub fn serve(args: &Args) -> Result<i32> {
         "psim serve: listening on 127.0.0.1:{port} (max_batch={max_batch}, inference {})",
         if state.service.is_some() { "enabled" } else { "disabled" }
     );
+    serve_on(listener, &state)?;
+    let (hits, misses) = state.grid.cache_stats();
+    match &state.service {
+        Some(service) => println!("psim serve: shut down. {}", service.metrics.summary()),
+        None => println!("psim serve: shut down. sweep cache {hits} hits / {misses} misses"),
+    }
+    Ok(0)
+}
+
+/// Accept loop: runs until a `{"cmd":"shutdown"}` request flips the flag.
+/// Guaranteed to return even with idle keep-alive clients connected: the
+/// shutting-down handler closes every registered socket, so no handler
+/// thread can stay parked in a blocking read (regression-tested by
+/// `shutdown_unblocks_idle_connections`).
+fn serve_on(listener: TcpListener, state: &Arc<ServerState>) -> Result<()> {
     let shutdown = Arc::new(AtomicBool::new(false));
+    let registry = Arc::new(ConnRegistry::default());
 
     std::thread::scope(|scope| -> Result<()> {
         for stream in listener.incoming() {
@@ -101,28 +155,57 @@ pub fn serve(args: &Args) -> Result<i32> {
             let stream = stream?;
             let state = state.clone();
             let shutdown = shutdown.clone();
+            let registry = registry.clone();
             scope.spawn(move || {
-                if let Err(e) = handle_conn(stream, &state, &shutdown) {
+                if let Err(e) = handle_conn(stream, &state, &shutdown, &registry) {
                     eprintln!("psim serve: connection error: {e:#}");
                 }
             });
         }
         Ok(())
-    })?;
-    let (hits, misses) = state.grid.cache_stats();
-    match &state.service {
-        Some(service) => println!("psim serve: shut down. {}", service.metrics.summary()),
-        None => println!("psim serve: shut down. sweep cache {hits} hits / {misses} misses"),
-    }
-    Ok(0)
+    })
 }
 
-fn handle_conn(stream: TcpStream, state: &ServerState, shutdown: &AtomicBool) -> Result<()> {
-    let peer = stream.peer_addr()?;
+fn handle_conn(
+    stream: TcpStream,
+    state: &ServerState,
+    shutdown: &AtomicBool,
+    registry: &ConnRegistry,
+) -> Result<()> {
+    let Some(id) = registry.register(&stream) else {
+        // Untrackable (try_clone failed, e.g. fd exhaustion): refuse the
+        // connection rather than serve a socket shutdown can't reach.
+        return Ok(());
+    };
+    // A connection accepted in the shutdown race window is never served:
+    // the flag is set before `shutdown_all`, so either our socket was
+    // already shut or we observe the flag here.
+    let result = if shutdown.load(Ordering::SeqCst) {
+        Ok(())
+    } else {
+        conn_loop(stream, state, shutdown, registry)
+    };
+    registry.deregister(id);
+    result
+}
+
+/// One connection's request/reply loop.
+fn conn_loop(
+    stream: TcpStream,
+    state: &ServerState,
+    shutdown: &AtomicBool,
+    registry: &ConnRegistry,
+) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(line) => line,
+            // A peer unblocked by shutdown_all surfaces a read error
+            // (or EOF, which ends the iterator) — not a failure.
+            Err(_) if shutdown.load(Ordering::SeqCst) => break,
+            Err(e) => return Err(e.into()),
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -130,14 +213,22 @@ fn handle_conn(stream: TcpStream, state: &ServerState, shutdown: &AtomicBool) ->
             Ok(j) => j,
             Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
         };
-        writeln!(writer, "{reply}")?;
+        if let Err(e) = writeln!(writer, "{reply}") {
+            // A write aborted by shutdown_all (broken pipe) is part of a
+            // clean shutdown, not a connection error.
+            if shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            return Err(e.into());
+        }
         if shutdown.load(Ordering::SeqCst) {
-            // Poke the accept loop so it observes the flag.
+            // Poke the accept loop so it observes the flag, then unblock
+            // every other connection's parked reader.
             let _ = TcpStream::connect(writer.local_addr()?);
+            registry.shutdown_all();
             break;
         }
     }
-    let _ = peer;
     Ok(())
 }
 
@@ -321,6 +412,65 @@ mod tests {
         assert_eq!(cells[0].get("network").unwrap().as_str(), Some("AlexNet"));
         assert!(cells[0].get("total").unwrap().as_f64().unwrap() > 0.0);
         assert!(!shutdown.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn sweep_request_accepts_fusion_depth() {
+        let state = analytics_state();
+        let shutdown = AtomicBool::new(false);
+        let reply = handle_line(
+            r#"{"cmd":"sweep","networks":["AlexNet"],"macs":[512],
+               "strategies":["optimal"],"modes":["passive"],"fusion_depth":[1,2]}"#,
+            &state,
+            &shutdown,
+        )
+        .unwrap();
+        let cells = reply.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert!(cells[0].get("fusion_depth").is_none());
+        assert_eq!(cells[1].get("fusion_depth").unwrap().as_usize(), Some(2));
+        let fused = cells[1].get("total").unwrap().as_f64().unwrap();
+        let unfused = cells[0].get("total").unwrap().as_f64().unwrap();
+        assert!(fused < unfused);
+        assert!(handle_line(r#"{"cmd":"sweep","fusion_depth":0}"#, &state, &shutdown).is_err());
+    }
+
+    #[test]
+    fn shutdown_unblocks_idle_connections() {
+        use std::time::Duration;
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let state = Arc::new(analytics_state());
+        let (tx, rx) = std::sync::mpsc::channel();
+        let server = std::thread::spawn(move || {
+            let result = serve_on(listener, &state);
+            let _ = tx.send(());
+            result
+        });
+
+        // An idle keep-alive client: connects, sends nothing, stays open.
+        // Pre-fix, its handler thread blocked in `reader.lines()` forever
+        // and `thread::scope` never returned.
+        let idle = TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(50)); // let it park in read
+
+        let ctl = TcpStream::connect(addr).unwrap();
+        let mut writer = ctl.try_clone().unwrap();
+        let mut reader = BufReader::new(ctl);
+        let mut line = String::new();
+        writeln!(writer, r#"{{"cmd":"metrics"}}"#).unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("metrics"), "{line}");
+        line.clear();
+        writeln!(writer, r#"{{"cmd":"shutdown"}}"#).unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("true"), "{line}");
+
+        rx.recv_timeout(Duration::from_secs(10))
+            .expect("server did not shut down while an idle connection was open");
+        server.join().unwrap().unwrap();
+        drop(idle);
     }
 
     #[test]

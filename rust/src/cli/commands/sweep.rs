@@ -27,8 +27,8 @@ pub(crate) fn resolve_network(name: &str, faithful: bool) -> Result<Network> {
 }
 
 /// `psim sweep [--networks a,b] [--macs 512,...] [--strategies s1,s2]
-/// [--modes passive,active] [--batches 1,8] [--workers N]
-/// [--filter SUBSTR] [--out FILE] [--faithful]`
+/// [--modes passive,active] [--batches 1,8] [--fusion-depth 1,2]
+/// [--workers N] [--filter SUBSTR] [--out FILE] [--faithful]`
 ///
 /// Emits one JSON object per grid cell (JSONL) on stdout (or `--out`),
 /// byte-identical for any `--workers` value; a run summary goes to stderr
@@ -61,6 +61,9 @@ pub fn sweep(args: &Args) -> Result<i32> {
     }
     if let Some(batches) = args.opt_usize_list("batches")? {
         spec.batch_sizes = batches;
+    }
+    if let Some(depths) = args.opt_usize_list("fusion-depth")? {
+        spec.fusion_depths = depths;
     }
     let workers = args.opt_usize("workers")?.unwrap_or_else(default_workers).max(1);
     let filter = args.opt("filter").map(|f| f.to_ascii_lowercase());

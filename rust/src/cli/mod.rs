@@ -41,8 +41,13 @@ Exploration:
                       budgets x 4 strategies x 2 controller modes)
      options: [--networks a,b,c] [--macs 512,1024,...]
               [--strategies s1,s2] [--modes passive,active]
-              [--batches 1,8] [--workers N] [--filter SUBSTR]
-              [--out FILE] [--faithful]
+              [--batches 1,8] [--fusion-depth 1,2] [--workers N]
+              [--filter SUBSTR] [--out FILE] [--faithful]
+  fusion              fused-vs-unfused bandwidth per network: chains of
+                      up to --depth consecutive layers keep their
+                      intermediates on chip
+     options: [--networks a,b,c] [--depth N] [--macs P] [--strategy S]
+              [--mode passive|active] [--csv] [--faithful]
   simsweep            simulator-backed bulk sweep to CSV (adds energy,
                       cycles and MAC utilization per cell)
      options: [--networks a,b,c] [--macs 512,1024,...] [--strategy S]
@@ -54,9 +59,10 @@ Exploration:
                       bound pruning, per network + whole-zoo frontiers
      options: [--networks a,b,c]
               [--constraints macs=512:2048,sram=64k:unlimited,
-                             strategies=optimal:search,modes=active]
-              [--objectives bandwidth,energy,...] [--workers N]
-              [--out FILE] [--table] [--faithful]
+                             strategies=optimal:search,modes=active,
+                             fusion=1:2]
+              [--objectives bandwidth,energy,...] [--fusion [D]]
+              [--workers N] [--out FILE] [--table] [--faithful]
 
 Functional stack (PJRT over artifacts/; run `make artifacts` first):
   infer               batched PsimNet inference benchmark
@@ -90,6 +96,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "simsweep" => commands::simulate::simsweep(&args),
         "sweep" => commands::sweep::sweep(&args),
         "explore" => commands::explore::explore(&args),
+        "fusion" => commands::fusion::fusion(&args),
         "infer" => commands::infer::infer(&args),
         "serve" => commands::serve::serve(&args),
         "client" => commands::serve::client(&args),
@@ -218,6 +225,70 @@ mod tests {
             .unwrap(),
             0
         );
+    }
+
+    #[test]
+    fn sweep_fusion_depth_flag() {
+        assert_eq!(
+            run(&sv(&[
+                "sweep",
+                "--networks",
+                "AlexNet",
+                "--macs",
+                "512",
+                "--strategies",
+                "optimal",
+                "--modes",
+                "passive",
+                "--fusion-depth",
+                "1,2",
+            ]))
+            .unwrap(),
+            0
+        );
+        assert!(run(&sv(&["sweep", "--fusion-depth", "0"])).is_err());
+        assert!(run(&sv(&["sweep", "--fusion-depth", "deep"])).is_err());
+    }
+
+    #[test]
+    fn fusion_command_runs() {
+        assert_eq!(run(&sv(&["fusion", "--networks", "AlexNet", "--depth", "2"])).unwrap(), 0);
+        assert_eq!(run(&sv(&["fusion", "--csv", "--macs", "2048"])).unwrap(), 0);
+        assert!(run(&sv(&["fusion", "--networks", "NoSuchNet"])).is_err());
+        assert!(run(&sv(&["fusion", "--strategy", "voodoo"])).is_err());
+        assert!(run(&sv(&["fusion", "--depth", "0"])).is_err());
+        assert!(run(&sv(&["fusion", "--macs", "0"])).is_err());
+        assert!(run(&sv(&["fusion", "--frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn explore_fusion_flag() {
+        assert_eq!(
+            run(&sv(&[
+                "explore",
+                "--networks",
+                "AlexNet",
+                "--fusion",
+                "--constraints",
+                "macs=1024,sram=unlimited,strategies=optimal,modes=active",
+            ]))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run(&sv(&[
+                "explore",
+                "--networks",
+                "AlexNet",
+                "--fusion",
+                "3",
+                "--constraints",
+                "macs=1024,sram=unlimited,strategies=optimal,modes=active",
+            ]))
+            .unwrap(),
+            0
+        );
+        assert!(run(&sv(&["explore", "--networks", "AlexNet", "--fusion", "0"])).is_err());
     }
 
     #[test]

@@ -81,8 +81,8 @@ pub fn parse_sram(s: &str) -> Result<SramBudget> {
 /// Apply a `--constraints` string onto a spec.
 ///
 /// Grammar: comma-separated `axis=v1:v2:...` pairs; axes are `macs`,
-/// `sram`, `strategies`, `modes`. Example:
-/// `macs=512:2048:16384,sram=64k:unlimited,modes=active`.
+/// `sram`, `strategies`, `modes`, `fusion`. Example:
+/// `macs=512:2048:16384,sram=64k:unlimited,modes=active,fusion=1:2`.
 /// Axes not mentioned keep their defaults; unknown axes fail loudly.
 pub fn apply_constraints(spec: &mut ExploreSpec, text: &str) -> Result<()> {
     for part in text.split(',') {
@@ -116,7 +116,16 @@ pub fn apply_constraints(spec: &mut ExploreSpec, text: &str) -> Result<()> {
             "modes" => {
                 spec.modes = values.iter().map(|v| parse_mode(v)).collect::<Result<Vec<_>>>()?;
             }
-            other => bail!("unknown constraint axis '{other}' (macs|sram|strategies|modes)"),
+            "fusion" => {
+                spec.fusion_depths = values
+                    .iter()
+                    .map(|v| match v.parse::<usize>() {
+                        Ok(d) if d >= 1 => Ok(d),
+                        _ => Err(anyhow!("bad fusion depth '{v}' (positive integer)")),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            other => bail!("unknown constraint axis '{other}' (macs|sram|strategies|modes|fusion)"),
         }
     }
     spec.validate()
@@ -152,10 +161,12 @@ mod tests {
     #[test]
     fn constraints_override_axes() {
         let mut spec = ExploreSpec::new(vec![zoo::alexnet()]);
-        apply_constraints(&mut spec, "macs=512:2048,sram=64k:unlimited,modes=active").unwrap();
+        apply_constraints(&mut spec, "macs=512:2048,sram=64k:unlimited,modes=active,fusion=1:2")
+            .unwrap();
         assert_eq!(spec.mac_budgets, vec![512, 2048]);
         assert_eq!(spec.sram_budgets, vec![SramBudget::Elems(65536), SramBudget::Unlimited]);
         assert_eq!(spec.modes, vec![ControllerMode::Active]);
+        assert_eq!(spec.fusion_depths, vec![1, 2]);
         // strategies untouched
         assert_eq!(spec.strategies, Strategy::TABLE1.to_vec());
     }
@@ -169,5 +180,7 @@ mod tests {
         assert!(apply_constraints(&mut spec, "macs=zero").is_err());
         assert!(apply_constraints(&mut spec, "strategies=voodoo").is_err());
         assert!(apply_constraints(&mut spec, "macs=0").is_err());
+        assert!(apply_constraints(&mut spec, "fusion=0").is_err());
+        assert!(apply_constraints(&mut spec, "fusion=deep").is_err());
     }
 }

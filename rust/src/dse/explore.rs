@@ -51,9 +51,11 @@ pub struct FrontierPoint {
 impl FrontierPoint {
     /// Stable JSONL record. Every number is integer-valued (energy in
     /// whole picojoules, utilization in parts-per-million), so the bytes
-    /// are platform- and worker-count-independent.
+    /// are platform- and worker-count-independent. The `fusion` key
+    /// appears only on fused points (depth > 1), keeping unfused
+    /// frontiers byte-identical to the pre-fusion format.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("network", Json::Str(self.scope.clone())),
             ("p_macs", Json::Num(self.point.p_macs as f64)),
             ("sram", Json::Str(self.point.sram.label())),
@@ -63,7 +65,11 @@ impl FrontierPoint {
             ("sram_accesses", Json::Num(self.objectives.sram_accesses)),
             ("energy_pj", Json::Num(self.objectives.energy_pj.round())),
             ("mac_util_ppm", Json::Num((self.objectives.mac_utilization * 1e6).round())),
-        ])
+        ];
+        if self.point.fusion > 1 {
+            pairs.push(("fusion", Json::Num(self.point.fusion as f64)));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -259,6 +265,31 @@ mod tests {
         // the admissible bound must actually prune something on the
         // default axes (dominated passive/heuristic cells abound)
         assert!(!result.pruned.is_empty(), "bound pruned nothing");
+    }
+
+    #[test]
+    fn fusion_axis_joins_the_frontier() {
+        // With unlimited SRAM and a fixed partition policy, the fused
+        // design strictly wins bandwidth at equal utilization, so every
+        // frontier point is fused — and carries the `fusion` JSONL key.
+        let spec = ExploreSpec::new(vec![zoo::alexnet()])
+            .with_macs(vec![1024])
+            .with_sram(vec![SramBudget::Unlimited])
+            .with_strategies(vec![Strategy::Optimal])
+            .with_modes(vec![ControllerMode::Active])
+            .with_fusion(vec![1, 2]);
+        let result = explore(&GridEngine::new(), &spec, 1);
+        assert_eq!(result.candidates, 2);
+        assert!(!result.frontier.is_empty());
+        assert!(result.frontier.iter().all(|f| f.point.fusion == 2));
+        for fp in &result.frontier {
+            assert_eq!(fp.to_json().get("fusion").unwrap().as_usize(), Some(2));
+        }
+        // worker-count independence holds on a fused space too
+        let spec = spec.with_sram(vec![SramBudget::Unlimited, SramBudget::Elems(1 << 16)]);
+        let one = explore(&GridEngine::new(), &spec, 1);
+        let four = explore(&GridEngine::new(), &spec, 4);
+        assert_eq!(one.to_jsonl(), four.to_jsonl());
     }
 
     #[test]

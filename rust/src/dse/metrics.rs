@@ -17,7 +17,9 @@
 //! the explorer's channel-only bound admissible for pruning.
 
 use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::fusion;
 use crate::analytics::grid::GridEngine;
+use crate::analytics::partition::Partition;
 use crate::analytics::spatial::{max_stripe_within, rows_per_pass};
 use crate::models::{ConvLayer, Network};
 use crate::sim::energy::EnergyModel;
@@ -27,6 +29,16 @@ use crate::util::mathx::ceil_div;
 
 use super::budget::SramBudget;
 use super::space::DesignPoint;
+
+/// Ragged-tail block structure of a `ceil(total/size)` split:
+/// `[(size, blocks - 1), (tail, 1)]` plus the block count — the
+/// `(channels, occurrences)` representation [`layer_stats`] and
+/// [`fused_chain_stats`] iterate over.
+fn blocks(total: usize, size: usize) -> ([(u64, u64); 2], usize) {
+    let n = ceil_div(total, size);
+    let tail = total - (n - 1) * size;
+    ([(size as u64, (n - 1) as u64), (tail as u64, 1u64)], n)
+}
 
 /// Exact counters for one layer tiled as `(m, n)` channels with output
 /// stripes of height `t` (`t = Ho` means unstriped). `bus_cycles` and
@@ -44,13 +56,8 @@ pub fn layer_stats(
     let (wo, ho) = (layer.wo(), layer.ho());
     let k2 = (layer.k * layer.k) as u64;
 
-    let ci_blocks = ceil_div(mg, m);
-    let co_blocks = ceil_div(ng, n);
-    // Ragged-tail structure: (channels, occurrences) per block kind.
-    let m_tail = mg - (ci_blocks - 1) * m;
-    let n_tail = ng - (co_blocks - 1) * n;
-    let m_blocks = [(m as u64, (ci_blocks - 1) as u64), (m_tail as u64, 1u64)];
-    let n_blocks = [(n as u64, (co_blocks - 1) as u64), (n_tail as u64, 1u64)];
+    let (m_blocks, ci_blocks) = blocks(mg, m);
+    let (n_blocks, co_blocks) = blocks(ng, n);
 
     let wi_hi = (layer.wi * layer.hi) as u64;
     let wo_ho = (wo * ho) as u64;
@@ -143,11 +150,149 @@ pub fn stripe_height(layer: &ConvLayer, m: usize, n: usize, sram: SramBudget) ->
     }
 }
 
+/// The final-output stripe height for a fused `chain` under `sram`:
+/// `Ho_d` (one stripe) when unconstrained, otherwise the tallest height
+/// whose live chain working set
+/// ([`crate::analytics::fusion::chain_working_set`]) fits every stripe.
+/// `None` when even one-row stripes exceed the budget.
+pub fn chain_stripe_height(
+    chain: &[ConvLayer],
+    parts: &[Partition],
+    sram: SramBudget,
+) -> Option<usize> {
+    match sram {
+        SramBudget::Unlimited => Some(chain.last().expect("empty chain").ho()),
+        SramBudget::Elems(b) => fusion::max_chain_stripe(chain, parts, b),
+    }
+}
+
+/// Exact counters for one fused chain partitioned per layer as `parts`,
+/// processed in final-output stripes of height `t`.
+///
+/// First-order fusion contract (see [`crate::analytics::fusion`]): the
+/// interconnect carries only the chain input (per stripe, with halo and
+/// the first layer's `co`-block re-reads), every layer's weight tiles
+/// *once per stripe*, and the last layer's psum protocol; intermediates
+/// stay in on-chip buffers and are charged to feasibility
+/// ([`chain_stripe_height`]), not to traffic. Compute is conserved, so
+/// MAC utilization matches the unfused candidate. Striping only adds
+/// traffic (halo rows, weight reloads, burst splits), which keeps the
+/// explorer's unlimited-SRAM bound admissible at every fusion depth.
+pub fn fused_chain_stats(
+    chain: &[ConvLayer],
+    parts: &[Partition],
+    t: usize,
+    mode: ControllerMode,
+    bus: &BusConfig,
+) -> SimStats {
+    assert_eq!(chain.len(), parts.len());
+    let d = chain.len();
+    let first = &chain[0];
+    let last = &chain[d - 1];
+    let ho = last.ho();
+    let mut s = SimStats::default();
+
+    let (m_blocks_1, _) = blocks(first.m_per_group(), parts[0].m);
+    let co_1 = ceil_div(first.n_per_group(), parts[0].n) as u64;
+    let g1 = first.groups as u64;
+    let (n_blocks_d, ci_d) = {
+        let (nb, _) = blocks(last.n_per_group(), parts[d - 1].n);
+        (nb, ceil_div(last.m_per_group(), parts[d - 1].m) as u64)
+    };
+    let gd = last.groups as u64;
+
+    for stripe in 0..ho.div_ceil(t) {
+        let y0 = stripe * t;
+        let y1 = (y0 + t - 1).min(ho - 1);
+        let spans = fusion::stripe_spans(chain, y0, y1);
+
+        // Chain input: one burst of `m_eff` planes of the stripe's rows
+        // per (co, ci) of the first layer.
+        let in_rows = fusion::span_rows(spans[0]) as u64;
+        for &(me, count) in &m_blocks_1 {
+            let occ = count * co_1 * g1;
+            let elems = first.wi as u64 * in_rows * me;
+            s.input_reads += occ * elems;
+            s.bus_beats += occ * Interconnect::beats(bus, elems);
+            s.bus_transactions += occ * Interconnect::bursts(bus, elems);
+        }
+
+        // Weight reloads: every stripe sweeps every (co, ci) tile of
+        // every layer in the chain.
+        for (l, p) in chain.iter().zip(parts) {
+            let (mb, _) = blocks(l.m_per_group(), p.m);
+            let (nb, _) = blocks(l.n_per_group(), p.n);
+            let k2 = (l.k * l.k) as u64;
+            let gi = l.groups as u64;
+            for &(ne, cn) in &nb {
+                for &(me, cm) in &mb {
+                    let occ = cn * cm * gi;
+                    let elems = ne * me * k2;
+                    s.weight_reads += occ * elems;
+                    s.bus_beats += occ * Interconnect::beats(bus, elems);
+                    s.bus_transactions += occ * Interconnect::bursts(bus, elems);
+                }
+            }
+        }
+
+        // Last layer's psum protocol, per stripe (total elements are
+        // stripe-invariant; beats/bursts split per stripe).
+        let t_eff = (y1 - y0 + 1) as u64;
+        for &(ne, cn) in &n_blocks_d {
+            let cn = cn * gd;
+            let elems = last.wo() as u64 * t_eff * ne;
+            let wbeats = Interconnect::beats(bus, elems);
+            let wbursts = Interconnect::bursts(bus, elems);
+            let later = ci_d - 1;
+            s.psum_writes += cn * ci_d * elems;
+            s.bus_beats += cn * ci_d * wbeats;
+            s.bus_transactions += cn * ci_d * wbursts;
+            match mode {
+                ControllerMode::Passive => {
+                    s.sideband_words += cn * wbursts;
+                    s.psum_reads += cn * later * elems;
+                    s.bus_beats += cn * later * wbeats;
+                    s.bus_transactions += cn * later * wbursts;
+                }
+                ControllerMode::Active => {
+                    s.sideband_words += cn * ci_d * wbursts;
+                    s.internal_psum_reads += cn * later * elems;
+                    s.controller_adds += cn * later * elems;
+                    if ci_d > 1 {
+                        s.controller_relus += cn * elems;
+                    }
+                }
+            }
+        }
+    }
+
+    // Compute is conserved across fusion: each layer still sweeps its
+    // whole output plane over its (co, ci) blocks.
+    for (l, p) in chain.iter().zip(parts) {
+        let wo_ho = (l.wo() * l.ho()) as u64;
+        let gi = l.groups as u64;
+        s.macs += wo_ho
+            * (l.k * l.k) as u64
+            * l.m_per_group() as u64
+            * l.n_per_group() as u64
+            * gi;
+        let passes = (ceil_div(l.m_per_group(), p.m) * ceil_div(l.n_per_group(), p.n)) as u64;
+        s.compute_cycles += passes * wo_ho * gi;
+    }
+
+    s.sram_accesses =
+        s.input_reads + s.weight_reads + s.psum_reads + s.psum_writes + s.internal_psum_reads;
+    s
+}
+
 /// Evaluate one candidate over a scope (one network, or several for the
-/// whole-zoo aggregate): partitions come from the grid engine's
-/// layer-shape memo cache, counters from [`layer_stats`], energy from
-/// [`crate::sim::energy::EnergyModel`] priced once over the merged
-/// counters. `None` when any layer cannot fit the SRAM budget.
+/// whole-zoo aggregate): the network splits into fusion chains of up to
+/// `point.fusion` layers ([`crate::analytics::fusion::chains`]);
+/// partitions come from the grid engine's layer-shape memo cache,
+/// counters from [`layer_stats`] (singleton chains — exactly the
+/// pre-fusion path) or [`fused_chain_stats`] (longer chains), energy
+/// from [`crate::sim::energy::EnergyModel`] priced once over the merged
+/// counters. `None` when any layer or chain cannot fit the SRAM budget.
 pub fn scope_stats(
     engine: &GridEngine,
     nets: &[&Network],
@@ -156,19 +301,33 @@ pub fn scope_stats(
 ) -> Option<SimStats> {
     let mut total = SimStats::default();
     for net in nets {
-        for layer in &net.layers {
-            let eval = engine.layer_eval(layer, point.p_macs, point.strategy, point.mode);
-            let (m, n) = (eval.partition.m, eval.partition.n);
-            let t = stripe_height(layer, m, n, point.sram)?;
-            total.merge(&layer_stats(layer, m, n, t, point.mode, bus));
+        for range in fusion::chains(net, point.fusion) {
+            let chain = &net.layers[range];
+            if chain.len() == 1 {
+                let layer = &chain[0];
+                let eval = engine.layer_eval(layer, point.p_macs, point.strategy, point.mode);
+                let (m, n) = (eval.partition.m, eval.partition.n);
+                let t = stripe_height(layer, m, n, point.sram)?;
+                total.merge(&layer_stats(layer, m, n, t, point.mode, bus));
+            } else {
+                let parts: Vec<Partition> = chain
+                    .iter()
+                    .map(|l| {
+                        engine.layer_eval(l, point.p_macs, point.strategy, point.mode).partition
+                    })
+                    .collect();
+                let t = chain_stripe_height(chain, &parts, point.sram)?;
+                total.merge(&fused_chain_stats(chain, &parts, t, point.mode, bus));
+            }
         }
     }
     total.energy_pj = EnergyModel::default().energy_pj(&total);
     Some(total)
 }
 
-/// The candidate's admissible lower bound: the same evaluation with the
-/// SRAM constraint lifted (channel-only eqs. 2–3 traffic, no halo).
+/// The candidate's admissible lower bound: the same evaluation (at the
+/// same fusion depth) with the SRAM constraint lifted — channel-only
+/// eqs. 2–3 traffic, no halo, single-stripe chains with one weight load.
 /// Component-wise `bound <= exact`, and utilization is identical, so a
 /// candidate whose bound is dominated by an exactly-evaluated design is
 /// provably dominated itself.
@@ -257,6 +416,7 @@ mod tests {
                 sram: SramBudget::Elems(1 << 16),
                 strategy: Strategy::Optimal,
                 mode,
+                fusion: 1,
             };
             let bound = scope_bound_stats(&engine, &nets, &point, &bus);
             let exact = scope_stats(&engine, &nets, &point, &bus).expect("feasible");
@@ -277,7 +437,81 @@ mod tests {
             sram: SramBudget::Elems(16),
             strategy: Strategy::Optimal,
             mode: ControllerMode::Passive,
+            fusion: 1,
         };
         assert!(scope_stats(&engine, &[&net], &point, &BusConfig::default()).is_none());
+    }
+
+    #[test]
+    fn fused_scope_cuts_activation_traffic() {
+        let net = zoo::alexnet();
+        let engine = GridEngine::new();
+        let bus = BusConfig::default();
+        for mode in ControllerMode::ALL {
+            let base = DesignPoint {
+                p_macs: 1024,
+                sram: SramBudget::Unlimited,
+                strategy: Strategy::Optimal,
+                mode,
+                fusion: 1,
+            };
+            let fused = DesignPoint { fusion: 2, ..base };
+            let u = scope_stats(&engine, &[&net], &base, &bus).unwrap();
+            let f = scope_stats(&engine, &[&net], &fused, &bus).unwrap();
+            // the conv3->conv4 intermediate never crosses the bus
+            assert!(f.activation_traffic() < u.activation_traffic());
+            // unstriped: weights still load exactly once
+            assert_eq!(f.weight_reads, u.weight_reads);
+            // compute conserved -> identical utilization
+            assert_eq!(f.compute_cycles, u.compute_cycles);
+            assert_eq!(f.macs, u.macs);
+        }
+    }
+
+    #[test]
+    fn fused_bound_is_admissible_under_sram_pressure() {
+        let net = zoo::alexnet();
+        let engine = GridEngine::new();
+        let bus = BusConfig::default();
+        for sram in [SramBudget::Elems(1 << 16), SramBudget::Elems(1 << 14)] {
+            let point = DesignPoint {
+                p_macs: 1024,
+                sram,
+                strategy: Strategy::Optimal,
+                mode: ControllerMode::Active,
+                fusion: 3,
+            };
+            let bound = scope_bound_stats(&engine, &[&net], &point, &bus);
+            let Some(exact) = scope_stats(&engine, &[&net], &point, &bus) else {
+                continue; // infeasible at this budget: nothing to bound
+            };
+            assert!(bound.activation_traffic() <= exact.activation_traffic());
+            assert!(bound.weight_reads <= exact.weight_reads);
+            assert!(bound.sram_accesses <= exact.sram_accesses);
+            assert!(bound.bus_beats <= exact.bus_beats);
+            assert!(bound.energy_pj <= exact.energy_pj);
+            assert_eq!(bound.compute_cycles, exact.compute_cycles);
+        }
+    }
+
+    #[test]
+    fn fused_chain_stats_matches_chain_bandwidth() {
+        // The SimStats closed form and the analytics-level FusedBandwidth
+        // agree on every traffic component, striped or not.
+        let chain = [
+            ConvLayer::new("a", 13, 13, 192, 384, 3, 1, 1),
+            ConvLayer::new("b", 13, 13, 384, 256, 3, 1, 1),
+        ];
+        let parts = [Partition { m: 48, n: 4 }, Partition { m: 48, n: 4 }];
+        let bus = BusConfig::default();
+        for t in [13usize, 5, 1] {
+            for mode in ControllerMode::ALL {
+                let s = fused_chain_stats(&chain, &parts, t, mode, &bus);
+                let bw = fusion::chain_bandwidth(&chain, &parts, t, mode);
+                assert_eq!(s.input_reads as f64, bw.input, "t={t} {mode:?}");
+                assert_eq!((s.psum_reads + s.psum_writes) as f64, bw.output, "t={t} {mode:?}");
+                assert_eq!(s.weight_reads as f64, bw.weights, "t={t} {mode:?}");
+            }
+        }
     }
 }

@@ -5,8 +5,9 @@
 //! four strategies × two controller modes — and reports single-objective
 //! bandwidth tables. This subsystem *searches* a richer space instead:
 //! MAC budget × on-chip SRAM capacity × partitioning strategy ×
-//! controller mode (per-layer `(m, n)` tiles and stripe heights chosen
-//! within each point), scoring every candidate on four objectives at
+//! controller mode × inter-layer fusion depth (per-layer `(m, n)` tiles
+//! and stripe heights chosen within each point — fused chains via
+//! [`crate::analytics::fusion`]), scoring every candidate on four objectives at
 //! once — interconnect bandwidth, SRAM array accesses, energy
 //! ([`crate::sim::energy`]) and MAC utilization — and keeping only the
 //! Pareto-optimal designs, per network and for the whole zoo.

@@ -2,11 +2,12 @@
 //! enumeration, and the serve-protocol spec parser.
 //!
 //! A [`DesignPoint`] is one hardware/policy candidate — MAC budget `P`,
-//! on-chip SRAM capacity, partitioning strategy, controller mode. The
-//! per-layer partition parameters `(m, n)` and stripe height `t` are not
-//! axes: they are chosen *within* each point (strategy under eq. 1 for
-//! the channels, tallest-fitting stripe under the SRAM budget for the
-//! plane), exactly as a compiler would configure a fixed chip.
+//! on-chip SRAM capacity, partitioning strategy, controller mode, and
+//! inter-layer fusion depth. The per-layer partition parameters `(m, n)`
+//! and stripe height `t` are not axes: they are chosen *within* each
+//! point (strategy under eq. 1 for the channels, tallest-fitting stripe
+//! under the SRAM budget for the plane or the fused chain), exactly as a
+//! compiler would configure a fixed chip.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -30,18 +31,27 @@ pub struct DesignPoint {
     pub strategy: Strategy,
     /// Memory-controller capability.
     pub mode: ControllerMode,
+    /// Inter-layer fusion depth (1 = the paper's unfused model; `d > 1`
+    /// evaluates chains of up to `d` layers in fused tiles — see
+    /// [`crate::analytics::fusion`]).
+    pub fusion: usize,
 }
 
 impl DesignPoint {
-    /// Human/filterable key, e.g. `P1024|sram:unlimited|optimal|active`.
+    /// Human/filterable key, e.g. `P1024|sram:unlimited|optimal|active`
+    /// (fused points append `|fused2` etc.).
     pub fn key(&self) -> String {
-        format!(
+        let mut key = format!(
             "P{}|sram:{}|{}|{}",
             self.p_macs,
             self.sram.label(),
             self.strategy.slug(),
             self.mode.label()
-        )
+        );
+        if self.fusion > 1 {
+            key.push_str(&format!("|fused{}", self.fusion));
+        }
+        key
     }
 }
 
@@ -70,6 +80,8 @@ pub struct ExploreSpec {
     pub strategies: Vec<Strategy>,
     /// Memory-controller modes.
     pub modes: Vec<ControllerMode>,
+    /// Inter-layer fusion depths (default: `[1]`, the unfused model).
+    pub fusion_depths: Vec<usize>,
     /// Objectives the frontier is computed over (default: all four).
     pub objectives: Vec<Objective>,
 }
@@ -85,6 +97,7 @@ impl ExploreSpec {
             sram_budgets: DEFAULT_SRAM_BUDGETS.to_vec(),
             strategies: Strategy::TABLE1.to_vec(),
             modes: ControllerMode::ALL.to_vec(),
+            fusion_depths: vec![1],
             objectives: Objective::ALL.to_vec(),
         }
     }
@@ -119,15 +132,23 @@ impl ExploreSpec {
         self
     }
 
+    pub fn with_fusion(mut self, fusion_depths: Vec<usize>) -> ExploreSpec {
+        self.fusion_depths = fusion_depths;
+        self
+    }
+
     /// Design points in enumeration order (MACs, then SRAM, then
-    /// strategy, then mode) — the order frontier output follows.
+    /// strategy, then mode, then fusion depth) — the order frontier
+    /// output follows.
     pub fn points(&self) -> Vec<DesignPoint> {
         let mut out = Vec::with_capacity(self.points_per_network());
         for &p_macs in &self.mac_budgets {
             for &sram in &self.sram_budgets {
                 for &strategy in &self.strategies {
                     for &mode in &self.modes {
-                        out.push(DesignPoint { p_macs, sram, strategy, mode });
+                        for &fusion in &self.fusion_depths {
+                            out.push(DesignPoint { p_macs, sram, strategy, mode, fusion });
+                        }
                     }
                 }
             }
@@ -137,7 +158,11 @@ impl ExploreSpec {
 
     /// Candidates per exploration scope.
     pub fn points_per_network(&self) -> usize {
-        self.mac_budgets.len() * self.sram_budgets.len() * self.strategies.len() * self.modes.len()
+        self.mac_budgets.len()
+            * self.sram_budgets.len()
+            * self.strategies.len()
+            * self.modes.len()
+            * self.fusion_depths.len()
     }
 
     /// Total candidates the explorer will consider: one scope per network
@@ -167,6 +192,9 @@ impl ExploreSpec {
         if self.modes.is_empty() {
             bail!("explore spec has no controller modes");
         }
+        if self.fusion_depths.is_empty() || self.fusion_depths.contains(&0) {
+            bail!("explore spec needs at least one fusion depth, all >= 1");
+        }
         if self.objectives.is_empty() {
             bail!("explore spec has no objectives");
         }
@@ -179,10 +207,20 @@ impl ExploreSpec {
     ///
     /// Axis keys: `networks` (names), `macs`, `sram` (element counts or
     /// strings like `"64k"`/`"unlimited"`), `strategies`, `modes`,
-    /// `objectives` (plus the protocol's `cmd` and `workers`).
+    /// `fusion` (a depth or an array of depths), `objectives` (plus the
+    /// protocol's `cmd` and `workers`).
     pub fn from_json(msg: &Json) -> Result<ExploreSpec> {
-        const KNOWN: [&str; 8] =
-            ["cmd", "networks", "macs", "sram", "strategies", "modes", "objectives", "workers"];
+        const KNOWN: [&str; 9] = [
+            "cmd",
+            "networks",
+            "macs",
+            "sram",
+            "strategies",
+            "modes",
+            "fusion",
+            "objectives",
+            "workers",
+        ];
         if let Json::Obj(map) = msg {
             for key in map.keys() {
                 if !KNOWN.contains(&key.as_str()) {
@@ -247,6 +285,9 @@ impl ExploreSpec {
                     crate::config::accel::parse_mode(s)
                 })
                 .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(fusion) = msg.get("fusion") {
+            spec.fusion_depths = crate::analytics::grid::parse_fusion_depths(fusion)?;
         }
         if let Some(objs) = msg.get("objectives") {
             let arr = objs.as_arr().ok_or_else(|| anyhow!("'objectives' must be an array"))?;
@@ -332,6 +373,31 @@ mod tests {
     }
 
     #[test]
+    fn fusion_axis_enumerates_and_parses() {
+        let spec = ExploreSpec::new(vec![zoo::alexnet()])
+            .with_macs(vec![1024])
+            .with_sram(vec![SramBudget::Unlimited])
+            .with_strategies(vec![Strategy::Optimal])
+            .with_modes(vec![ControllerMode::Active])
+            .with_fusion(vec![1, 2]);
+        let keys: Vec<String> = spec.points().iter().map(|p| p.key()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "P1024|sram:unlimited|optimal|active",
+                "P1024|sram:unlimited|optimal|active|fused2",
+            ]
+        );
+        assert_eq!(spec.points_per_network(), 2);
+
+        let msg =
+            Json::parse(r#"{"cmd":"explore","networks":["AlexNet"],"fusion":[1,2]}"#).unwrap();
+        assert_eq!(ExploreSpec::from_json(&msg).unwrap().fusion_depths, vec![1, 2]);
+        let one = Json::parse(r#"{"cmd":"explore","fusion":3}"#).unwrap();
+        assert_eq!(ExploreSpec::from_json(&one).unwrap().fusion_depths, vec![3]);
+    }
+
+    #[test]
     fn from_json_rejects_bad_input() {
         for bad in [
             r#"{"networks":["NoSuchNet"]}"#,
@@ -341,6 +407,9 @@ mod tests {
             r#"{"sram":"64k"}"#,
             r#"{"objectives":["latency"]}"#,
             r#"{"objectives":[]}"#,
+            r#"{"fusion":0}"#,
+            r#"{"fusion":[0]}"#,
+            r#"{"fusion":"deep"}"#,
             r#"{"cmd":"explore","mac":[512]}"#,
         ] {
             let msg = Json::parse(bad).unwrap();

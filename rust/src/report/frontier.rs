@@ -12,6 +12,7 @@ pub fn frontier_table(result: &ExploreResult) -> Table {
         "SRAM",
         "strategy",
         "mode",
+        "fused",
         "BW (M)",
         "SRAM acc (M)",
         "energy (mJ)",
@@ -24,6 +25,7 @@ pub fn frontier_table(result: &ExploreResult) -> Table {
             fp.point.sram.label(),
             fp.point.strategy.slug().to_string(),
             fp.point.mode.label().to_string(),
+            fp.point.fusion.to_string(),
             mact(fp.objectives.bandwidth, 2),
             mact(fp.objectives.sram_accesses, 2),
             format!("{:.3}", fp.objectives.energy_pj / 1e9),

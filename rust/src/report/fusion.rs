@@ -1,0 +1,79 @@
+//! Fusion rendering: the per-network fused-vs-unfused bandwidth table
+//! behind `psim fusion`, comparing the paper's per-layer model against
+//! [`crate::analytics::fusion`] chains at a given depth.
+
+use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::fusion::chains;
+use crate::analytics::grid::GridEngine;
+use crate::analytics::partition::Strategy;
+use crate::models::Network;
+use crate::util::tablefmt::{mact, pct, Table};
+
+/// One row per network: chain structure, unfused vs fused activation
+/// traffic (in M activations) and the fraction saved. Depth-1 rows save
+/// exactly 0% by construction.
+pub fn fusion_table(
+    engine: &GridEngine,
+    nets: &[Network],
+    depth: usize,
+    p_macs: usize,
+    strategy: Strategy,
+    mode: ControllerMode,
+) -> Table {
+    let mut t = Table::new(vec![
+        "network".to_string(),
+        "chains".to_string(),
+        "longest".to_string(),
+        "unfused BW (M)".to_string(),
+        format!("fused d={depth} (M)"),
+        "saved".to_string(),
+    ]);
+    for net in nets {
+        let chain_list = chains(net, depth);
+        let longest = chain_list.iter().map(|r| r.len()).max().unwrap_or(0);
+        let unfused = engine.cell(net, p_macs, strategy, mode, 1).total();
+        let fused = engine.cell_fused(net, p_macs, strategy, mode, 1, depth).total();
+        t.row(vec![
+            net.name.clone(),
+            chain_list.len().to_string(),
+            longest.to_string(),
+            mact(unfused, 2),
+            mact(fused, 2),
+            pct((unfused - fused) / unfused),
+        ]);
+    }
+    t
+}
+
+/// One-line run summary for logs/stderr.
+pub fn summarize(nets: usize, depth: usize, p_macs: usize) -> String {
+    format!("fusion: {nets} networks at depth {depth}, P={p_macs}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn table_shows_savings_and_structure() {
+        let engine = GridEngine::new();
+        let nets = vec![zoo::alexnet(), zoo::vgg16()];
+        let t = fusion_table(&engine, &nets, 2, 1024, Strategy::Optimal, ControllerMode::Passive);
+        assert_eq!(t.n_rows(), 2);
+        let md = t.to_markdown();
+        assert!(md.contains("AlexNet"));
+        assert!(md.contains("fused d=2"));
+        // AlexNet: 4 chains at depth 2 (conv3+conv4 fuse), longest = 2
+        assert!(md.contains("| 4"), "{md}");
+        assert!(summarize(2, 2, 1024).contains("depth 2"));
+    }
+
+    #[test]
+    fn depth_one_saves_nothing() {
+        let engine = GridEngine::new();
+        let nets = vec![zoo::alexnet()];
+        let t = fusion_table(&engine, &nets, 1, 1024, Strategy::Optimal, ControllerMode::Passive);
+        assert!(t.to_markdown().contains("0.0%"), "{}", t.to_markdown());
+    }
+}

@@ -8,8 +8,10 @@
 //!   series + CSV + an ASCII chart for terminals.
 //! * [`compare`] — cell-by-cell deviation against the published numbers.
 //! * [`frontier`] — Pareto-frontier table/summary for `psim explore`.
+//! * [`fusion`] — fused-vs-unfused bandwidth table for `psim fusion`.
 
 pub mod compare;
 pub mod fig2;
 pub mod frontier;
+pub mod fusion;
 pub mod tables;

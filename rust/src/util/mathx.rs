@@ -49,10 +49,12 @@ pub fn gcd(mut a: usize, mut b: usize) -> usize {
     a
 }
 
-/// Ceiling division for usize.
+/// Ceiling division for usize. Delegates to [`usize::div_ceil`]: the
+/// hand-rolled `(a + b - 1) / b` overflows for `a > usize::MAX - b + 1`
+/// (panic in debug, silent wrap to 0 in release).
 pub fn ceil_div(a: usize, b: usize) -> usize {
     debug_assert!(b > 0);
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 /// Relative difference |a-b| / max(|a|,|b|,eps).
@@ -108,6 +110,17 @@ mod tests {
         assert_eq!(ceil_div(10, 3), 4);
         assert_eq!(ceil_div(9, 3), 3);
         assert_eq!(ceil_div(1, 100), 1);
+        assert_eq!(ceil_div(0, 7), 0);
+    }
+
+    #[test]
+    fn ceil_div_does_not_overflow_near_usize_max() {
+        // Regression: `(a + b - 1) / b` overflowed on all of these.
+        assert_eq!(ceil_div(usize::MAX, 1), usize::MAX);
+        assert_eq!(ceil_div(usize::MAX, 2), usize::MAX / 2 + 1);
+        assert_eq!(ceil_div(usize::MAX, usize::MAX), 1);
+        assert_eq!(ceil_div(usize::MAX - 1, usize::MAX), 1);
+        assert_eq!(ceil_div(usize::MAX, usize::MAX - 1), 2);
     }
 
     #[test]

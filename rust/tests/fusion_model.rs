@@ -1,0 +1,249 @@
+//! Fusion-model contract tests:
+//!
+//! * golden depth-2 AlexNet JSONL at P=512 — pinned byte-for-byte against
+//!   `tests/golden/alexnet_fusion_p512.jsonl` (the same file the CI smoke
+//!   step diffs against the built binary), values recomputed
+//!   independently of the crate;
+//! * the fused cells are strictly cheaper than the unfused golden cells;
+//! * depth-1 fusion reproduces the unfused sweep byte-identically over
+//!   the full paper grid;
+//! * property tests over random chains: singleton fused traffic equals
+//!   `layer_bandwidth`, fused never exceeds the unfused sum when the
+//!   chain fits unstriped, and stripe row spans match a brute-force
+//!   per-output-row receptive-field union.
+
+use psim::analytics::bandwidth::{layer_bandwidth, ControllerMode};
+use psim::analytics::fusion::{chain_bandwidth, chains, span_rows, stripe_spans};
+use psim::analytics::grid::{GridEngine, SweepSpec};
+use psim::analytics::partition::{Partition, Strategy};
+use psim::models::{ConvLayer, Network};
+use psim::prop_assert;
+use psim::util::quickcheck::forall;
+
+const GOLDEN: &str = include_str!("golden/alexnet_fusion_p512.jsonl");
+
+fn golden_spec(depths: Vec<usize>) -> SweepSpec {
+    SweepSpec::new(vec![psim::models::zoo::alexnet()])
+        .with_macs(vec![512])
+        .with_strategies(vec![Strategy::MaxInput, Strategy::MaxOutput])
+        .with_modes(vec![ControllerMode::Passive, ControllerMode::Active])
+        .with_fusion(depths)
+}
+
+#[test]
+fn alexnet_depth2_jsonl_golden() {
+    let jsonl = GridEngine::new().run_with_workers(&golden_spec(vec![2]), 1).to_jsonl();
+    assert_eq!(jsonl, GOLDEN, "depth-2 fusion output drifted from the pinned golden file");
+}
+
+#[test]
+fn fused_cells_strictly_beat_unfused_baseline() {
+    // Acceptance: at P=512 every fused AlexNet cell moves strictly less
+    // activation traffic than its unfused counterpart (conv3->conv4 fuse).
+    let engine = GridEngine::new();
+    let unfused = engine.run_with_workers(&golden_spec(vec![1]), 1);
+    let fused = engine.run_with_workers(&golden_spec(vec![2]), 1);
+    assert_eq!(unfused.len(), fused.len());
+    for (u, f) in unfused.cells.iter().zip(&fused.cells) {
+        assert!(
+            f.total() < u.total(),
+            "{}: fused {} !< unfused {}",
+            u.key(),
+            f.total(),
+            u.total()
+        );
+    }
+}
+
+#[test]
+fn depth1_is_byte_identical_to_unfused_paper_grid() {
+    // The fused code path at depth 1 must reproduce the pre-fusion sweep
+    // exactly — same cells, same bytes, full paper grid.
+    let engine = GridEngine::new();
+    let unfused = engine.run_with_workers(&SweepSpec::paper_grid(), 2).to_jsonl();
+    let depth1 =
+        engine.run_with_workers(&SweepSpec::paper_grid().with_fusion(vec![1]), 2).to_jsonl();
+    assert_eq!(unfused, depth1);
+    assert_eq!(unfused.lines().count(), 384);
+}
+
+/// Generate a random fusable chain: stride <= kernel at every layer (the
+/// contiguous-rows regime the interval model is exact in), pad < kernel,
+/// consecutive planes and channel counts chained by construction.
+fn random_chain(r: &mut psim::util::prng::Rng) -> Vec<ConvLayer> {
+    let depth = r.range(1, 4);
+    let mut hi = r.range(9, 40);
+    let mut m = r.range(1, 8);
+    let mut chain = Vec::new();
+    for i in 0..depth {
+        let k = r.range(1, hi.min(5));
+        let p = r.range(0, k - 1);
+        let mut s = r.range(1, k);
+        if (hi + 2 * p - k) / s + 1 < 2 {
+            s = 1; // keep the plane >= 2 rows so striping stays possible
+        }
+        let ho = (hi + 2 * p - k) / s + 1;
+        if ho < 2 {
+            break; // plane exhausted (only possible after the first layer)
+        }
+        let n = r.range(1, 8);
+        chain.push(ConvLayer::new(&format!("c{i}"), hi, hi, m, n, k, s, p));
+        hi = ho;
+        m = n;
+    }
+    chain
+}
+
+#[test]
+fn singleton_fused_equals_layer_bandwidth() {
+    forall(
+        "fusion-depth1-degenerates",
+        128,
+        |r| {
+            let l = random_chain(r).remove(0);
+            let m = r.range(1, l.m);
+            let n = r.range(1, l.n);
+            (l, m, n)
+        },
+        |(l, m, n)| {
+            let part = [Partition { m: *m, n: *n }];
+            let r = (l.hi + 2 * l.pad - l.k) % l.stride;
+            for mode in ControllerMode::ALL {
+                let fused = chain_bandwidth(std::slice::from_ref(l), &part, l.ho(), mode);
+                let bw = layer_bandwidth(l, *m, *n, mode);
+                prop_assert!(fused.output == bw.output, "output mismatch: {l}");
+                if l.pad >= r {
+                    // the single stripe covers the whole used plane
+                    prop_assert!(fused.input == bw.input, "input mismatch: {l}");
+                } else {
+                    // floor-cropped tail rows: eq. 2 charges them, the
+                    // receptive-field model does not
+                    prop_assert!(fused.input <= bw.input, "input exceeds eq.2: {l}");
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fused_never_exceeds_unfused_when_chain_fits() {
+    forall(
+        "fusion-saves-when-resident",
+        128,
+        |r| {
+            let chain = random_chain(r);
+            let parts: Vec<Partition> = chain
+                .iter()
+                .map(|l| Partition { m: r.range(1, l.m), n: r.range(1, l.n) })
+                .collect();
+            (chain, parts)
+        },
+        |(chain, parts)| {
+            // Single stripe == intermediates fully resident in SRAM.
+            let ho = chain.last().unwrap().ho();
+            for mode in ControllerMode::ALL {
+                let fused = chain_bandwidth(chain, parts, ho, mode);
+                let unfused: f64 = chain
+                    .iter()
+                    .zip(parts)
+                    .map(|(l, p)| layer_bandwidth(l, p.m, p.n, mode).total())
+                    .sum();
+                let weights: u64 = chain.iter().map(|l| l.weights()).sum();
+                prop_assert!(
+                    fused.total() <= unfused + weights as f64,
+                    "fused {} > unfused {} (+{} weights), chain {:?}",
+                    fused.total(),
+                    unfused,
+                    weights,
+                    chain.iter().map(|l| l.to_string()).collect::<Vec<_>>()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn stripe_spans_match_brute_force_receptive_field() {
+    forall(
+        "fusion-halo-brute-force",
+        96,
+        |r| {
+            let chain = random_chain(r);
+            let ho = chain.last().unwrap().ho();
+            let y0 = r.range(0, ho - 1);
+            let y1 = r.range(y0, ho - 1);
+            (chain, y0, y1)
+        },
+        |(chain, y0, y1)| {
+            let spans = stripe_spans(chain, *y0, *y1);
+            // Brute force: walk every output row of every layer backward,
+            // marking the exact input rows its window touches. With
+            // stride <= kernel the union is contiguous, so it must equal
+            // the interval model's span — halo row counts included.
+            let mut needed: Vec<usize> = (*y0..=*y1).collect();
+            for (i, l) in chain.iter().enumerate().rev() {
+                let mut marks = vec![false; l.hi];
+                for &y in &needed {
+                    for ky in 0..l.k {
+                        let row = (y * l.stride + ky) as i64 - l.pad as i64;
+                        if (0..l.hi as i64).contains(&row) {
+                            marks[row as usize] = true;
+                        }
+                    }
+                }
+                needed = (0..l.hi).filter(|&row| marks[row]).collect();
+                prop_assert!(!needed.is_empty(), "empty receptive field: {l}");
+                let (lo, hi) = (needed[0], *needed.last().unwrap());
+                prop_assert!(
+                    needed.len() == hi - lo + 1,
+                    "receptive field not contiguous at layer {i}: {l}"
+                );
+                prop_assert!(
+                    spans[i] == (lo, hi),
+                    "span mismatch at layer {i}: model {:?}, brute force {:?} ({l})",
+                    spans[i],
+                    (lo, hi)
+                );
+                prop_assert!(span_rows(spans[i]) == needed.len(), "row count mismatch at {i}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn chains_cover_every_zoo_network_exactly_once() {
+    for net in psim::models::zoo::paper_networks() {
+        for depth in [1usize, 2, 3, 8] {
+            let ranges = chains(&net, depth);
+            let mut covered = 0;
+            for (i, r) in ranges.iter().enumerate() {
+                assert!(!r.is_empty() && r.len() <= depth.max(1), "{}: bad chain {r:?}", net.name);
+                assert_eq!(r.start, covered, "{}: gap before chain {i}", net.name);
+                covered = r.end;
+            }
+            assert_eq!(covered, net.layers.len(), "{}: layers uncovered", net.name);
+        }
+    }
+}
+
+#[test]
+fn deeper_fusion_is_monotone_on_vgg() {
+    // VGG-16's long stride-1 stacks fuse aggressively: every extra depth
+    // must remove traffic (or at worst break even), never add it.
+    let net: Network = psim::models::zoo::vgg16();
+    let engine = GridEngine::new();
+    let mut prev = f64::INFINITY;
+    for depth in 1..=5 {
+        let cell =
+            engine.cell_fused(&net, 2048, Strategy::Optimal, ControllerMode::Passive, 1, depth);
+        assert!(cell.total() <= prev, "depth {depth} added traffic");
+        prev = cell.total();
+    }
+    // and depth >= 2 strictly beats unfused on this topology
+    let unfused = engine.cell(&net, 2048, Strategy::Optimal, ControllerMode::Passive, 1);
+    let fused = engine.cell_fused(&net, 2048, Strategy::Optimal, ControllerMode::Passive, 1, 2);
+    assert!(fused.total() < unfused.total());
+}
