@@ -25,7 +25,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::coordinator::parallel::{default_workers, parallel_map};
 use crate::models::{ConvLayer, Network};
@@ -124,14 +124,17 @@ impl SweepSpec {
         self
     }
 
-    /// Number of grid cells this spec expands to.
+    /// Number of grid cells this spec expands to. Saturates instead of
+    /// wrapping, so a maliciously huge request cannot overflow past the
+    /// dispatcher's size cap and slip through as a tiny count.
     pub fn cell_count(&self) -> usize {
-        self.networks.len()
-            * self.mac_budgets.len()
-            * self.strategies.len()
-            * self.modes.len()
-            * self.batch_sizes.len()
-            * self.fusion_depths.len()
+        self.networks
+            .len()
+            .saturating_mul(self.mac_budgets.len())
+            .saturating_mul(self.strategies.len())
+            .saturating_mul(self.modes.len())
+            .saturating_mul(self.batch_sizes.len())
+            .saturating_mul(self.fusion_depths.len())
     }
 
     /// Every axis non-empty and numerically sane.
@@ -159,15 +162,18 @@ impl SweepSpec {
 
     /// Build a spec from a JSON request object (the `serve` protocol's
     /// `{"cmd":"sweep", ...}` body). Every axis is optional and defaults
-    /// to the paper grid; network names resolve through the zoo.
+    /// to the paper grid; network names resolve through the zoo. All axis
+    /// parsing delegates to [`crate::api::codec`], the single set of
+    /// parsers shared with [`crate::dse::space::ExploreSpec`].
     ///
     /// Recognized axis keys: `networks` (names), `macs`, `strategies`,
     /// `modes`, `batches`, `fusion_depth` (a number or an array of
-    /// depths), plus the protocol's `cmd` and `workers`. Unknown keys are
-    /// rejected so a typo'd axis fails loudly instead of silently
-    /// sweeping its full default.
+    /// depths), plus the protocol's `cmd`, `workers` and `protocol`.
+    /// Unknown keys are rejected so a typo'd axis fails loudly instead of
+    /// silently sweeping its full default.
     pub fn from_json(msg: &Json) -> Result<SweepSpec> {
-        const KNOWN: [&str; 8] = [
+        use crate::api::codec;
+        const KNOWN: [&str; 9] = [
             "cmd",
             "networks",
             "macs",
@@ -176,70 +182,27 @@ impl SweepSpec {
             "batches",
             "fusion_depth",
             "workers",
+            "protocol",
         ];
-        if let Json::Obj(map) = msg {
-            for key in map.keys() {
-                if !KNOWN.contains(&key.as_str()) {
-                    bail!("unknown sweep key '{key}' (known: {KNOWN:?})");
-                }
-            }
-        }
+        codec::reject_unknown_keys(msg, &KNOWN, "sweep")?;
         let mut spec = SweepSpec::paper_grid();
         if let Some(nets) = msg.get("networks") {
-            let names = nets.as_arr().ok_or_else(|| anyhow!("'networks' must be an array"))?;
-            spec.networks = names
-                .iter()
-                .map(|n| {
-                    let name =
-                        n.as_str().ok_or_else(|| anyhow!("'networks' entries must be strings"))?;
-                    crate::models::zoo::by_name(name)
-                        .ok_or_else(|| anyhow!("unknown network '{name}' — see `psim networks`"))
-                })
-                .collect::<Result<Vec<_>>>()?;
+            spec.networks = codec::networks_axis(nets)?;
         }
         if let Some(macs) = msg.get("macs") {
-            let arr = macs.as_arr().ok_or_else(|| anyhow!("'macs' must be an array"))?;
-            spec.mac_budgets = arr
-                .iter()
-                .map(|v| {
-                    v.as_usize()
-                        .ok_or_else(|| anyhow!("'macs' entries must be non-negative integers"))
-                })
-                .collect::<Result<Vec<_>>>()?;
+            spec.mac_budgets = codec::usize_axis(macs, "macs", "non-negative")?;
         }
         if let Some(strats) = msg.get("strategies") {
-            let arr = strats.as_arr().ok_or_else(|| anyhow!("'strategies' must be an array"))?;
-            spec.strategies = arr
-                .iter()
-                .map(|v| {
-                    let s =
-                        v.as_str().ok_or_else(|| anyhow!("'strategies' entries must be strings"))?;
-                    crate::config::accel::parse_strategy(s)
-                })
-                .collect::<Result<Vec<_>>>()?;
+            spec.strategies = codec::strategies_axis(strats)?;
         }
         if let Some(modes) = msg.get("modes") {
-            let arr = modes.as_arr().ok_or_else(|| anyhow!("'modes' must be an array"))?;
-            spec.modes = arr
-                .iter()
-                .map(|v| {
-                    let s = v.as_str().ok_or_else(|| anyhow!("'modes' entries must be strings"))?;
-                    crate::config::accel::parse_mode(s)
-                })
-                .collect::<Result<Vec<_>>>()?;
+            spec.modes = codec::modes_axis(modes)?;
         }
         if let Some(batches) = msg.get("batches") {
-            let arr = batches.as_arr().ok_or_else(|| anyhow!("'batches' must be an array"))?;
-            spec.batch_sizes = arr
-                .iter()
-                .map(|v| {
-                    v.as_usize()
-                        .ok_or_else(|| anyhow!("'batches' entries must be positive integers"))
-                })
-                .collect::<Result<Vec<_>>>()?;
+            spec.batch_sizes = codec::usize_axis(batches, "batches", "positive")?;
         }
         if let Some(fusion) = msg.get("fusion_depth") {
-            spec.fusion_depths = parse_fusion_depths(fusion)?;
+            spec.fusion_depths = codec::fusion_axis(fusion)?;
         }
         spec.validate()?;
         Ok(spec)
@@ -249,21 +212,6 @@ impl SweepSpec {
 impl Default for SweepSpec {
     fn default() -> SweepSpec {
         SweepSpec::paper_grid()
-    }
-}
-
-/// Parse a fusion-depth request value: a single positive integer or an
-/// array of them. Shared by the sweep (`fusion_depth`) and explore
-/// (`fusion`) protocol parsers.
-pub(crate) fn parse_fusion_depths(v: &Json) -> Result<Vec<usize>> {
-    let bad = || anyhow!("fusion depth must be a positive integer or an array of them");
-    match v {
-        Json::Num(_) => Ok(vec![v.as_usize().filter(|d| *d > 0).ok_or_else(bad)?]),
-        Json::Arr(arr) => arr
-            .iter()
-            .map(|d| d.as_usize().filter(|d| *d > 0).ok_or_else(bad))
-            .collect::<Result<Vec<_>>>(),
-        _ => Err(bad()),
     }
 }
 

@@ -1,0 +1,408 @@
+//! The protocol codec: ONE set of JSON axis parsers shared by every
+//! request shape, plus the [`Request`] decode/encode pair.
+//!
+//! Before the facade, `SweepSpec::from_json` and `ExploreSpec::from_json`
+//! each carried their own copies of the network/MAC/strategy/mode/fusion
+//! parsing; a new axis (or a message tweak) had to land twice. Both spec
+//! parsers now delegate to the helpers here, and new frontends get the
+//! same accept/reject behavior for free.
+//!
+//! Requests may carry an optional `"protocol"` field; when present it
+//! must equal [`PROTOCOL_VERSION`](super::PROTOCOL_VERSION), so clients
+//! can pin the dialect they were written against and fail loudly on a
+//! mismatch instead of misparsing replies.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::grid::SweepSpec;
+use crate::analytics::partition::Strategy;
+use crate::config::accel::{parse_mode, parse_strategy};
+use crate::dse::budget::{parse_sram, SramBudget};
+use crate::dse::pareto::{parse_objective, Objective};
+use crate::dse::space::ExploreSpec;
+use crate::models::{zoo, Network};
+use crate::util::json::Json;
+
+use super::error::ApiError;
+use super::request::{Request, TableKind};
+use super::PROTOCOL_VERSION;
+
+// ---------------------------------------------------------------------
+// Shared axis parsers (the single source of truth for every spec parser)
+// ---------------------------------------------------------------------
+
+/// Reject keys outside `known`, so a typo'd axis fails loudly instead of
+/// silently sweeping its full default. `what` names the request shape in
+/// the message (e.g. "sweep", "explore").
+pub fn reject_unknown_keys(msg: &Json, known: &[&str], what: &str) -> Result<()> {
+    if let Json::Obj(map) = msg {
+        for key in map.keys() {
+            if !known.contains(&key.as_str()) {
+                bail!("unknown {what} key '{key}' (known: {known:?})");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A `networks` axis: an array of names resolved through the zoo.
+pub fn networks_axis(v: &Json) -> Result<Vec<Network>> {
+    let names = v.as_arr().ok_or_else(|| anyhow!("'networks' must be an array"))?;
+    names
+        .iter()
+        .map(|n| {
+            let name = n.as_str().ok_or_else(|| anyhow!("'networks' entries must be strings"))?;
+            zoo::by_name(name)
+                .ok_or_else(|| anyhow!("unknown network '{name}' — see `psim networks`"))
+        })
+        .collect()
+}
+
+/// An integer axis (`macs`, `batches`, ...): an array of whole numbers.
+/// `adjective` names the acceptance class in the error message
+/// ("non-negative", "positive") — kept per-axis so existing client-facing
+/// messages stay byte-identical.
+pub fn usize_axis(v: &Json, key: &str, adjective: &str) -> Result<Vec<usize>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow!("'{key}' must be an array"))?;
+    arr.iter()
+        .map(|x| {
+            x.as_usize().ok_or_else(|| anyhow!("'{key}' entries must be {adjective} integers"))
+        })
+        .collect()
+}
+
+/// A `strategies` axis: an array of strategy names.
+pub fn strategies_axis(v: &Json) -> Result<Vec<Strategy>> {
+    str_axis(v, "strategies", parse_strategy)
+}
+
+/// A `modes` axis: an array of controller-mode names.
+pub fn modes_axis(v: &Json) -> Result<Vec<ControllerMode>> {
+    str_axis(v, "modes", parse_mode)
+}
+
+/// An `objectives` axis: an array of objective names.
+pub fn objectives_axis(v: &Json) -> Result<Vec<Objective>> {
+    str_axis(v, "objectives", parse_objective)
+}
+
+fn str_axis<T>(v: &Json, key: &str, parse: impl Fn(&str) -> Result<T>) -> Result<Vec<T>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow!("'{key}' must be an array"))?;
+    arr.iter()
+        .map(|x| {
+            let s = x.as_str().ok_or_else(|| anyhow!("'{key}' entries must be strings"))?;
+            parse(s)
+        })
+        .collect()
+}
+
+/// An `sram` axis: element counts or strings like `"64k"`/`"unlimited"`.
+pub fn sram_axis(v: &Json) -> Result<Vec<SramBudget>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow!("'sram' must be an array"))?;
+    arr.iter()
+        .map(|x| match x {
+            Json::Num(_) => x
+                .as_usize()
+                .map(|e| SramBudget::Elems(e as u64))
+                .ok_or_else(|| anyhow!("'sram' numbers must be non-negative integers")),
+            Json::Str(s) => parse_sram(s),
+            _ => Err(anyhow!("'sram' entries must be numbers or strings")),
+        })
+        .collect()
+}
+
+/// A fusion-depth axis: a single positive integer or an array of them.
+/// Shared by the sweep (`fusion_depth`) and explore (`fusion`) parsers.
+pub fn fusion_axis(v: &Json) -> Result<Vec<usize>> {
+    let bad = || anyhow!("fusion depth must be a positive integer or an array of them");
+    match v {
+        Json::Num(_) => Ok(vec![v.as_usize().filter(|d| *d > 0).ok_or_else(bad)?]),
+        Json::Arr(arr) => {
+            arr.iter().map(|d| d.as_usize().filter(|d| *d > 0).ok_or_else(bad)).collect()
+        }
+        _ => Err(bad()),
+    }
+}
+
+/// The optional `workers` request field (the engine applies the default
+/// and the clamp, so the policy cannot drift between frontends).
+pub fn workers_field(msg: &Json) -> Result<Option<usize>> {
+    msg.get("workers")
+        .map(|w| w.as_usize().ok_or_else(|| anyhow!("'workers' must be a positive integer")))
+        .transpose()
+}
+
+/// Validate the optional `protocol` field against this build's version.
+pub fn check_protocol(msg: &Json) -> Result<()> {
+    if let Some(v) = msg.get("protocol") {
+        let got = v.as_usize().ok_or_else(|| anyhow!("'protocol' must be an integer"))?;
+        ensure!(
+            got == PROTOCOL_VERSION,
+            "unsupported protocol version {got} (this build speaks {PROTOCOL_VERSION})"
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Request decode
+// ---------------------------------------------------------------------
+
+/// Decode one raw protocol line (parse + [`decode_request`]).
+pub fn decode_line(line: &str) -> Result<Request, ApiError> {
+    let msg = Json::parse(line).map_err(|e| ApiError::bad_msg(format!("bad json: {e}")))?;
+    decode_request(&msg)
+}
+
+/// Decode a parsed request object into a typed [`Request`]. An object
+/// with a `cmd` field is a command; anything else must be an
+/// `{"image": [...]}` inference request.
+pub fn decode_request(msg: &Json) -> Result<Request, ApiError> {
+    check_protocol(msg).map_err(ApiError::bad)?;
+    if let Some(cmd) = msg.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "sweep" => Ok(Request::Sweep {
+                spec: SweepSpec::from_json(msg).map_err(ApiError::bad)?,
+                workers: workers_field(msg).map_err(ApiError::bad)?,
+            }),
+            "explore" => Ok(Request::Explore {
+                spec: ExploreSpec::from_json(msg).map_err(ApiError::bad)?,
+                workers: workers_field(msg).map_err(ApiError::bad)?,
+            }),
+            "fusion" => decode_fusion(msg).map_err(ApiError::bad),
+            "analyze" => decode_analyze(msg).map_err(ApiError::bad),
+            "tables" => decode_tables(msg).map_err(ApiError::bad),
+            "metrics" => Ok(Request::Metrics),
+            "version" => Ok(Request::Version),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(ApiError::bad_msg(format!("unknown cmd '{other}'"))),
+        };
+    }
+    let image = msg
+        .get("image")
+        .and_then(|i| i.as_arr())
+        .ok_or_else(|| ApiError::bad_msg("missing 'image' array"))?;
+    Ok(Request::Infer { image: image.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect() })
+}
+
+fn required_str<'a>(msg: &'a Json, key: &str) -> Result<&'a str> {
+    msg.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("'{key}' is required and must be a string"))
+}
+
+fn opt_usize(msg: &Json, key: &str) -> Result<Option<usize>> {
+    msg.get(key)
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("'{key}' must be a non-negative integer")))
+        .transpose()
+}
+
+fn opt_strategy(msg: &Json) -> Result<Option<Strategy>> {
+    msg.get("strategy")
+        .map(|v| {
+            let s = v.as_str().ok_or_else(|| anyhow!("'strategy' must be a string"))?;
+            parse_strategy(s)
+        })
+        .transpose()
+}
+
+fn opt_mode(msg: &Json) -> Result<Option<ControllerMode>> {
+    msg.get("mode")
+        .map(|v| {
+            let s = v.as_str().ok_or_else(|| anyhow!("'mode' must be a string"))?;
+            parse_mode(s)
+        })
+        .transpose()
+}
+
+fn decode_fusion(msg: &Json) -> Result<Request> {
+    const KNOWN: [&str; 7] = ["cmd", "networks", "depth", "macs", "strategy", "mode", "protocol"];
+    reject_unknown_keys(msg, &KNOWN, "fusion")?;
+    Ok(Request::Fusion {
+        networks: match msg.get("networks") {
+            Some(v) => networks_axis(v)?,
+            None => zoo::paper_networks(),
+        },
+        depth: opt_usize(msg, "depth")?.unwrap_or(2),
+        p_macs: opt_usize(msg, "macs")?.unwrap_or(1024),
+        strategy: opt_strategy(msg)?.unwrap_or(Strategy::Optimal),
+        mode: opt_mode(msg)?.unwrap_or(ControllerMode::Passive),
+    })
+}
+
+fn decode_analyze(msg: &Json) -> Result<Request> {
+    const KNOWN: [&str; 6] = ["cmd", "network", "macs", "strategy", "mode", "protocol"];
+    reject_unknown_keys(msg, &KNOWN, "analyze")?;
+    let name = required_str(msg, "network")?;
+    Ok(Request::Analyze {
+        network: zoo::by_name(name)
+            .ok_or_else(|| anyhow!("unknown network '{name}' — see `psim networks`"))?,
+        p_macs: opt_usize(msg, "macs")?.unwrap_or(2048),
+        strategy: opt_strategy(msg)?.unwrap_or(Strategy::Optimal),
+        mode: opt_mode(msg)?.unwrap_or(ControllerMode::Passive),
+    })
+}
+
+fn decode_tables(msg: &Json) -> Result<Request> {
+    const KNOWN: [&str; 4] = ["cmd", "table", "faithful", "protocol"];
+    reject_unknown_keys(msg, &KNOWN, "tables")?;
+    let table = TableKind::parse(required_str(msg, "table")?)?;
+    let faithful = match msg.get("faithful") {
+        None => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => bail!("'faithful' must be a boolean"),
+    };
+    Ok(Request::Tables { table, faithful })
+}
+
+// ---------------------------------------------------------------------
+// Request encode
+// ---------------------------------------------------------------------
+
+/// Encode a typed [`Request`] back to its protocol JSON. Command requests
+/// carry an explicit `protocol` field; `decode_request(&encode_request(r))`
+/// round-trips byte-for-byte (pinned by `rust/tests/api_protocol.rs`).
+pub fn encode_request(req: &Request) -> Json {
+    let cmd = |name: &str| ("cmd", Json::Str(name.to_string()));
+    let proto = ("protocol", Json::Num(PROTOCOL_VERSION as f64));
+    let names =
+        |nets: &[Network]| Json::Arr(nets.iter().map(|n| Json::Str(n.name.clone())).collect());
+    let nums = |xs: &[usize]| Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect());
+    let strs = |xs: Vec<&str>| Json::Arr(xs.into_iter().map(|s| Json::Str(s.into())).collect());
+    match req {
+        Request::Sweep { spec, workers } => {
+            let mut pairs = vec![
+                cmd("sweep"),
+                proto,
+                ("networks", names(&spec.networks)),
+                ("macs", nums(&spec.mac_budgets)),
+                ("strategies", strs(spec.strategies.iter().map(|s| s.slug()).collect())),
+                ("modes", strs(spec.modes.iter().map(|m| m.label()).collect())),
+                ("batches", nums(&spec.batch_sizes)),
+                ("fusion_depth", nums(&spec.fusion_depths)),
+            ];
+            if let Some(w) = workers {
+                pairs.push(("workers", Json::Num(*w as f64)));
+            }
+            Json::obj(pairs)
+        }
+        Request::Explore { spec, workers } => {
+            let mut pairs = vec![
+                cmd("explore"),
+                proto,
+                ("networks", names(&spec.networks)),
+                ("macs", nums(&spec.mac_budgets)),
+                (
+                    "sram",
+                    Json::Arr(spec.sram_budgets.iter().map(|s| Json::Str(s.label())).collect()),
+                ),
+                ("strategies", strs(spec.strategies.iter().map(|s| s.slug()).collect())),
+                ("modes", strs(spec.modes.iter().map(|m| m.label()).collect())),
+                ("fusion", nums(&spec.fusion_depths)),
+                ("objectives", strs(spec.objectives.iter().map(|o| o.label()).collect())),
+            ];
+            if let Some(w) = workers {
+                pairs.push(("workers", Json::Num(*w as f64)));
+            }
+            Json::obj(pairs)
+        }
+        Request::Fusion { networks, depth, p_macs, strategy, mode } => Json::obj(vec![
+            cmd("fusion"),
+            proto,
+            ("networks", names(networks)),
+            ("depth", Json::Num(*depth as f64)),
+            ("macs", Json::Num(*p_macs as f64)),
+            ("strategy", Json::Str(strategy.slug().to_string())),
+            ("mode", Json::Str(mode.label().to_string())),
+        ]),
+        Request::Analyze { network, p_macs, strategy, mode } => Json::obj(vec![
+            cmd("analyze"),
+            proto,
+            ("network", Json::Str(network.name.clone())),
+            ("macs", Json::Num(*p_macs as f64)),
+            ("strategy", Json::Str(strategy.slug().to_string())),
+            ("mode", Json::Str(mode.label().to_string())),
+        ]),
+        Request::Tables { table, faithful } => Json::obj(vec![
+            cmd("tables"),
+            proto,
+            ("table", Json::Str(table.name().to_string())),
+            ("faithful", Json::Bool(*faithful)),
+        ]),
+        Request::Infer { image } => Json::obj(vec![(
+            "image",
+            Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
+        )]),
+        Request::Metrics => Json::obj(vec![cmd("metrics"), proto]),
+        Request::Version => Json::obj(vec![cmd("version"), proto]),
+        Request::Shutdown => Json::obj(vec![cmd("shutdown"), proto]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::error::ErrorCode;
+
+    #[test]
+    fn protocol_field_is_checked() {
+        assert!(check_protocol(&Json::parse(r#"{"cmd":"version"}"#).unwrap()).is_ok());
+        assert!(check_protocol(&Json::parse(r#"{"protocol":1}"#).unwrap()).is_ok());
+        assert!(check_protocol(&Json::parse(r#"{"protocol":2}"#).unwrap()).is_err());
+        assert!(check_protocol(&Json::parse(r#"{"protocol":"x"}"#).unwrap()).is_err());
+        let err = decode_line(r#"{"cmd":"version","protocol":99}"#).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("unsupported protocol version 99"), "{err}");
+    }
+
+    #[test]
+    fn decode_dispatches_on_cmd() {
+        assert!(matches!(decode_line(r#"{"cmd":"metrics"}"#), Ok(Request::Metrics)));
+        assert!(matches!(decode_line(r#"{"cmd":"version"}"#), Ok(Request::Version)));
+        assert!(matches!(decode_line(r#"{"cmd":"shutdown"}"#), Ok(Request::Shutdown)));
+        let err = decode_line(r#"{"cmd":"bogus"}"#).unwrap_err();
+        assert_eq!(err.message, "unknown cmd 'bogus'");
+        let err = decode_line("not json").unwrap_err();
+        assert!(err.message.starts_with("bad json: "), "{err}");
+        assert_eq!(decode_line("{}").unwrap_err().message, "missing 'image' array");
+    }
+
+    #[test]
+    fn fusion_and_analyze_decode_defaults() {
+        let Request::Fusion { networks, depth, p_macs, strategy, mode } =
+            decode_line(r#"{"cmd":"fusion"}"#).unwrap()
+        else {
+            panic!("not a fusion request");
+        };
+        assert_eq!(networks.len(), 8);
+        assert_eq!((depth, p_macs), (2, 1024));
+        assert_eq!(strategy, Strategy::Optimal);
+        assert_eq!(mode, ControllerMode::Passive);
+
+        let Request::Analyze { network, p_macs, .. } =
+            decode_line(r#"{"cmd":"analyze","network":"resnet18","macs":512}"#).unwrap()
+        else {
+            panic!("not an analyze request");
+        };
+        assert_eq!(network.name, "ResNet-18");
+        assert_eq!(p_macs, 512);
+        assert!(decode_line(r#"{"cmd":"analyze"}"#).is_err());
+        assert!(decode_line(r#"{"cmd":"analyze","network":"Nope"}"#).is_err());
+        assert!(decode_line(r#"{"cmd":"fusion","warp":9}"#).is_err());
+    }
+
+    #[test]
+    fn tables_decode() {
+        let Request::Tables { table, faithful } =
+            decode_line(r#"{"cmd":"tables","table":"fig2-ascii","faithful":true}"#).unwrap()
+        else {
+            panic!("not a tables request");
+        };
+        assert_eq!(table, TableKind::Fig2Ascii);
+        assert!(faithful);
+        assert!(decode_line(r#"{"cmd":"tables"}"#).is_err());
+        assert!(decode_line(r#"{"cmd":"tables","table":"table9"}"#).is_err());
+        assert!(decode_line(r#"{"cmd":"tables","table":"table1","faithful":1}"#).is_err());
+    }
+}

@@ -1,0 +1,454 @@
+//! The dispatcher: one engine every frontend drives.
+//!
+//! [`Engine`] owns the long-lived [`GridEngine`] layer-shape cache (so
+//! repeated requests get warmer regardless of which frontend they arrive
+//! through), the per-request size caps (previously enforced by `serve`
+//! only — now every frontend gets them), the optional PJRT inference
+//! stack, and per-request metrics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Result;
+
+use crate::analytics::grid::GridEngine;
+use crate::coordinator::parallel::default_workers;
+use crate::coordinator::{InferenceService, ServiceConfig};
+use crate::dse::explore as dse_explore;
+use crate::report::{analyze as report_analyze, fig2, fusion as report_fusion, tables};
+use crate::runtime::{ArtifactDir, Tensor};
+use crate::util::json::Json;
+
+use super::codec;
+use super::error::{ApiError, ErrorCode};
+use super::request::{Request, TableKind};
+use super::response::Response;
+
+/// Inference request payload size (CIFAR-shaped 3×32×32 image).
+pub const IMAGE_ELEMS: usize = 3 * 32 * 32;
+
+/// Largest grid (sweep) or candidate set (explore) a single request may
+/// expand to, enforced in [`Engine::dispatch`] for every frontend.
+pub const MAX_REQUEST_CELLS: usize = 100_000;
+
+/// Resolve a request's optional worker count: default to machine
+/// parallelism, clamp to the per-request cap. One policy for every
+/// frontend, so it cannot drift.
+pub fn effective_workers(requested: Option<usize>) -> usize {
+    requested.unwrap_or_else(default_workers).clamp(1, 64)
+}
+
+/// Per-command request counters (and an error total), surfaced through
+/// `{"cmd":"metrics"}`.
+#[derive(Default)]
+struct Counters {
+    sweep: AtomicU64,
+    explore: AtomicU64,
+    fusion: AtomicU64,
+    analyze: AtomicU64,
+    tables: AtomicU64,
+    infer: AtomicU64,
+    metrics: AtomicU64,
+    version: AtomicU64,
+    shutdown: AtomicU64,
+    errors: AtomicU64,
+}
+
+impl Counters {
+    fn slots(&self) -> [(&'static str, &AtomicU64); 10] {
+        [
+            ("sweep", &self.sweep),
+            ("explore", &self.explore),
+            ("fusion", &self.fusion),
+            ("analyze", &self.analyze),
+            ("tables", &self.tables),
+            ("infer", &self.infer),
+            ("metrics", &self.metrics),
+            ("version", &self.version),
+            ("shutdown", &self.shutdown),
+            ("errors", &self.errors),
+        ]
+    }
+
+    fn count(&self, cmd: &str) {
+        for (name, slot) in self.slots() {
+            if name == cmd {
+                slot.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+
+    /// Non-zero counters only, in slot order (the JSON object sorts).
+    fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        self.slots()
+            .into_iter()
+            .map(|(name, slot)| (name, slot.load(Ordering::Relaxed)))
+            .filter(|&(_, n)| n > 0)
+            .collect()
+    }
+}
+
+/// The typed facade every frontend dispatches through.
+///
+/// Create one engine and keep it alive: the grid cache persists across
+/// requests (`serve` holds one for its whole lifetime; the CLI commands
+/// hold one per invocation).
+pub struct Engine {
+    grid: GridEngine,
+    service: Option<InferenceService>,
+    /// Why inference is unavailable (the real artifact-load error), so
+    /// per-request failures report the actual cause, not a guess.
+    inference_error: Option<String>,
+    counters: Counters,
+}
+
+impl Engine {
+    /// An analytics-only engine: every command works except `infer`
+    /// (which reports `inference_unavailable`). This is the embedding
+    /// entry point for library callers and tests.
+    pub fn analytics() -> Engine {
+        Engine {
+            grid: GridEngine::new(),
+            service: None,
+            inference_error: None,
+            counters: Counters::default(),
+        }
+    }
+
+    /// Build an engine with the PJRT inference stack, degrading to
+    /// analytics-only (with the load error recorded) when the artifact
+    /// directory is unavailable.
+    pub fn start(max_batch: usize) -> Result<Engine> {
+        let (service, inference_error) = match ArtifactDir::open_default() {
+            Ok(artifacts) => (
+                Some(InferenceService::start(
+                    artifacts,
+                    ServiceConfig { max_batch, ..ServiceConfig::default() },
+                )?),
+                None,
+            ),
+            Err(e) => (None, Some(format!("{e:#}"))),
+        };
+        Ok(Engine {
+            grid: GridEngine::new(),
+            service,
+            inference_error,
+            counters: Counters::default(),
+        })
+    }
+
+    /// Whether `{"image": ...}` requests can be served.
+    pub fn has_inference(&self) -> bool {
+        self.service.is_some()
+    }
+
+    /// Why inference is disabled (`None` when it is available).
+    pub fn inference_error(&self) -> Option<&str> {
+        self.inference_error.as_deref()
+    }
+
+    /// The inference service's metrics summary, when inference is up.
+    pub fn service_metrics(&self) -> Option<String> {
+        self.service.as_ref().map(|s| s.metrics.summary())
+    }
+
+    /// `(hits, misses)` of the shared layer-shape cache.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.grid.cache_stats()
+    }
+
+    /// The underlying grid engine (for callers composing their own
+    /// analytics on the shared cache).
+    pub fn grid(&self) -> &GridEngine {
+        &self.grid
+    }
+
+    /// Dispatch one typed request. Every frontend funnels through here,
+    /// so the size caps, worker policy and metrics apply uniformly.
+    pub fn dispatch(&self, req: &Request) -> Result<Response, ApiError> {
+        self.counters.count(req.cmd());
+        let result = self.dispatch_inner(req);
+        if result.is_err() {
+            self.counters.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        result
+    }
+
+    /// Decode, dispatch and encode one JSON-lines request. Errors become
+    /// `{"code": ..., "error": ...}` replies. The bool asks the host to
+    /// stop serving (a `shutdown` request was acknowledged).
+    pub fn handle_line(&self, line: &str) -> (Json, bool) {
+        let result = match codec::decode_line(line) {
+            Ok(req) => self.dispatch(&req),
+            Err(e) => {
+                self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        };
+        match result {
+            Ok(resp) => {
+                let stop = matches!(resp, Response::Shutdown);
+                (resp.to_json(), stop)
+            }
+            Err(e) => (e.to_json(), false),
+        }
+    }
+
+    fn dispatch_inner(&self, req: &Request) -> Result<Response, ApiError> {
+        match req {
+            Request::Sweep { spec, workers } => {
+                spec.validate().map_err(ApiError::bad)?;
+                if spec.cell_count() > MAX_REQUEST_CELLS {
+                    return Err(ApiError::too_large(format!(
+                        "sweep expands to {} cells (limit {MAX_REQUEST_CELLS})",
+                        spec.cell_count()
+                    )));
+                }
+                let workers = effective_workers(*workers);
+                let (hits_before, misses_before) = self.grid.cache_stats();
+                let grid = self.grid.run_with_workers(spec, workers);
+                let (hits_after, misses_after) = self.grid.cache_stats();
+                Ok(Response::Sweep {
+                    grid,
+                    cache_hits: hits_after.saturating_sub(hits_before),
+                    cache_misses: misses_after.saturating_sub(misses_before),
+                })
+            }
+            Request::Explore { spec, workers } => {
+                spec.validate().map_err(ApiError::bad)?;
+                if spec.candidate_count() > MAX_REQUEST_CELLS {
+                    return Err(ApiError::too_large(format!(
+                        "explore expands to {} candidates (limit {MAX_REQUEST_CELLS})",
+                        spec.candidate_count()
+                    )));
+                }
+                let workers = effective_workers(*workers);
+                let result = dse_explore::explore(&self.grid, spec, workers);
+                Ok(Response::Explore { result })
+            }
+            Request::Fusion { networks, depth, p_macs, strategy, mode } => {
+                if networks.is_empty() {
+                    return Err(ApiError::bad_msg("fusion request has no networks"));
+                }
+                if *depth < 1 {
+                    return Err(ApiError::bad_msg("fusion depth must be >= 1"));
+                }
+                if *p_macs == 0 {
+                    return Err(ApiError::bad_msg("MAC budget must be > 0"));
+                }
+                let table = report_fusion::fusion_table(
+                    &self.grid,
+                    networks,
+                    *depth,
+                    *p_macs,
+                    *strategy,
+                    *mode,
+                );
+                let note = report_fusion::summarize(networks.len(), *depth, *p_macs);
+                Ok(Response::Table { table, note })
+            }
+            Request::Analyze { network, p_macs, strategy, mode } => {
+                if *p_macs == 0 {
+                    return Err(ApiError::bad_msg("MAC budget must be > 0"));
+                }
+                let (table, note) =
+                    report_analyze::analyze_table(&self.grid, network, *p_macs, *strategy, *mode);
+                Ok(Response::Table { table, note })
+            }
+            Request::Tables { table, faithful } => {
+                if *faithful && matches!(table, TableKind::Fig2 | TableKind::Fig2Ascii) {
+                    // Fail loudly rather than silently serve the
+                    // non-faithful figure (the paper-profile Fig. 2 is
+                    // the only one the crate renders).
+                    return Err(ApiError::bad_msg("fig2 has no faithful variant"));
+                }
+                let nets = faithful.then(crate::models::zoo::faithful_networks);
+                Ok(match table {
+                    TableKind::Table1 => Response::Table {
+                        table: match &nets {
+                            Some(nets) => tables::table1_for(nets),
+                            None => tables::table1(),
+                        },
+                        note: String::new(),
+                    },
+                    TableKind::Table2 => Response::Table {
+                        table: match &nets {
+                            Some(nets) => tables::table2_for(nets),
+                            None => tables::table2(),
+                        },
+                        note: String::new(),
+                    },
+                    TableKind::Table3 => Response::Table {
+                        table: match &nets {
+                            Some(nets) => tables::table3_for(nets),
+                            None => tables::table3(),
+                        },
+                        note: String::new(),
+                    },
+                    TableKind::Fig2 => {
+                        Response::Table { table: fig2::fig2_table(), note: String::new() }
+                    }
+                    TableKind::Fig2Ascii => Response::Text { text: fig2::fig2_ascii() },
+                })
+            }
+            Request::Infer { image } => {
+                let service = self.service.as_ref().ok_or_else(|| {
+                    ApiError::new(
+                        ErrorCode::InferenceUnavailable,
+                        format!(
+                            "inference unavailable: {}",
+                            self.inference_error.as_deref().unwrap_or("service not started")
+                        ),
+                    )
+                })?;
+                if image.len() != IMAGE_ELEMS {
+                    return Err(ApiError::bad_msg(format!(
+                        "image must have {IMAGE_ELEMS} floats, got {}",
+                        image.len()
+                    )));
+                }
+                let tensor =
+                    Tensor::new(vec![3, 32, 32], image.clone()).map_err(ApiError::internal)?;
+                let resp = service.infer(tensor).map_err(ApiError::internal)?;
+                Ok(Response::Infer(resp))
+            }
+            Request::Metrics => {
+                let summary = match &self.service {
+                    Some(service) => service.metrics.summary(),
+                    None => "inference disabled (analytics-only mode)".to_string(),
+                };
+                Ok(Response::Metrics { summary, requests: self.counters.snapshot() })
+            }
+            Request::Version => Ok(Response::Version),
+            Request::Shutdown => Ok(Response::Shutdown),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::bandwidth::ControllerMode;
+    use crate::analytics::grid::SweepSpec;
+    use crate::analytics::partition::Strategy;
+    use crate::models::zoo;
+
+    fn small_sweep() -> SweepSpec {
+        SweepSpec::new(vec![zoo::alexnet()])
+            .with_macs(vec![512])
+            .with_strategies(vec![Strategy::Optimal])
+            .with_modes(vec![ControllerMode::Passive])
+    }
+
+    #[test]
+    fn dispatch_sweep_returns_cells_and_cache_deltas() {
+        let engine = Engine::analytics();
+        let req = Request::Sweep { spec: small_sweep(), workers: Some(1) };
+        let Response::Sweep { grid, cache_hits, cache_misses } = engine.dispatch(&req).unwrap()
+        else {
+            panic!("not a sweep response");
+        };
+        assert_eq!(grid.len(), 1);
+        assert_eq!((cache_hits, cache_misses), (0, 5));
+        // A second identical request is answered from the shared cache.
+        let Response::Sweep { cache_hits, cache_misses, .. } = engine.dispatch(&req).unwrap()
+        else {
+            panic!("not a sweep response");
+        };
+        assert_eq!((cache_hits, cache_misses), (5, 0));
+    }
+
+    #[test]
+    fn caps_apply_to_both_sweep_and_explore() {
+        let engine = Engine::analytics();
+        let spec = SweepSpec::new(vec![zoo::alexnet()]).with_batches((1..=2101).collect());
+        assert!(spec.cell_count() > MAX_REQUEST_CELLS);
+        let err = engine.dispatch(&Request::Sweep { spec, workers: Some(1) }).unwrap_err();
+        assert_eq!(err.code, ErrorCode::TooLarge);
+
+        let spec = crate::dse::space::ExploreSpec::new(vec![zoo::alexnet()])
+            .with_macs((1..=3200).collect());
+        assert!(spec.candidate_count() > MAX_REQUEST_CELLS);
+        let err = engine.dispatch(&Request::Explore { spec, workers: Some(1) }).unwrap_err();
+        assert_eq!(err.code, ErrorCode::TooLarge);
+    }
+
+    #[test]
+    fn overflowing_axis_products_saturate_into_the_cap() {
+        // 2^16-entry axes multiply past 2^64; wrapping arithmetic would
+        // fold the product to a tiny count and slip under the cap —
+        // cell_count/candidate_count must saturate instead.
+        let engine = Engine::analytics();
+        let spec = SweepSpec::new(vec![zoo::alexnet()])
+            .with_macs(vec![512; 1 << 16])
+            .with_strategies(vec![Strategy::Optimal; 1 << 16])
+            .with_batches(vec![1; 1 << 16])
+            .with_fusion(vec![1; 1 << 16]);
+        assert_eq!(spec.cell_count(), usize::MAX);
+        let err = engine.dispatch(&Request::Sweep { spec, workers: Some(1) }).unwrap_err();
+        assert_eq!(err.code, ErrorCode::TooLarge);
+
+        let spec = crate::dse::space::ExploreSpec::new(vec![zoo::alexnet()])
+            .with_macs(vec![512; 1 << 16])
+            .with_sram(vec![crate::dse::budget::SramBudget::Unlimited; 1 << 16])
+            .with_strategies(vec![Strategy::Optimal; 1 << 16])
+            .with_fusion(vec![1; 1 << 16]);
+        assert_eq!(spec.candidate_count(), usize::MAX);
+        let err = engine.dispatch(&Request::Explore { spec, workers: Some(1) }).unwrap_err();
+        assert_eq!(err.code, ErrorCode::TooLarge);
+    }
+
+    #[test]
+    fn fig2_rejects_the_faithful_flag_loudly() {
+        let engine = Engine::analytics();
+        for kind in [TableKind::Fig2, TableKind::Fig2Ascii] {
+            let err = engine
+                .dispatch(&Request::Tables { table: kind, faithful: true })
+                .unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest);
+            assert_eq!(err.message, "fig2 has no faithful variant");
+        }
+        // The paper tables do have faithful variants.
+        let ok = engine.dispatch(&Request::Tables { table: TableKind::Table3, faithful: true });
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn invalid_specs_are_bad_requests_not_panics() {
+        let engine = Engine::analytics();
+        let spec = SweepSpec::new(vec![zoo::alexnet()]).with_batches(vec![0]);
+        let err = engine.dispatch(&Request::Sweep { spec, workers: None }).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn metrics_count_requests_and_errors() {
+        let engine = Engine::analytics();
+        engine.dispatch(&Request::Version).unwrap();
+        engine.dispatch(&Request::Version).unwrap();
+        let _ = engine.handle_line("not json");
+        let Response::Metrics { summary, requests } =
+            engine.dispatch(&Request::Metrics).unwrap()
+        else {
+            panic!("not a metrics response");
+        };
+        assert!(summary.contains("disabled"));
+        assert_eq!(requests, vec![("metrics", 1), ("version", 2), ("errors", 1)]);
+    }
+
+    #[test]
+    fn infer_without_service_reports_unavailable() {
+        let engine = Engine::analytics();
+        let err = engine.dispatch(&Request::Infer { image: vec![0.0; IMAGE_ELEMS] }).unwrap_err();
+        assert_eq!(err.code, ErrorCode::InferenceUnavailable);
+        assert!(err.message.contains("inference unavailable"), "{err}");
+    }
+
+    #[test]
+    fn workers_policy_is_shared() {
+        assert_eq!(effective_workers(Some(0)), 1);
+        assert_eq!(effective_workers(Some(3)), 3);
+        assert_eq!(effective_workers(Some(1000)), 64);
+        assert!(effective_workers(None) >= 1);
+    }
+}

@@ -1,0 +1,112 @@
+//! The API error type: a stable machine-readable code plus the
+//! human-readable message every frontend already shows.
+//!
+//! The `code` is part of the wire protocol — clients branch on it, so the
+//! variants are append-only. The `message` keeps the text the pre-facade
+//! `serve` protocol emitted (`{"error": "..."}`) byte-compatible on the
+//! common paths (bad JSON, unknown cmd, validation, caps, inference
+//! unavailable) — only unknown-key diagnostics now also list the
+//! `protocol` key. `code` is the additive, stable alternative to
+//! matching on message substrings.
+
+use std::fmt;
+
+use crate::util::json::Json;
+
+/// Stable machine-readable error category. The wire form is
+/// [`ErrorCode::as_str`]; variants are append-only (removing or renaming
+/// one breaks deployed clients).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ErrorCode {
+    /// The request could not be decoded or failed validation.
+    BadRequest,
+    /// The request is well-formed but expands past the per-request cap.
+    TooLarge,
+    /// An `{"image": ...}` request reached a host without a PJRT stack.
+    InferenceUnavailable,
+    /// The request was valid but the engine failed to serve it.
+    Internal,
+}
+
+impl ErrorCode {
+    /// The wire token, e.g. `"bad_request"`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::TooLarge => "too_large",
+            ErrorCode::InferenceUnavailable => "inference_unavailable",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+/// A dispatch failure: stable `code`, byte-compatible `message`.
+#[derive(Clone, Debug)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
+        ApiError { code, message: message.into() }
+    }
+
+    /// A validation/decode failure carrying an `anyhow` chain, formatted
+    /// exactly as the pre-facade serve loop did (`{err:#}`).
+    pub fn bad(err: anyhow::Error) -> ApiError {
+        ApiError::new(ErrorCode::BadRequest, format!("{err:#}"))
+    }
+
+    pub fn bad_msg(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::BadRequest, message)
+    }
+
+    pub fn too_large(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::TooLarge, message)
+    }
+
+    pub fn internal(err: anyhow::Error) -> ApiError {
+        ApiError::new(ErrorCode::Internal, format!("{err:#}"))
+    }
+
+    /// The wire reply: `{"code": "...", "error": "..."}`. The `error`
+    /// field carries the exact pre-facade text; `code` is additive.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::Str(self.code.as_str().to_string())),
+            ("error", Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_tokens() {
+        assert_eq!(ErrorCode::BadRequest.as_str(), "bad_request");
+        assert_eq!(ErrorCode::TooLarge.as_str(), "too_large");
+        assert_eq!(ErrorCode::InferenceUnavailable.as_str(), "inference_unavailable");
+        assert_eq!(ErrorCode::Internal.as_str(), "internal");
+    }
+
+    #[test]
+    fn json_reply_keeps_error_text_and_adds_code() {
+        let e = ApiError::bad_msg("missing 'image' array");
+        assert_eq!(
+            e.to_json().to_string(),
+            r#"{"code":"bad_request","error":"missing 'image' array"}"#
+        );
+        assert_eq!(e.to_string(), "missing 'image' array");
+    }
+}

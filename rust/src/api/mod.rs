@@ -1,0 +1,92 @@
+//! The typed Request/Response facade — ONE entry point for the CLI, the
+//! `serve` protocol and library embedders.
+//!
+//! Every question the cost model answers (sweep a grid, explore a
+//! frontier, fuse a chain, regenerate a paper table, run inference) is a
+//! [`Request`] variant; every answer is a [`Response`]; every failure is
+//! an [`ApiError`] with a stable machine-readable code. The [`Engine`]
+//! dispatcher owns the shared layer-shape cache, the per-request size
+//! caps and per-request metrics, so a new axis or command lands once and
+//! every frontend picks it up.
+//!
+//! * [`codec`] — JSON decode/encode (the serve wire protocol), including
+//!   the single set of axis parsers that `SweepSpec::from_json` and
+//!   `ExploreSpec::from_json` delegate to, and the optional `protocol`
+//!   version field.
+//! * [`request`]/[`response`] — the typed surface and its documentation
+//!   ([`protocol_table`] generates the README's protocol table).
+//! * [`engine`] — [`Engine::dispatch`] and [`Engine::handle_line`].
+//!
+//! # Embedding
+//!
+//! ```
+//! use psim::analytics::grid::SweepSpec;
+//! use psim::analytics::{ControllerMode, Strategy};
+//! use psim::api::{Engine, Request, Response};
+//! use psim::models::zoo;
+//!
+//! let engine = Engine::analytics();
+//!
+//! // Typed request in, typed response out:
+//! let spec = SweepSpec::new(vec![zoo::alexnet()])
+//!     .with_macs(vec![512, 2048])
+//!     .with_strategies(vec![Strategy::Optimal])
+//!     .with_modes(vec![ControllerMode::Passive]);
+//! let resp = engine.dispatch(&Request::Sweep { spec, workers: Some(2) }).unwrap();
+//! let Response::Sweep { grid, .. } = resp else { unreachable!() };
+//! assert_eq!(grid.len(), 2);
+//!
+//! // Or straight from a protocol JSON line (what `serve` does):
+//! let (reply, shutdown) = engine.handle_line(r#"{"cmd":"version"}"#);
+//! assert_eq!(reply.get("protocol").unwrap().as_usize(), Some(psim::api::PROTOCOL_VERSION));
+//! assert!(!shutdown);
+//! ```
+//!
+//! The README's protocol table is generated from the [`Request`] enum's
+//! documentation rows and pinned by this doc-test, so the two cannot
+//! drift:
+//!
+//! ```
+//! let readme =
+//!     std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md")).unwrap();
+//! assert!(readme.contains(&psim::api::protocol_table()), "README protocol table is stale");
+//! ```
+
+pub mod codec;
+pub mod engine;
+pub mod error;
+pub mod request;
+pub mod response;
+
+pub use engine::{Engine, IMAGE_ELEMS, MAX_REQUEST_CELLS};
+pub use error::{ApiError, ErrorCode};
+pub use request::{protocol_table, Request, TableKind, COMMANDS};
+pub use response::Response;
+
+/// The wire-protocol version every frontend speaks. Bumped only on a
+/// breaking change to request/response shapes; additive fields do not
+/// bump it. Reported by `psim --version`, `{"cmd":"version"}` and
+/// accepted back via the optional `"protocol"` request field.
+pub const PROTOCOL_VERSION: usize = 1;
+
+/// The crate version (from `Cargo.toml`), reported alongside
+/// [`PROTOCOL_VERSION`].
+pub const CRATE_VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// The `psim --version` line: crate + protocol version from the one pair
+/// of constants above.
+pub fn version_line() -> String {
+    format!("psim {CRATE_VERSION} (protocol {PROTOCOL_VERSION})")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn version_line_carries_both_versions() {
+        let line = version_line();
+        assert!(line.contains(CRATE_VERSION));
+        assert!(line.contains(&PROTOCOL_VERSION.to_string()));
+    }
+}

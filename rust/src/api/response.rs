@@ -1,0 +1,127 @@
+//! The typed response surface and its stable JSON encoding.
+//!
+//! [`Response::to_json`] reproduces the pre-facade `serve` reply shapes
+//! byte-for-byte (object keys sort alphabetically through
+//! [`Json::obj`]); new fields are additive only, so deployed JSON-lines
+//! clients keep parsing.
+
+use crate::analytics::grid::GridResult;
+use crate::coordinator::InferResponse;
+use crate::dse::explore::ExploreResult;
+use crate::util::json::Json;
+use crate::util::tablefmt::Table;
+
+/// One API reply. CLI frontends render the typed payload (markdown, CSV,
+/// JSONL); `serve` and `psim request` emit [`Response::to_json`].
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// A sweep's grid cells plus the layer-cache deltas this request saw
+    /// (approximate when sweeps run concurrently — the cache is shared,
+    /// and that sharing is the point).
+    Sweep { grid: GridResult, cache_hits: u64, cache_misses: u64 },
+    /// An exploration's Pareto frontier and its evaluation counters.
+    Explore { result: ExploreResult },
+    /// A rendered table (fusion, analyze, tables) plus a one-line note
+    /// (empty when the command has none).
+    Table { table: Table, note: String },
+    /// A plain-text payload (`fig2-ascii`).
+    Text { text: String },
+    /// A functional inference result.
+    Infer(InferResponse),
+    /// Engine/server metrics: the inference summary line plus per-command
+    /// request counters (only non-zero ones appear on the wire).
+    Metrics { summary: String, requests: Vec<(&'static str, u64)> },
+    /// Crate + protocol version.
+    Version,
+    /// Acknowledges a shutdown request; the host owning the socket (or
+    /// stdin loop) decides what "stop serving" means.
+    Shutdown,
+}
+
+impl Response {
+    /// The stable wire encoding (one JSON object; keys sorted).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Sweep { grid, cache_hits, cache_misses } => Json::obj(vec![
+                ("cells", Json::Arr(grid.cells.iter().map(|c| c.to_json()).collect())),
+                ("count", Json::Num(grid.len() as f64)),
+                ("cache_hits", Json::Num(*cache_hits as f64)),
+                ("cache_misses", Json::Num(*cache_misses as f64)),
+            ]),
+            Response::Explore { result } => Json::obj(vec![
+                ("frontier", Json::Arr(result.frontier.iter().map(|f| f.to_json()).collect())),
+                ("count", Json::Num(result.frontier.len() as f64)),
+                ("candidates", Json::Num(result.candidates as f64)),
+                ("evaluated", Json::Num(result.evaluated as f64)),
+                ("pruned", Json::Num(result.pruned.len() as f64)),
+                ("infeasible", Json::Num(result.infeasible as f64)),
+            ]),
+            Response::Table { table, note } => {
+                let mut pairs = vec![("table", Json::Str(table.to_markdown()))];
+                if !note.is_empty() {
+                    pairs.push(("note", Json::Str(note.clone())));
+                }
+                Json::obj(pairs)
+            }
+            Response::Text { text } => Json::obj(vec![("text", Json::Str(text.clone()))]),
+            Response::Infer(resp) => Json::obj(vec![
+                ("id", Json::Num(resp.id as f64)),
+                ("class", Json::Num(resp.top_class() as f64)),
+                (
+                    "logits",
+                    Json::Arr(resp.logits.iter().map(|&v| Json::Num(v as f64)).collect()),
+                ),
+                ("latency_us", Json::Num(resp.latency_us as f64)),
+            ]),
+            Response::Metrics { summary, requests } => Json::obj(vec![
+                ("metrics", Json::Str(summary.clone())),
+                (
+                    "requests",
+                    Json::obj(
+                        requests.iter().map(|&(cmd, n)| (cmd, Json::Num(n as f64))).collect(),
+                    ),
+                ),
+            ]),
+            Response::Version => Json::obj(vec![
+                ("version", Json::Str(super::CRATE_VERSION.to_string())),
+                ("protocol", Json::Num(super::PROTOCOL_VERSION as f64)),
+            ]),
+            Response::Shutdown => Json::obj(vec![("ok", Json::Bool(true))]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shutdown_and_version_shapes() {
+        assert_eq!(Response::Shutdown.to_json().to_string(), r#"{"ok":true}"#);
+        let v = Response::Version.to_json();
+        assert_eq!(v.get("protocol").unwrap().as_usize(), Some(super::super::PROTOCOL_VERSION));
+        assert_eq!(v.get("version").unwrap().as_str(), Some(super::super::CRATE_VERSION));
+    }
+
+    #[test]
+    fn table_note_is_omitted_when_empty() {
+        let mut table = Table::new(vec!["a"]);
+        table.row(vec!["1"]);
+        let bare = Response::Table { table: table.clone(), note: String::new() };
+        assert!(bare.to_json().get("note").is_none());
+        let with = Response::Table { table, note: "hi".to_string() };
+        assert_eq!(with.to_json().get("note").unwrap().as_str(), Some("hi"));
+    }
+
+    #[test]
+    fn metrics_requests_are_an_object() {
+        let m = Response::Metrics {
+            summary: "s".to_string(),
+            requests: vec![("sweep", 2), ("metrics", 1)],
+        };
+        assert_eq!(
+            m.to_json().to_string(),
+            r#"{"metrics":"s","requests":{"metrics":1,"sweep":2}}"#
+        );
+    }
+}

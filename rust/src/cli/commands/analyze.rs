@@ -3,9 +3,8 @@
 use anyhow::{anyhow, Result};
 
 use crate::analytics::bandwidth::ControllerMode;
-use crate::analytics::grid::GridEngine;
-use crate::analytics::optimizer;
 use crate::analytics::partition::Strategy;
+use crate::api::{Engine, Request, Response};
 use crate::cli::args::Args;
 use crate::config::accel::{parse_mode, parse_strategy};
 use crate::models::zoo;
@@ -57,45 +56,18 @@ pub fn analyze(args: &Args) -> Result<i32> {
 
     let net = zoo::by_name(&name)
         .ok_or_else(|| anyhow!("unknown network '{name}' — see `psim networks`"))?;
-    let mut t = Table::new(vec![
-        "layer", "shape", "m", "n", "m* (eq.7)", "MAC util", "B_i (M)", "B_o (M)", "B (M)",
-    ]);
-    // Per-layer rows come from the sweep engine's memoized evaluator, so
-    // repeated shapes (ResNet blocks, VGG stacks) are computed once.
-    let engine = GridEngine::new();
-    let mut total = 0.0;
-    for layer in &net.layers {
-        let eval = engine.layer_eval(layer, p_macs, strategy, mode);
-        let (part, bw) = (eval.partition, eval.bandwidth);
-        let m_star = optimizer::optimal_m_real(layer, p_macs, mode);
-        total += bw.total();
-        t.row(vec![
-            layer.name.clone(),
-            format!("{}x{}x{}→{}x{}x{} k{}{}",
-                layer.wi, layer.hi, layer.m, layer.wo(), layer.ho(), layer.n, layer.k,
-                if layer.groups > 1 { format!(" g{}", layer.groups) } else { String::new() }),
-            part.m.to_string(),
-            part.n.to_string(),
-            format!("{m_star:.2}"),
-            format!("{:.0}%", (layer.k * layer.k * part.m * part.n) as f64 / p_macs as f64 * 100.0),
-            mact(bw.input, 2),
-            mact(bw.output, 2),
-            mact(bw.total(), 2),
-        ]);
-    }
+    // Same facade as `serve` and library callers; the per-layer table is
+    // rendered by `report::analyze` from the engine's memoized evaluator.
+    let engine = Engine::analytics();
+    let resp = engine.dispatch(&Request::Analyze { network: net, p_macs, strategy, mode })?;
+    let Response::Table { table, note } = resp else {
+        unreachable!("analyze dispatch always returns a table response")
+    };
     if csv {
-        print!("{}", t.to_csv());
+        print!("{}", table.to_csv());
     } else {
-        print!("{}", t.to_markdown());
+        print!("{}", table.to_markdown());
     }
-    println!(
-        "\n{} @ P={p_macs}, {} controller, {} strategy: total {} M activations \
-         (floor {} M)",
-        net.name,
-        mode.label(),
-        strategy.label(),
-        mact(total, 2),
-        mact(net.min_bandwidth() as f64, 3),
-    );
+    println!("\n{note}");
     Ok(0)
 }

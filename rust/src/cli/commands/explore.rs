@@ -7,11 +7,10 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::analytics::fusion;
-use crate::analytics::grid::GridEngine;
+use crate::api::engine::effective_workers;
+use crate::api::{Engine, Request, Response};
 use crate::cli::args::Args;
-use crate::coordinator::parallel::default_workers;
 use crate::dse::budget::apply_constraints;
-use crate::dse::explore as dse_explore;
 use crate::dse::pareto::parse_objectives;
 use crate::dse::space::ExploreSpec;
 use crate::models::zoo;
@@ -76,16 +75,20 @@ pub fn explore(args: &Args) -> Result<i32> {
     if let Some(list) = args.opt("objectives") {
         spec.objectives = parse_objectives(list)?;
     }
-    let workers = args.opt_usize("workers")?.unwrap_or_else(default_workers).max(1);
+    let workers = effective_workers(args.opt_usize("workers")?);
     let out = args.opt("out").map(std::path::PathBuf::from);
     let table = args.flag("table");
     args.reject_unknown()?;
-    spec.validate()?;
 
-    let engine = GridEngine::new();
+    // Same facade as `serve` and library callers: validation, the
+    // request-size cap and the worker clamp all live in the dispatcher.
+    let engine = Engine::analytics();
     let t0 = Instant::now();
-    let result = dse_explore::explore(&engine, &spec, workers);
+    let resp = engine.dispatch(&Request::Explore { spec, workers: Some(workers) })?;
     let elapsed = t0.elapsed();
+    let Response::Explore { result } = resp else {
+        unreachable!("explore dispatch always returns an explore response")
+    };
 
     let text = if table {
         frontier::frontier_table(&result).to_markdown()

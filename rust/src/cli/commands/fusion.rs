@@ -1,15 +1,15 @@
 //! `fusion`: per-network fused-vs-unfused bandwidth report — the
-//! [`crate::report::fusion`] table from the command line.
+//! [`crate::report::fusion`] table from the command line, via the same
+//! [`crate::api::Engine`] dispatch the `serve` protocol uses.
 
 use anyhow::Result;
 
 use crate::analytics::bandwidth::ControllerMode;
-use crate::analytics::grid::GridEngine;
 use crate::analytics::partition::Strategy;
+use crate::api::{Engine, Request, Response};
 use crate::cli::args::Args;
 use crate::config::accel::{parse_mode, parse_strategy};
 use crate::models::zoo;
-use crate::report::fusion as report_fusion;
 
 use super::sweep::resolve_network;
 
@@ -46,12 +46,14 @@ pub fn fusion(args: &Args) -> Result<i32> {
     };
     let csv = args.flag("csv");
     args.reject_unknown()?;
-    anyhow::ensure!(depth >= 1, "--depth must be >= 1");
-    anyhow::ensure!(p_macs > 0, "--macs must be > 0");
 
-    let engine = GridEngine::new();
-    let table = report_fusion::fusion_table(&engine, &networks, depth, p_macs, strategy, mode);
+    let engine = Engine::analytics();
+    let resp =
+        engine.dispatch(&Request::Fusion { networks, depth, p_macs, strategy, mode })?;
+    let Response::Table { table, note } = resp else {
+        unreachable!("fusion dispatch always returns a table response")
+    };
     print!("{}", if csv { table.to_csv() } else { table.to_markdown() });
-    eprintln!("{}", report_fusion::summarize(networks.len(), depth, p_macs));
+    eprintln!("{note}");
     Ok(0)
 }

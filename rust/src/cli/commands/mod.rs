@@ -4,6 +4,7 @@ pub mod analyze;
 pub mod explore;
 pub mod fusion;
 pub mod infer;
+pub mod request;
 pub mod serve;
 pub mod simulate;
 pub mod sweep;

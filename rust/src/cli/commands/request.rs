@@ -1,0 +1,50 @@
+//! `request`: one-shot protocol dispatch — the `serve` wire protocol
+//! without a socket. Reads JSON request lines (from `--json` or stdin),
+//! dispatches each through [`crate::api::Engine::handle_line`] and prints
+//! the JSON replies. Used by the CI protocol-golden smoke step and handy
+//! for scripting (`printf '{"cmd":"version"}' | psim request`).
+//!
+//! Runs on an analytics-only engine — deliberately: replies stay
+//! byte-deterministic regardless of whether `artifacts/` exists (the CI
+//! fixtures depend on that), and a version query never pays a model
+//! load. Inference requests report `inference_unavailable`; use
+//! `psim serve` / `psim client` for the PJRT path.
+
+use std::io::BufRead;
+
+use anyhow::Result;
+
+use crate::api::Engine;
+use crate::cli::args::Args;
+
+/// `psim request [--json LINE]`
+///
+/// Errors are replies too (`{"code": ..., "error": ...}` on stdout, exit
+/// code 0), exactly like `serve` — the caller branches on `code`.
+pub fn request(args: &Args) -> Result<i32> {
+    let json = args.opt("json").map(str::to_string);
+    args.reject_unknown()?;
+
+    let engine = Engine::analytics();
+    match json {
+        Some(line) => {
+            let (reply, _) = engine.handle_line(&line);
+            println!("{reply}");
+        }
+        None => {
+            let stdin = std::io::stdin();
+            for line in stdin.lock().lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let (reply, stop) = engine.handle_line(&line);
+                println!("{reply}");
+                if stop {
+                    break;
+                }
+            }
+        }
+    }
+    Ok(0)
+}

@@ -1,27 +1,18 @@
 //! `serve` / `client`: a TCP JSON-lines server + load generator.
 //!
-//! The server answers both functional inference and analytical
-//! design-space queries on one connection, so a deployed instance can
-//! serve traffic and explore accelerator configurations side by side.
+//! The server is a thin socket layer over [`crate::api::Engine`]: every
+//! line is decoded, dispatched and encoded by the typed facade
+//! ([`Engine::handle_line`]), so the wire protocol, the request-size
+//! caps and the per-request metrics are exactly the ones every other
+//! frontend (CLI commands, `psim request`, library embedders) gets.
 //! When the PJRT artifacts are absent the server starts in
-//! *analytics-only* mode: sweeps work, inference requests return an error.
+//! *analytics-only* mode: analytics commands work, inference requests
+//! report `inference_unavailable`.
 //!
-//! Protocol (one JSON object per line):
-//!   request : {"image": [3072 floats]}            -> inference
-//!             {"cmd": "sweep", ...}               -> design-space sweep
-//!               optional keys: networks, macs, strategies, modes,
-//!               batches, fusion_depth (see
-//!               analytics::grid::SweepSpec::from_json), workers
-//!             {"cmd": "explore", ...}             -> Pareto exploration
-//!               optional keys: networks, macs, sram, strategies, modes,
-//!               fusion, objectives (see
-//!               dse::space::ExploreSpec::from_json), workers
-//!             {"cmd": "metrics"}                  -> server metrics
-//!             {"cmd": "shutdown"}                 -> stop the server
-//!   response: {"id": n, "class": c, "logits": [...], "latency_us": n}
-//!             {"cells": [...], "count": n, "cache_hits": h, ...}
-//!             {"frontier": [...], "count": n, "evaluated": e, ...}
-//!             {"metrics": "..."} / {"ok": true} / {"error": "..."}
+//! Protocol (one JSON object per line): see the README's protocol table
+//! (generated from [`crate::api::COMMANDS`]) or [`crate::api::codec`].
+//! Errors reply `{"code": "...", "error": "..."}` with a stable
+//! machine-readable code.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -31,29 +22,10 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::analytics::grid::{GridEngine, SweepSpec};
+use crate::api::Engine;
 use crate::cli::args::Args;
-use crate::coordinator::parallel::default_workers;
-use crate::coordinator::{InferenceService, ServiceConfig};
-use crate::dse::explore as dse_explore;
-use crate::dse::space::ExploreSpec;
-use crate::runtime::{ArtifactDir, Tensor};
+use crate::runtime::Tensor;
 use crate::util::json::Json;
-
-const IMAGE_ELEMS: usize = 3 * 32 * 32;
-
-/// Largest grid a single sweep request may expand to.
-const MAX_SWEEP_CELLS: usize = 100_000;
-
-/// Shared server state: the (optional) inference stack plus the sweep
-/// engine, whose layer-shape cache warms up across requests.
-pub struct ServerState {
-    service: Option<InferenceService>,
-    /// Why inference is unavailable (the real artifact-load error), so
-    /// per-request failures report the actual cause, not a guess.
-    inference_error: Option<String>,
-    grid: GridEngine,
-}
 
 /// Live connection sockets, so `{"cmd":"shutdown"}` can unblock peers
 /// parked in a blocking read. Without this, `thread::scope` in
@@ -92,47 +64,26 @@ impl ConnRegistry {
     }
 }
 
-impl ServerState {
-    /// Build the state, degrading to analytics-only when the artifact
-    /// directory is unavailable.
-    fn start(max_batch: usize) -> Result<ServerState> {
-        let (service, inference_error) = match ArtifactDir::open_default() {
-            Ok(artifacts) => (
-                Some(InferenceService::start(
-                    artifacts,
-                    ServiceConfig { max_batch, ..ServiceConfig::default() },
-                )?),
-                None,
-            ),
-            Err(e) => {
-                eprintln!(
-                    "psim serve: inference disabled ({e:#}); \
-                     serving design-space queries only"
-                );
-                (None, Some(format!("{e:#}")))
-            }
-        };
-        Ok(ServerState { service, inference_error, grid: GridEngine::new() })
-    }
-}
-
 /// `psim serve [--port P] [--max-batch B]`
 pub fn serve(args: &Args) -> Result<i32> {
     let port = args.opt_usize("port")?.unwrap_or(7878) as u16;
     let max_batch = args.opt_usize("max-batch")?.unwrap_or(8).clamp(1, 8);
     args.reject_unknown()?;
 
-    let state = Arc::new(ServerState::start(max_batch)?);
+    let engine = Arc::new(Engine::start(max_batch)?);
+    if let Some(err) = engine.inference_error() {
+        eprintln!("psim serve: inference disabled ({err}); serving design-space queries only");
+    }
     let listener =
         TcpListener::bind(("127.0.0.1", port)).with_context(|| format!("binding port {port}"))?;
     println!(
         "psim serve: listening on 127.0.0.1:{port} (max_batch={max_batch}, inference {})",
-        if state.service.is_some() { "enabled" } else { "disabled" }
+        if engine.has_inference() { "enabled" } else { "disabled" }
     );
-    serve_on(listener, &state)?;
-    let (hits, misses) = state.grid.cache_stats();
-    match &state.service {
-        Some(service) => println!("psim serve: shut down. {}", service.metrics.summary()),
+    serve_on(listener, &engine)?;
+    let (hits, misses) = engine.cache_stats();
+    match engine.service_metrics() {
+        Some(summary) => println!("psim serve: shut down. {summary}"),
         None => println!("psim serve: shut down. sweep cache {hits} hits / {misses} misses"),
     }
     Ok(0)
@@ -143,7 +94,7 @@ pub fn serve(args: &Args) -> Result<i32> {
 /// shutting-down handler closes every registered socket, so no handler
 /// thread can stay parked in a blocking read (regression-tested by
 /// `shutdown_unblocks_idle_connections`).
-fn serve_on(listener: TcpListener, state: &Arc<ServerState>) -> Result<()> {
+fn serve_on(listener: TcpListener, engine: &Arc<Engine>) -> Result<()> {
     let shutdown = Arc::new(AtomicBool::new(false));
     let registry = Arc::new(ConnRegistry::default());
 
@@ -153,11 +104,11 @@ fn serve_on(listener: TcpListener, state: &Arc<ServerState>) -> Result<()> {
                 break;
             }
             let stream = stream?;
-            let state = state.clone();
+            let engine = engine.clone();
             let shutdown = shutdown.clone();
             let registry = registry.clone();
             scope.spawn(move || {
-                if let Err(e) = handle_conn(stream, &state, &shutdown, &registry) {
+                if let Err(e) = handle_conn(stream, &engine, &shutdown, &registry) {
                     eprintln!("psim serve: connection error: {e:#}");
                 }
             });
@@ -168,7 +119,7 @@ fn serve_on(listener: TcpListener, state: &Arc<ServerState>) -> Result<()> {
 
 fn handle_conn(
     stream: TcpStream,
-    state: &ServerState,
+    engine: &Engine,
     shutdown: &AtomicBool,
     registry: &ConnRegistry,
 ) -> Result<()> {
@@ -183,16 +134,17 @@ fn handle_conn(
     let result = if shutdown.load(Ordering::SeqCst) {
         Ok(())
     } else {
-        conn_loop(stream, state, shutdown, registry)
+        conn_loop(stream, engine, shutdown, registry)
     };
     registry.deregister(id);
     result
 }
 
-/// One connection's request/reply loop.
+/// One connection's request/reply loop: read a line, let the engine
+/// decode + dispatch + encode it, write the reply.
 fn conn_loop(
     stream: TcpStream,
-    state: &ServerState,
+    engine: &Engine,
     shutdown: &AtomicBool,
     registry: &ConnRegistry,
 ) -> Result<()> {
@@ -209,10 +161,10 @@ fn conn_loop(
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match handle_line(&line, state, shutdown) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
-        };
+        let (reply, stop) = engine.handle_line(&line);
+        if stop {
+            shutdown.store(true, Ordering::SeqCst);
+        }
         if let Err(e) = writeln!(writer, "{reply}") {
             // A write aborted by shutdown_all (broken pipe) is part of a
             // clean shutdown, not a connection error.
@@ -230,114 +182,6 @@ fn conn_loop(
         }
     }
     Ok(())
-}
-
-/// Dispatch one request line. Public within the crate for direct testing
-/// without a TCP round-trip.
-fn handle_line(line: &str, state: &ServerState, shutdown: &AtomicBool) -> Result<Json> {
-    let msg = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
-    if let Some(cmd) = msg.get("cmd").and_then(|c| c.as_str()) {
-        return match cmd {
-            "metrics" => {
-                let summary = match &state.service {
-                    Some(service) => service.metrics.summary(),
-                    None => "inference disabled (analytics-only mode)".to_string(),
-                };
-                Ok(Json::obj(vec![("metrics", Json::Str(summary))]))
-            }
-            "sweep" => handle_sweep(&msg, state),
-            "explore" => handle_explore(&msg, state),
-            "shutdown" => {
-                shutdown.store(true, Ordering::SeqCst);
-                Ok(Json::obj(vec![("ok", Json::Bool(true))]))
-            }
-            other => Err(anyhow::anyhow!("unknown cmd '{other}'")),
-        };
-    }
-    let image = msg
-        .get("image")
-        .and_then(|i| i.as_arr())
-        .ok_or_else(|| anyhow::anyhow!("missing 'image' array"))?;
-    let service = state.service.as_ref().ok_or_else(|| {
-        anyhow::anyhow!(
-            "inference unavailable: {}",
-            state.inference_error.as_deref().unwrap_or("service not started")
-        )
-    })?;
-    anyhow::ensure!(
-        image.len() == IMAGE_ELEMS,
-        "image must have {IMAGE_ELEMS} floats, got {}",
-        image.len()
-    );
-    let data: Vec<f32> = image.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
-    let tensor = Tensor::new(vec![3, 32, 32], data)?;
-    let resp = service.infer(tensor)?;
-    Ok(Json::obj(vec![
-        ("id", Json::Num(resp.id as f64)),
-        ("class", Json::Num(resp.top_class() as f64)),
-        ("logits", Json::Arr(resp.logits.iter().map(|&v| Json::Num(v as f64)).collect())),
-        ("latency_us", Json::Num(resp.latency_us as f64)),
-    ]))
-}
-
-/// Parse a request's optional `workers` field (default: machine
-/// parallelism), clamped to the server's per-request cap. Shared by the
-/// `sweep` and `explore` handlers so the policy cannot drift.
-fn request_workers(msg: &Json) -> Result<usize> {
-    Ok(msg
-        .get("workers")
-        .map(|w| {
-            w.as_usize().ok_or_else(|| anyhow::anyhow!("'workers' must be a positive integer"))
-        })
-        .transpose()?
-        .unwrap_or_else(default_workers)
-        .clamp(1, 64))
-}
-
-/// `{"cmd":"sweep", ...}` — run a design-space grid and return its cells.
-///
-/// `cache_hits`/`cache_misses` are the deltas observed around this
-/// request's run (approximate if sweeps run concurrently, since the
-/// layer cache is shared — that sharing is the point).
-fn handle_sweep(msg: &Json, state: &ServerState) -> Result<Json> {
-    let spec = SweepSpec::from_json(msg)?;
-    anyhow::ensure!(
-        spec.cell_count() <= MAX_SWEEP_CELLS,
-        "sweep expands to {} cells (limit {MAX_SWEEP_CELLS})",
-        spec.cell_count()
-    );
-    let workers = request_workers(msg)?;
-    let (hits_before, misses_before) = state.grid.cache_stats();
-    let grid = state.grid.run_with_workers(&spec, workers);
-    let (hits_after, misses_after) = state.grid.cache_stats();
-    Ok(Json::obj(vec![
-        ("cells", Json::Arr(grid.cells.iter().map(|c| c.to_json()).collect())),
-        ("count", Json::Num(grid.len() as f64)),
-        ("cache_hits", Json::Num(hits_after.saturating_sub(hits_before) as f64)),
-        ("cache_misses", Json::Num(misses_after.saturating_sub(misses_before) as f64)),
-    ]))
-}
-
-/// `{"cmd":"explore", ...}` — run the design-space explorer and return
-/// the Pareto frontier. The long-lived grid engine serves the partition/
-/// bandwidth memo cache, so repeated explorations get warmer.
-fn handle_explore(msg: &Json, state: &ServerState) -> Result<Json> {
-    let spec = ExploreSpec::from_json(msg)?;
-    anyhow::ensure!(
-        spec.candidate_count() <= MAX_SWEEP_CELLS,
-        "explore expands to {} candidates (limit {MAX_SWEEP_CELLS})",
-        spec.candidate_count()
-    );
-    let workers = request_workers(msg)?;
-    let result = dse_explore::explore(&state.grid, &spec, workers);
-    Ok(Json::obj(vec![
-        ("frontier", Json::Arr(result.frontier.iter().map(|f| f.to_json()).collect())),
-        ("count", Json::Num(result.frontier.len() as f64)),
-        ("candidates", Json::Num(result.candidates as f64)),
-        ("evaluated", Json::Num(result.evaluated as f64)),
-        ("pruned", Json::Num(result.pruned.len() as f64)),
-        ("infeasible", Json::Num(result.infeasible as f64)),
-    ]))
 }
 
 /// `psim client [--port P] [--requests N]` — fire N random images at a
@@ -385,46 +229,30 @@ pub fn client(args: &Args) -> Result<i32> {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    /// Analytics-only state (no artifacts needed) for protocol tests.
-    fn analytics_state() -> ServerState {
-        ServerState {
-            service: None,
-            inference_error: Some("no artifacts (test fixture)".to_string()),
-            grid: GridEngine::new(),
-        }
-    }
+    use crate::api::IMAGE_ELEMS;
 
     #[test]
     fn sweep_request_returns_cells() {
-        let state = analytics_state();
-        let shutdown = AtomicBool::new(false);
-        let reply = handle_line(
+        let engine = Engine::analytics();
+        let (reply, stop) = engine.handle_line(
             r#"{"cmd":"sweep","networks":["AlexNet"],"macs":[512,2048],
                "strategies":["optimal"],"modes":["passive","active"],"workers":2}"#,
-            &state,
-            &shutdown,
-        )
-        .unwrap();
+        );
+        assert!(!stop);
         assert_eq!(reply.get("count").unwrap().as_usize(), Some(4));
         let cells = reply.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), 4);
         assert_eq!(cells[0].get("network").unwrap().as_str(), Some("AlexNet"));
         assert!(cells[0].get("total").unwrap().as_f64().unwrap() > 0.0);
-        assert!(!shutdown.load(Ordering::SeqCst));
     }
 
     #[test]
     fn sweep_request_accepts_fusion_depth() {
-        let state = analytics_state();
-        let shutdown = AtomicBool::new(false);
-        let reply = handle_line(
+        let engine = Engine::analytics();
+        let (reply, _) = engine.handle_line(
             r#"{"cmd":"sweep","networks":["AlexNet"],"macs":[512],
                "strategies":["optimal"],"modes":["passive"],"fusion_depth":[1,2]}"#,
-            &state,
-            &shutdown,
-        )
-        .unwrap();
+        );
         let cells = reply.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), 2);
         assert!(cells[0].get("fusion_depth").is_none());
@@ -432,7 +260,9 @@ mod tests {
         let fused = cells[1].get("total").unwrap().as_f64().unwrap();
         let unfused = cells[0].get("total").unwrap().as_f64().unwrap();
         assert!(fused < unfused);
-        assert!(handle_line(r#"{"cmd":"sweep","fusion_depth":0}"#, &state, &shutdown).is_err());
+        let (reply, _) = engine.handle_line(r#"{"cmd":"sweep","fusion_depth":0}"#);
+        assert!(reply.get("error").is_some());
+        assert_eq!(reply.get("code").unwrap().as_str(), Some("bad_request"));
     }
 
     #[test]
@@ -441,10 +271,10 @@ mod tests {
 
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let state = Arc::new(analytics_state());
+        let engine = Arc::new(Engine::analytics());
         let (tx, rx) = std::sync::mpsc::channel();
         let server = std::thread::spawn(move || {
-            let result = serve_on(listener, &state);
+            let result = serve_on(listener, &engine);
             let _ = tx.send(());
             result
         });
@@ -475,12 +305,11 @@ mod tests {
 
     #[test]
     fn sweep_cache_warms_across_requests() {
-        let state = analytics_state();
-        let shutdown = AtomicBool::new(false);
+        let engine = Engine::analytics();
         let req = r#"{"cmd":"sweep","networks":["resnet18"],"macs":[1024],
                       "strategies":["optimal"],"modes":["passive"]}"#;
-        let first = handle_line(req, &state, &shutdown).unwrap();
-        let second = handle_line(req, &state, &shutdown).unwrap();
+        let (first, _) = engine.handle_line(req);
+        let (second, _) = engine.handle_line(req);
         // Per-request deltas: the first sweep populates the cache, the
         // second identical one computes nothing new.
         assert!(first.get("cache_misses").unwrap().as_f64().unwrap() > 0.0);
@@ -490,16 +319,12 @@ mod tests {
 
     #[test]
     fn explore_request_returns_frontier() {
-        let state = analytics_state();
-        let shutdown = AtomicBool::new(false);
-        let reply = handle_line(
+        let engine = Engine::analytics();
+        let (reply, _) = engine.handle_line(
             r#"{"cmd":"explore","networks":["AlexNet"],"macs":[512,1024],
                "sram":["unlimited","64k"],"strategies":["optimal"],
                "modes":["passive","active"],"workers":2}"#,
-            &state,
-            &shutdown,
-        )
-        .unwrap();
+        );
         let frontier = reply.get("frontier").unwrap().as_arr().unwrap();
         assert!(!frontier.is_empty());
         assert_eq!(reply.get("count").unwrap().as_usize(), Some(frontier.len()));
@@ -510,53 +335,68 @@ mod tests {
         assert_eq!(frontier[0].get("network").unwrap().as_str(), Some("AlexNet"));
         assert!(frontier[0].get("bandwidth").unwrap().as_f64().unwrap() > 0.0);
         // the same engine cache serves sweeps and explorations
-        assert!(state.grid.cache_stats().1 > 0);
+        assert!(engine.cache_stats().1 > 0);
     }
 
     #[test]
     fn explore_request_validation() {
-        let state = analytics_state();
-        let shutdown = AtomicBool::new(false);
+        let engine = Engine::analytics();
         for bad in [
             r#"{"cmd":"explore","networks":["Nope"]}"#,
             r#"{"cmd":"explore","sram":[0]}"#,
             r#"{"cmd":"explore","objectives":["latency"]}"#,
             r#"{"cmd":"explore","strategy":["optimal"]}"#,
         ] {
-            assert!(handle_line(bad, &state, &shutdown).is_err(), "accepted {bad}");
+            let (reply, _) = engine.handle_line(bad);
+            assert!(reply.get("error").is_some(), "accepted {bad}");
+            assert_eq!(reply.get("code").unwrap().as_str(), Some("bad_request"), "{bad}");
         }
     }
 
     #[test]
     fn sweep_request_validation() {
-        let state = analytics_state();
-        let shutdown = AtomicBool::new(false);
-        assert!(handle_line(r#"{"cmd":"sweep","networks":["Nope"]}"#, &state, &shutdown).is_err());
-        assert!(handle_line(r#"{"cmd":"sweep","macs":[0]}"#, &state, &shutdown).is_err());
-        assert!(handle_line(r#"{"cmd":"bogus"}"#, &state, &shutdown).is_err());
-        assert!(handle_line("not json", &state, &shutdown).is_err());
+        let engine = Engine::analytics();
+        for bad in [
+            r#"{"cmd":"sweep","networks":["Nope"]}"#,
+            r#"{"cmd":"sweep","macs":[0]}"#,
+            r#"{"cmd":"bogus"}"#,
+            "not json",
+        ] {
+            let (reply, _) = engine.handle_line(bad);
+            assert!(reply.get("error").is_some(), "accepted {bad}");
+        }
     }
 
     #[test]
     fn inference_without_artifacts_is_a_clean_error() {
-        let state = analytics_state();
-        let shutdown = AtomicBool::new(false);
+        let engine = Engine::analytics();
         let img = format!(
             r#"{{"image":[{}]}}"#,
             std::iter::repeat("0").take(IMAGE_ELEMS).collect::<Vec<_>>().join(",")
         );
-        let err = handle_line(&img, &state, &shutdown).unwrap_err().to_string();
+        let (reply, _) = engine.handle_line(&img);
+        let err = reply.get("error").unwrap().as_str().unwrap();
         assert!(err.contains("inference unavailable"), "{err}");
+        assert_eq!(reply.get("code").unwrap().as_str(), Some("inference_unavailable"));
     }
 
     #[test]
     fn metrics_and_shutdown_work_without_service() {
-        let state = analytics_state();
-        let shutdown = AtomicBool::new(false);
-        let m = handle_line(r#"{"cmd":"metrics"}"#, &state, &shutdown).unwrap();
+        let engine = Engine::analytics();
+        let (m, stop) = engine.handle_line(r#"{"cmd":"metrics"}"#);
+        assert!(!stop);
         assert!(m.get("metrics").unwrap().as_str().unwrap().contains("disabled"));
-        let s = handle_line(r#"{"cmd":"shutdown"}"#, &state, &shutdown).unwrap();
+        assert!(m.get("requests").is_some());
+        let (s, stop) = engine.handle_line(r#"{"cmd":"shutdown"}"#);
+        assert!(stop);
         assert_eq!(s.get("ok"), Some(&Json::Bool(true)));
-        assert!(shutdown.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn version_request_reports_protocol() {
+        let engine = Engine::analytics();
+        let (v, _) = engine.handle_line(r#"{"cmd":"version"}"#);
+        assert_eq!(v.get("protocol").unwrap().as_usize(), Some(crate::api::PROTOCOL_VERSION));
+        assert_eq!(v.get("version").unwrap().as_str(), Some(crate::api::CRATE_VERSION));
     }
 }

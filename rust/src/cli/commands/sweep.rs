@@ -5,10 +5,11 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::analytics::grid::{GridEngine, SweepSpec};
+use crate::analytics::grid::SweepSpec;
+use crate::api::engine::effective_workers;
+use crate::api::{Engine, Request, Response};
 use crate::cli::args::Args;
 use crate::config::accel::{parse_mode, parse_strategy};
-use crate::coordinator::parallel::default_workers;
 use crate::models::zoo;
 use crate::models::Network;
 
@@ -65,16 +66,20 @@ pub fn sweep(args: &Args) -> Result<i32> {
     if let Some(depths) = args.opt_usize_list("fusion-depth")? {
         spec.fusion_depths = depths;
     }
-    let workers = args.opt_usize("workers")?.unwrap_or_else(default_workers).max(1);
+    let workers = effective_workers(args.opt_usize("workers")?);
     let filter = args.opt("filter").map(|f| f.to_ascii_lowercase());
     let out = args.opt("out").map(std::path::PathBuf::from);
     args.reject_unknown()?;
-    spec.validate()?;
 
-    let engine = GridEngine::new();
+    // Same facade as `serve` and library callers: validation, the
+    // request-size cap and the worker clamp all live in the dispatcher.
+    let engine = Engine::analytics();
     let t0 = Instant::now();
-    let grid = engine.run_with_workers(&spec, workers);
+    let resp = engine.dispatch(&Request::Sweep { spec, workers: Some(workers) })?;
     let elapsed = t0.elapsed();
+    let Response::Sweep { grid, .. } = resp else {
+        unreachable!("sweep dispatch always returns a sweep response")
+    };
 
     let mut jsonl = String::new();
     let mut kept = 0usize;

@@ -1,9 +1,15 @@
 //! Paper-table regenerators: `table1|table2|table3|fig2|validate`.
+//!
+//! `table1`..`fig2` round-trip through the typed facade
+//! ([`Request::Tables`] → [`Engine::dispatch`]) — the same path the
+//! protocol's `{"cmd":"tables"}` request takes; `validate` stays a local
+//! report (it compares against the published numbers, a dev-time check).
 
 use anyhow::Result;
 
+use crate::api::{Engine, Request, Response, TableKind};
 use crate::cli::args::Args;
-use crate::report::{compare, fig2 as fig2_mod, tables};
+use crate::report::compare;
 use crate::util::tablefmt::Table;
 
 fn emit(t: &Table, csv: bool) {
@@ -20,52 +26,43 @@ fn faithful_note(args: &Args) -> bool {
     args.flag("faithful")
 }
 
+/// Dispatch one table request and render the reply.
+fn run_table(table: TableKind, faithful: bool, csv: bool) -> Result<i32> {
+    let engine = Engine::analytics();
+    match engine.dispatch(&Request::Tables { table, faithful })? {
+        Response::Table { table, .. } => emit(&table, csv),
+        Response::Text { text } => print!("{text}"),
+        _ => unreachable!("tables dispatch returns a table or text response"),
+    }
+    Ok(0)
+}
+
 pub fn table1(args: &Args) -> Result<i32> {
     let csv = args.flag("csv");
     let faithful = faithful_note(args);
     args.reject_unknown()?;
-    if faithful {
-        emit(&tables::table1_for(&crate::models::zoo::faithful_networks()), csv);
-    } else {
-        emit(&tables::table1(), csv);
-    }
-    Ok(0)
+    run_table(TableKind::Table1, faithful, csv)
 }
 
 pub fn table2(args: &Args) -> Result<i32> {
     let csv = args.flag("csv");
     let faithful = faithful_note(args);
     args.reject_unknown()?;
-    if faithful {
-        emit(&tables::table2_for(&crate::models::zoo::faithful_networks()), csv);
-    } else {
-        emit(&tables::table2(), csv);
-    }
-    Ok(0)
+    run_table(TableKind::Table2, faithful, csv)
 }
 
 pub fn table3(args: &Args) -> Result<i32> {
     let csv = args.flag("csv");
     let faithful = faithful_note(args);
     args.reject_unknown()?;
-    if faithful {
-        emit(&tables::table3_for(&crate::models::zoo::faithful_networks()), csv);
-    } else {
-        emit(&tables::table3(), csv);
-    }
-    Ok(0)
+    run_table(TableKind::Table3, faithful, csv)
 }
 
 pub fn fig2(args: &Args) -> Result<i32> {
     let csv = args.flag("csv");
     let ascii = args.flag("ascii");
     args.reject_unknown()?;
-    if ascii {
-        print!("{}", fig2_mod::fig2_ascii());
-    } else {
-        emit(&fig2_mod::fig2_table(), csv);
-    }
-    Ok(0)
+    run_table(if ascii { TableKind::Fig2Ascii } else { TableKind::Fig2 }, false, csv)
 }
 
 pub fn validate(args: &Args) -> Result<i32> {

@@ -73,7 +73,13 @@ Functional stack (PJRT over artifacts/; run `make artifacts` first):
      options: [--port P] [--max-batch B]
   client              load generator against a running server
      options: [--port P] [--requests N]
+  request             one-shot protocol dispatch: decode JSON request
+                      lines (--json or stdin), print the JSON replies --
+                      the serve protocol without a socket
+                      (analytics-only engine; inference needs `serve`)
+     options: [--json LINE]
 
+  version             crate + protocol version (also: psim --version)
   help                this text
 ";
 
@@ -83,6 +89,11 @@ pub fn run(argv: &[String]) -> Result<i32> {
     match args.command.as_str() {
         "" | "help" | "--help" | "-h" => {
             print!("{HELP}");
+            Ok(0)
+        }
+        "version" | "--version" | "-V" => {
+            args.reject_unknown()?;
+            println!("{}", crate::api::version_line());
             Ok(0)
         }
         "table1" => commands::tables::table1(&args),
@@ -100,6 +111,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "infer" => commands::infer::infer(&args),
         "serve" => commands::serve::serve(&args),
         "client" => commands::serve::client(&args),
+        "request" => commands::request::request(&args),
         other => bail!("unknown command '{other}' — try `psim help`"),
     }
 }
@@ -121,6 +133,23 @@ mod tests {
     #[test]
     fn unknown_command_errors() {
         assert!(run(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn version_runs_in_both_spellings() {
+        assert_eq!(run(&sv(&["version"])).unwrap(), 0);
+        assert_eq!(run(&sv(&["--version"])).unwrap(), 0);
+        assert_eq!(run(&sv(&["-V"])).unwrap(), 0);
+        assert!(run(&sv(&["version", "--frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn request_dispatches_one_shot_lines() {
+        // Replies (including error replies) go to stdout; exit code stays
+        // 0 like a serve connection. Unknown flags still fail.
+        assert_eq!(run(&sv(&["request", "--json", r#"{"cmd":"version"}"#])).unwrap(), 0);
+        assert_eq!(run(&sv(&["request", "--json", "not json"])).unwrap(), 0);
+        assert!(run(&sv(&["request", "--frobnicate"])).is_err());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! under the SRAM budget for the plane or the fused chain), exactly as a
 //! compiler would configure a fixed chip.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::analytics::bandwidth::ControllerMode;
 use crate::analytics::paper;
@@ -17,8 +17,8 @@ use crate::analytics::partition::Strategy;
 use crate::models::Network;
 use crate::util::json::Json;
 
-use super::budget::{parse_sram, SramBudget, DEFAULT_SRAM_BUDGETS};
-use super::pareto::{parse_objective, Objective};
+use super::budget::{SramBudget, DEFAULT_SRAM_BUDGETS};
+use super::pareto::Objective;
 
 /// One hardware/policy candidate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -156,20 +156,23 @@ impl ExploreSpec {
         out
     }
 
-    /// Candidates per exploration scope.
+    /// Candidates per exploration scope. Saturates instead of wrapping,
+    /// so a maliciously huge request cannot overflow past the
+    /// dispatcher's size cap and slip through as a tiny count.
     pub fn points_per_network(&self) -> usize {
-        self.mac_budgets.len()
-            * self.sram_budgets.len()
-            * self.strategies.len()
-            * self.modes.len()
-            * self.fusion_depths.len()
+        self.mac_budgets
+            .len()
+            .saturating_mul(self.sram_budgets.len())
+            .saturating_mul(self.strategies.len())
+            .saturating_mul(self.modes.len())
+            .saturating_mul(self.fusion_depths.len())
     }
 
     /// Total candidates the explorer will consider: one scope per network
     /// plus, with several networks, the whole-zoo aggregate scope.
     pub fn candidate_count(&self) -> usize {
         let scopes = self.networks.len() + usize::from(self.networks.len() > 1);
-        scopes * self.points_per_network()
+        scopes.saturating_mul(self.points_per_network())
     }
 
     /// Every axis non-empty and numerically sane.
@@ -203,14 +206,17 @@ impl ExploreSpec {
 
     /// Build a spec from a JSON request object (the serve protocol's
     /// `{"cmd":"explore", ...}` body). Every axis is optional and
-    /// defaults to the paper space; unknown keys are rejected.
+    /// defaults to the paper space; unknown keys are rejected. All axis
+    /// parsing delegates to [`crate::api::codec`], the single set of
+    /// parsers shared with [`crate::analytics::grid::SweepSpec`].
     ///
     /// Axis keys: `networks` (names), `macs`, `sram` (element counts or
     /// strings like `"64k"`/`"unlimited"`), `strategies`, `modes`,
     /// `fusion` (a depth or an array of depths), `objectives` (plus the
-    /// protocol's `cmd` and `workers`).
+    /// protocol's `cmd`, `workers` and `protocol`).
     pub fn from_json(msg: &Json) -> Result<ExploreSpec> {
-        const KNOWN: [&str; 9] = [
+        use crate::api::codec;
+        const KNOWN: [&str; 10] = [
             "cmd",
             "networks",
             "macs",
@@ -220,85 +226,30 @@ impl ExploreSpec {
             "fusion",
             "objectives",
             "workers",
+            "protocol",
         ];
-        if let Json::Obj(map) = msg {
-            for key in map.keys() {
-                if !KNOWN.contains(&key.as_str()) {
-                    bail!("unknown explore key '{key}' (known: {KNOWN:?})");
-                }
-            }
-        }
+        codec::reject_unknown_keys(msg, &KNOWN, "explore")?;
         let mut spec = ExploreSpec::paper_space();
         if let Some(nets) = msg.get("networks") {
-            let names = nets.as_arr().ok_or_else(|| anyhow!("'networks' must be an array"))?;
-            spec.networks = names
-                .iter()
-                .map(|n| {
-                    let name =
-                        n.as_str().ok_or_else(|| anyhow!("'networks' entries must be strings"))?;
-                    crate::models::zoo::by_name(name)
-                        .ok_or_else(|| anyhow!("unknown network '{name}' — see `psim networks`"))
-                })
-                .collect::<Result<Vec<_>>>()?;
+            spec.networks = codec::networks_axis(nets)?;
         }
         if let Some(macs) = msg.get("macs") {
-            let arr = macs.as_arr().ok_or_else(|| anyhow!("'macs' must be an array"))?;
-            spec.mac_budgets = arr
-                .iter()
-                .map(|v| {
-                    v.as_usize()
-                        .ok_or_else(|| anyhow!("'macs' entries must be non-negative integers"))
-                })
-                .collect::<Result<Vec<_>>>()?;
+            spec.mac_budgets = codec::usize_axis(macs, "macs", "non-negative")?;
         }
         if let Some(sram) = msg.get("sram") {
-            let arr = sram.as_arr().ok_or_else(|| anyhow!("'sram' must be an array"))?;
-            spec.sram_budgets = arr
-                .iter()
-                .map(|v| match v {
-                    Json::Num(_) => v
-                        .as_usize()
-                        .map(|e| SramBudget::Elems(e as u64))
-                        .ok_or_else(|| anyhow!("'sram' numbers must be non-negative integers")),
-                    Json::Str(s) => parse_sram(s),
-                    _ => Err(anyhow!("'sram' entries must be numbers or strings")),
-                })
-                .collect::<Result<Vec<_>>>()?;
+            spec.sram_budgets = codec::sram_axis(sram)?;
         }
         if let Some(strats) = msg.get("strategies") {
-            let arr = strats.as_arr().ok_or_else(|| anyhow!("'strategies' must be an array"))?;
-            spec.strategies = arr
-                .iter()
-                .map(|v| {
-                    let s =
-                        v.as_str().ok_or_else(|| anyhow!("'strategies' entries must be strings"))?;
-                    crate::config::accel::parse_strategy(s)
-                })
-                .collect::<Result<Vec<_>>>()?;
+            spec.strategies = codec::strategies_axis(strats)?;
         }
         if let Some(modes) = msg.get("modes") {
-            let arr = modes.as_arr().ok_or_else(|| anyhow!("'modes' must be an array"))?;
-            spec.modes = arr
-                .iter()
-                .map(|v| {
-                    let s = v.as_str().ok_or_else(|| anyhow!("'modes' entries must be strings"))?;
-                    crate::config::accel::parse_mode(s)
-                })
-                .collect::<Result<Vec<_>>>()?;
+            spec.modes = codec::modes_axis(modes)?;
         }
         if let Some(fusion) = msg.get("fusion") {
-            spec.fusion_depths = crate::analytics::grid::parse_fusion_depths(fusion)?;
+            spec.fusion_depths = codec::fusion_axis(fusion)?;
         }
         if let Some(objs) = msg.get("objectives") {
-            let arr = objs.as_arr().ok_or_else(|| anyhow!("'objectives' must be an array"))?;
-            spec.objectives = arr
-                .iter()
-                .map(|v| {
-                    let s =
-                        v.as_str().ok_or_else(|| anyhow!("'objectives' entries must be strings"))?;
-                    parse_objective(s)
-                })
-                .collect::<Result<Vec<_>>>()?;
+            spec.objectives = codec::objectives_axis(objs)?;
         }
         spec.validate()?;
         Ok(spec)

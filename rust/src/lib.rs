@@ -22,6 +22,11 @@
 //!   tiled convolutions *functionally* through AOT-compiled XLA artifacts
 //!   (JAX/Pallas at build time, PJRT at run time; Python never on the
 //!   request path).
+//! * [`api`] — the typed Request/Response facade over all of the above:
+//!   ONE versioned entry point ([`api::Engine::dispatch`]) shared by the
+//!   CLI, the `serve` protocol and library embedders. This is the
+//!   documented embedding surface — see the [`api`] module docs for a
+//!   runnable example.
 //!
 //! Supporting modules: [`config`] (accelerator/workload config files),
 //! [`report`] (paper table/figure renderers), [`util`] (offline-friendly
@@ -29,6 +34,7 @@
 //! harnesses), [`cli`] (the `psim` binary's command surface).
 
 pub mod analytics;
+pub mod api;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

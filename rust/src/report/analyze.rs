@@ -1,0 +1,73 @@
+//! Per-layer analysis rendering: the partition/bandwidth table behind
+//! `psim analyze` and the protocol's `{"cmd":"analyze"}` request.
+
+use crate::analytics::bandwidth::ControllerMode;
+use crate::analytics::grid::GridEngine;
+use crate::analytics::optimizer;
+use crate::analytics::partition::Strategy;
+use crate::models::Network;
+use crate::util::tablefmt::{mact, Table};
+
+/// One row per conv layer: shape, chosen partition `(m, n)`, the real
+/// eq. 7 optimum, MAC utilization and the eq. 2/3 traffic. Returns the
+/// table plus the one-line network summary. Rows come from the engine's
+/// memoized evaluator, so repeated shapes (ResNet blocks, VGG stacks)
+/// are computed once — and a long-lived engine answers warm.
+pub fn analyze_table(
+    engine: &GridEngine,
+    net: &Network,
+    p_macs: usize,
+    strategy: Strategy,
+    mode: ControllerMode,
+) -> (Table, String) {
+    let mut t = Table::new(vec![
+        "layer", "shape", "m", "n", "m* (eq.7)", "MAC util", "B_i (M)", "B_o (M)", "B (M)",
+    ]);
+    let mut total = 0.0;
+    for layer in &net.layers {
+        let eval = engine.layer_eval(layer, p_macs, strategy, mode);
+        let (part, bw) = (eval.partition, eval.bandwidth);
+        let m_star = optimizer::optimal_m_real(layer, p_macs, mode);
+        total += bw.total();
+        t.row(vec![
+            layer.name.clone(),
+            format!("{}x{}x{}→{}x{}x{} k{}{}",
+                layer.wi, layer.hi, layer.m, layer.wo(), layer.ho(), layer.n, layer.k,
+                if layer.groups > 1 { format!(" g{}", layer.groups) } else { String::new() }),
+            part.m.to_string(),
+            part.n.to_string(),
+            format!("{m_star:.2}"),
+            format!("{:.0}%", (layer.k * layer.k * part.m * part.n) as f64 / p_macs as f64 * 100.0),
+            mact(bw.input, 2),
+            mact(bw.output, 2),
+            mact(bw.total(), 2),
+        ]);
+    }
+    let note = format!(
+        "{} @ P={p_macs}, {} controller, {} strategy: total {} M activations \
+         (floor {} M)",
+        net.name,
+        mode.label(),
+        strategy.label(),
+        mact(total, 2),
+        mact(net.min_bandwidth() as f64, 3),
+    );
+    (t, note)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn one_row_per_layer_with_summary() {
+        let engine = GridEngine::new();
+        let net = zoo::alexnet();
+        let (table, note) =
+            analyze_table(&engine, &net, 512, Strategy::Optimal, ControllerMode::Passive);
+        assert_eq!(table.n_rows(), net.layers.len());
+        assert!(note.starts_with("AlexNet @ P=512, passive controller"), "{note}");
+        assert!(note.contains("(floor 0.823 M)"), "{note}");
+    }
+}

@@ -9,7 +9,9 @@
 //! * [`compare`] — cell-by-cell deviation against the published numbers.
 //! * [`frontier`] — Pareto-frontier table/summary for `psim explore`.
 //! * [`fusion`] — fused-vs-unfused bandwidth table for `psim fusion`.
+//! * [`analyze`] — per-layer partition/bandwidth table for `psim analyze`.
 
+pub mod analyze;
 pub mod compare;
 pub mod fig2;
 pub mod frontier;

@@ -1,0 +1,250 @@
+//! Protocol-surface contract tests for the typed `api` facade:
+//!
+//! * golden request/response fixtures — one pinned pair per protocol
+//!   command (`rust/tests/golden/protocol/*.txt`, the same files the CI
+//!   smoke step diffs against the built binary via `psim request`);
+//! * encode/decode round-trip property tests over randomized specs;
+//! * the request-size cap rejects oversized sweep AND explore requests
+//!   with `code:"too_large"` from every frontend (library dispatch,
+//!   protocol line, CLI).
+
+use psim::analytics::bandwidth::ControllerMode;
+use psim::analytics::grid::SweepSpec;
+use psim::analytics::partition::Strategy;
+use psim::api::{codec, ApiError, Engine, ErrorCode, Request, MAX_REQUEST_CELLS};
+use psim::dse::budget::SramBudget;
+use psim::dse::pareto::Objective;
+use psim::dse::space::ExploreSpec;
+use psim::models::zoo;
+use psim::util::prng::Rng;
+
+/// Every fixture: line 1 is the request, line 2 the expected reply —
+/// byte-for-byte what a fresh engine answers (and what `psim request`
+/// prints, which is what CI diffs).
+///
+/// `sweep`/`explore`/`fusion`/`tables` pin full numeric success replies
+/// (derived from the PR 1–3 pinned goldens); `analyze` and `infer` pin
+/// their deterministic error replies instead — analyze's success table
+/// is too environment-heavy to hand-pin byte-exactly, and is covered
+/// structurally by `report::analyze` unit tests and the CLI tests.
+#[test]
+fn golden_protocol_fixtures() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/protocol");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(dir).expect("fixture dir") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("txt") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        let request = lines.next().expect("fixture request line");
+        let expected = lines.next().expect("fixture response line");
+        assert!(lines.next().is_none(), "{}: more than two lines", path.display());
+        // Fresh engine per fixture: replies (cache deltas, metrics
+        // counters) must not depend on session history.
+        let engine = Engine::analytics();
+        let (reply, _) = engine.handle_line(request);
+        assert_eq!(reply.to_string(), expected, "fixture {}", path.display());
+        seen += 1;
+    }
+    assert_eq!(seen, 9, "one fixture per protocol command");
+}
+
+fn roundtrip(req: &Request) {
+    let encoded = codec::encode_request(req);
+    let decoded = codec::decode_request(&encoded)
+        .unwrap_or_else(|e| panic!("decode({encoded}) failed: {e}"));
+    assert_eq!(decoded.cmd(), req.cmd());
+    let re_encoded = codec::encode_request(&decoded);
+    assert_eq!(re_encoded.to_string(), encoded.to_string(), "round-trip changed the request");
+}
+
+#[test]
+fn fixed_requests_round_trip() {
+    let reqs = vec![
+        Request::Sweep { spec: SweepSpec::paper_grid(), workers: None },
+        Request::Explore { spec: ExploreSpec::paper_space(), workers: Some(8) },
+        Request::Fusion {
+            networks: vec![zoo::alexnet(), zoo::vgg16()],
+            depth: 3,
+            p_macs: 2048,
+            strategy: Strategy::MaxOutput,
+            mode: ControllerMode::Active,
+        },
+        Request::Analyze {
+            network: zoo::resnet18(),
+            p_macs: 512,
+            strategy: Strategy::OptimalSearch,
+            mode: ControllerMode::Passive,
+        },
+        Request::Tables { table: psim::api::TableKind::Fig2Ascii, faithful: true },
+        Request::Infer { image: vec![0.0, 1.5, -2.25] },
+        Request::Metrics,
+        Request::Version,
+        Request::Shutdown,
+    ];
+    for req in &reqs {
+        roundtrip(req);
+    }
+}
+
+const NET_NAMES: [&str; 8] = [
+    "AlexNet",
+    "VGG-16",
+    "SqueezeNet",
+    "GoogleNet",
+    "ResNet-18",
+    "ResNet-50",
+    "MobileNet",
+    "MNASNet",
+];
+const STRATEGIES: [Strategy; 5] = [
+    Strategy::MaxInput,
+    Strategy::MaxOutput,
+    Strategy::EqualMacs,
+    Strategy::Optimal,
+    Strategy::OptimalSearch,
+];
+const MODE_SETS: [&[ControllerMode]; 3] = [
+    &[ControllerMode::Passive],
+    &[ControllerMode::Active],
+    &[ControllerMode::Passive, ControllerMode::Active],
+];
+
+fn random_networks(rng: &mut Rng) -> Vec<psim::models::Network> {
+    (0..rng.range(1, 3)).map(|_| zoo::by_name(rng.pick(&NET_NAMES)).unwrap()).collect()
+}
+
+fn random_subset<T: Copy>(rng: &mut Rng, pool: &[T]) -> Vec<T> {
+    (0..rng.range(1, pool.len())).map(|_| *rng.pick(pool)).collect()
+}
+
+#[test]
+fn random_sweep_requests_round_trip() {
+    let mut rng = Rng::new(0x5eed_0001);
+    for _ in 0..50 {
+        let spec = SweepSpec::new(random_networks(&mut rng))
+            .with_macs((0..rng.range(1, 4)).map(|_| rng.range(1, 20000)).collect())
+            .with_strategies(random_subset(&mut rng, &STRATEGIES))
+            .with_modes(rng.pick(&MODE_SETS).to_vec())
+            .with_batches((0..rng.range(1, 3)).map(|_| rng.range(1, 16)).collect())
+            .with_fusion((0..rng.range(1, 3)).map(|_| rng.range(1, 4)).collect());
+        let workers = rng.chance(0.5).then(|| rng.range(1, 64));
+        roundtrip(&Request::Sweep { spec, workers });
+    }
+}
+
+#[test]
+fn random_explore_requests_round_trip() {
+    const SRAM: [SramBudget; 4] = [
+        SramBudget::Unlimited,
+        SramBudget::Elems(1 << 16),
+        SramBudget::Elems(1 << 20),
+        SramBudget::Elems(123_456),
+    ];
+    let mut rng = Rng::new(0x5eed_0002);
+    for _ in 0..50 {
+        let spec = ExploreSpec::new(random_networks(&mut rng))
+            .with_macs((0..rng.range(1, 4)).map(|_| rng.range(1, 20000)).collect())
+            .with_sram(random_subset(&mut rng, &SRAM))
+            .with_strategies(random_subset(&mut rng, &STRATEGIES))
+            .with_modes(rng.pick(&MODE_SETS).to_vec())
+            .with_fusion((0..rng.range(1, 3)).map(|_| rng.range(1, 4)).collect())
+            .with_objectives(random_subset(&mut rng, &Objective::ALL));
+        let workers = rng.chance(0.5).then(|| rng.range(1, 64));
+        roundtrip(&Request::Explore { spec, workers });
+    }
+}
+
+/// An oversized sweep spec: paper-default axes for one network (48 cells
+/// per batch) times 2101 batch sizes > 100k cells.
+fn oversized_sweep() -> SweepSpec {
+    let spec = SweepSpec::new(vec![zoo::alexnet()]).with_batches((1..=2101).collect());
+    assert!(spec.cell_count() > MAX_REQUEST_CELLS);
+    spec
+}
+
+/// An oversized explore spec: 32 candidates per MAC budget × 3200 budgets.
+fn oversized_explore() -> ExploreSpec {
+    let spec = ExploreSpec::new(vec![zoo::alexnet()]).with_macs((1..=3200).collect());
+    assert!(spec.candidate_count() > MAX_REQUEST_CELLS);
+    spec
+}
+
+#[test]
+fn oversized_requests_rejected_from_library_dispatch() {
+    let engine = Engine::analytics();
+    let err = engine.dispatch(&Request::Sweep { spec: oversized_sweep(), workers: None });
+    assert_eq!(err.unwrap_err().code, ErrorCode::TooLarge);
+    let err = engine.dispatch(&Request::Explore { spec: oversized_explore(), workers: None });
+    assert_eq!(err.unwrap_err().code, ErrorCode::TooLarge);
+}
+
+#[test]
+fn oversized_requests_rejected_from_protocol_lines() {
+    let engine = Engine::analytics();
+    for req in [
+        codec::encode_request(&Request::Sweep { spec: oversized_sweep(), workers: None }),
+        codec::encode_request(&Request::Explore { spec: oversized_explore(), workers: None }),
+    ] {
+        let (reply, stop) = engine.handle_line(&req.to_string());
+        assert!(!stop);
+        assert_eq!(reply.get("code").unwrap().as_str(), Some("too_large"), "{reply}");
+        let msg = reply.get("error").unwrap().as_str().unwrap();
+        assert!(msg.contains("limit 100000"), "{msg}");
+    }
+}
+
+#[test]
+fn oversized_requests_rejected_from_cli() {
+    let batches = (1..=2101).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+    let argv: Vec<String> = ["sweep", "--networks", "AlexNet", "--batches", batches.as_str()]
+        .map(String::from)
+        .to_vec();
+    let err = psim::cli::run(&argv).unwrap_err();
+    let api_err = err.downcast_ref::<ApiError>().expect("an ApiError from CLI sweep");
+    assert_eq!(api_err.code, ErrorCode::TooLarge);
+
+    let macs = (1..=3200).map(|i| i.to_string()).collect::<Vec<_>>().join(":");
+    let constraints = format!("macs={macs}");
+    let argv: Vec<String> =
+        ["explore", "--networks", "AlexNet", "--constraints", constraints.as_str()]
+            .map(String::from)
+            .to_vec();
+    let err = psim::cli::run(&argv).unwrap_err();
+    let api_err = err.downcast_ref::<ApiError>().expect("an ApiError from CLI explore");
+    assert_eq!(api_err.code, ErrorCode::TooLarge);
+}
+
+#[test]
+fn error_replies_carry_stable_codes() {
+    let engine = Engine::analytics();
+    for (line, code) in [
+        ("not json", "bad_request"),
+        (r#"{"cmd":"bogus"}"#, "bad_request"),
+        (r#"{"cmd":"sweep","macs":[0]}"#, "bad_request"),
+        ("{}", "bad_request"),
+        (r#"{"cmd":"version","protocol":99}"#, "bad_request"),
+    ] {
+        let (reply, _) = engine.handle_line(line);
+        assert_eq!(reply.get("code").unwrap().as_str(), Some(code), "{line}");
+        assert!(reply.get("error").is_some(), "{line}");
+    }
+}
+
+/// The serve protocol accepts an explicit matching `protocol` field and
+/// version requests report it back.
+#[test]
+fn protocol_version_negotiation() {
+    let engine = Engine::analytics();
+    let (reply, _) =
+        engine.handle_line(r#"{"cmd":"sweep","networks":["AlexNet"],"macs":[512],"protocol":1,
+                               "strategies":["optimal"],"modes":["passive"]}"#);
+    assert_eq!(reply.get("count").unwrap().as_usize(), Some(1));
+    let (reply, _) = engine.handle_line(r#"{"cmd":"version"}"#);
+    assert_eq!(
+        reply.get("protocol").unwrap().as_usize(),
+        Some(psim::api::PROTOCOL_VERSION)
+    );
+}
