@@ -11,8 +11,26 @@
 //!
 //! Grouped convolutions are handled per group (`M/g` in, `N/g` out) and
 //! summed; the partition `(m, n)` applies within a group.
+//!
+//! # Byte-weighted forms (`docs/MODEL.md` §Byte-level model)
+//!
+//! Partial sums are wider than activations (e.g. 32-bit accumulators vs
+//! 8-bit ifmaps), so the same element counts cost different interconnect
+//! *bytes* per tensor. With per-tensor widths
+//! [`DataTypes`](crate::models::DataTypes) and `it = ceil(M/m)` psum
+//! iterations, the output-side crossings decompose per output element as:
+//!
+//! * passive: `(it-1)` psum reads + `(it-1)` psum writes at psum width,
+//!   plus one final quantized write at ofmap width;
+//! * active: `(it-1)` psum writes at psum width plus one final write at
+//!   ofmap width (the read-add happens inside the controller).
+//!
+//! The element counts are unchanged — only the pricing differs — and with
+//! all widths equal to one byte the byte totals equal the element totals
+//! exactly (the compatibility invariant pinned by
+//! `rust/tests/precision_model.rs`).
 
-use crate::models::ConvLayer;
+use crate::models::{ConvLayer, DataTypes};
 
 /// Whether the SRAM controller can fold the partial-sum addition locally.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -25,8 +43,10 @@ pub enum ControllerMode {
 }
 
 impl ControllerMode {
+    /// Both controller modes, passive first (table column order).
     pub const ALL: [ControllerMode; 2] = [ControllerMode::Passive, ControllerMode::Active];
 
+    /// Stable wire/CLI token (`"passive"`/`"active"`).
     pub fn label(&self) -> &'static str {
         match self {
             ControllerMode::Passive => "passive",
@@ -45,6 +65,7 @@ pub struct Bandwidth {
 }
 
 impl Bandwidth {
+    /// Total traffic `B = B_i + B_o` (eq. 4), elements.
     pub fn total(&self) -> f64 {
         self.input + self.output
     }
@@ -97,6 +118,110 @@ pub fn layer_bandwidth(layer: &ConvLayer, m: usize, n: usize, mode: ControllerMo
 /// (the per-layer term of Table III).
 pub fn layer_min_bandwidth(layer: &ConvLayer) -> f64 {
     (layer.input_activations() + layer.output_activations()) as f64
+}
+
+/// Byte-weighted bandwidth decomposition for one layer: the same element
+/// counts as [`Bandwidth`], priced per tensor by a
+/// [`DataTypes`](crate::models::DataTypes) precision. All quantities are
+/// exact `f64` bytes (element counts × bits / 8).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ByteBandwidth {
+    /// Input-activation bytes: eq. (2) elements × ifmap width.
+    pub input: f64,
+    /// Intermediate partial-sum bytes (reads + non-final writes) at psum
+    /// width. Zero when a single pass suffices (`m = M`).
+    pub psum: f64,
+    /// Final quantized output writes at ofmap width (one per output
+    /// element, either controller mode).
+    pub ofmap: f64,
+    /// Weight bytes: one load per weight element × weight width (weights
+    /// are partition-invariant under the Section II loop nest).
+    pub weights: f64,
+}
+
+impl ByteBandwidth {
+    /// Activation bytes on the wire — the byte-currency analogue of the
+    /// paper's tabulated `B_i + B_o` (weights excluded, as in the paper).
+    pub fn activations(&self) -> f64 {
+        self.input + self.psum + self.ofmap
+    }
+
+    /// Everything that crossed the interconnect, weights included.
+    pub fn total(&self) -> f64 {
+        self.input + self.psum + self.ofmap + self.weights
+    }
+}
+
+/// Byte-weighted eqs. (2)–(3): the element counts of [`layer_bandwidth`]
+/// priced per region by `dt`.
+///
+/// The decomposition keeps the element totals intact:
+/// `psum_elems + ofmap_elems == B_o` for either controller mode, so with
+/// uniform widths `w` the byte totals are exactly `w/8 ×` the element
+/// totals.
+///
+/// ```
+/// use psim::analytics::bandwidth::{layer_bandwidth, layer_bandwidth_bytes, ControllerMode};
+/// use psim::models::{ConvLayer, DataTypes};
+///
+/// // AlexNet conv2: 27x27, 64 -> 192, k5/p2, tiled (m, n) = (16, 1).
+/// let l = ConvLayer::new("conv2", 27, 27, 64, 192, 5, 1, 2);
+/// let dt = DataTypes::parse("8:8:32:8").unwrap();
+/// let b = layer_bandwidth_bytes(&l, 16, 1, ControllerMode::Passive, &dt);
+/// // eq. 2: 27*27*64 * 192 input reads, one byte each.
+/// assert_eq!(b.input, (27 * 27 * 64 * 192) as f64);
+/// // it = 64/16 = 4 psum passes: 2*(4-1) psum crossings at 4 bytes ...
+/// assert_eq!(b.psum, (27 * 27 * 192 * 6 * 4) as f64);
+/// // ... plus one final 1-byte ofmap write per output element.
+/// assert_eq!(b.ofmap, (27 * 27 * 192) as f64);
+/// // The active controller halves the psum-byte term and nothing else.
+/// let a = layer_bandwidth_bytes(&l, 16, 1, ControllerMode::Active, &dt);
+/// assert_eq!(a.psum, b.psum / 2.0);
+/// assert_eq!((a.input, a.ofmap), (b.input, b.ofmap));
+/// // Uniform widths: bytes == elements × width.
+/// let uni = layer_bandwidth_bytes(&l, 16, 1, ControllerMode::Passive, &DataTypes::uniform(16));
+/// let e = layer_bandwidth(&l, 16, 1, ControllerMode::Passive);
+/// assert_eq!(uni.activations(), e.total() * 2.0);
+/// ```
+pub fn layer_bandwidth_bytes(
+    layer: &ConvLayer,
+    m: usize,
+    n: usize,
+    mode: ControllerMode,
+    dt: &DataTypes,
+) -> ByteBandwidth {
+    let mg = layer.m_per_group();
+    let ng = layer.n_per_group();
+    assert!(m >= 1 && m <= mg, "m={m} out of range [1,{mg}] for {}", layer.name);
+    assert!(n >= 1 && n <= ng, "n={n} out of range [1,{ng}] for {}", layer.name);
+    let g = layer.groups as f64;
+
+    let out_iters = ng.div_ceil(n);
+    let psum_iters = mg.div_ceil(m);
+
+    let input_elems = (layer.wi * layer.hi * mg) as f64 * out_iters as f64 * g;
+    let out_elems = (layer.wo() * layer.ho() * ng) as f64 * g;
+    let psum_crossings = match mode {
+        // (it-1) reads + (it-1) non-final writes per output element.
+        ControllerMode::Passive => 2 * (psum_iters - 1),
+        // (it-1) non-final writes; reads stay inside the controller.
+        ControllerMode::Active => psum_iters - 1,
+    };
+    ByteBandwidth {
+        input: input_elems * dt.ifmap_bytes(),
+        psum: out_elems * psum_crossings as f64 * dt.psum_bytes(),
+        ofmap: out_elems * dt.ofmap_bytes(),
+        weights: layer.weights() as f64 * dt.weight_bytes(),
+    }
+}
+
+/// The layer's byte floor: input read once at ifmap width, output written
+/// once at ofmap width (no psum term — full residency never spills a
+/// partial sum). The per-layer term of
+/// [`Network::min_bandwidth_bytes`](crate::models::Network::min_bandwidth_bytes).
+pub fn layer_min_bandwidth_bytes(layer: &ConvLayer, dt: &DataTypes) -> f64 {
+    layer.input_activations() as f64 * dt.ifmap_bytes()
+        + layer.output_activations() as f64 * dt.ofmap_bytes()
 }
 
 #[cfg(test)]
@@ -167,5 +292,71 @@ mod tests {
     #[should_panic]
     fn rejects_m_out_of_range() {
         layer_bandwidth(&layer(), 500, 1, ControllerMode::Passive);
+    }
+
+    #[test]
+    fn byte_model_decomposition_conserves_elements() {
+        // psum + ofmap element counts must re-compose to eq. 3's B_o in
+        // both modes, for divisor and ragged partitions.
+        let l = layer();
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        for mode in ControllerMode::ALL {
+            for (m, n) in [(12, 4), (100, 384), (192, 1), (1, 1)] {
+                let e = layer_bandwidth(&l, m, n, mode);
+                let b = layer_bandwidth_bytes(&l, m, n, mode, &dt);
+                let psum_elems = b.psum / dt.psum_bytes();
+                let ofmap_elems = b.ofmap / dt.ofmap_bytes();
+                assert_eq!(psum_elems + ofmap_elems, e.output, "m={m} n={n} {mode:?}");
+                assert_eq!(b.input / dt.ifmap_bytes(), e.input);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_widths_scale_element_totals_exactly() {
+        let l = layer();
+        for bits in [8usize, 16, 24, 32] {
+            let dt = DataTypes::uniform(bits);
+            let w = bits as f64 / 8.0;
+            for mode in ControllerMode::ALL {
+                let e = layer_bandwidth(&l, 12, 4, mode);
+                let b = layer_bandwidth_bytes(&l, 12, 4, mode, &dt);
+                assert_eq!(b.activations(), e.total() * w, "bits={bits} {mode:?}");
+            }
+            assert_eq!(layer_min_bandwidth_bytes(&l, &dt), layer_min_bandwidth(&l) * w);
+        }
+    }
+
+    #[test]
+    fn fixed_partition_byte_saving_exceeds_element_saving() {
+        // The headline effect: with psums wider than ifmaps/ofmaps, the
+        // active controller's saving — pure psum traffic — is up-weighted
+        // in byte currency, so (passive - active)/passive is strictly
+        // larger in bytes than in elements whenever it > 1.
+        let l = layer();
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        for (m, n) in [(12, 4), (48, 8), (1, 384)] {
+            let pe = layer_bandwidth(&l, m, n, ControllerMode::Passive).total();
+            let ae = layer_bandwidth(&l, m, n, ControllerMode::Active).total();
+            let pb = layer_bandwidth_bytes(&l, m, n, ControllerMode::Passive, &dt).activations();
+            let ab = layer_bandwidth_bytes(&l, m, n, ControllerMode::Active, &dt).activations();
+            let sv_e = (pe - ae) / pe;
+            let sv_b = (pb - ab) / pb;
+            assert!(sv_b > sv_e, "m={m} n={n}: byte {sv_b} <= element {sv_e}");
+        }
+    }
+
+    #[test]
+    fn wider_psums_never_reduce_byte_traffic() {
+        let l = layer();
+        let narrow = DataTypes::parse("8:8:16:8").unwrap();
+        let wide = DataTypes::parse("8:8:32:8").unwrap();
+        for mode in ControllerMode::ALL {
+            let n8 = layer_bandwidth_bytes(&l, 12, 4, mode, &narrow);
+            let w8 = layer_bandwidth_bytes(&l, 12, 4, mode, &wide);
+            assert_eq!(w8.psum, 2.0 * n8.psum);
+            assert_eq!(w8.input, n8.input);
+            assert_eq!(w8.ofmap, n8.ofmap);
+        }
     }
 }

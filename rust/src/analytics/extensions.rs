@@ -27,6 +27,7 @@ pub struct FusionReport {
 }
 
 impl FusionReport {
+    /// Fraction of the unfused traffic that perfect fusion removes.
     pub fn saving_fraction(&self) -> f64 {
         (self.unfused - self.fused) / self.unfused
     }

@@ -35,9 +35,9 @@
 
 use std::ops::Range;
 
-use crate::models::{ConvLayer, Network};
+use crate::models::{ConvLayer, DataTypes, Network};
 
-use super::bandwidth::ControllerMode;
+use super::bandwidth::{ByteBandwidth, ControllerMode};
 use super::partition::Partition;
 
 /// Whether `next` can be fused directly after `prev`: the planes must
@@ -169,6 +169,36 @@ pub fn chain_bandwidth(
         output,
         weights: (stripes as u64 * chain_weights) as f64,
         stripes,
+    }
+}
+
+/// Byte-weighted fused-chain traffic: the element counts of
+/// [`chain_bandwidth`] priced per tensor by `dt`. The chain input is
+/// ifmap-width, the last layer's intermediate psum crossings are
+/// psum-width with one final ofmap-width write per output element (same
+/// decomposition as
+/// [`layer_bandwidth_bytes`](super::bandwidth::layer_bandwidth_bytes)),
+/// and every reloaded weight is weight-width. Fusion's advantage
+/// *compounds* under wide psums: the intermediate layers' psum protocols
+/// vanish entirely, and those were the costliest bytes on the wire.
+pub fn chain_bandwidth_bytes(
+    chain: &[ConvLayer],
+    parts: &[Partition],
+    t: usize,
+    mode: ControllerMode,
+    dt: &DataTypes,
+) -> ByteBandwidth {
+    let elems = chain_bandwidth(chain, parts, t, mode);
+    let last = chain.last().expect("empty fusion chain");
+    let out_elems = (last.wo() * last.ho() * last.n) as f64;
+    // chain_bandwidth's output = psum crossings + one final write per
+    // output element; split the final writes out for ofmap pricing.
+    let psum_elems = elems.output - out_elems;
+    ByteBandwidth {
+        input: elems.input * dt.ifmap_bytes(),
+        psum: psum_elems * dt.psum_bytes(),
+        ofmap: out_elems * dt.ofmap_bytes(),
+        weights: elems.weights * dt.weight_bytes(),
     }
 }
 
@@ -347,6 +377,50 @@ mod tests {
             let y0 = s * t;
             let y1 = (y0 + t - 1).min(12);
             assert!(chain_working_set(&chain, &parts, y0, y1) <= mid);
+        }
+    }
+
+    #[test]
+    fn chain_bytes_reprice_the_same_elements() {
+        let chain = pair();
+        let parts = [Partition { m: 48, n: 4 }, Partition { m: 48, n: 4 }];
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        for t in [13usize, 5, 1] {
+            for mode in ControllerMode::ALL {
+                let e = chain_bandwidth(&chain, &parts, t, mode);
+                let b = chain_bandwidth_bytes(&chain, &parts, t, mode, &dt);
+                // element counts re-compose exactly under per-region widths
+                assert_eq!(b.input / dt.ifmap_bytes(), e.input, "t={t} {mode:?}");
+                assert_eq!(
+                    b.psum / dt.psum_bytes() + b.ofmap / dt.ofmap_bytes(),
+                    e.output,
+                    "t={t} {mode:?}"
+                );
+                assert_eq!(b.weights, e.weights, "weight width is 1 byte here");
+                // uniform widths: bytes == elements
+                let uni = chain_bandwidth_bytes(&chain, &parts, t, mode, &DataTypes::default());
+                assert_eq!(uni.activations(), e.activations());
+                assert_eq!(uni.total(), e.total());
+            }
+        }
+    }
+
+    #[test]
+    fn fused_chain_always_saves_bytes() {
+        // Fusing removes the intermediate's psum protocol (psum-width
+        // writes + reads) and its re-reads (ifmap-width), so the fused
+        // byte total is strictly below the unfused one in every mode.
+        // (Note the *fraction* saved need not exceed the element
+        // fraction: the removed re-reads are cheap ifmap-width bytes.)
+        let chain = pair();
+        let parts = [Partition { m: 48, n: 4 }, Partition { m: 48, n: 4 }];
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        for mode in ControllerMode::ALL {
+            let fused = chain_bandwidth_bytes(&chain, &parts, 13, mode, &dt).activations();
+            let a = crate::analytics::bandwidth::layer_bandwidth_bytes(&chain[0], 48, 4, mode, &dt);
+            let b = crate::analytics::bandwidth::layer_bandwidth_bytes(&chain[1], 48, 4, mode, &dt);
+            let unfused = a.activations() + b.activations();
+            assert!(fused < unfused, "{mode:?}: fused {fused} >= unfused {unfused}");
         }
     }
 

@@ -1,7 +1,7 @@
 //! The unified scenario-sweep engine: one declarative description of a
 //! design-space grid (networks × MAC budgets × strategies × controller
-//! modes × batch sizes × fusion depths), one parallel, memoizing
-//! executor, one deterministic JSONL output format.
+//! modes × batch sizes × fusion depths × precisions), one parallel,
+//! memoizing executor, one deterministic JSONL output format.
 //!
 //! Everything the paper tabulates is a slice of this grid — Table I is
 //! `TABLE1_MACS × Strategy::TABLE1 × passive`, Table II is
@@ -28,15 +28,17 @@ use std::sync::Mutex;
 use anyhow::{bail, Result};
 
 use crate::coordinator::parallel::{default_workers, parallel_map};
-use crate::models::{ConvLayer, Network};
+use crate::models::{ConvLayer, DataTypes, Network};
 use crate::util::json::Json;
 
-use super::bandwidth::{layer_bandwidth, Bandwidth, ControllerMode};
+use super::bandwidth::{
+    layer_bandwidth, layer_bandwidth_bytes, Bandwidth, ByteBandwidth, ControllerMode,
+};
 use super::fusion;
 use super::paper;
-use super::partition::{partition_layer, Partition, Strategy};
+use super::partition::{partition_layer, partition_layer_bytes, Partition, Strategy};
 
-/// A declarative sweep: the Cartesian product of six axes.
+/// A declarative sweep: the Cartesian product of seven axes.
 ///
 /// [`SweepSpec::paper_grid`] gives the paper's full evaluation grid
 /// (8 zoo networks × 6 MAC budgets × 4 strategies × 2 controller modes);
@@ -77,6 +79,13 @@ pub struct SweepSpec {
     /// model; it is the default and reproduces the unfused output
     /// byte-for-byte.
     pub fusion_depths: Vec<usize>,
+    /// Per-tensor precisions (the paper's wide-partial-sum observation:
+    /// psum crossings cost more bytes than activation crossings). The
+    /// default single uniform-8-bit entry reproduces the element-count
+    /// output byte-for-byte; non-default entries add byte-weighted keys
+    /// to the JSONL and re-derive the `optimal`/`search` partitions under
+    /// byte weighting.
+    pub datatypes: Vec<DataTypes>,
 }
 
 impl SweepSpec {
@@ -91,6 +100,7 @@ impl SweepSpec {
             modes: ControllerMode::ALL.to_vec(),
             batch_sizes: vec![1],
             fusion_depths: vec![1],
+            datatypes: vec![DataTypes::default()],
         }
     }
 
@@ -99,28 +109,40 @@ impl SweepSpec {
         SweepSpec::new(crate::models::zoo::paper_networks())
     }
 
+    /// Replace the MAC-budget axis.
     pub fn with_macs(mut self, macs: Vec<usize>) -> SweepSpec {
         self.mac_budgets = macs;
         self
     }
 
+    /// Replace the strategy axis.
     pub fn with_strategies(mut self, strategies: Vec<Strategy>) -> SweepSpec {
         self.strategies = strategies;
         self
     }
 
+    /// Replace the controller-mode axis.
     pub fn with_modes(mut self, modes: Vec<ControllerMode>) -> SweepSpec {
         self.modes = modes;
         self
     }
 
+    /// Replace the batch-size axis.
     pub fn with_batches(mut self, batch_sizes: Vec<usize>) -> SweepSpec {
         self.batch_sizes = batch_sizes;
         self
     }
 
+    /// Replace the fusion-depth axis.
     pub fn with_fusion(mut self, fusion_depths: Vec<usize>) -> SweepSpec {
         self.fusion_depths = fusion_depths;
+        self
+    }
+
+    /// Replace the precision axis (`--bits` on the CLI, `bits` on the
+    /// wire).
+    pub fn with_datatypes(mut self, datatypes: Vec<DataTypes>) -> SweepSpec {
+        self.datatypes = datatypes;
         self
     }
 
@@ -135,6 +157,7 @@ impl SweepSpec {
             .saturating_mul(self.modes.len())
             .saturating_mul(self.batch_sizes.len())
             .saturating_mul(self.fusion_depths.len())
+            .saturating_mul(self.datatypes.len())
     }
 
     /// Every axis non-empty and numerically sane.
@@ -157,6 +180,9 @@ impl SweepSpec {
         if self.fusion_depths.is_empty() || self.fusion_depths.contains(&0) {
             bail!("sweep spec needs at least one fusion depth, all >= 1");
         }
+        if self.datatypes.is_empty() {
+            bail!("sweep spec needs at least one precision (bits) entry");
+        }
         Ok(())
     }
 
@@ -168,12 +194,13 @@ impl SweepSpec {
     ///
     /// Recognized axis keys: `networks` (names), `macs`, `strategies`,
     /// `modes`, `batches`, `fusion_depth` (a number or an array of
-    /// depths), plus the protocol's `cmd`, `workers` and `protocol`.
-    /// Unknown keys are rejected so a typo'd axis fails loudly instead of
-    /// silently sweeping its full default.
+    /// depths), `bits` (a `"ifmap:weight:psum:ofmap"` precision string or
+    /// an array of them), plus the protocol's `cmd`, `workers` and
+    /// `protocol`. Unknown keys are rejected so a typo'd axis fails
+    /// loudly instead of silently sweeping its full default.
     pub fn from_json(msg: &Json) -> Result<SweepSpec> {
         use crate::api::codec;
-        const KNOWN: [&str; 9] = [
+        const KNOWN: [&str; 10] = [
             "cmd",
             "networks",
             "macs",
@@ -181,6 +208,7 @@ impl SweepSpec {
             "modes",
             "batches",
             "fusion_depth",
+            "bits",
             "workers",
             "protocol",
         ];
@@ -204,6 +232,9 @@ impl SweepSpec {
         if let Some(fusion) = msg.get("fusion_depth") {
             spec.fusion_depths = codec::fusion_axis(fusion)?;
         }
+        if let Some(bits) = msg.get("bits") {
+            spec.datatypes = codec::bits_axis(bits)?;
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -218,23 +249,41 @@ impl Default for SweepSpec {
 /// One evaluated grid cell: a whole network under one scenario.
 #[derive(Clone, Debug)]
 pub struct GridCell {
+    /// Network name (zoo spelling).
     pub network: String,
+    /// MAC budget `P` this cell was evaluated under.
     pub p_macs: usize,
+    /// Partitioning strategy.
     pub strategy: Strategy,
+    /// Memory-controller mode.
     pub mode: ControllerMode,
+    /// Batch size (amortizes weights only).
     pub batch: usize,
     /// Fusion depth (1 = the paper's unfused per-layer model).
     pub fusion_depth: usize,
+    /// Per-tensor precision this cell was evaluated under (the default
+    /// uniform 8-bit precision keeps the cell's JSONL byte-identical to
+    /// the element-count format).
+    pub dt: DataTypes,
     /// Input-activation traffic, activations (eq. 2 summed over layers;
     /// at fusion depth > 1, summed over chain inputs only).
     pub input: f64,
     /// Output/psum traffic, activations (eq. 3 or active variant, summed;
     /// at fusion depth > 1, summed over chain outputs only).
     pub output: f64,
+    /// Input traffic in bytes (eq. 2 elements × ifmap width).
+    pub input_bytes: f64,
+    /// Intermediate psum crossings in bytes (psum width).
+    pub psum_bytes: f64,
+    /// Final output writes in bytes (ofmap width).
+    pub ofmap_bytes: f64,
     /// Conv weight parameters of the network (amortize across `batch`).
     pub weights: u64,
     /// Table III floor for this network, activations.
     pub min_bw: f64,
+    /// Table III floor in bytes (inputs at ifmap width + outputs at
+    /// ofmap width; full residency spills no psums).
+    pub min_bytes: f64,
 }
 
 impl GridCell {
@@ -256,8 +305,22 @@ impl GridCell {
         super::extensions::per_image_traffic(self.total(), self.weights, self.batch)
     }
 
+    /// Total activation **bytes** on the wire — the byte-currency
+    /// analogue of [`GridCell::total`] (weights excluded, as in the
+    /// paper's tables). Equals `total()` under the default precision.
+    pub fn total_bytes(&self) -> f64 {
+        self.input_bytes + self.psum_bytes + self.ofmap_bytes
+    }
+
+    /// Weight bytes per image at this cell's batch size — the byte
+    /// analogue of [`GridCell::weights_per_image`] (weights amortize
+    /// across a batch; activations do not).
+    pub fn weight_bytes(&self) -> f64 {
+        self.weights_per_image() * self.dt.weight_bytes()
+    }
+
     /// Human/filterable cell key, e.g. `AlexNet|P2048|optimal|active|b1`
-    /// (fused cells append `|fused2` etc.).
+    /// (fused cells append `|fused2`, non-default precisions `|8:8:32:8`).
     pub fn key(&self) -> String {
         let mut key = format!(
             "{}|P{}|{}|{}|b{}",
@@ -270,13 +333,19 @@ impl GridCell {
         if self.fusion_depth > 1 {
             key.push_str(&format!("|fused{}", self.fusion_depth));
         }
+        if !self.dt.is_default() {
+            key.push_str(&format!("|{}", self.dt.label()));
+        }
         key
     }
 
     /// Stable JSON encoding (object keys sort alphabetically, numbers are
     /// exact integers where integral) — one JSONL record. The
-    /// `fusion_depth` key appears only on fused cells (depth > 1), so
-    /// unfused sweeps stay byte-identical to the pre-fusion format.
+    /// `fusion_depth` key appears only on fused cells (depth > 1), and
+    /// the byte-weighted keys (`bits`, `input_bytes`, `psum_bytes`,
+    /// `ofmap_bytes`, `total_bytes`, `weight_bytes`, `min_bytes`) only
+    /// when a non-default precision was requested — so default sweeps
+    /// stay byte-identical to the pre-precision format.
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("network", Json::Str(self.network.clone())),
@@ -294,6 +363,15 @@ impl GridCell {
         if self.fusion_depth > 1 {
             pairs.push(("fusion_depth", Json::Num(self.fusion_depth as f64)));
         }
+        if !self.dt.is_default() {
+            pairs.push(("bits", Json::Str(self.dt.label())));
+            pairs.push(("input_bytes", Json::Num(self.input_bytes)));
+            pairs.push(("psum_bytes", Json::Num(self.psum_bytes)));
+            pairs.push(("ofmap_bytes", Json::Num(self.ofmap_bytes)));
+            pairs.push(("total_bytes", Json::Num(self.total_bytes())));
+            pairs.push(("weight_bytes", Json::Num(self.weight_bytes())));
+            pairs.push(("min_bytes", Json::Num(self.min_bytes)));
+        }
         Json::obj(pairs)
     }
 }
@@ -303,6 +381,7 @@ impl GridCell {
 /// then fusion depths).
 #[derive(Clone, Debug)]
 pub struct GridResult {
+    /// Evaluated cells in spec enumeration order.
     pub cells: Vec<GridCell>,
 }
 
@@ -337,10 +416,12 @@ impl GridResult {
         out
     }
 
+    /// Number of cells.
     pub fn len(&self) -> usize {
         self.cells.len()
     }
 
+    /// Whether the grid has no cells.
     pub fn is_empty(&self) -> bool {
         self.cells.is_empty()
     }
@@ -349,8 +430,13 @@ impl GridResult {
 /// Per-layer outcome, memoized by shape.
 #[derive(Clone, Copy, Debug)]
 pub struct LayerEval {
+    /// The `(m, n)` tile the strategy chose (byte-weighted for the
+    /// `optimal`/`search` strategies under a non-default precision).
     pub partition: Partition,
+    /// Element traffic of that tile (eqs. 2–3).
     pub bandwidth: Bandwidth,
+    /// Byte traffic of the same tile under the evaluation's precision.
+    pub bytes: ByteBandwidth,
 }
 
 /// Memo key: the layer's *shape* (name erased) plus the scenario knobs
@@ -368,10 +454,17 @@ struct ShapeKey {
     p_macs: usize,
     strategy: Strategy,
     mode: ControllerMode,
+    dt: DataTypes,
 }
 
 impl ShapeKey {
-    fn new(layer: &ConvLayer, p_macs: usize, strategy: Strategy, mode: ControllerMode) -> ShapeKey {
+    fn new(
+        layer: &ConvLayer,
+        p_macs: usize,
+        strategy: Strategy,
+        mode: ControllerMode,
+        dt: DataTypes,
+    ) -> ShapeKey {
         ShapeKey {
             wi: layer.wi,
             hi: layer.hi,
@@ -384,6 +477,7 @@ impl ShapeKey {
             p_macs,
             strategy,
             mode,
+            dt,
         }
     }
 }
@@ -407,6 +501,7 @@ pub struct GridEngine {
 }
 
 impl GridEngine {
+    /// A fresh engine with an empty layer-shape cache.
     pub fn new() -> GridEngine {
         GridEngine {
             cache: Mutex::new(HashMap::new()),
@@ -415,11 +510,8 @@ impl GridEngine {
         }
     }
 
-    /// Evaluate one layer under one scenario, through the shape cache.
-    ///
-    /// Two layers with identical shapes (any names, any networks) share
-    /// one computation. A racing double-compute stores the same value, so
-    /// results never depend on thread interleaving.
+    /// Evaluate one layer under one scenario at the default precision —
+    /// see [`GridEngine::layer_eval_dt`].
     pub fn layer_eval(
         &self,
         layer: &ConvLayer,
@@ -427,15 +519,39 @@ impl GridEngine {
         strategy: Strategy,
         mode: ControllerMode,
     ) -> LayerEval {
-        let key = ShapeKey::new(layer, p_macs, strategy, mode);
+        self.layer_eval_dt(layer, p_macs, strategy, mode, &DataTypes::default())
+    }
+
+    /// Evaluate one layer under one scenario, through the shape cache.
+    ///
+    /// Two layers with identical shapes (any names, any networks) share
+    /// one computation. A racing double-compute stores the same value, so
+    /// results never depend on thread interleaving. Under the default
+    /// precision the partition comes from the legacy element model
+    /// (byte-identical goldens); non-default precisions route the
+    /// `optimal`/`search` strategies through the byte-weighted optimum.
+    pub fn layer_eval_dt(
+        &self,
+        layer: &ConvLayer,
+        p_macs: usize,
+        strategy: Strategy,
+        mode: ControllerMode,
+        dt: &DataTypes,
+    ) -> LayerEval {
+        let key = ShapeKey::new(layer, p_macs, strategy, mode, *dt);
         if let Some(hit) = self.cache.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return *hit;
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let partition = partition_layer(layer, p_macs, strategy, mode);
+        let partition = if dt.is_default() {
+            partition_layer(layer, p_macs, strategy, mode)
+        } else {
+            partition_layer_bytes(layer, p_macs, strategy, mode, dt)
+        };
         let bandwidth = layer_bandwidth(layer, partition.m, partition.n, mode);
-        let eval = LayerEval { partition, bandwidth };
+        let bytes = layer_bandwidth_bytes(layer, partition.m, partition.n, mode, dt);
+        let eval = LayerEval { partition, bandwidth, bytes };
         let mut cache = self.cache.lock().unwrap();
         if cache.len() >= CACHE_CAP {
             cache.clear();
@@ -458,11 +574,8 @@ impl GridEngine {
     }
 
     /// Evaluate one grid cell with layers fused in chains of up to
-    /// `fusion_depth`. Singleton chains go through the per-layer eq. 2–3
-    /// model (the shape memo cache), so depth 1 *is* the unfused cell;
-    /// longer chains charge only the chain input, the chain output and
-    /// the (unstriped, so once-loaded) weights — see
-    /// [`crate::analytics::fusion`].
+    /// `fusion_depth`, at the default precision — see
+    /// [`GridEngine::cell_fused_dt`].
     pub fn cell_fused(
         &self,
         net: &Network,
@@ -472,23 +585,55 @@ impl GridEngine {
         batch: usize,
         fusion_depth: usize,
     ) -> GridCell {
+        self.cell_fused_dt(net, p_macs, strategy, mode, batch, fusion_depth, &DataTypes::default())
+    }
+
+    /// Evaluate one grid cell with layers fused in chains of up to
+    /// `fusion_depth`, under precision `dt`. Singleton chains go through
+    /// the per-layer eq. 2–3 model (the shape memo cache), so depth 1
+    /// *is* the unfused cell; longer chains charge only the chain input,
+    /// the chain output and the (unstriped, so once-loaded) weights — see
+    /// [`crate::analytics::fusion`]. Element and byte traffic are
+    /// accumulated for the *same* partitions, so a cell is one design
+    /// described in two currencies.
+    #[allow(clippy::too_many_arguments)]
+    pub fn cell_fused_dt(
+        &self,
+        net: &Network,
+        p_macs: usize,
+        strategy: Strategy,
+        mode: ControllerMode,
+        batch: usize,
+        fusion_depth: usize,
+        dt: &DataTypes,
+    ) -> GridCell {
         let mut input = 0.0;
         let mut output = 0.0;
+        let mut input_bytes = 0.0;
+        let mut psum_bytes = 0.0;
+        let mut ofmap_bytes = 0.0;
         for range in fusion::chains(net, fusion_depth) {
             let layers = &net.layers[range];
             if layers.len() == 1 {
-                let eval = self.layer_eval(&layers[0], p_macs, strategy, mode);
+                let eval = self.layer_eval_dt(&layers[0], p_macs, strategy, mode, dt);
                 input += eval.bandwidth.input;
                 output += eval.bandwidth.output;
+                input_bytes += eval.bytes.input;
+                psum_bytes += eval.bytes.psum;
+                ofmap_bytes += eval.bytes.ofmap;
             } else {
                 let parts: Vec<Partition> = layers
                     .iter()
-                    .map(|l| self.layer_eval(l, p_macs, strategy, mode).partition)
+                    .map(|l| self.layer_eval_dt(l, p_macs, strategy, mode, dt).partition)
                     .collect();
                 let ho = layers.last().unwrap().ho();
                 let fused = fusion::chain_bandwidth(layers, &parts, ho, mode);
                 input += fused.input;
                 output += fused.output;
+                let fused_b = fusion::chain_bandwidth_bytes(layers, &parts, ho, mode, dt);
+                input_bytes += fused_b.input;
+                psum_bytes += fused_b.psum;
+                ofmap_bytes += fused_b.ofmap;
             }
         }
         GridCell {
@@ -498,10 +643,15 @@ impl GridEngine {
             mode,
             batch,
             fusion_depth,
+            dt: *dt,
             input,
             output,
+            input_bytes,
+            psum_bytes,
+            ofmap_bytes,
             weights: net.total_weights(),
             min_bw: net.min_bandwidth() as f64,
+            min_bytes: net.min_bandwidth_bytes(dt),
         }
     }
 
@@ -520,22 +670,25 @@ impl GridEngine {
     /// division-by-zero artifacts in the JSONL stream.
     pub fn run_with_workers(&self, spec: &SweepSpec, workers: usize) -> GridResult {
         spec.validate().expect("invalid sweep spec");
-        let mut jobs: Vec<(usize, usize, Strategy, ControllerMode, usize, usize)> = Vec::new();
+        type Job = (usize, usize, Strategy, ControllerMode, usize, usize, DataTypes);
+        let mut jobs: Vec<Job> = Vec::new();
         for ni in 0..spec.networks.len() {
             for &p in &spec.mac_budgets {
                 for &s in &spec.strategies {
                     for &mode in &spec.modes {
                         for &b in &spec.batch_sizes {
                             for &f in &spec.fusion_depths {
-                                jobs.push((ni, p, s, mode, b, f));
+                                for &dt in &spec.datatypes {
+                                    jobs.push((ni, p, s, mode, b, f, dt));
+                                }
                             }
                         }
                     }
                 }
             }
         }
-        let cells = parallel_map(&jobs, workers.max(1), |&(ni, p, s, mode, b, f)| {
-            self.cell_fused(&spec.networks[ni], p, s, mode, b, f)
+        let cells = parallel_map(&jobs, workers.max(1), |&(ni, p, s, mode, b, f, dt)| {
+            self.cell_fused_dt(&spec.networks[ni], p, s, mode, b, f, &dt)
         });
         GridResult { cells }
     }
@@ -604,6 +757,9 @@ mod tests {
         assert_eq!(b1.total(), b8.total());
         assert_eq!(b1.weights_per_image(), 8.0 * b8.weights_per_image());
         assert!(b8.per_image_traffic() < b1.per_image_traffic());
+        // weight_bytes is the byte analogue of weights_per_image, so it
+        // amortizes across the batch the same way.
+        assert_eq!(b1.weight_bytes(), 8.0 * b8.weight_bytes());
     }
 
     #[test]
@@ -700,6 +856,88 @@ mod tests {
         ] {
             assert!(SweepSpec::from_json(&Json::parse(bad).unwrap()).is_err(), "accepted {bad}");
         }
+    }
+
+    #[test]
+    fn bits_axis_sweeps_and_tags_records() {
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        let spec = SweepSpec::new(vec![zoo::alexnet()])
+            .with_macs(vec![512])
+            .with_strategies(vec![Strategy::MaxInput])
+            .with_modes(vec![ControllerMode::Passive])
+            .with_datatypes(vec![DataTypes::default(), dt]);
+        assert_eq!(spec.cell_count(), 2);
+        let engine = GridEngine::new();
+        let a = engine.run_with_workers(&spec, 1);
+        let b = engine.run_with_workers(&spec, 4);
+        assert_eq!(a.to_jsonl(), b.to_jsonl());
+        // default cell: no byte keys; MaxInput partition is width-agnostic
+        // so element traffic matches across precisions.
+        let (def, wide) = (&a.cells[0], &a.cells[1]);
+        assert!(def.to_json().get("bits").is_none());
+        assert_eq!(wide.to_json().get("bits").unwrap().as_str(), Some("8:8:32:8"));
+        assert_eq!(def.total(), wide.total());
+        assert_eq!(def.total_bytes(), def.total());
+        assert!(wide.total_bytes() > wide.total(), "4-byte psums must cost more bytes");
+        assert!(wide.key().ends_with("|8:8:32:8"), "{}", wide.key());
+        assert!(!def.key().contains(':'));
+    }
+
+    #[test]
+    fn spec_from_json_bits() {
+        let one = SweepSpec::from_json(
+            &Json::parse(r#"{"cmd":"sweep","bits":"8:8:32:8"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(one.datatypes, vec![DataTypes::parse("8:8:32:8").unwrap()]);
+        let many = SweepSpec::from_json(
+            &Json::parse(r#"{"cmd":"sweep","bits":["8:8:8:8","int8"]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            many.datatypes,
+            vec![DataTypes::default(), DataTypes::parse("8:8:32:8").unwrap()]
+        );
+        for bad in [
+            r#"{"cmd":"sweep","bits":"8:8:32"}"#,
+            r#"{"cmd":"sweep","bits":[]}"#,
+            r#"{"cmd":"sweep","bits":[7]}"#,
+            r#"{"cmd":"sweep","bits":"0:8:8:8"}"#,
+        ] {
+            assert!(SweepSpec::from_json(&Json::parse(bad).unwrap()).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn byte_partitioning_differs_only_for_optimizing_strategies() {
+        // Non-default precision re-derives optimal/search partitions
+        // under byte weighting; the fixed heuristics are unchanged.
+        let engine = GridEngine::new();
+        let net = zoo::alexnet();
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        let conv3 = net.layer("conv3").unwrap();
+        let e = engine.layer_eval(conv3, 512, Strategy::Optimal, ControllerMode::Passive);
+        let b = engine.layer_eval_dt(conv3, 512, Strategy::Optimal, ControllerMode::Passive, &dt);
+        assert_eq!(e.partition.m, 12);
+        assert_eq!(b.partition.m, 24);
+        let eh = engine.layer_eval(conv3, 512, Strategy::MaxInput, ControllerMode::Passive);
+        let bh = engine.layer_eval_dt(conv3, 512, Strategy::MaxInput, ControllerMode::Passive, &dt);
+        assert_eq!(eh.partition, bh.partition);
+        // byte-optimal cells can only improve the byte total
+        let ecell = engine.cell(&net, 512, Strategy::Optimal, ControllerMode::Passive, 1);
+        let bcell =
+            engine.cell_fused_dt(&net, 512, Strategy::Optimal, ControllerMode::Passive, 1, 1, &dt);
+        // element-partitioned byte cost: reprice the element cells
+        let mut elem_part_bytes = 0.0;
+        let passive = ControllerMode::Passive;
+        for l in &net.layers {
+            let ev = engine.layer_eval(l, 512, Strategy::Optimal, passive);
+            elem_part_bytes +=
+                layer_bandwidth_bytes(l, ev.partition.m, ev.partition.n, passive, &dt)
+                    .activations();
+        }
+        assert!(bcell.total_bytes() <= elem_part_bytes + 1e-9);
+        assert_eq!(ecell.total_bytes(), ecell.total());
     }
 
     #[test]

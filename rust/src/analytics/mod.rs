@@ -21,6 +21,36 @@
 //!   back-propagation, chain traffic (first input + last output + weight
 //!   reloads per stripe) and the live-working-set feasibility check.
 //! * [`paper`] — the published Tables I/II/III + Fig. 2 reference data.
+//!
+//! The full derivation of eqs. 1–7 and the byte-weighted forms lives in
+//! `docs/MODEL.md`; its worked AlexNet CONV2 example is pinned against
+//! this crate by the doc-test below — every number in the example is
+//! recomputed here and must appear verbatim in the document:
+//!
+//! ```
+//! use psim::analytics::bandwidth::{layer_bandwidth, layer_bandwidth_bytes, ControllerMode};
+//! use psim::models::{ConvLayer, DataTypes};
+//!
+//! let md = std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/MODEL.md"))
+//!     .expect("docs/MODEL.md exists");
+//! let conv2 = ConvLayer::new("conv2", 27, 27, 64, 192, 5, 1, 2);
+//! let dt = DataTypes::parse("8:8:32:8").unwrap();
+//! let e = layer_bandwidth(&conv2, 16, 1, ControllerMode::Passive);
+//! let p = layer_bandwidth_bytes(&conv2, 16, 1, ControllerMode::Passive, &dt);
+//! let a = layer_bandwidth_bytes(&conv2, 16, 1, ControllerMode::Active, &dt);
+//! for v in [
+//!     e.input,            // eq. 2 elements (== bytes at 1 B/elem)
+//!     e.output,           // eq. 3 elements, passive
+//!     p.psum,             // passive psum bytes
+//!     a.psum,             // active psum bytes
+//!     p.ofmap,            // final-write bytes
+//!     e.input + e.output, // passive element total
+//!     p.activations(),    // passive byte total
+//!     a.activations(),    // active byte total
+//! ] {
+//!     assert!(md.contains(&format!("{}", v as u64)), "MODEL.md missing {v}");
+//! }
+//! ```
 
 pub mod bandwidth;
 pub mod extensions;
@@ -32,8 +62,10 @@ pub mod partition;
 pub mod spatial;
 pub mod sweep;
 
-pub use bandwidth::{layer_bandwidth, Bandwidth, ControllerMode};
-pub use fusion::{chain_bandwidth, chains, FusedBandwidth};
+pub use bandwidth::{
+    layer_bandwidth, layer_bandwidth_bytes, Bandwidth, ByteBandwidth, ControllerMode,
+};
+pub use fusion::{chain_bandwidth, chain_bandwidth_bytes, chains, FusedBandwidth};
 pub use grid::{GridCell, GridEngine, GridResult, SweepSpec};
-pub use partition::{partition_layer, Partition, Strategy};
+pub use partition::{partition_layer, partition_layer_bytes, Partition, Strategy};
 pub use sweep::{network_bandwidth, NetworkReport};

@@ -2,10 +2,10 @@
 //! used both as an ablation baseline and to validate that the closed form
 //! lands on (or next to) the true discrete optimum.
 
-use crate::models::ConvLayer;
+use crate::models::{ConvLayer, DataTypes};
 use crate::util::mathx::{divisors, nearest_divisor_log};
 
-use super::bandwidth::{layer_bandwidth, ControllerMode};
+use super::bandwidth::{layer_bandwidth, layer_bandwidth_bytes, ControllerMode};
 use super::partition::Partition;
 
 /// The real-valued optimum of eq. (7) for a layer (per group).
@@ -26,6 +26,44 @@ pub fn optimal_m_real(layer: &ConvLayer, p_macs: usize, mode: ControllerMode) ->
         ControllerMode::Active => 1.0,
     };
     (factor * wo_ho * p_macs as f64 / (wi_hi * k2)).sqrt()
+}
+
+/// The real-valued optimum of eq. (7) under **byte** weighting.
+///
+/// Substituting `n = P/(K² m)` (eq. 5) into the byte-priced traffic gives
+/// `B(m) = iB·Wi·Hi·M·N·K²/P · m + f·pB·Wo·Ho·N·M/m + const`, where `iB`/
+/// `pB` are the ifmap/psum element sizes, `f = 2` passive / `1` active,
+/// and the ofmap term is constant in `m`. Minimizing:
+///
+/// `m*_bytes = sqrt(f · (pB/iB) · Wo·Ho · P / (Wi·Hi · K²))`
+///
+/// — the element-model optimum scaled by `sqrt(pB/iB)`. With 8-bit
+/// ifmaps and 32-bit psums the optimum shifts **2× higher**: wide psums
+/// make psum passes costlier, so byte-optimal tiling buys more input maps
+/// per iteration at the price of extra input re-reads.
+///
+/// ```
+/// use psim::analytics::bandwidth::ControllerMode;
+/// use psim::analytics::optimizer::{optimal_m_real, optimal_m_real_bytes};
+/// use psim::models::{ConvLayer, DataTypes};
+///
+/// let l = ConvLayer::new("conv3", 13, 13, 192, 384, 3, 1, 1);
+/// let dt = DataTypes::parse("8:8:32:8").unwrap();
+/// let elem = optimal_m_real(&l, 512, ControllerMode::Passive);
+/// let byte = optimal_m_real_bytes(&l, 512, ControllerMode::Passive, &dt);
+/// assert_eq!(byte, elem * 2.0); // sqrt(32/8) = 2
+/// // Uniform widths reduce to the element-model optimum exactly.
+/// let uni = optimal_m_real_bytes(&l, 512, ControllerMode::Passive, &DataTypes::default());
+/// assert_eq!(uni, elem);
+/// ```
+pub fn optimal_m_real_bytes(
+    layer: &ConvLayer,
+    p_macs: usize,
+    mode: ControllerMode,
+    dt: &DataTypes,
+) -> f64 {
+    let ratio = dt.psum_bytes() / dt.ifmap_bytes();
+    optimal_m_real(layer, p_macs, mode) * ratio.sqrt()
 }
 
 /// Adapt the real-valued `m*` per the paper: clamp to `[1, M]` and snap to
@@ -60,6 +98,18 @@ pub fn optimal_partition(layer: &ConvLayer, p_macs: usize, mode: ControllerMode)
     Partition { m, n: n_from_budget(layer, p_macs, m) }
 }
 
+/// Byte-weighted closed-form partition: [`optimal_m_real_bytes`] + the
+/// same integer adaptation and eq. 5 `n` allocation as the element model.
+pub fn optimal_partition_bytes(
+    layer: &ConvLayer,
+    p_macs: usize,
+    mode: ControllerMode,
+    dt: &DataTypes,
+) -> Partition {
+    let m = adapt_m(layer, p_macs, optimal_m_real_bytes(layer, p_macs, mode, dt));
+    Partition { m, n: n_from_budget(layer, p_macs, m) }
+}
+
 /// Exhaustive discrete optimum: `m` over divisors of `M` (integral psum
 /// passes, the paper's adaptation rule) and `n` over the feasible range
 /// `[1, min(N, P/(K^2 m))]` — the same feasible set the closed form draws
@@ -71,6 +121,36 @@ pub fn optimal_partition(layer: &ConvLayer, p_macs: usize, mode: ControllerMode)
 /// passes), so the inner dimension needs no scan — the feasible maximum
 /// `n_cap` is optimal for every `m`. This replaced an `O(n_cap)` loop.
 pub fn search_partition(layer: &ConvLayer, p_macs: usize, mode: ControllerMode) -> Partition {
+    search_with_cost(layer, p_macs, |m, n| layer_bandwidth(layer, m, n, mode).total())
+}
+
+/// Exhaustive discrete optimum under the **byte** objective: the same
+/// divisor-constrained feasible set as [`search_partition`], minimizing
+/// activation bytes instead of elements. With uniform widths the
+/// objective is a positive scaling of the element one, so the argmin (and
+/// its first-match tie-breaking) is identical.
+pub fn search_partition_bytes(
+    layer: &ConvLayer,
+    p_macs: usize,
+    mode: ControllerMode,
+    dt: &DataTypes,
+) -> Partition {
+    search_with_cost(layer, p_macs, |m, n| {
+        layer_bandwidth_bytes(layer, m, n, mode, dt).activations()
+    })
+}
+
+/// The shared divisor scan both searches run on, so the feasible-set
+/// invariants live once: `m` over divisors of `M` ascending with the
+/// early break (no larger divisor fits eq. 1 either), `n` at the feasible
+/// maximum `min(N, P/(K² m))` (bandwidth is monotone non-increasing in
+/// `n` — the Perf L3-1 argument — so the inner dimension needs no scan),
+/// first strict improvement wins ties.
+fn search_with_cost(
+    layer: &ConvLayer,
+    p_macs: usize,
+    cost: impl Fn(usize, usize) -> f64,
+) -> Partition {
     let mg = layer.m_per_group();
     let ng = layer.n_per_group();
     let k2 = layer.k * layer.k;
@@ -81,7 +161,7 @@ pub fn search_partition(layer: &ConvLayer, p_macs: usize, mode: ControllerMode) 
             break; // divisors ascending: no larger m fits either
         }
         let n = (p_macs / (k2 * m)).max(1).min(ng);
-        let bw = layer_bandwidth(layer, m, n, mode).total();
+        let bw = cost(m, n);
         if bw < best_bw {
             best_bw = bw;
             best = Partition { m, n };
@@ -157,6 +237,61 @@ mod tests {
         let l = conv3();
         let s = search_partition(&l, 512, ControllerMode::Passive);
         assert!(l.k * l.k * s.m * s.n <= 512);
+    }
+
+    #[test]
+    fn byte_weighting_shifts_the_optimum_up() {
+        // conv3 at P=512: element m* = 10.67 snaps to 12; under 8-bit
+        // ifmaps / 32-bit psums m* doubles to 21.33 and snaps to 24 —
+        // wide psums buy more input maps per pass.
+        let l = conv3();
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        let elem = optimal_partition(&l, 512, ControllerMode::Passive);
+        let byte = optimal_partition_bytes(&l, 512, ControllerMode::Passive, &dt);
+        assert_eq!(elem.m, 12);
+        assert_eq!(byte.m, 24);
+        assert!(byte.m > elem.m);
+        // active mode: element 7.54 -> 8; byte 15.08 -> 16
+        let ab = optimal_partition_bytes(&l, 512, ControllerMode::Active, &dt);
+        assert_eq!(ab.m, 16);
+    }
+
+    #[test]
+    fn byte_search_beats_or_matches_byte_formula() {
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        for p in [512usize, 2048, 16384] {
+            for mode in ControllerMode::ALL {
+                let l = conv3();
+                let f = optimal_partition_bytes(&l, p, mode, &dt);
+                let s = search_partition_bytes(&l, p, mode, &dt);
+                let bf = layer_bandwidth_bytes(&l, f.m, f.n, mode, &dt).activations();
+                let bs = layer_bandwidth_bytes(&l, s.m, s.n, mode, &dt).activations();
+                assert!(bs <= bf + 1e-9, "byte search worse than formula at P={p}");
+                assert!(l.k * l.k * s.m * s.n <= p);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_widths_reproduce_element_partitions() {
+        // With all widths equal the byte objective is a positive scaling
+        // of the element one: identical partitions, closed form or search.
+        for bits in [8usize, 16] {
+            let dt = DataTypes::uniform(bits);
+            for p in [512usize, 2048] {
+                for mode in ControllerMode::ALL {
+                    let l = conv3();
+                    assert_eq!(
+                        optimal_partition_bytes(&l, p, mode, &dt),
+                        optimal_partition(&l, p, mode),
+                    );
+                    assert_eq!(
+                        search_partition_bytes(&l, p, mode, &dt),
+                        search_partition(&l, p, mode),
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! `K^2 * m * n <= P` (eq. 1). Channel counts are snapped to divisors of
 //! `M`/`N` so iteration counts are integral (the paper's adaptation rule).
 
-use crate::models::ConvLayer;
+use crate::models::{ConvLayer, DataTypes};
 use crate::util::mathx::divisors;
 
 use super::bandwidth::ControllerMode;
@@ -14,7 +14,9 @@ use super::optimizer;
 /// A per-iteration tile: `m` input maps x `n` output maps.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Partition {
+    /// Input maps per iteration.
     pub m: usize,
+    /// Output maps per iteration.
     pub n: usize,
 }
 
@@ -45,6 +47,7 @@ impl Strategy {
     pub const TABLE1: [Strategy; 4] =
         [Strategy::MaxInput, Strategy::MaxOutput, Strategy::EqualMacs, Strategy::Optimal];
 
+    /// Human-facing name (Table I column header).
     pub fn label(&self) -> &'static str {
         match self {
             Strategy::MaxInput => "Max Input",
@@ -111,6 +114,27 @@ pub fn partition_layer(
         }
         Strategy::Optimal => optimizer::optimal_partition(layer, p_macs, mode),
         Strategy::OptimalSearch => optimizer::search_partition(layer, p_macs, mode),
+    }
+}
+
+/// Precision-aware [`partition_layer`]: the fixed heuristics are
+/// width-agnostic (they never price traffic), while
+/// [`Strategy::Optimal`]/[`Strategy::OptimalSearch`] optimize the
+/// **byte** objective — the optimum shifts up by `sqrt(psum/ifmap)` when
+/// psums are wider (see
+/// [`optimizer::optimal_m_real_bytes`]). Under a uniform `dt` this is
+/// exactly [`partition_layer`] for every strategy.
+pub fn partition_layer_bytes(
+    layer: &ConvLayer,
+    p_macs: usize,
+    strategy: Strategy,
+    mode: ControllerMode,
+    dt: &DataTypes,
+) -> Partition {
+    match strategy {
+        Strategy::Optimal => optimizer::optimal_partition_bytes(layer, p_macs, mode, dt),
+        Strategy::OptimalSearch => optimizer::search_partition_bytes(layer, p_macs, mode, dt),
+        _ => partition_layer(layer, p_macs, strategy, mode),
     }
 }
 

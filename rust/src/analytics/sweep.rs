@@ -10,18 +10,26 @@ use super::partition::{partition_layer, Partition, Strategy};
 /// Per-layer outcome of a partitioning decision.
 #[derive(Clone, Debug)]
 pub struct LayerReport {
+    /// The layer analyzed.
     pub layer: ConvLayer,
+    /// The `(m, n)` tile the strategy chose.
     pub partition: Partition,
+    /// Its eq. 2–3 traffic.
     pub bandwidth: Bandwidth,
 }
 
 /// Whole-network outcome.
 #[derive(Clone, Debug)]
 pub struct NetworkReport {
+    /// Network name.
     pub network: String,
+    /// MAC budget `P`.
     pub p_macs: usize,
+    /// Partitioning strategy applied to every layer.
     pub strategy: Strategy,
+    /// Memory-controller mode.
     pub mode: ControllerMode,
+    /// Per-layer outcomes, in execution order.
     pub layers: Vec<LayerReport>,
 }
 

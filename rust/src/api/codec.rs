@@ -21,7 +21,7 @@ use crate::config::accel::{parse_mode, parse_strategy};
 use crate::dse::budget::{parse_sram, SramBudget};
 use crate::dse::pareto::{parse_objective, Objective};
 use crate::dse::space::ExploreSpec;
-use crate::models::{zoo, Network};
+use crate::models::{zoo, DataTypes, Network};
 use crate::util::json::Json;
 
 use super::error::ApiError;
@@ -125,6 +125,37 @@ pub fn fusion_axis(v: &Json) -> Result<Vec<usize>> {
     }
 }
 
+/// A `bits` precision axis: a single `"ifmap:weight:psum:ofmap"` string
+/// (or preset) or an array of them — the sweep protocol's precision axis.
+pub fn bits_axis(v: &Json) -> Result<Vec<DataTypes>> {
+    match v {
+        Json::Str(s) => Ok(vec![DataTypes::parse(s)?]),
+        Json::Arr(arr) => {
+            if arr.is_empty() {
+                bail!("'bits' array must not be empty");
+            }
+            arr.iter()
+                .map(|x| {
+                    let s = x.as_str().ok_or_else(|| {
+                        anyhow!("'bits' entries must be strings like \"8:8:32:8\"")
+                    })?;
+                    DataTypes::parse(s)
+                })
+                .collect()
+        }
+        _ => Err(anyhow!("'bits' must be a precision string like \"8:8:32:8\" or an array")),
+    }
+}
+
+/// A single `bits` precision field (explore/analyze/fusion: one pricing
+/// currency per request, so arrays are rejected).
+pub fn bits_field(v: &Json) -> Result<DataTypes> {
+    let s = v
+        .as_str()
+        .ok_or_else(|| anyhow!("'bits' must be a single precision string like \"8:8:32:8\""))?;
+    DataTypes::parse(s)
+}
+
 /// The optional `workers` request field (the engine applies the default
 /// and the clamp, so the policy cannot drift between frontends).
 pub fn workers_field(msg: &Json) -> Result<Option<usize>> {
@@ -216,8 +247,13 @@ fn opt_mode(msg: &Json) -> Result<Option<ControllerMode>> {
         .transpose()
 }
 
+fn opt_bits(msg: &Json) -> Result<DataTypes> {
+    msg.get("bits").map(bits_field).transpose().map(|dt| dt.unwrap_or_default())
+}
+
 fn decode_fusion(msg: &Json) -> Result<Request> {
-    const KNOWN: [&str; 7] = ["cmd", "networks", "depth", "macs", "strategy", "mode", "protocol"];
+    const KNOWN: [&str; 8] =
+        ["cmd", "networks", "depth", "macs", "strategy", "mode", "bits", "protocol"];
     reject_unknown_keys(msg, &KNOWN, "fusion")?;
     Ok(Request::Fusion {
         networks: match msg.get("networks") {
@@ -228,11 +264,12 @@ fn decode_fusion(msg: &Json) -> Result<Request> {
         p_macs: opt_usize(msg, "macs")?.unwrap_or(1024),
         strategy: opt_strategy(msg)?.unwrap_or(Strategy::Optimal),
         mode: opt_mode(msg)?.unwrap_or(ControllerMode::Passive),
+        dt: opt_bits(msg)?,
     })
 }
 
 fn decode_analyze(msg: &Json) -> Result<Request> {
-    const KNOWN: [&str; 6] = ["cmd", "network", "macs", "strategy", "mode", "protocol"];
+    const KNOWN: [&str; 7] = ["cmd", "network", "macs", "strategy", "mode", "bits", "protocol"];
     reject_unknown_keys(msg, &KNOWN, "analyze")?;
     let name = required_str(msg, "network")?;
     Ok(Request::Analyze {
@@ -241,6 +278,7 @@ fn decode_analyze(msg: &Json) -> Result<Request> {
         p_macs: opt_usize(msg, "macs")?.unwrap_or(2048),
         strategy: opt_strategy(msg)?.unwrap_or(Strategy::Optimal),
         mode: opt_mode(msg)?.unwrap_or(ControllerMode::Passive),
+        dt: opt_bits(msg)?,
     })
 }
 
@@ -282,6 +320,17 @@ pub fn encode_request(req: &Request) -> Json {
                 ("batches", nums(&spec.batch_sizes)),
                 ("fusion_depth", nums(&spec.fusion_depths)),
             ];
+            // Additive: the bits axis only appears when it differs from
+            // the default single-entry axis, keeping pre-precision
+            // request bytes (and their pinned fixtures) intact. Length
+            // matters too: a multi-entry all-default axis yields more
+            // cells, so omitting it would be lossy.
+            if spec.datatypes.len() != 1 || !spec.datatypes[0].is_default() {
+                pairs.push((
+                    "bits",
+                    Json::Arr(spec.datatypes.iter().map(|dt| Json::Str(dt.label())).collect()),
+                ));
+            }
             if let Some(w) = workers {
                 pairs.push(("workers", Json::Num(*w as f64)));
             }
@@ -302,28 +351,43 @@ pub fn encode_request(req: &Request) -> Json {
                 ("fusion", nums(&spec.fusion_depths)),
                 ("objectives", strs(spec.objectives.iter().map(|o| o.label()).collect())),
             ];
+            if !spec.datatypes.is_default() {
+                pairs.push(("bits", Json::Str(spec.datatypes.label())));
+            }
             if let Some(w) = workers {
                 pairs.push(("workers", Json::Num(*w as f64)));
             }
             Json::obj(pairs)
         }
-        Request::Fusion { networks, depth, p_macs, strategy, mode } => Json::obj(vec![
-            cmd("fusion"),
-            proto,
-            ("networks", names(networks)),
-            ("depth", Json::Num(*depth as f64)),
-            ("macs", Json::Num(*p_macs as f64)),
-            ("strategy", Json::Str(strategy.slug().to_string())),
-            ("mode", Json::Str(mode.label().to_string())),
-        ]),
-        Request::Analyze { network, p_macs, strategy, mode } => Json::obj(vec![
-            cmd("analyze"),
-            proto,
-            ("network", Json::Str(network.name.clone())),
-            ("macs", Json::Num(*p_macs as f64)),
-            ("strategy", Json::Str(strategy.slug().to_string())),
-            ("mode", Json::Str(mode.label().to_string())),
-        ]),
+        Request::Fusion { networks, depth, p_macs, strategy, mode, dt } => {
+            let mut pairs = vec![
+                cmd("fusion"),
+                proto,
+                ("networks", names(networks)),
+                ("depth", Json::Num(*depth as f64)),
+                ("macs", Json::Num(*p_macs as f64)),
+                ("strategy", Json::Str(strategy.slug().to_string())),
+                ("mode", Json::Str(mode.label().to_string())),
+            ];
+            if !dt.is_default() {
+                pairs.push(("bits", Json::Str(dt.label())));
+            }
+            Json::obj(pairs)
+        }
+        Request::Analyze { network, p_macs, strategy, mode, dt } => {
+            let mut pairs = vec![
+                cmd("analyze"),
+                proto,
+                ("network", Json::Str(network.name.clone())),
+                ("macs", Json::Num(*p_macs as f64)),
+                ("strategy", Json::Str(strategy.slug().to_string())),
+                ("mode", Json::Str(mode.label().to_string())),
+            ];
+            if !dt.is_default() {
+                pairs.push(("bits", Json::Str(dt.label())));
+            }
+            Json::obj(pairs)
+        }
         Request::Tables { table, faithful } => Json::obj(vec![
             cmd("tables"),
             proto,
@@ -370,7 +434,7 @@ mod tests {
 
     #[test]
     fn fusion_and_analyze_decode_defaults() {
-        let Request::Fusion { networks, depth, p_macs, strategy, mode } =
+        let Request::Fusion { networks, depth, p_macs, strategy, mode, dt } =
             decode_line(r#"{"cmd":"fusion"}"#).unwrap()
         else {
             panic!("not a fusion request");
@@ -379,17 +443,77 @@ mod tests {
         assert_eq!((depth, p_macs), (2, 1024));
         assert_eq!(strategy, Strategy::Optimal);
         assert_eq!(mode, ControllerMode::Passive);
+        assert!(dt.is_default());
 
-        let Request::Analyze { network, p_macs, .. } =
+        let Request::Analyze { network, p_macs, dt, .. } =
             decode_line(r#"{"cmd":"analyze","network":"resnet18","macs":512}"#).unwrap()
         else {
             panic!("not an analyze request");
         };
         assert_eq!(network.name, "ResNet-18");
         assert_eq!(p_macs, 512);
+        assert!(dt.is_default());
         assert!(decode_line(r#"{"cmd":"analyze"}"#).is_err());
         assert!(decode_line(r#"{"cmd":"analyze","network":"Nope"}"#).is_err());
         assert!(decode_line(r#"{"cmd":"fusion","warp":9}"#).is_err());
+    }
+
+    #[test]
+    fn bits_decode_and_encode_round_trip() {
+        use crate::models::DataTypes;
+        // decode: all four request shapes accept `bits`
+        let Request::Analyze { dt, .. } =
+            decode_line(r#"{"cmd":"analyze","network":"AlexNet","bits":"8:8:32:8"}"#).unwrap()
+        else {
+            panic!("not an analyze request");
+        };
+        assert_eq!(dt, DataTypes::parse("8:8:32:8").unwrap());
+        let Request::Fusion { dt, .. } =
+            decode_line(r#"{"cmd":"fusion","bits":"int8"}"#).unwrap()
+        else {
+            panic!("not a fusion request");
+        };
+        assert_eq!(dt, DataTypes::parse("8:8:32:8").unwrap());
+        let Request::Sweep { spec, .. } =
+            decode_line(r#"{"cmd":"sweep","bits":["8:8:8:8","8:8:32:8"]}"#).unwrap()
+        else {
+            panic!("not a sweep request");
+        };
+        assert_eq!(spec.datatypes.len(), 2);
+        let Request::Explore { spec, .. } =
+            decode_line(r#"{"cmd":"explore","bits":"8:8:32:8"}"#).unwrap()
+        else {
+            panic!("not an explore request");
+        };
+        assert!(!spec.datatypes.is_default());
+        // bad precisions fail loudly on every shape
+        assert!(decode_line(r#"{"cmd":"sweep","bits":"8:8"}"#).is_err());
+        assert!(decode_line(r#"{"cmd":"explore","bits":["8:8:32:8"]}"#).is_err());
+        assert!(decode_line(r#"{"cmd":"analyze","network":"AlexNet","bits":4}"#).is_err());
+
+        // encode: the bits key appears only for non-default precisions
+        let req = decode_line(r#"{"cmd":"sweep","networks":["AlexNet"]}"#).unwrap();
+        assert!(encode_request(&req).get("bits").is_none());
+        let req = decode_line(r#"{"cmd":"sweep","networks":["AlexNet"],"bits":"8:8:32:8"}"#)
+            .unwrap();
+        let enc = encode_request(&req);
+        assert_eq!(enc.get("bits").unwrap().as_arr().unwrap().len(), 1);
+        // decode(encode(r)) is stable for the precision-carrying shapes
+        let again = decode_request(&enc).unwrap();
+        assert_eq!(encode_request(&again).to_string(), enc.to_string());
+
+        // a multi-entry all-default axis changes the cell count, so the
+        // encoder must keep it (length matters, not just the widths)
+        let req = decode_line(
+            r#"{"cmd":"sweep","networks":["AlexNet"],"bits":["8:8:8:8","8:8:8:8"]}"#,
+        )
+        .unwrap();
+        let enc = encode_request(&req);
+        assert_eq!(enc.get("bits").unwrap().as_arr().unwrap().len(), 2);
+        let Request::Sweep { spec, .. } = decode_request(&enc).unwrap() else {
+            panic!("not a sweep request");
+        };
+        assert_eq!(spec.datatypes.len(), 2);
     }
 
     #[test]

@@ -226,7 +226,7 @@ impl Engine {
                 let result = dse_explore::explore(&self.grid, spec, workers);
                 Ok(Response::Explore { result })
             }
-            Request::Fusion { networks, depth, p_macs, strategy, mode } => {
+            Request::Fusion { networks, depth, p_macs, strategy, mode, dt } => {
                 if networks.is_empty() {
                     return Err(ApiError::bad_msg("fusion request has no networks"));
                 }
@@ -236,23 +236,30 @@ impl Engine {
                 if *p_macs == 0 {
                     return Err(ApiError::bad_msg("MAC budget must be > 0"));
                 }
-                let table = report_fusion::fusion_table(
+                let table = report_fusion::fusion_table_dt(
                     &self.grid,
                     networks,
                     *depth,
                     *p_macs,
                     *strategy,
                     *mode,
+                    dt,
                 );
                 let note = report_fusion::summarize(networks.len(), *depth, *p_macs);
                 Ok(Response::Table { table, note })
             }
-            Request::Analyze { network, p_macs, strategy, mode } => {
+            Request::Analyze { network, p_macs, strategy, mode, dt } => {
                 if *p_macs == 0 {
                     return Err(ApiError::bad_msg("MAC budget must be > 0"));
                 }
-                let (table, note) =
-                    report_analyze::analyze_table(&self.grid, network, *p_macs, *strategy, *mode);
+                let (table, note) = report_analyze::analyze_table_dt(
+                    &self.grid,
+                    network,
+                    *p_macs,
+                    *strategy,
+                    *mode,
+                    dt,
+                );
                 Ok(Response::Table { table, note })
             }
             Request::Tables { table, faithful } => {

@@ -43,11 +43,14 @@ impl ErrorCode {
 /// A dispatch failure: stable `code`, byte-compatible `message`.
 #[derive(Clone, Debug)]
 pub struct ApiError {
+    /// Stable machine-readable error class.
     pub code: ErrorCode,
+    /// Human-facing message (byte-compatible with legacy replies).
     pub message: String,
 }
 
 impl ApiError {
+    /// An error with an explicit code.
     pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
         ApiError { code, message: message.into() }
     }
@@ -58,14 +61,17 @@ impl ApiError {
         ApiError::new(ErrorCode::BadRequest, format!("{err:#}"))
     }
 
+    /// A `bad_request` with a literal message.
     pub fn bad_msg(message: impl Into<String>) -> ApiError {
         ApiError::new(ErrorCode::BadRequest, message)
     }
 
+    /// A `too_large` rejection (request-size cap).
     pub fn too_large(message: impl Into<String>) -> ApiError {
         ApiError::new(ErrorCode::TooLarge, message)
     }
 
+    /// An `internal` failure carrying an `anyhow` chain.
     pub fn internal(err: anyhow::Error) -> ApiError {
         ApiError::new(ErrorCode::Internal, format!("{err:#}"))
     }

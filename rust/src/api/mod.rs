@@ -51,6 +51,29 @@
 //!     std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md")).unwrap();
 //! assert!(readme.contains(&psim::api::protocol_table()), "README protocol table is stale");
 //! ```
+//!
+//! `docs/PROTOCOL.md` is the full wire reference: the same generated
+//! table plus one example per command lifted verbatim from the pinned
+//! fixtures in `rust/tests/golden/protocol/`. This doc-test pins the
+//! document against both, so it can drift from neither the enum nor the
+//! fixtures:
+//!
+//! ```
+//! let root = concat!(env!("CARGO_MANIFEST_DIR"), "/..");
+//! let doc = std::fs::read_to_string(format!("{root}/docs/PROTOCOL.md"))
+//!     .expect("docs/PROTOCOL.md exists");
+//! assert!(doc.contains(&psim::api::protocol_table()), "PROTOCOL.md table is stale");
+//! for cmd in psim::api::COMMANDS.iter().map(|c| c.cmd) {
+//!     assert!(doc.contains(&format!("### `{cmd}`")), "PROTOCOL.md missing section for {cmd}");
+//!     let fixture = std::fs::read_to_string(
+//!         format!("{root}/rust/tests/golden/protocol/{cmd}.txt"),
+//!     )
+//!     .unwrap_or_else(|_| panic!("fixture for {cmd}"));
+//!     for line in fixture.lines() {
+//!         assert!(doc.contains(line), "PROTOCOL.md {cmd} example drifted from its fixture");
+//!     }
+//! }
+//! ```
 
 pub mod codec;
 pub mod engine;

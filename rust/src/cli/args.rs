@@ -8,6 +8,7 @@ use anyhow::{bail, Result};
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// The subcommand name (first positional token).
     pub command: String,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -16,6 +17,7 @@ pub struct Args {
 }
 
 impl Args {
+    /// Parse `command [--key value|--key=value|--flag]...`.
     pub fn parse(argv: &[String]) -> Result<Args> {
         let mut args =
             Args { command: argv.first().cloned().unwrap_or_default(), ..Default::default() };
@@ -43,11 +45,13 @@ impl Args {
         Ok(args)
     }
 
+    /// Value of option `--key`, if present.
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.consumed.borrow_mut().push(key.to_string());
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Integer value of option `--key`, if present.
     pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
         match self.opt(key) {
             None => Ok(None),
@@ -74,6 +78,7 @@ impl Args {
         }
     }
 
+    /// Whether bare flag `--key` was given.
     pub fn flag(&self, key: &str) -> bool {
         self.consumed.borrow_mut().push(key.to_string());
         self.flags.iter().any(|f| f == key)

@@ -21,6 +21,13 @@ pub(crate) fn strategy_from(args: &Args) -> Result<Strategy> {
         .map(|s| s.unwrap_or(Strategy::Optimal))
 }
 
+/// Shared `--bits` parsing (single precision), alongside
+/// `mode_from`/`strategy_from` so every subcommand accepts the same
+/// spellings. `None` when the flag is absent.
+pub(crate) fn opt_bits_from(args: &Args) -> Result<Option<crate::models::DataTypes>> {
+    args.opt("bits").map(crate::models::DataTypes::parse).transpose()
+}
+
 /// `psim networks` — the zoo at a glance.
 pub fn networks(args: &Args) -> Result<i32> {
     let faithful = args.flag("faithful");
@@ -45,12 +52,14 @@ pub fn networks(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `psim analyze --network NAME --macs P [--strategy S] [--mode M]`.
+/// `psim analyze --network NAME --macs P [--strategy S] [--mode M]
+/// [--bits 8:8:32:8]`.
 pub fn analyze(args: &Args) -> Result<i32> {
     let name = args.opt("network").ok_or_else(|| anyhow!("--network is required"))?.to_string();
     let p_macs = args.opt_usize("macs")?.unwrap_or(2048);
     let mode = mode_from(args)?;
     let strategy = strategy_from(args)?;
+    let dt = opt_bits_from(args)?.unwrap_or_default();
     let csv = args.flag("csv");
     args.reject_unknown()?;
 
@@ -59,7 +68,7 @@ pub fn analyze(args: &Args) -> Result<i32> {
     // Same facade as `serve` and library callers; the per-layer table is
     // rendered by `report::analyze` from the engine's memoized evaluator.
     let engine = Engine::analytics();
-    let resp = engine.dispatch(&Request::Analyze { network: net, p_macs, strategy, mode })?;
+    let resp = engine.dispatch(&Request::Analyze { network: net, p_macs, strategy, mode, dt })?;
     let Response::Table { table, note } = resp else {
         unreachable!("analyze dispatch always returns a table response")
     };

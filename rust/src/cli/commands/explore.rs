@@ -31,8 +31,13 @@ fn max_chain_len(networks: &[crate::models::Network]) -> usize {
 
 /// `psim explore [--networks a,b]
 /// [--constraints macs=512:2048,sram=64k:unlimited,strategies=optimal,modes=active]
-/// [--objectives bandwidth,energy] [--fusion [D]] [--workers N]
-/// [--out FILE] [--table] [--faithful]`
+/// [--objectives bandwidth,energy] [--fusion [D]] [--bits 8:8:32:8]
+/// [--workers N] [--out FILE] [--table] [--faithful]`
+///
+/// `--bits` prices the exploration under a per-tensor precision
+/// (`ifmap:weight:psum:ofmap` bits); pair it with
+/// `--objectives bandwidth-bytes,...` to put byte traffic on the
+/// frontier.
 ///
 /// `--fusion` adds the inter-layer fusion axis: bare, it explores depths
 /// 1–2; with a value `D`, depths 1..=D (so fused and unfused candidates
@@ -74,6 +79,9 @@ pub fn explore(args: &Args) -> Result<i32> {
     }
     if let Some(list) = args.opt("objectives") {
         spec.objectives = parse_objectives(list)?;
+    }
+    if let Some(dt) = super::analyze::opt_bits_from(args)? {
+        spec.datatypes = dt;
     }
     let workers = effective_workers(args.opt_usize("workers")?);
     let out = args.opt("out").map(std::path::PathBuf::from);

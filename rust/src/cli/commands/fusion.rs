@@ -14,7 +14,7 @@ use crate::models::zoo;
 use super::sweep::resolve_network;
 
 /// `psim fusion [--networks a,b] [--depth N] [--macs P] [--strategy S]
-/// [--mode passive|active] [--csv] [--faithful]`
+/// [--mode passive|active] [--bits 8:8:32:8] [--csv] [--faithful]`
 ///
 /// Renders the fused-vs-unfused comparison: chains of up to `--depth`
 /// consecutive layers keep intermediates on chip; the table shows each
@@ -44,12 +44,13 @@ pub fn fusion(args: &Args) -> Result<i32> {
         Some(m) => parse_mode(m)?,
         None => ControllerMode::Passive,
     };
+    let dt = super::analyze::opt_bits_from(args)?.unwrap_or_default();
     let csv = args.flag("csv");
     args.reject_unknown()?;
 
     let engine = Engine::analytics();
     let resp =
-        engine.dispatch(&Request::Fusion { networks, depth, p_macs, strategy, mode })?;
+        engine.dispatch(&Request::Fusion { networks, depth, p_macs, strategy, mode, dt })?;
     let Response::Table { table, note } = resp else {
         unreachable!("fusion dispatch always returns a table response")
     };

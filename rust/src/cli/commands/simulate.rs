@@ -18,7 +18,11 @@ use crate::util::tablefmt::{mact, pct, Table};
 use super::analyze::{mode_from, strategy_from};
 
 /// `psim simulate --network NAME [--macs P] [--mode M] [--strategy S]
-/// [--config FILE] [--trace]`
+/// [--bits 8:8:32:8] [--config FILE] [--trace]`
+///
+/// `--bits` prices each region (ifmap/weight/psum/ofmap) at its own
+/// width on the bus, the SRAM banks and the energy model, and reports
+/// the byte traffic next to the element counts.
 pub fn simulate(args: &Args) -> Result<i32> {
     let name = args.opt("network").ok_or_else(|| anyhow!("--network is required"))?.to_string();
     let mut accel = match args.opt("config") {
@@ -34,12 +38,16 @@ pub fn simulate(args: &Args) -> Result<i32> {
     if args.opt("strategy").is_some() {
         accel.strategy = strategy_from(args)?;
     }
+    let dt = super::analyze::opt_bits_from(args)?;
     let trace = args.flag("trace");
     args.reject_unknown()?;
 
     let net = zoo::by_name(&name)
         .ok_or_else(|| anyhow!("unknown network '{name}' — see `psim networks`"))?;
     let mut cfg = accel.sim_config();
+    if let Some(dt) = &dt {
+        cfg.bus.region_bits = Some(crate::sim::interconnect::RegionBits::from_datatypes(dt));
+    }
     if trace {
         cfg.trace_cap = 64;
     }
@@ -72,6 +80,13 @@ pub fn simulate(args: &Args) -> Result<i32> {
         "  psum reads (ctrl): {} M  <- absorbed by the active controller",
         mact(s.internal_psum_reads as f64, 3)
     );
+    if let Some(dt) = &dt {
+        println!(
+            "activation bytes   : {} MB on the wire (bits {})",
+            mact(s.activation_bytes(dt), 3),
+            dt.label()
+        );
+    }
     println!("weight reads       : {} M", mact(s.weight_reads as f64, 3));
     println!(
         "bus                : {} beats, {} bursts, {} sideband words",

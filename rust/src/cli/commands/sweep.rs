@@ -29,7 +29,14 @@ pub(crate) fn resolve_network(name: &str, faithful: bool) -> Result<Network> {
 
 /// `psim sweep [--networks a,b] [--macs 512,...] [--strategies s1,s2]
 /// [--modes passive,active] [--batches 1,8] [--fusion-depth 1,2]
-/// [--workers N] [--filter SUBSTR] [--out FILE] [--faithful]`
+/// [--bits 8:8:32:8,...] [--workers N] [--filter SUBSTR] [--out FILE]
+/// [--faithful]`
+///
+/// `--bits` adds a per-tensor precision axis
+/// (`ifmap:weight:psum:ofmap` bits, comma-separated for several, presets
+/// `int8`/`fp16`); non-default precisions add byte-weighted keys to each
+/// record and re-derive `optimal`/`search` partitions under byte
+/// weighting (see `docs/MODEL.md`).
 ///
 /// Emits one JSON object per grid cell (JSONL) on stdout (or `--out`),
 /// byte-identical for any `--workers` value; a run summary goes to stderr
@@ -65,6 +72,12 @@ pub fn sweep(args: &Args) -> Result<i32> {
     }
     if let Some(depths) = args.opt_usize_list("fusion-depth")? {
         spec.fusion_depths = depths;
+    }
+    if let Some(list) = args.opt("bits") {
+        spec.datatypes = list
+            .split(',')
+            .map(crate::models::DataTypes::parse)
+            .collect::<Result<Vec<_>>>()?;
     }
     let workers = effective_workers(args.opt_usize("workers")?);
     let filter = args.opt("filter").map(|f| f.to_ascii_lowercase());

@@ -37,6 +37,7 @@ fn run_table(table: TableKind, faithful: bool, csv: bool) -> Result<i32> {
     Ok(0)
 }
 
+/// `psim table1 [--csv] [--faithful]` — paper Table I.
 pub fn table1(args: &Args) -> Result<i32> {
     let csv = args.flag("csv");
     let faithful = faithful_note(args);
@@ -44,6 +45,7 @@ pub fn table1(args: &Args) -> Result<i32> {
     run_table(TableKind::Table1, faithful, csv)
 }
 
+/// `psim table2 [--csv] [--faithful]` — paper Table II.
 pub fn table2(args: &Args) -> Result<i32> {
     let csv = args.flag("csv");
     let faithful = faithful_note(args);
@@ -51,6 +53,7 @@ pub fn table2(args: &Args) -> Result<i32> {
     run_table(TableKind::Table2, faithful, csv)
 }
 
+/// `psim table3 [--csv] [--faithful]` — paper Table III.
 pub fn table3(args: &Args) -> Result<i32> {
     let csv = args.flag("csv");
     let faithful = faithful_note(args);
@@ -58,6 +61,7 @@ pub fn table3(args: &Args) -> Result<i32> {
     run_table(TableKind::Table3, faithful, csv)
 }
 
+/// `psim fig2 [--csv] [--ascii]` — paper Fig. 2.
 pub fn fig2(args: &Args) -> Result<i32> {
     let csv = args.flag("csv");
     let ascii = args.flag("ascii");
@@ -65,6 +69,7 @@ pub fn fig2(args: &Args) -> Result<i32> {
     run_table(if ascii { TableKind::Fig2Ascii } else { TableKind::Fig2 }, false, csv)
 }
 
+/// `psim validate [--full] [--csv]` — compare every cell against the paper.
 pub fn validate(args: &Args) -> Result<i32> {
     let full = args.flag("full");
     let csv = args.flag("csv");

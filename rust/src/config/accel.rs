@@ -12,11 +12,17 @@ use super::parser::ConfigDoc;
 /// Accelerator-under-test knobs (the `[accelerator]` section).
 #[derive(Clone, Debug)]
 pub struct AccelConfig {
+    /// MAC budget `P`.
     pub p_macs: usize,
+    /// SRAM banks (power of two).
     pub banks: usize,
+    /// Interconnect data-bus width, bytes per beat.
     pub bus_bytes: usize,
+    /// Uniform element size on the bus, bytes.
     pub elem_bytes: usize,
+    /// Memory-controller capability.
     pub mode: ControllerMode,
+    /// Partitioning strategy.
     pub strategy: Strategy,
 }
 
@@ -89,6 +95,7 @@ impl AccelConfig {
         Ok(cfg)
     }
 
+    /// Reject impossible configurations.
     pub fn validate(&self) -> Result<()> {
         if self.p_macs == 0 {
             bail!("p_macs must be > 0");

@@ -8,9 +8,13 @@ use std::fmt;
 /// A parsed scalar value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true`/`false`.
     Bool(bool),
+    /// A quoted string.
     Str(String),
 }
 
@@ -28,7 +32,9 @@ impl fmt::Display for Value {
 /// Parse error with line number.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ConfigError {
+    /// 1-based line number.
     pub line: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -111,10 +117,12 @@ impl ConfigDoc {
         None
     }
 
+    /// Raw value lookup.
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.values.get(&(section.to_string(), key.to_string()))
     }
 
+    /// Non-negative integer lookup.
     pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
         match self.get(section, key)? {
             Value::Int(i) if *i >= 0 => Some(*i as usize),
@@ -122,6 +130,7 @@ impl ConfigDoc {
         }
     }
 
+    /// Float lookup (integers widen).
     pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
         match self.get(section, key)? {
             Value::Float(f) => Some(*f),
@@ -130,6 +139,7 @@ impl ConfigDoc {
         }
     }
 
+    /// Boolean lookup.
     pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
         match self.get(section, key)? {
             Value::Bool(b) => Some(*b),
@@ -137,6 +147,7 @@ impl ConfigDoc {
         }
     }
 
+    /// String lookup.
     pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
         match self.get(section, key)? {
             Value::Str(s) => Some(s),

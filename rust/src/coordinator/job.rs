@@ -8,7 +8,9 @@ use crate::runtime::Tensor;
 /// A single inference request (one image).
 #[derive(Debug)]
 pub struct InferRequest {
+    /// Request id (unique per service).
     pub id: u64,
+    /// The input image tensor.
     pub image: Tensor,
     /// Where the engine delivers the response.
     pub reply: Sender<InferResponse>,
@@ -19,6 +21,7 @@ pub struct InferRequest {
 /// The engine's answer.
 #[derive(Clone, Debug)]
 pub struct InferResponse {
+    /// The request id this answers.
     pub id: u64,
     /// Class logits (len = 10 for PsimNet).
     pub logits: Vec<f32>,

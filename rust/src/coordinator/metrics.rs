@@ -14,29 +14,38 @@ const BUCKETS_US: [u64; 16] = [
 /// Shared metrics sink.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Requests accepted.
     pub requests: AtomicU64,
+    /// Responses delivered.
     pub responses: AtomicU64,
+    /// Batches executed.
     pub batches: AtomicU64,
+    /// Requests that rode in batches.
     pub batched_requests: AtomicU64,
+    /// Execution failures.
     pub exec_errors: AtomicU64,
     latency_buckets: [AtomicU64; 16],
     latency_sum_us: AtomicU64,
 }
 
 impl Metrics {
+    /// A zeroed metrics sink.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Count one accepted request.
     pub fn record_request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one executed batch of `size` requests.
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// Count one delivered response and bucket its latency.
     pub fn record_response(&self, latency_us: u64) {
         self.responses.fetch_add(1, Ordering::Relaxed);
         self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
@@ -44,6 +53,7 @@ impl Metrics {
         self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one execution failure.
     pub fn record_error(&self) {
         self.exec_errors.fetch_add(1, Ordering::Relaxed);
     }

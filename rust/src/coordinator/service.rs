@@ -19,7 +19,9 @@ use crate::runtime::{ArtifactDir, Tensor};
 /// Service construction parameters.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
+    /// Largest batch the engine executes.
     pub max_batch: usize,
+    /// Longest a request waits for batchmates.
     pub max_wait: Duration,
     /// Seed for the synthetic model weights.
     pub weight_seed: u64,
@@ -37,6 +39,7 @@ pub struct InferenceService {
     batcher: Option<JoinHandle<()>>,
     engine: Option<JoinHandle<()>>,
     next_id: AtomicU64,
+    /// Shared serving metrics (exported via `{"cmd":"metrics"}`).
     pub metrics: Arc<Metrics>,
 }
 

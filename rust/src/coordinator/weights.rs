@@ -11,7 +11,9 @@ use crate::runtime::{ArtifactDir, Tensor};
 /// PsimNet parameter set, in artifact input order (after the image).
 #[derive(Clone, Debug)]
 pub struct PsimNetWeights {
+    /// Parameter tensors, in artifact input order.
     pub tensors: Vec<Tensor>,
+    /// The seed the parameters were derived from.
     pub seed: u64,
 }
 

@@ -21,7 +21,7 @@
 
 use crate::analytics::grid::GridEngine;
 use crate::coordinator::parallel::parallel_map;
-use crate::models::Network;
+use crate::models::{DataTypes, Network};
 use crate::sim::interconnect::BusConfig;
 use crate::util::json::Json;
 
@@ -44,16 +44,21 @@ const CHUNK: usize = 16;
 pub struct FrontierPoint {
     /// Network name, or [`ZOO_SCOPE`] for the whole-zoo aggregate.
     pub scope: String,
+    /// The winning hardware/policy candidate.
     pub point: DesignPoint,
+    /// Its objective vector.
     pub objectives: Objectives,
+    /// The precision the exploration was priced under.
+    pub dt: DataTypes,
 }
 
 impl FrontierPoint {
     /// Stable JSONL record. Every number is integer-valued (energy in
     /// whole picojoules, utilization in parts-per-million), so the bytes
     /// are platform- and worker-count-independent. The `fusion` key
-    /// appears only on fused points (depth > 1), keeping unfused
-    /// frontiers byte-identical to the pre-fusion format.
+    /// appears only on fused points (depth > 1) and the `bits`/
+    /// `bandwidth_bytes` keys only under a non-default precision,
+    /// keeping default frontiers byte-identical to earlier formats.
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("network", Json::Str(self.scope.clone())),
@@ -69,6 +74,10 @@ impl FrontierPoint {
         if self.point.fusion > 1 {
             pairs.push(("fusion", Json::Num(self.point.fusion as f64)));
         }
+        if !self.dt.is_default() {
+            pairs.push(("bits", Json::Str(self.dt.label())));
+            pairs.push(("bandwidth_bytes", Json::Num(self.objectives.bandwidth_bytes)));
+        }
         Json::obj(pairs)
     }
 }
@@ -77,7 +86,9 @@ impl FrontierPoint {
 /// by an exactly-evaluated design.
 #[derive(Clone, Debug)]
 pub struct PrunedPoint {
+    /// Network name, or [`ZOO_SCOPE`].
     pub scope: String,
+    /// The candidate that was skipped.
     pub point: DesignPoint,
 }
 
@@ -125,7 +136,13 @@ impl ExploreResult {
 /// validate first, so an invalid spec here is a programming error.
 pub fn explore(engine: &GridEngine, spec: &ExploreSpec, workers: usize) -> ExploreResult {
     spec.validate().expect("invalid explore spec");
-    let bus = BusConfig::default();
+    // The default precision keeps the legacy uniform-elem_bytes bus so
+    // pinned frontiers stay byte-identical; a non-default precision
+    // prices each region at its own width (and the same `dt` selects
+    // byte-weighted partitions inside scope_stats).
+    let dt = spec.datatypes;
+    let bus =
+        if dt.is_default() { BusConfig::default() } else { BusConfig::with_datatypes(&dt) };
     let points = spec.points();
     let workers = workers.max(1);
 
@@ -145,7 +162,7 @@ pub fn explore(engine: &GridEngine, spec: &ExploreSpec, workers: usize) -> Explo
     }
     let bounds: Vec<Objectives> = parallel_map(&bound_jobs, workers, |&(si, pi)| {
         let stats = scope_bound_stats(engine, &scopes[si].1, &points[pi], &bus);
-        Objectives::from_stats(&stats, points[pi].p_macs)
+        Objectives::from_stats_dt(&stats, points[pi].p_macs, &dt)
     });
 
     // Phase 2: chunked exact evaluation with archive-based pruning.
@@ -175,7 +192,7 @@ pub fn explore(engine: &GridEngine, spec: &ExploreSpec, workers: usize) -> Explo
                     return Some(bounds[si * points.len() + pi]);
                 }
                 scope_stats(engine, nets, &points[pi], &bus)
-                    .map(|s| Objectives::from_stats(&s, points[pi].p_macs))
+                    .map(|s| Objectives::from_stats_dt(&s, points[pi].p_macs, &dt))
             });
             for (pi, exact) in survivors.iter().zip(&exacts) {
                 evaluated += 1;
@@ -192,6 +209,7 @@ pub fn explore(engine: &GridEngine, spec: &ExploreSpec, workers: usize) -> Explo
                 scope: scope_name.clone(),
                 point: points[pi],
                 objectives: o,
+                dt,
             });
         }
     }
@@ -290,6 +308,70 @@ mod tests {
         let one = explore(&GridEngine::new(), &spec, 1);
         let four = explore(&GridEngine::new(), &spec, 4);
         assert_eq!(one.to_jsonl(), four.to_jsonl());
+    }
+
+    #[test]
+    fn bytes_objective_and_bits_tag_the_frontier() {
+        use crate::dse::pareto::Objective;
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        let spec = ExploreSpec::new(vec![zoo::alexnet()])
+            .with_macs(vec![1024])
+            .with_sram(vec![SramBudget::Unlimited])
+            .with_strategies(vec![Strategy::MaxInput])
+            .with_datatypes(dt)
+            .with_objectives(vec![Objective::BandwidthBytes, Objective::Utilization]);
+        let result = explore(&GridEngine::new(), &spec, 1);
+        assert!(!result.frontier.is_empty());
+        for fp in &result.frontier {
+            let j = fp.to_json();
+            assert_eq!(j.get("bits").unwrap().as_str(), Some("8:8:32:8"));
+            let bytes = j.get("bandwidth_bytes").unwrap().as_f64().unwrap();
+            let elems = j.get("bandwidth").unwrap().as_f64().unwrap();
+            assert!(bytes > elems, "32-bit psums must cost more bytes than elements");
+        }
+        // fixed partition (MaxInput is mode-agnostic): the active
+        // controller's byte saving dominates, so only 'active' survives
+        // the bytes objective.
+        let modes: Vec<&str> = result.frontier.iter().map(|f| f.point.mode.label()).collect();
+        assert_eq!(modes, vec!["active"]);
+        // default precision leaves the keys off
+        let plain = explore(&GridEngine::new(), &ExploreSpec::new(vec![zoo::alexnet()]), 1);
+        assert!(plain.frontier.iter().all(|f| f.to_json().get("bits").is_none()));
+        // worker-count independence holds under a non-default precision
+        let one = explore(&GridEngine::new(), &spec, 1);
+        let four = explore(&GridEngine::new(), &spec, 4);
+        assert_eq!(one.to_jsonl(), four.to_jsonl());
+    }
+
+    #[test]
+    fn byte_bound_stays_admissible_under_wide_psums() {
+        // The pruning bound must remain component-wise <= the exact
+        // vector when regions are priced at their own widths.
+        use crate::dse::metrics::{scope_bound_stats, scope_stats};
+        use crate::sim::interconnect::BusConfig;
+        let net = zoo::alexnet();
+        let engine = GridEngine::new();
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        let bus = BusConfig::with_datatypes(&dt);
+        for fusion in [1usize, 2] {
+            for mode in crate::analytics::bandwidth::ControllerMode::ALL {
+                let point = crate::dse::space::DesignPoint {
+                    p_macs: 1024,
+                    sram: SramBudget::Elems(1 << 16),
+                    strategy: Strategy::Optimal,
+                    mode,
+                    fusion,
+                };
+                let bound = scope_bound_stats(&engine, &[&net], &point, &bus);
+                let Some(exact) = scope_stats(&engine, &[&net], &point, &bus) else {
+                    continue;
+                };
+                assert!(bound.activation_bytes(&dt) <= exact.activation_bytes(&dt));
+                assert!(bound.bus_beats <= exact.bus_beats);
+                assert!(bound.energy_pj <= exact.energy_pj);
+                assert_eq!(bound.macs, exact.macs);
+            }
+        }
     }
 
     #[test]

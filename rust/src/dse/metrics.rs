@@ -63,6 +63,14 @@ pub fn layer_stats(
     let wo_ho = (wo * ho) as u64;
     let halo_rows = rows_per_pass(layer, t).saturating_sub(layer.hi) as u64;
 
+    // Per-region element widths (None = the uniform elem_bytes pricing),
+    // mirroring the scheduler's beat accounting exactly.
+    let rb = bus.region_bits;
+    let input_bits = rb.map(|r| r.input);
+    let weight_bits = rb.map(|r| r.weight);
+    let psum_bits = rb.map(|r| r.psum);
+    let ofmap_bits = rb.map(|r| r.ofmap);
+
     let mut s = SimStats::default();
 
     // Input tiles: one burst of `m_eff` full planes per (co, ci), plus
@@ -71,13 +79,13 @@ pub fn layer_stats(
         let occ = count * co_blocks as u64;
         let elems = wi_hi * me;
         s.input_reads += occ * elems;
-        s.bus_beats += occ * Interconnect::beats(bus, elems);
-        s.bus_transactions += occ * Interconnect::bursts(bus, elems);
+        s.bus_beats += occ * Interconnect::beats_wide(bus, elems, input_bits);
+        s.bus_transactions += occ * Interconnect::bursts_wide(bus, elems, input_bits);
         if halo_rows > 0 {
             let halo = layer.wi as u64 * halo_rows * me;
             s.input_reads += occ * halo;
-            s.bus_beats += occ * Interconnect::beats(bus, halo);
-            s.bus_transactions += occ * Interconnect::bursts(bus, halo);
+            s.bus_beats += occ * Interconnect::beats_wide(bus, halo, input_bits);
+            s.bus_transactions += occ * Interconnect::bursts_wide(bus, halo, input_bits);
         }
     }
 
@@ -87,33 +95,39 @@ pub fn layer_stats(
             let occ = cn * cm;
             let elems = ne * me * k2;
             s.weight_reads += occ * elems;
-            s.bus_beats += occ * Interconnect::beats(bus, elems);
-            s.bus_transactions += occ * Interconnect::bursts(bus, elems);
+            s.bus_beats += occ * Interconnect::beats_wide(bus, elems, weight_bits);
+            s.bus_transactions += occ * Interconnect::bursts_wide(bus, elems, weight_bits);
         }
     }
 
     // Psum protocol per co block: an Init write, then per later ci pass
     // either a bus read + write (passive) or one Add/AddRelu write whose
-    // read stays inside the controller (active).
+    // read stays inside the controller (active). The final write of each
+    // chain carries the quantized ofmap (ofmap width); all other
+    // crossings are psum width.
     for &(ne, cn) in &n_blocks {
         let elems = wo_ho * ne;
-        let wbeats = Interconnect::beats(bus, elems);
-        let wbursts = Interconnect::bursts(bus, elems);
+        let pbeats = Interconnect::beats_wide(bus, elems, psum_bits);
+        let pbursts = Interconnect::bursts_wide(bus, elems, psum_bits);
+        let obeats = Interconnect::beats_wide(bus, elems, ofmap_bits);
+        let obursts = Interconnect::bursts_wide(bus, elems, ofmap_bits);
         let later = (ci_blocks - 1) as u64;
         s.psum_writes += cn * ci_blocks as u64 * elems;
-        s.bus_beats += cn * ci_blocks as u64 * wbeats;
-        s.bus_transactions += cn * ci_blocks as u64 * wbursts;
+        s.ofmap_writes += cn * elems;
+        s.bus_beats += cn * (later * pbeats + obeats);
+        s.bus_transactions += cn * (later * pbursts + obursts);
         match mode {
             ControllerMode::Passive => {
-                // Only the Init write carries a sideband command.
-                s.sideband_words += cn * wbursts;
+                // Only the Init write carries a sideband command (it is
+                // the final, ofmap-width write when one pass suffices).
+                s.sideband_words += cn * if ci_blocks == 1 { obursts } else { pbursts };
                 s.psum_reads += cn * later * elems;
-                s.bus_beats += cn * later * wbeats;
-                s.bus_transactions += cn * later * wbursts;
+                s.bus_beats += cn * later * pbeats;
+                s.bus_transactions += cn * later * pbursts;
             }
             ControllerMode::Active => {
                 // Every write carries a command (Init, Add or AddRelu).
-                s.sideband_words += cn * ci_blocks as u64 * wbursts;
+                s.sideband_words += cn * (later * pbursts + obursts);
                 s.internal_psum_reads += cn * later * elems;
                 s.controller_adds += cn * later * elems;
                 if ci_blocks > 1 {
@@ -192,6 +206,12 @@ pub fn fused_chain_stats(
     let ho = last.ho();
     let mut s = SimStats::default();
 
+    let rb = bus.region_bits;
+    let input_bits = rb.map(|r| r.input);
+    let weight_bits = rb.map(|r| r.weight);
+    let psum_bits = rb.map(|r| r.psum);
+    let ofmap_bits = rb.map(|r| r.ofmap);
+
     let (m_blocks_1, _) = blocks(first.m_per_group(), parts[0].m);
     let co_1 = ceil_div(first.n_per_group(), parts[0].n) as u64;
     let g1 = first.groups as u64;
@@ -213,8 +233,8 @@ pub fn fused_chain_stats(
             let occ = count * co_1 * g1;
             let elems = first.wi as u64 * in_rows * me;
             s.input_reads += occ * elems;
-            s.bus_beats += occ * Interconnect::beats(bus, elems);
-            s.bus_transactions += occ * Interconnect::bursts(bus, elems);
+            s.bus_beats += occ * Interconnect::beats_wide(bus, elems, input_bits);
+            s.bus_transactions += occ * Interconnect::bursts_wide(bus, elems, input_bits);
         }
 
         // Weight reloads: every stripe sweeps every (co, ci) tile of
@@ -229,33 +249,37 @@ pub fn fused_chain_stats(
                     let occ = cn * cm * gi;
                     let elems = ne * me * k2;
                     s.weight_reads += occ * elems;
-                    s.bus_beats += occ * Interconnect::beats(bus, elems);
-                    s.bus_transactions += occ * Interconnect::bursts(bus, elems);
+                    s.bus_beats += occ * Interconnect::beats_wide(bus, elems, weight_bits);
+                    s.bus_transactions += occ * Interconnect::bursts_wide(bus, elems, weight_bits);
                 }
             }
         }
 
         // Last layer's psum protocol, per stripe (total elements are
-        // stripe-invariant; beats/bursts split per stripe).
+        // stripe-invariant; beats/bursts split per stripe). The final
+        // write per chain is the quantized ofmap stripe.
         let t_eff = (y1 - y0 + 1) as u64;
         for &(ne, cn) in &n_blocks_d {
             let cn = cn * gd;
             let elems = last.wo() as u64 * t_eff * ne;
-            let wbeats = Interconnect::beats(bus, elems);
-            let wbursts = Interconnect::bursts(bus, elems);
+            let pbeats = Interconnect::beats_wide(bus, elems, psum_bits);
+            let pbursts = Interconnect::bursts_wide(bus, elems, psum_bits);
+            let obeats = Interconnect::beats_wide(bus, elems, ofmap_bits);
+            let obursts = Interconnect::bursts_wide(bus, elems, ofmap_bits);
             let later = ci_d - 1;
             s.psum_writes += cn * ci_d * elems;
-            s.bus_beats += cn * ci_d * wbeats;
-            s.bus_transactions += cn * ci_d * wbursts;
+            s.ofmap_writes += cn * elems;
+            s.bus_beats += cn * (later * pbeats + obeats);
+            s.bus_transactions += cn * (later * pbursts + obursts);
             match mode {
                 ControllerMode::Passive => {
-                    s.sideband_words += cn * wbursts;
+                    s.sideband_words += cn * if ci_d == 1 { obursts } else { pbursts };
                     s.psum_reads += cn * later * elems;
-                    s.bus_beats += cn * later * wbeats;
-                    s.bus_transactions += cn * later * wbursts;
+                    s.bus_beats += cn * later * pbeats;
+                    s.bus_transactions += cn * later * pbursts;
                 }
                 ControllerMode::Active => {
-                    s.sideband_words += cn * ci_d * wbursts;
+                    s.sideband_words += cn * (later * pbursts + obursts);
                     s.internal_psum_reads += cn * later * elems;
                     s.controller_adds += cn * later * elems;
                     if ci_d > 1 {
@@ -299,13 +323,17 @@ pub fn scope_stats(
     point: &DesignPoint,
     bus: &BusConfig,
 ) -> Option<SimStats> {
+    // The bus carries the precision: region widths select byte-weighted
+    // partitions (for the optimizing strategies) and width-scaled energy.
+    let dt = bus.region_bits.map(|rb| rb.to_datatypes()).unwrap_or_default();
     let mut total = SimStats::default();
     for net in nets {
         for range in fusion::chains(net, point.fusion) {
             let chain = &net.layers[range];
             if chain.len() == 1 {
                 let layer = &chain[0];
-                let eval = engine.layer_eval(layer, point.p_macs, point.strategy, point.mode);
+                let eval =
+                    engine.layer_eval_dt(layer, point.p_macs, point.strategy, point.mode, &dt);
                 let (m, n) = (eval.partition.m, eval.partition.n);
                 let t = stripe_height(layer, m, n, point.sram)?;
                 total.merge(&layer_stats(layer, m, n, t, point.mode, bus));
@@ -313,7 +341,9 @@ pub fn scope_stats(
                 let parts: Vec<Partition> = chain
                     .iter()
                     .map(|l| {
-                        engine.layer_eval(l, point.p_macs, point.strategy, point.mode).partition
+                        engine
+                            .layer_eval_dt(l, point.p_macs, point.strategy, point.mode, &dt)
+                            .partition
                     })
                     .collect();
                 let t = chain_stripe_height(chain, &parts, point.sram)?;
@@ -321,7 +351,10 @@ pub fn scope_stats(
             }
         }
     }
-    total.energy_pj = EnergyModel::default().energy_pj(&total);
+    total.energy_pj = match &bus.region_bits {
+        Some(rb) => EnergyModel::default().energy_pj_wide(&total, rb),
+        None => EnergyModel::default().energy_pj(&total),
+    };
     Some(total)
 }
 

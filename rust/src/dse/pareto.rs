@@ -7,13 +7,20 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::models::DataTypes;
 use crate::sim::stats::SimStats;
 
 /// One optimization objective.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Objective {
-    /// Activation traffic over the interconnect (minimize).
+    /// Activation traffic over the interconnect, elements (minimize).
     Bandwidth,
+    /// Activation traffic over the interconnect in **bytes** under the
+    /// spec's [`DataTypes`] precision (minimize). Equal to
+    /// [`Objective::Bandwidth`] under the default uniform one-byte
+    /// precision; with wide psums it re-ranks candidates toward designs
+    /// that avoid psum round-trips.
+    BandwidthBytes,
     /// SRAM array accesses, including controller-internal ones (minimize).
     SramAccesses,
     /// Energy estimate from [`crate::sim::energy`] (minimize).
@@ -23,6 +30,9 @@ pub enum Objective {
 }
 
 impl Objective {
+    /// The default objective mask (element bandwidth, SRAM accesses,
+    /// energy, utilization). [`Objective::BandwidthBytes`] is opt-in via
+    /// `--objectives` so default frontiers stay byte-identical.
     pub const ALL: [Objective; 4] = [
         Objective::Bandwidth,
         Objective::SramAccesses,
@@ -30,9 +40,11 @@ impl Objective {
         Objective::Utilization,
     ];
 
+    /// Stable wire/CLI token, accepted back by [`parse_objective`].
     pub fn label(&self) -> &'static str {
         match self {
             Objective::Bandwidth => "bandwidth",
+            Objective::BandwidthBytes => "bandwidth-bytes",
             Objective::SramAccesses => "sram-accesses",
             Objective::Energy => "energy",
             Objective::Utilization => "utilization",
@@ -44,10 +56,14 @@ impl Objective {
 pub fn parse_objective(s: &str) -> Result<Objective> {
     match s.trim().to_ascii_lowercase().replace(['-', '_'], "").as_str() {
         "bandwidth" | "bw" => Ok(Objective::Bandwidth),
+        "bandwidthbytes" | "bytes" | "bwbytes" => Ok(Objective::BandwidthBytes),
         "sramaccesses" | "sram" | "accesses" => Ok(Objective::SramAccesses),
         "energy" => Ok(Objective::Energy),
         "utilization" | "util" | "macutilization" => Ok(Objective::Utilization),
-        other => bail!("unknown objective '{other}' (bandwidth|sram-accesses|energy|utilization)"),
+        other => bail!(
+            "unknown objective '{other}' \
+             (bandwidth|bandwidth-bytes|sram-accesses|energy|utilization)"
+        ),
     }
 }
 
@@ -76,6 +92,9 @@ pub fn parse_objectives(list: &str) -> Result<Vec<Objective>> {
 pub struct Objectives {
     /// Activation traffic over the interconnect (elements).
     pub bandwidth: f64,
+    /// Activation traffic in bytes under the exploration's precision
+    /// (equals `bandwidth` under the default precision).
+    pub bandwidth_bytes: f64,
     /// SRAM array accesses (elements).
     pub sram_accesses: f64,
     /// Energy estimate (picojoules).
@@ -85,10 +104,17 @@ pub struct Objectives {
 }
 
 impl Objectives {
-    /// Derive the vector from simulated-or-derived counters.
+    /// Derive the vector from simulated-or-derived counters at the
+    /// default (uniform one-byte) precision.
     pub fn from_stats(stats: &SimStats, p_macs: usize) -> Objectives {
+        Objectives::from_stats_dt(stats, p_macs, &DataTypes::default())
+    }
+
+    /// Derive the vector from counters, pricing bytes under `dt`.
+    pub fn from_stats_dt(stats: &SimStats, p_macs: usize, dt: &DataTypes) -> Objectives {
         Objectives {
             bandwidth: stats.activation_traffic() as f64,
+            bandwidth_bytes: stats.activation_bytes(dt),
             sram_accesses: stats.sram_accesses as f64,
             energy_pj: stats.energy_pj,
             mac_utilization: stats.mac_utilization(p_macs),
@@ -100,6 +126,7 @@ impl Objectives {
     pub fn min_value(&self, o: Objective) -> f64 {
         match o {
             Objective::Bandwidth => self.bandwidth,
+            Objective::BandwidthBytes => self.bandwidth_bytes,
             Objective::SramAccesses => self.sram_accesses,
             Objective::Energy => self.energy_pj,
             Objective::Utilization => -self.mac_utilization,
@@ -141,7 +168,13 @@ mod tests {
     use super::*;
 
     fn obj(bw: f64, sram: f64, e: f64, util: f64) -> Objectives {
-        Objectives { bandwidth: bw, sram_accesses: sram, energy_pj: e, mac_utilization: util }
+        Objectives {
+            bandwidth: bw,
+            bandwidth_bytes: bw,
+            sram_accesses: sram,
+            energy_pj: e,
+            mac_utilization: util,
+        }
     }
 
     #[test]
@@ -187,10 +220,32 @@ mod tests {
         assert_eq!(parse_objective("BW").unwrap(), Objective::Bandwidth);
         assert_eq!(parse_objective("sram-accesses").unwrap(), Objective::SramAccesses);
         assert_eq!(parse_objective("mac_utilization").unwrap(), Objective::Utilization);
+        assert_eq!(parse_objective("bandwidth-bytes").unwrap(), Objective::BandwidthBytes);
+        assert_eq!(parse_objective("bytes").unwrap(), Objective::BandwidthBytes);
         assert!(parse_objective("latency").is_err());
         let list = parse_objectives("bandwidth, energy,bw").unwrap();
         assert_eq!(list, vec![Objective::Bandwidth, Objective::Energy]);
         assert!(parse_objectives(" , ").is_err());
+        // round-trip every label, including the bytes objective
+        for o in Objective::ALL.iter().chain([Objective::BandwidthBytes].iter()) {
+            assert_eq!(parse_objective(o.label()).unwrap(), *o);
+        }
+    }
+
+    #[test]
+    fn bytes_objective_reranks_under_wide_psums() {
+        use crate::models::DataTypes;
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        // a: fewer elements (psum-heavy); b: fewer bytes (psum-light).
+        // a: 90 elements = 330 bytes; b: 95 elements = 125 bytes.
+        let a = SimStats { input_reads: 10, psum_reads: 40, psum_writes: 40, ..Default::default() };
+        let b = SimStats { input_reads: 85, psum_reads: 5, psum_writes: 5, ..Default::default() };
+        let oa = Objectives::from_stats_dt(&a, 512, &dt);
+        let ob = Objectives::from_stats_dt(&b, 512, &dt);
+        assert!(oa.bandwidth < ob.bandwidth, "a wins in elements");
+        assert!(ob.bandwidth_bytes < oa.bandwidth_bytes, "b wins in bytes");
+        assert!(dominates(&oa, &ob, &[Objective::Bandwidth]));
+        assert!(dominates(&ob, &oa, &[Objective::BandwidthBytes]));
     }
 
     #[test]

@@ -14,7 +14,7 @@ use anyhow::{bail, Result};
 use crate::analytics::bandwidth::ControllerMode;
 use crate::analytics::paper;
 use crate::analytics::partition::Strategy;
-use crate::models::Network;
+use crate::models::{DataTypes, Network};
 use crate::util::json::Json;
 
 use super::budget::{SramBudget, DEFAULT_SRAM_BUDGETS};
@@ -84,6 +84,12 @@ pub struct ExploreSpec {
     pub fusion_depths: Vec<usize>,
     /// Objectives the frontier is computed over (default: all four).
     pub objectives: Vec<Objective>,
+    /// Per-tensor precision the whole exploration is priced under (not an
+    /// axis: one currency per frontier). The default uniform 8-bit keeps
+    /// frontiers byte-identical to the element model; wide psums shift
+    /// byte-optimal partitions and enable the `bandwidth-bytes`
+    /// objective's re-ranking.
+    pub datatypes: DataTypes,
 }
 
 impl ExploreSpec {
@@ -99,6 +105,7 @@ impl ExploreSpec {
             modes: ControllerMode::ALL.to_vec(),
             fusion_depths: vec![1],
             objectives: Objective::ALL.to_vec(),
+            datatypes: DataTypes::default(),
         }
     }
 
@@ -107,33 +114,46 @@ impl ExploreSpec {
         ExploreSpec::new(crate::models::zoo::paper_networks())
     }
 
+    /// Replace the MAC-budget axis.
     pub fn with_macs(mut self, macs: Vec<usize>) -> ExploreSpec {
         self.mac_budgets = macs;
         self
     }
 
+    /// Replace the SRAM-capacity axis.
     pub fn with_sram(mut self, sram: Vec<SramBudget>) -> ExploreSpec {
         self.sram_budgets = sram;
         self
     }
 
+    /// Replace the strategy axis.
     pub fn with_strategies(mut self, strategies: Vec<Strategy>) -> ExploreSpec {
         self.strategies = strategies;
         self
     }
 
+    /// Replace the controller-mode axis.
     pub fn with_modes(mut self, modes: Vec<ControllerMode>) -> ExploreSpec {
         self.modes = modes;
         self
     }
 
+    /// Replace the objective mask.
     pub fn with_objectives(mut self, objectives: Vec<Objective>) -> ExploreSpec {
         self.objectives = objectives;
         self
     }
 
+    /// Replace the fusion-depth axis.
     pub fn with_fusion(mut self, fusion_depths: Vec<usize>) -> ExploreSpec {
         self.fusion_depths = fusion_depths;
+        self
+    }
+
+    /// Set the pricing precision (`--bits` on the CLI, `bits` on the
+    /// wire).
+    pub fn with_datatypes(mut self, datatypes: DataTypes) -> ExploreSpec {
+        self.datatypes = datatypes;
         self
     }
 
@@ -212,11 +232,13 @@ impl ExploreSpec {
     ///
     /// Axis keys: `networks` (names), `macs`, `sram` (element counts or
     /// strings like `"64k"`/`"unlimited"`), `strategies`, `modes`,
-    /// `fusion` (a depth or an array of depths), `objectives` (plus the
-    /// protocol's `cmd`, `workers` and `protocol`).
+    /// `fusion` (a depth or an array of depths), `objectives`, `bits` (a
+    /// single `"ifmap:weight:psum:ofmap"` precision string — one pricing
+    /// currency per frontier, plus the protocol's `cmd`, `workers` and
+    /// `protocol`).
     pub fn from_json(msg: &Json) -> Result<ExploreSpec> {
         use crate::api::codec;
-        const KNOWN: [&str; 10] = [
+        const KNOWN: [&str; 11] = [
             "cmd",
             "networks",
             "macs",
@@ -225,6 +247,7 @@ impl ExploreSpec {
             "modes",
             "fusion",
             "objectives",
+            "bits",
             "workers",
             "protocol",
         ];
@@ -250,6 +273,9 @@ impl ExploreSpec {
         }
         if let Some(objs) = msg.get("objectives") {
             spec.objectives = codec::objectives_axis(objs)?;
+        }
+        if let Some(bits) = msg.get("bits") {
+            spec.datatypes = codec::bits_field(bits)?;
         }
         spec.validate()?;
         Ok(spec)
@@ -346,6 +372,20 @@ mod tests {
         assert_eq!(ExploreSpec::from_json(&msg).unwrap().fusion_depths, vec![1, 2]);
         let one = Json::parse(r#"{"cmd":"explore","fusion":3}"#).unwrap();
         assert_eq!(ExploreSpec::from_json(&one).unwrap().fusion_depths, vec![3]);
+    }
+
+    #[test]
+    fn from_json_bits_field() {
+        let msg =
+            Json::parse(r#"{"cmd":"explore","networks":["AlexNet"],"bits":"8:8:32:8"}"#).unwrap();
+        let spec = ExploreSpec::from_json(&msg).unwrap();
+        assert_eq!(spec.datatypes, DataTypes::parse("8:8:32:8").unwrap());
+        let defaults =
+            ExploreSpec::from_json(&Json::parse(r#"{"cmd":"explore"}"#).unwrap()).unwrap();
+        assert!(defaults.datatypes.is_default());
+        for bad in [r#"{"bits":"8:8"}"#, r#"{"bits":["8:8:32:8"]}"#, r#"{"bits":7}"#] {
+            assert!(ExploreSpec::from_json(&Json::parse(bad).unwrap()).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

@@ -32,15 +32,32 @@
 //! [`report`] (paper table/figure renderers), [`util`] (offline-friendly
 //! substrate: PRNG, JSON, table formatting, property-test + bench
 //! harnesses), [`cli`] (the `psim` binary's command surface).
+//!
+//! Reference documents: `docs/MODEL.md` (the full equation derivations,
+//! element and byte forms), `docs/PROTOCOL.md` (the wire reference) and
+//! `docs/ARCHITECTURE.md` (the data flow) — each pinned against this
+//! crate by doc-tests so they cannot drift.
+
+#![warn(missing_docs)]
 
 pub mod analytics;
+/// The typed Request/Response facade (the embedding surface).
 pub mod api;
+/// The `psim` binary's command-line surface.
 pub mod cli;
+/// Accelerator/workload configuration files.
 pub mod config;
+/// The serving stack: batching, engine threads, metrics.
 pub mod coordinator;
+/// The design-space explorer (Pareto frontiers).
 pub mod dse;
+/// CNN workload descriptors and the precision model.
 pub mod models;
+/// Paper table/figure renderers.
 pub mod report;
+/// The PJRT execution runtime over AOT artifacts.
 pub mod runtime;
+/// The event-level accelerator simulator.
 pub mod sim;
+/// Offline-friendly substrate: PRNG, JSON, tables, harnesses.
 pub mod util;

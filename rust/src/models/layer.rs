@@ -1,4 +1,139 @@
-//! A single convolution layer descriptor and its derived quantities.
+//! A single convolution layer descriptor and its derived quantities,
+//! plus the [`DataTypes`] precision model (per-tensor element widths).
+
+use anyhow::{bail, Result};
+
+/// Per-tensor element widths in **bits** — the precision model behind the
+/// byte-level traffic accounting.
+///
+/// The paper's central observation is that partial sums are *wider* than
+/// activations (24–32-bit accumulators vs 8-bit ifmaps), so a psum
+/// crossing the interconnect costs disproportionately more **bytes** than
+/// an input activation. Element-count models (eqs. 2–4) cannot see this;
+/// `DataTypes` carries the widths so every layer of the stack can weight
+/// traffic in bytes (see `docs/MODEL.md` §Byte-level model).
+///
+/// The default is uniform 8-bit (one byte per element), under which byte
+/// totals equal element totals exactly — the compatibility contract every
+/// pinned golden relies on.
+///
+/// ```
+/// use psim::models::DataTypes;
+///
+/// let dt = DataTypes::parse("8:8:32:8").unwrap();
+/// assert_eq!((dt.ifmap_bits, dt.weight_bits, dt.psum_bits, dt.ofmap_bits), (8, 8, 32, 8));
+/// assert_eq!(dt.psum_bytes(), 4.0);
+/// assert!(!dt.is_default());
+/// assert_eq!(dt.label(), "8:8:32:8");
+/// assert!(DataTypes::default().is_default());
+/// // One element of a uniform-width type is width/8 bytes:
+/// assert_eq!(DataTypes::uniform(16).ifmap_bytes(), 2.0);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DataTypes {
+    /// Input-feature-map (activation) element width, bits.
+    pub ifmap_bits: usize,
+    /// Weight element width, bits.
+    pub weight_bits: usize,
+    /// Partial-sum (accumulator) element width, bits.
+    pub psum_bits: usize,
+    /// Output-feature-map element width, bits (post ReLU/quantization).
+    pub ofmap_bits: usize,
+}
+
+impl DataTypes {
+    /// Uniform width: every tensor `bits` wide.
+    pub fn uniform(bits: usize) -> DataTypes {
+        DataTypes { ifmap_bits: bits, weight_bits: bits, psum_bits: bits, ofmap_bits: bits }
+    }
+
+    /// Construct from explicit widths, validating each is in `1..=64`.
+    pub fn new(ifmap: usize, weight: usize, psum: usize, ofmap: usize) -> Result<DataTypes> {
+        for (name, bits) in [("ifmap", ifmap), ("weight", weight), ("psum", psum), ("ofmap", ofmap)]
+        {
+            if bits == 0 || bits > 64 {
+                bail!("{name} width must be 1..=64 bits, got {bits}");
+            }
+        }
+        Ok(DataTypes { ifmap_bits: ifmap, weight_bits: weight, psum_bits: psum, ofmap_bits: ofmap })
+    }
+
+    /// Parse `"ifmap:weight:psum:ofmap"` (bits, e.g. `"8:8:32:8"`), or the
+    /// presets `"int8"` (8:8:32:8) and `"fp16"` (16:16:32:16).
+    pub fn parse(s: &str) -> Result<DataTypes> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "int8" => return DataTypes::new(8, 8, 32, 8),
+            "fp16" => return DataTypes::new(16, 16, 32, 16),
+            _ => {}
+        }
+        let parts: Vec<&str> = s.trim().split(':').collect();
+        if parts.len() != 4 {
+            bail!("bits spec '{s}' must be ifmap:weight:psum:ofmap (e.g. 8:8:32:8) or a preset");
+        }
+        let mut bits = [0usize; 4];
+        for (slot, part) in bits.iter_mut().zip(&parts) {
+            *slot = part
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad width '{part}' in bits spec '{s}'"))?;
+        }
+        DataTypes::new(bits[0], bits[1], bits[2], bits[3])
+    }
+
+    /// Canonical wire/display form, `"8:8:32:8"`. Round-trips through
+    /// [`DataTypes::parse`].
+    pub fn label(&self) -> String {
+        format!("{}:{}:{}:{}", self.ifmap_bits, self.weight_bits, self.psum_bits, self.ofmap_bits)
+    }
+
+    /// Whether this is the compatibility default (uniform 8-bit). Only
+    /// non-default precisions add byte keys to JSONL/tables.
+    pub fn is_default(&self) -> bool {
+        *self == DataTypes::default()
+    }
+
+    /// Whether all four widths are equal (byte totals are then element
+    /// totals × width/8 exactly).
+    pub fn is_uniform(&self) -> bool {
+        self.ifmap_bits == self.weight_bits
+            && self.weight_bits == self.psum_bits
+            && self.psum_bits == self.ofmap_bits
+    }
+
+    /// Ifmap element size in bytes (exact `f64`: bits / 8).
+    pub fn ifmap_bytes(&self) -> f64 {
+        self.ifmap_bits as f64 / 8.0
+    }
+
+    /// Weight element size in bytes.
+    pub fn weight_bytes(&self) -> f64 {
+        self.weight_bits as f64 / 8.0
+    }
+
+    /// Psum element size in bytes.
+    pub fn psum_bytes(&self) -> f64 {
+        self.psum_bits as f64 / 8.0
+    }
+
+    /// Ofmap element size in bytes.
+    pub fn ofmap_bytes(&self) -> f64 {
+        self.ofmap_bits as f64 / 8.0
+    }
+}
+
+impl Default for DataTypes {
+    /// Uniform 8-bit: one byte per element, so byte totals equal element
+    /// totals and no byte keys are emitted.
+    fn default() -> DataTypes {
+        DataTypes::uniform(8)
+    }
+}
+
+impl std::fmt::Display for DataTypes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
 
 /// One convolution layer, in the paper's notation:
 /// `M` input feature maps of `Wi x Hi`, `N` output maps of `Wo x Ho`,
@@ -153,6 +288,33 @@ impl std::fmt::Display for ConvLayer {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn datatypes_parse_and_label_round_trip() {
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        assert_eq!(dt, DataTypes::new(8, 8, 32, 8).unwrap());
+        assert_eq!(DataTypes::parse(&dt.label()).unwrap(), dt);
+        assert_eq!(DataTypes::parse("int8").unwrap(), dt);
+        assert_eq!(DataTypes::parse("fp16").unwrap(), DataTypes::new(16, 16, 32, 16).unwrap());
+        assert_eq!(DataTypes::parse(" 8 : 8 : 24 : 8 ").unwrap().psum_bits, 24);
+        for bad in ["", "8:8:32", "8:8:32:8:1", "0:8:8:8", "8:8:65:8", "a:8:8:8"] {
+            assert!(DataTypes::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn datatypes_default_is_uniform_one_byte() {
+        let dt = DataTypes::default();
+        assert!(dt.is_default() && dt.is_uniform());
+        assert_eq!(dt.ifmap_bytes(), 1.0);
+        assert_eq!(dt.psum_bytes(), 1.0);
+        assert!(!DataTypes::parse("8:8:32:8").unwrap().is_default());
+        assert!(!DataTypes::parse("8:8:32:8").unwrap().is_uniform());
+        assert!(DataTypes::uniform(16).is_uniform());
+        assert!(!DataTypes::uniform(16).is_default());
+        // 24-bit psums are 3 bytes exactly (f64 division by 8 is exact)
+        assert_eq!(DataTypes::parse("8:8:24:8").unwrap().psum_bytes(), 3.0);
+    }
 
     #[test]
     fn alexnet_conv1_dims() {

@@ -10,5 +10,5 @@ pub mod layer;
 pub mod network;
 pub mod zoo;
 
-pub use layer::ConvLayer;
+pub use layer::{ConvLayer, DataTypes};
 pub use network::Network;

@@ -1,6 +1,6 @@
 //! A network = named ordered list of conv layers, plus aggregate queries.
 
-use super::layer::ConvLayer;
+use super::layer::{ConvLayer, DataTypes};
 
 /// A CNN's convolution stack (the only part the paper's analysis touches).
 #[derive(Clone, Debug)]
@@ -12,6 +12,7 @@ pub struct Network {
 }
 
 impl Network {
+    /// A named network over a non-empty conv stack.
     pub fn new(name: &str, layers: Vec<ConvLayer>) -> Self {
         assert!(!layers.is_empty(), "network {name} has no layers");
         Network { name: name.to_string(), layers }
@@ -24,6 +25,21 @@ impl Network {
         self.layers
             .iter()
             .map(|l| l.input_activations() + l.output_activations())
+            .sum()
+    }
+
+    /// The Table III floor in **bytes**: every input read once at ifmap
+    /// width, every output written once at ofmap width. Full residency
+    /// means no partial sum ever crosses the interconnect, so the floor
+    /// carries no psum-width term. Equals [`Network::min_bandwidth`] under
+    /// the default (uniform one-byte) [`DataTypes`].
+    pub fn min_bandwidth_bytes(&self, dt: &DataTypes) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.input_activations() as f64 * dt.ifmap_bytes()
+                    + l.output_activations() as f64 * dt.ofmap_bytes()
+            })
             .sum()
     }
 
@@ -72,6 +88,21 @@ mod tests {
         let n = tiny();
         let expect = (8 * 8 * 3 + 8 * 8 * 16) + (8 * 8 * 16 + 8 * 8 * 32);
         assert_eq!(n.min_bandwidth(), expect as u64);
+    }
+
+    #[test]
+    fn min_bandwidth_bytes_weights_tensors_independently() {
+        let n = tiny();
+        // default precision: bytes == elements
+        assert_eq!(n.min_bandwidth_bytes(&DataTypes::default()), n.min_bandwidth() as f64);
+        // psum width does NOT appear in the floor (full residency)
+        let wide_psum = DataTypes::parse("8:8:32:8").unwrap();
+        assert_eq!(n.min_bandwidth_bytes(&wide_psum), n.min_bandwidth() as f64);
+        // 16-bit ofmaps double the write half only
+        let wide_out = DataTypes::new(8, 8, 32, 16).unwrap();
+        let ins = (8 * 8 * 3 + 8 * 8 * 16) as f64;
+        let outs = (8 * 8 * 16 + 8 * 8 * 32) as f64;
+        assert_eq!(n.min_bandwidth_bytes(&wide_out), ins + 2.0 * outs);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 use crate::models::{ConvLayer, Network};
 
+/// AlexNet's five-conv stack (paper profile).
 pub fn alexnet() -> Network {
     Network::new(
         "AlexNet",

@@ -27,6 +27,7 @@ fn inception(layers: &mut Vec<ConvLayer>, name: &str, res: usize, cin: usize, c:
     c1 + c3 + c5 + pp
 }
 
+/// GoogleNet's conv stack (paper profile).
 pub fn googlenet() -> Network {
     let mut layers = vec![
         ConvLayer::new("conv1", 224, 224, 3, 64, 7, 2, 3), // ->112

@@ -36,6 +36,7 @@ fn inverted_residual(
     r
 }
 
+/// MNASNet 1.0's conv stack (paper profile).
 pub fn mnasnet1_0() -> Network {
     let mut layers = vec![ConvLayer::new("stem", 224, 224, 3, 32, 3, 2, 1)]; // ->112
     // Separable conv: depthwise 3x3 s1 on 32ch, project to 16.

@@ -27,6 +27,7 @@ fn dw_sep(
     r
 }
 
+/// MobileNet v1's conv stack (paper profile).
 pub fn mobilenet_v1() -> Network {
     let mut layers = vec![ConvLayer::new("stem", 224, 224, 3, 32, 3, 2, 1)]; // ->112
     // (cout, stride) for the 13 separable blocks.

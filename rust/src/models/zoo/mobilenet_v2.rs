@@ -37,6 +37,7 @@ fn inverted_residual(
     r
 }
 
+/// MobileNet v2's conv stack (faithful extra).
 pub fn mobilenet_v2() -> Network {
     let mut layers = vec![ConvLayer::new("stem", 224, 224, 3, 32, 3, 2, 1)]; // ->112
     let settings: &[(usize, usize, usize, usize)] = &[

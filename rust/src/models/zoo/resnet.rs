@@ -73,6 +73,7 @@ fn basic_net(name: &str, blocks_per_stage: [usize; 4]) -> Network {
     Network::new(name, layers)
 }
 
+/// ResNet-18's conv stack (paper profile).
 pub fn resnet18() -> Network {
     basic_net("ResNet-18", [2, 2, 2, 2])
 }

@@ -15,6 +15,7 @@ fn fire(layers: &mut Vec<ConvLayer>, id: usize, res: usize, cin: usize, s1: usiz
     layers.push(ConvLayer::new(&format!("fire{id}.expand3x3"), res, res, s1, e, 3, 1, 1));
 }
 
+/// SqueezeNet 1.0's conv stack (paper profile).
 pub fn squeezenet1_0() -> Network {
     let mut layers = vec![ConvLayer::new("conv1", 224, 224, 3, 96, 7, 2, 0)];
     // pool1: 109 -> 54 (ceil_mode)

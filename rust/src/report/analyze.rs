@@ -5,14 +5,10 @@ use crate::analytics::bandwidth::ControllerMode;
 use crate::analytics::grid::GridEngine;
 use crate::analytics::optimizer;
 use crate::analytics::partition::Strategy;
-use crate::models::Network;
+use crate::models::{DataTypes, Network};
 use crate::util::tablefmt::{mact, Table};
 
-/// One row per conv layer: shape, chosen partition `(m, n)`, the real
-/// eq. 7 optimum, MAC utilization and the eq. 2/3 traffic. Returns the
-/// table plus the one-line network summary. Rows come from the engine's
-/// memoized evaluator, so repeated shapes (ResNet blocks, VGG stacks)
-/// are computed once — and a long-lived engine answers warm.
+/// [`analyze_table_dt`] at the default precision.
 pub fn analyze_table(
     engine: &GridEngine,
     net: &Network,
@@ -20,16 +16,48 @@ pub fn analyze_table(
     strategy: Strategy,
     mode: ControllerMode,
 ) -> (Table, String) {
-    let mut t = Table::new(vec![
+    analyze_table_dt(engine, net, p_macs, strategy, mode, &DataTypes::default())
+}
+
+/// One row per conv layer: shape, chosen partition `(m, n)`, the real
+/// eq. 7 optimum, MAC utilization and the eq. 2/3 traffic. Returns the
+/// table plus the one-line network summary. Rows come from the engine's
+/// memoized evaluator, so repeated shapes (ResNet blocks, VGG stacks)
+/// are computed once — and a long-lived engine answers warm.
+///
+/// A non-default `dt` appends a byte-traffic column (`B (MB)`), switches
+/// the eq. 7 column to the byte-weighted optimum, and extends the
+/// summary with byte totals — additively, so default output is
+/// byte-identical to the pre-precision table.
+pub fn analyze_table_dt(
+    engine: &GridEngine,
+    net: &Network,
+    p_macs: usize,
+    strategy: Strategy,
+    mode: ControllerMode,
+    dt: &DataTypes,
+) -> (Table, String) {
+    let precision = !dt.is_default();
+    let mut headers = vec![
         "layer", "shape", "m", "n", "m* (eq.7)", "MAC util", "B_i (M)", "B_o (M)", "B (M)",
-    ]);
+    ];
+    if precision {
+        headers.push("B (MB)");
+    }
+    let mut t = Table::new(headers);
     let mut total = 0.0;
+    let mut total_bytes = 0.0;
     for layer in &net.layers {
-        let eval = engine.layer_eval(layer, p_macs, strategy, mode);
+        let eval = engine.layer_eval_dt(layer, p_macs, strategy, mode, dt);
         let (part, bw) = (eval.partition, eval.bandwidth);
-        let m_star = optimizer::optimal_m_real(layer, p_macs, mode);
+        let m_star = if precision {
+            optimizer::optimal_m_real_bytes(layer, p_macs, mode, dt)
+        } else {
+            optimizer::optimal_m_real(layer, p_macs, mode)
+        };
         total += bw.total();
-        t.row(vec![
+        total_bytes += eval.bytes.activations();
+        let mut row = vec![
             layer.name.clone(),
             format!("{}x{}x{}→{}x{}x{} k{}{}",
                 layer.wi, layer.hi, layer.m, layer.wo(), layer.ho(), layer.n, layer.k,
@@ -41,9 +69,13 @@ pub fn analyze_table(
             mact(bw.input, 2),
             mact(bw.output, 2),
             mact(bw.total(), 2),
-        ]);
+        ];
+        if precision {
+            row.push(mact(eval.bytes.activations(), 2));
+        }
+        t.row(row);
     }
-    let note = format!(
+    let mut note = format!(
         "{} @ P={p_macs}, {} controller, {} strategy: total {} M activations \
          (floor {} M)",
         net.name,
@@ -52,6 +84,14 @@ pub fn analyze_table(
         mact(total, 2),
         mact(net.min_bandwidth() as f64, 3),
     );
+    if precision {
+        note.push_str(&format!(
+            "; bits {}: {} MB on the wire (byte floor {} MB)",
+            dt.label(),
+            mact(total_bytes, 2),
+            mact(net.min_bandwidth_bytes(dt), 3),
+        ));
+    }
     (t, note)
 }
 
@@ -69,5 +109,21 @@ mod tests {
         assert_eq!(table.n_rows(), net.layers.len());
         assert!(note.starts_with("AlexNet @ P=512, passive controller"), "{note}");
         assert!(note.contains("(floor 0.823 M)"), "{note}");
+        // no byte column or byte summary under the default precision
+        assert!(!table.to_markdown().contains("B (MB)"));
+        assert!(!note.contains("bits"));
+    }
+
+    #[test]
+    fn precision_adds_byte_column_and_summary() {
+        let engine = GridEngine::new();
+        let net = zoo::alexnet();
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        let (table, note) =
+            analyze_table_dt(&engine, &net, 512, Strategy::Optimal, ControllerMode::Passive, &dt);
+        assert_eq!(table.n_rows(), net.layers.len());
+        assert!(table.to_markdown().contains("B (MB)"), "{}", table.to_markdown());
+        assert!(note.contains("bits 8:8:32:8"), "{note}");
+        assert!(note.contains("byte floor 0.823 MB"), "{note}");
     }
 }

@@ -12,14 +12,20 @@ use crate::util::tablefmt::Table;
 /// One compared cell.
 #[derive(Clone, Debug)]
 pub struct Cell {
+    /// Which paper table the cell is from (`"I"`, `"II"`, `"III"`).
     pub table: &'static str,
+    /// Network name.
     pub network: String,
+    /// Human label of the cell's scenario (P, strategy, mode).
     pub setting: String,
+    /// The published value (M activations).
     pub paper: f64,
+    /// This implementation's value (M activations).
     pub ours: f64,
 }
 
 impl Cell {
+    /// Relative difference |paper − ours| / max(|paper|, |ours|).
     pub fn rel_diff(&self) -> f64 {
         rel_diff(self.paper, self.ours)
     }
@@ -93,11 +99,17 @@ pub fn compare_all() -> Vec<Cell> {
 /// Aggregate statistics of a comparison run.
 #[derive(Clone, Copy, Debug)]
 pub struct Summary {
+    /// Cells compared.
     pub cells: usize,
+    /// Median relative difference.
     pub median_rel_diff: f64,
+    /// Mean relative difference.
     pub mean_rel_diff: f64,
+    /// Cells within 5% of the paper.
     pub within_5pct: usize,
+    /// Cells within 15% of the paper.
     pub within_15pct: usize,
+    /// Largest relative difference.
     pub worst: f64,
 }
 

@@ -11,6 +11,7 @@ use crate::util::tablefmt::Table;
 /// One network's saving series over `TABLE2_MACS`.
 #[derive(Clone, Debug)]
 pub struct SavingSeries {
+    /// Network name.
     pub network: String,
     /// (P, saving-percent) points.
     pub points: Vec<(usize, f64)>,

@@ -6,12 +6,10 @@ use crate::analytics::bandwidth::ControllerMode;
 use crate::analytics::fusion::chains;
 use crate::analytics::grid::GridEngine;
 use crate::analytics::partition::Strategy;
-use crate::models::Network;
+use crate::models::{DataTypes, Network};
 use crate::util::tablefmt::{mact, pct, Table};
 
-/// One row per network: chain structure, unfused vs fused activation
-/// traffic (in M activations) and the fraction saved. Depth-1 rows save
-/// exactly 0% by construction.
+/// [`fusion_table_dt`] at the default precision.
 pub fn fusion_table(
     engine: &GridEngine,
     nets: &[Network],
@@ -20,27 +18,59 @@ pub fn fusion_table(
     strategy: Strategy,
     mode: ControllerMode,
 ) -> Table {
-    let mut t = Table::new(vec![
+    fusion_table_dt(engine, nets, depth, p_macs, strategy, mode, &DataTypes::default())
+}
+
+/// One row per network: chain structure, unfused vs fused activation
+/// traffic (in M activations) and the fraction saved. Depth-1 rows save
+/// exactly 0% by construction. A non-default `dt` appends byte-traffic
+/// columns (fused vs unfused MB and the byte saving) — additively, so
+/// default output is byte-identical to the pre-precision table.
+pub fn fusion_table_dt(
+    engine: &GridEngine,
+    nets: &[Network],
+    depth: usize,
+    p_macs: usize,
+    strategy: Strategy,
+    mode: ControllerMode,
+    dt: &DataTypes,
+) -> Table {
+    let precision = !dt.is_default();
+    let mut headers = vec![
         "network".to_string(),
         "chains".to_string(),
         "longest".to_string(),
         "unfused BW (M)".to_string(),
         format!("fused d={depth} (M)"),
         "saved".to_string(),
-    ]);
+    ];
+    if precision {
+        headers.push("unfused (MB)".to_string());
+        headers.push(format!("fused d={depth} (MB)"));
+        headers.push("saved (B)".to_string());
+    }
+    let mut t = Table::new(headers);
     for net in nets {
         let chain_list = chains(net, depth);
         let longest = chain_list.iter().map(|r| r.len()).max().unwrap_or(0);
-        let unfused = engine.cell(net, p_macs, strategy, mode, 1).total();
-        let fused = engine.cell_fused(net, p_macs, strategy, mode, 1, depth).total();
-        t.row(vec![
+        let unfused_cell = engine.cell_fused_dt(net, p_macs, strategy, mode, 1, 1, dt);
+        let fused_cell = engine.cell_fused_dt(net, p_macs, strategy, mode, 1, depth, dt);
+        let (unfused, fused) = (unfused_cell.total(), fused_cell.total());
+        let mut row = vec![
             net.name.clone(),
             chain_list.len().to_string(),
             longest.to_string(),
             mact(unfused, 2),
             mact(fused, 2),
             pct((unfused - fused) / unfused),
-        ]);
+        ];
+        if precision {
+            let (ub, fb) = (unfused_cell.total_bytes(), fused_cell.total_bytes());
+            row.push(mact(ub, 2));
+            row.push(mact(fb, 2));
+            row.push(pct((ub - fb) / ub));
+        }
+        t.row(row);
     }
     t
 }
@@ -67,6 +97,29 @@ mod tests {
         // AlexNet: 4 chains at depth 2 (conv3+conv4 fuse), longest = 2
         assert!(md.contains("| 4"), "{md}");
         assert!(summarize(2, 2, 1024).contains("depth 2"));
+    }
+
+    #[test]
+    fn precision_appends_byte_columns() {
+        let engine = GridEngine::new();
+        let nets = vec![zoo::alexnet()];
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        let t = fusion_table_dt(
+            &engine,
+            &nets,
+            2,
+            1024,
+            Strategy::Optimal,
+            ControllerMode::Passive,
+            &dt,
+        );
+        let md = t.to_markdown();
+        assert!(md.contains("unfused (MB)"), "{md}");
+        assert!(md.contains("fused d=2 (MB)"), "{md}");
+        // default precision keeps the original shape
+        let plain =
+            fusion_table(&engine, &nets, 2, 1024, Strategy::Optimal, ControllerMode::Passive);
+        assert!(!plain.to_markdown().contains("MB"));
     }
 
     #[test]

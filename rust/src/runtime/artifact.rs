@@ -10,7 +10,9 @@ use crate::util::json::Json;
 /// Tensor signature in the manifest.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TensorSig {
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// Element dtype name (e.g. `"float32"`).
     pub dtype: String,
 }
 
@@ -31,6 +33,7 @@ impl TensorSig {
         Ok(TensorSig { shape, dtype })
     }
 
+    /// Total element count.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -39,17 +42,24 @@ impl TensorSig {
 /// One AOT entry point.
 #[derive(Clone, Debug)]
 pub struct Entry {
+    /// Entry-point name (e.g. `"psimnet_b1"`).
     pub name: String,
+    /// Path to the compiled HLO text.
     pub path: PathBuf,
+    /// Input signatures, in call order.
     pub inputs: Vec<TensorSig>,
+    /// Output signatures.
     pub outputs: Vec<TensorSig>,
 }
 
 /// A parsed artifact directory.
 #[derive(Clone, Debug)]
 pub struct ArtifactDir {
+    /// The directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Build fingerprint from the manifest.
     pub fingerprint: String,
+    /// Entry points listed in the manifest.
     pub entries: Vec<Entry>,
 }
 
@@ -105,6 +115,7 @@ impl ArtifactDir {
         Self::open(Path::new(&dir))
     }
 
+    /// Entry-point lookup by name.
     pub fn entry(&self, name: &str) -> Option<&Entry> {
         self.entries.iter().find(|e| e.name == name)
     }

@@ -21,7 +21,9 @@ pub struct Runtime {
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
     /// Cumulative execution statistics.
     pub execs: u64,
+    /// Cumulative execution time, nanoseconds.
     pub exec_nanos: u128,
+    /// Cumulative compile time, nanoseconds.
     pub compile_nanos: u128,
 }
 
@@ -44,10 +46,12 @@ impl Runtime {
         Runtime::new(ArtifactDir::open_default()?)
     }
 
+    /// The PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// The artifact directory this runtime serves.
     pub fn artifacts(&self) -> &ArtifactDir {
         &self.artifacts
     }
@@ -210,6 +214,7 @@ pub struct PreparedTensor {
 }
 
 impl PreparedTensor {
+    /// The prepared tensor's shape.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }

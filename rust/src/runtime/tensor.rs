@@ -6,11 +6,14 @@ use anyhow::{bail, Result};
 /// A dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimensions, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major element data (`len == shape.product()`).
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// A tensor from shape + data (lengths must agree).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
         let want: usize = shape.iter().product();
         if want != data.len() {
@@ -32,10 +35,12 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), data }
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

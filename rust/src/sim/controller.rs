@@ -9,6 +9,7 @@
 //! a plain store; [`MemOp::Init`] is a store that also marks the region
 //! initialized (guards against accumulate-before-init bugs).
 
+use super::interconnect::RegionBits;
 use super::sram::{Region, Sram};
 use super::stats::SimStats;
 use crate::analytics::bandwidth::ControllerMode;
@@ -37,6 +38,7 @@ impl MemOp {
         }
     }
 
+    /// Decode an AWUSER word back into a [`MemOp`].
     pub fn decode(bits: u8) -> Option<MemOp> {
         match bits & 0b11 {
             0b00 => Some(MemOp::Normal),
@@ -61,10 +63,24 @@ pub struct MemController {
 }
 
 impl MemController {
+    /// A controller over a width-agnostic banked array.
     pub fn new(mode: ControllerMode, banks: usize) -> Self {
         MemController { mode, sram: Sram::new(banks), psum_initialized: false }
     }
 
+    /// A controller whose array charges bank cycles per region width
+    /// (`None` = the legacy width-agnostic model). The psum region is
+    /// provisioned at psum width — the physically wide banks are exactly
+    /// what makes keeping psum round-trips local worthwhile.
+    pub fn with_region_bits(mode: ControllerMode, banks: usize, rb: Option<RegionBits>) -> Self {
+        let sram = match rb {
+            None => Sram::new(banks),
+            Some(rb) => Sram::with_region_bits(banks, [rb.input, rb.weight, rb.psum]),
+        };
+        MemController { mode, sram, psum_initialized: false }
+    }
+
+    /// The controller's capability.
     pub fn mode(&self) -> ControllerMode {
         self.mode
     }
@@ -131,10 +147,9 @@ impl MemController {
     /// per-layer state.
     pub fn finish_layer(&mut self, stats: &mut SimStats) {
         stats.sram_accesses += self.sram.total_accesses();
-        let banks = self.sram.banks();
         // array occupancy folds into the bus-side time model downstream
         stats.bus_cycles = stats.bus_cycles.max(self.sram.bank_cycles());
-        self.sram = Sram::new(banks);
+        self.sram = self.sram.fresh();
         self.psum_initialized = false;
     }
 }

@@ -8,14 +8,29 @@ use super::interconnect::{BusConfig, Interconnect};
 /// A planned transfer: total elements and the burst count it needs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Transfer {
+    /// Elements moved.
     pub elements: u64,
+    /// Bus bursts the transfer splits into.
     pub bursts: u64,
 }
 
 /// Plan reading/writing `channels` full planes of `w*h` elements.
 pub fn plane_transfer(cfg: &BusConfig, channels: usize, w: usize, h: usize) -> Transfer {
+    plane_transfer_wide(cfg, channels, w, h, None)
+}
+
+/// Width-aware [`plane_transfer`]: elements are `bits` wide (`None` =
+/// the bus's uniform `elem_bytes`). Wide psum planes split into more
+/// bursts than narrow activation planes of the same shape.
+pub fn plane_transfer_wide(
+    cfg: &BusConfig,
+    channels: usize,
+    w: usize,
+    h: usize,
+    bits: Option<usize>,
+) -> Transfer {
     let per_chan = (w * h) as u64;
-    let bursts_per_chan = Interconnect::bursts(cfg, per_chan);
+    let bursts_per_chan = Interconnect::bursts_wide(cfg, per_chan, bits);
     Transfer {
         elements: per_chan * channels as u64,
         bursts: bursts_per_chan * channels as u64,
@@ -24,8 +39,19 @@ pub fn plane_transfer(cfg: &BusConfig, channels: usize, w: usize, h: usize) -> T
 
 /// Plan a weight-tile transfer: `n * m * k * k` contiguous elements.
 pub fn weight_transfer(cfg: &BusConfig, m: usize, n: usize, k: usize) -> Transfer {
+    weight_transfer_wide(cfg, m, n, k, None)
+}
+
+/// Width-aware [`weight_transfer`] (`None` = uniform `elem_bytes`).
+pub fn weight_transfer_wide(
+    cfg: &BusConfig,
+    m: usize,
+    n: usize,
+    k: usize,
+    bits: Option<usize>,
+) -> Transfer {
     let elements = (n * m * k * k) as u64;
-    Transfer { elements, bursts: Interconnect::bursts(cfg, elements) }
+    Transfer { elements, bursts: Interconnect::bursts_wide(cfg, elements, bits) }
 }
 
 #[cfg(test)]
@@ -55,5 +81,23 @@ mod tests {
         let t = weight_transfer(&cfg, 12, 4, 3);
         assert_eq!(t.elements, 432);
         assert_eq!(t.bursts, 1); // 54 beats
+    }
+
+    #[test]
+    fn wide_psum_planes_need_more_bursts() {
+        let cfg = BusConfig::default(); // 16B bus, 256 beats/burst
+        // 224x224 plane: at 8 bits 50176 B = 3136 beats -> 13 bursts;
+        // at 32 bits 200704 B = 12544 beats -> 49 bursts.
+        let narrow = plane_transfer_wide(&cfg, 1, 224, 224, Some(8));
+        let wide = plane_transfer_wide(&cfg, 1, 224, 224, Some(32));
+        assert_eq!(narrow.bursts, 13);
+        assert_eq!(wide.bursts, 49);
+        assert_eq!(narrow.elements, wide.elements);
+        // None reproduces the uniform pricing exactly
+        assert_eq!(plane_transfer_wide(&cfg, 3, 13, 13, None), plane_transfer(&cfg, 3, 13, 13));
+        assert_eq!(
+            weight_transfer_wide(&cfg, 12, 4, 3, None),
+            weight_transfer(&cfg, 12, 4, 3)
+        );
     }
 }

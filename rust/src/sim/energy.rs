@@ -53,6 +53,36 @@ impl EnergyModel {
             + s.controller_adds as f64 * self.ctrl_add_pj
             + s.controller_relus as f64 * self.ctrl_relu_pj
     }
+
+    /// Width-aware energy: per-element SRAM and controller costs scale
+    /// linearly with the element's width relative to the 32-bit reference
+    /// the constants are normalized to (first-order CACTI-style scaling —
+    /// a 32-bit psum read costs 4× an 8-bit activation read). Bus energy
+    /// is per **beat**, and beats are already width-aware when the
+    /// scheduler prices regions via
+    /// [`RegionBits`](crate::sim::interconnect::RegionBits), so it needs
+    /// no extra factor. With every region at 32 bits this is exactly
+    /// [`EnergyModel::energy_pj`].
+    pub fn energy_pj_wide(
+        &self,
+        s: &crate::sim::stats::SimStats,
+        rb: &crate::sim::interconnect::RegionBits,
+    ) -> f64 {
+        let w = |bits: usize| bits as f64 / 32.0;
+        let read_cost = (s.input_reads as f64 * w(rb.input)
+            + s.weight_reads as f64 * w(rb.weight)
+            + (s.psum_reads + s.internal_psum_reads) as f64 * w(rb.psum))
+            * self.sram_read_pj;
+        let write_cost = ((s.psum_writes - s.ofmap_writes) as f64 * w(rb.psum)
+            + s.ofmap_writes as f64 * w(rb.ofmap))
+            * self.sram_write_pj;
+        read_cost
+            + write_cost
+            + s.bus_beats as f64 * self.bus_beat_pj
+            + s.macs as f64 * self.mac_pj
+            + s.controller_adds as f64 * w(rb.psum) * self.ctrl_add_pj
+            + s.controller_relus as f64 * w(rb.psum) * self.ctrl_relu_pj
+    }
 }
 
 #[cfg(test)]
@@ -84,6 +114,31 @@ mod tests {
             ..Default::default()
         };
         assert!(e.energy_pj(&active) < e.energy_pj(&passive));
+    }
+
+    #[test]
+    fn wide_energy_scales_with_region_widths() {
+        use crate::sim::interconnect::RegionBits;
+        let e = EnergyModel::default();
+        let s = SimStats {
+            input_reads: 100,
+            psum_reads: 50,
+            psum_writes: 60,
+            ofmap_writes: 10,
+            weight_reads: 40,
+            bus_beats: 7,
+            ..Default::default()
+        };
+        // all-32-bit regions reproduce the uniform model exactly
+        let r32 = RegionBits { input: 32, weight: 32, psum: 32, ofmap: 32 };
+        assert!((e.energy_pj_wide(&s, &r32) - e.energy_pj(&s)).abs() < 1e-9);
+        // narrowing activations to 8 bits cuts their SRAM cost 4x
+        let r8 = RegionBits { input: 8, weight: 8, psum: 32, ofmap: 8 };
+        assert!(e.energy_pj_wide(&s, &r8) < e.energy_pj_wide(&s, &r32));
+        let expect_reads = (100.0 * 0.25 + 40.0 * 0.25 + 50.0 * 1.0) * e.sram_read_pj;
+        let expect_writes = (50.0 * 1.0 + 10.0 * 0.25) * e.sram_write_pj;
+        let expect = expect_reads + expect_writes + 7.0 * e.bus_beat_pj;
+        assert!((e.energy_pj_wide(&s, &r8) - expect).abs() < 1e-9);
     }
 
     #[test]

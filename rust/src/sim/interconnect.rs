@@ -9,23 +9,75 @@
 //! infrastructure). Read and write channels are independent (full-duplex),
 //! so bus occupancy is the max of the two directions.
 
+use crate::models::DataTypes;
+
 use super::controller::MemOp;
 use super::stats::SimStats;
+
+/// Per-region element widths in **bits** for width-aware beat packing —
+/// the simulator-side mirror of [`DataTypes`]: wide psums take more beats
+/// per element than narrow activations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RegionBits {
+    /// Input-activation element width.
+    pub input: usize,
+    /// Weight element width.
+    pub weight: usize,
+    /// Partial-sum element width.
+    pub psum: usize,
+    /// Final (quantized) output element width.
+    pub ofmap: usize,
+}
+
+impl RegionBits {
+    /// Widths from a [`DataTypes`] precision.
+    pub fn from_datatypes(dt: &DataTypes) -> RegionBits {
+        RegionBits {
+            input: dt.ifmap_bits,
+            weight: dt.weight_bits,
+            psum: dt.psum_bits,
+            ofmap: dt.ofmap_bits,
+        }
+    }
+
+    /// The inverse of [`RegionBits::from_datatypes`].
+    pub fn to_datatypes(&self) -> DataTypes {
+        DataTypes {
+            ifmap_bits: self.input,
+            weight_bits: self.weight,
+            psum_bits: self.psum,
+            ofmap_bits: self.ofmap,
+        }
+    }
+}
 
 /// Interconnect configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct BusConfig {
     /// Data bytes per beat (AXI data-bus width), e.g. 16 = 128-bit.
     pub bus_bytes: usize,
-    /// Bytes per element (activation/weight), e.g. 2 = fp16/int16.
+    /// Bytes per element (activation/weight), e.g. 2 = fp16/int16 — the
+    /// uniform pricing used when `region_bits` is unset.
     pub elem_bytes: usize,
     /// Max beats per burst (AXI4: 256). Longer transfers split.
     pub max_burst_beats: usize,
+    /// Per-region element widths. `None` (the default) prices every
+    /// region at `elem_bytes` — byte-identical to the pre-precision
+    /// simulator; `Some` packs each region's elements at its own width
+    /// so beat counts agree with the analytical byte model.
+    pub region_bits: Option<RegionBits>,
 }
 
 impl Default for BusConfig {
     fn default() -> Self {
-        BusConfig { bus_bytes: 16, elem_bytes: 2, max_burst_beats: 256 }
+        BusConfig { bus_bytes: 16, elem_bytes: 2, max_burst_beats: 256, region_bits: None }
+    }
+}
+
+impl BusConfig {
+    /// A default-geometry bus pricing each region at the widths of `dt`.
+    pub fn with_datatypes(dt: &DataTypes) -> BusConfig {
+        BusConfig { region_bits: Some(RegionBits::from_datatypes(dt)), ..BusConfig::default() }
     }
 }
 
@@ -37,32 +89,71 @@ pub struct Interconnect {
 }
 
 impl Interconnect {
-    /// Beats needed to move `elements`.
+    /// Beats needed to move `elements` at the uniform `elem_bytes` width.
     pub fn beats(cfg: &BusConfig, elements: u64) -> u64 {
         (elements * cfg.elem_bytes as u64).div_ceil(cfg.bus_bytes as u64)
     }
 
+    /// Beats needed to move `elements` of `bits`-wide data (`None` falls
+    /// back to the uniform [`Interconnect::beats`] pricing). Exact:
+    /// `ceil(elements·bits / (bus_bytes·8))`.
+    pub fn beats_wide(cfg: &BusConfig, elements: u64, bits: Option<usize>) -> u64 {
+        match bits {
+            None => Self::beats(cfg, elements),
+            Some(b) => (elements * b as u64).div_ceil(cfg.bus_bytes as u64 * 8),
+        }
+    }
+
     /// Transactions (bursts) needed to move `elements` given max burst len.
     pub fn bursts(cfg: &BusConfig, elements: u64) -> u64 {
-        Self::beats(cfg, elements).div_ceil(cfg.max_burst_beats as u64).max(
-            if elements == 0 { 0 } else { 1 },
-        )
+        Self::bursts_wide(cfg, elements, None)
     }
 
-    /// Account a read burst (AR + R beats).
+    /// Width-aware burst count (`None` = uniform `elem_bytes` pricing).
+    pub fn bursts_wide(cfg: &BusConfig, elements: u64, bits: Option<usize>) -> u64 {
+        Self::beats_wide(cfg, elements, bits)
+            .div_ceil(cfg.max_burst_beats as u64)
+            .max(if elements == 0 { 0 } else { 1 })
+    }
+
+    /// Account a read burst (AR + R beats) at the uniform width.
     pub fn read(&mut self, cfg: &BusConfig, elements: u64, stats: &mut SimStats) {
-        let beats = Self::beats(cfg, elements);
+        self.read_wide(cfg, elements, None, stats);
+    }
+
+    /// Account a read burst of `bits`-wide elements.
+    pub fn read_wide(
+        &mut self,
+        cfg: &BusConfig,
+        elements: u64,
+        bits: Option<usize>,
+        stats: &mut SimStats,
+    ) {
+        let beats = Self::beats_wide(cfg, elements, bits);
         self.read_beats += beats;
         stats.bus_beats += beats;
-        stats.bus_transactions += Self::bursts(cfg, elements);
+        stats.bus_transactions += Self::bursts_wide(cfg, elements, bits);
     }
 
-    /// Account a write burst (AW + W beats + B), carrying `op` on AWUSER.
+    /// Account a write burst (AW + W beats + B), carrying `op` on AWUSER,
+    /// at the uniform width.
     pub fn write(&mut self, cfg: &BusConfig, elements: u64, op: MemOp, stats: &mut SimStats) {
-        let beats = Self::beats(cfg, elements);
+        self.write_wide(cfg, elements, None, op, stats);
+    }
+
+    /// Account a write burst of `bits`-wide elements with a sideband op.
+    pub fn write_wide(
+        &mut self,
+        cfg: &BusConfig,
+        elements: u64,
+        bits: Option<usize>,
+        op: MemOp,
+        stats: &mut SimStats,
+    ) {
+        let beats = Self::beats_wide(cfg, elements, bits);
         self.write_beats += beats;
         stats.bus_beats += beats;
-        let bursts = Self::bursts(cfg, elements);
+        let bursts = Self::bursts_wide(cfg, elements, bits);
         stats.bus_transactions += bursts;
         // One sideband command word per burst; Normal writes don't need
         // a command (the controller defaults to store).
@@ -110,6 +201,32 @@ mod tests {
         assert_eq!(s.sideband_words, 1);
         ic.read(&cfg(), 100, &mut s);
         assert_eq!(s.sideband_words, 1); // reads never carry commands
+    }
+
+    #[test]
+    fn wide_beats_pack_per_region_width() {
+        let cfg = cfg(); // 16B bus = 128 bits/beat
+        // 32-bit psums: 4 elements per beat
+        assert_eq!(Interconnect::beats_wide(&cfg, 4, Some(32)), 1);
+        assert_eq!(Interconnect::beats_wide(&cfg, 5, Some(32)), 2);
+        // 8-bit activations: 16 per beat
+        assert_eq!(Interconnect::beats_wide(&cfg, 16, Some(8)), 1);
+        // 24-bit (3-byte) psums: floor(128/24) is fractional packing —
+        // the model packs bits, not elements: 6 elements = 144 bits = 2 beats
+        assert_eq!(Interconnect::beats_wide(&cfg, 6, Some(24)), 2);
+        // None falls back to the uniform elem_bytes pricing exactly
+        assert_eq!(Interconnect::beats_wide(&cfg, 9, None), Interconnect::beats(&cfg, 9));
+        // elem_bytes=2 equals bits=16 pricing
+        assert_eq!(Interconnect::beats_wide(&cfg, 9, Some(16)), Interconnect::beats(&cfg, 9));
+    }
+
+    #[test]
+    fn with_datatypes_sets_region_widths() {
+        let dt = crate::models::DataTypes::parse("8:8:32:8").unwrap();
+        let cfg = BusConfig::with_datatypes(&dt);
+        let rb = cfg.region_bits.unwrap();
+        assert_eq!((rb.input, rb.weight, rb.psum, rb.ofmap), (8, 8, 32, 8));
+        assert!(BusConfig::default().region_bits.is_none());
     }
 
     #[test]

@@ -14,11 +14,13 @@ pub struct MacArray {
 }
 
 impl MacArray {
+    /// An array of `p_macs` multipliers.
     pub fn new(p_macs: usize) -> Self {
         assert!(p_macs > 0);
         MacArray { p_macs }
     }
 
+    /// The array's MAC budget `P`.
     pub fn p_macs(&self) -> usize {
         self.p_macs
     }

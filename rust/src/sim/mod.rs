@@ -41,5 +41,6 @@ pub mod stats;
 pub mod trace;
 
 pub use controller::{MemController, MemOp};
+pub use interconnect::{BusConfig, RegionBits};
 pub use scheduler::{simulate_layer, simulate_network, SimConfig, SimResult};
 pub use stats::SimStats;

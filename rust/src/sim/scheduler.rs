@@ -52,6 +52,8 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
+    /// Defaults (16 B bus, 32 banks, default energy, tracing off)
+    /// with the given compute/controller/policy knobs.
     pub fn new(p_macs: usize, mode: ControllerMode, strategy: Strategy) -> Self {
         SimConfig {
             p_macs,
@@ -68,9 +70,11 @@ impl SimConfig {
 /// Result of simulating one layer (or a merged network run).
 #[derive(Clone, Debug)]
 pub struct SimResult {
+    /// Roll-up counters of the run.
     pub stats: SimStats,
     /// The partition the strategy chose (per layer; `None` for merged).
     pub partition: Option<Partition>,
+    /// Transaction trace (empty unless `trace_cap > 0`).
     pub trace: Trace,
 }
 
@@ -86,8 +90,14 @@ pub fn simulate_layer_with(layer: &ConvLayer, cfg: &SimConfig, part: Partition) 
     let mut stats = SimStats::default();
     let mut trace = Trace::new(cfg.trace_cap);
     let mut bus = Interconnect::default();
-    let mut ctrl = MemController::new(cfg.mode, cfg.banks);
+    let mut ctrl = MemController::with_region_bits(cfg.mode, cfg.banks, cfg.bus.region_bits);
     let mac = MacArray::new(cfg.p_macs);
+    // Per-region element widths (None = the uniform elem_bytes pricing).
+    let rb = cfg.bus.region_bits;
+    let input_bits = rb.map(|r| r.input);
+    let weight_bits = rb.map(|r| r.weight);
+    let psum_bits = rb.map(|r| r.psum);
+    let ofmap_bits = rb.map(|r| r.ofmap);
 
     let mg = layer.m_per_group();
     let ng = layer.n_per_group();
@@ -111,7 +121,7 @@ pub fn simulate_layer_with(layer: &ConvLayer, cfg: &SimConfig, part: Partition) 
 
                 // --- input tile in (full input planes of the m_eff maps) ---
                 let in_elems = (layer.wi * layer.hi * m_eff) as u64;
-                bus.read(&cfg.bus, in_elems, &mut stats);
+                bus.read_wide(&cfg.bus, in_elems, input_bits, &mut stats);
                 ctrl.bus_read(Region::Input, in_elems, &mut stats);
                 trace.record(Event {
                     iter,
@@ -123,7 +133,7 @@ pub fn simulate_layer_with(layer: &ConvLayer, cfg: &SimConfig, part: Partition) 
 
                 // --- weight tile in ---
                 let w_elems = (n_eff * m_eff * layer.k * layer.k) as u64;
-                bus.read(&cfg.bus, w_elems, &mut stats);
+                bus.read_wide(&cfg.bus, w_elems, weight_bits, &mut stats);
                 ctrl.bus_read(Region::Weight, w_elems, &mut stats);
 
                 // --- compute ---
@@ -134,10 +144,17 @@ pub fn simulate_layer_with(layer: &ConvLayer, cfg: &SimConfig, part: Partition) 
                 let ps_elems = (wo * ho * n_eff) as u64;
                 let first = ci == 0;
                 let last = ci == ci_blocks - 1;
+                // The final write of an accumulation chain carries the
+                // quantized ofmap; every other crossing is psum-width
+                // (see docs/MODEL.md §Byte-level model).
+                let wbits = if last { ofmap_bits } else { psum_bits };
+                if last {
+                    stats.ofmap_writes += ps_elems;
+                }
                 match (cfg.mode, first) {
                     (_, true) => {
                         // First pass initializes; no previous psum exists.
-                        bus.write(&cfg.bus, ps_elems, MemOp::Init, &mut stats);
+                        bus.write_wide(&cfg.bus, ps_elems, wbits, MemOp::Init, &mut stats);
                         ctrl.bus_write(Region::Psum, ps_elems, MemOp::Init, &mut stats);
                         trace.record(Event {
                             iter,
@@ -149,7 +166,7 @@ pub fn simulate_layer_with(layer: &ConvLayer, cfg: &SimConfig, part: Partition) 
                     }
                     (ControllerMode::Passive, false) => {
                         // Read-back over the bus, then write the update.
-                        bus.read(&cfg.bus, ps_elems, &mut stats);
+                        bus.read_wide(&cfg.bus, ps_elems, psum_bits, &mut stats);
                         ctrl.bus_read(Region::Psum, ps_elems, &mut stats);
                         trace.record(Event {
                             iter,
@@ -158,7 +175,7 @@ pub fn simulate_layer_with(layer: &ConvLayer, cfg: &SimConfig, part: Partition) 
                             elements: ps_elems,
                             op: MemOp::Normal,
                         });
-                        bus.write(&cfg.bus, ps_elems, MemOp::Normal, &mut stats);
+                        bus.write_wide(&cfg.bus, ps_elems, wbits, MemOp::Normal, &mut stats);
                         ctrl.bus_write(Region::Psum, ps_elems, MemOp::Normal, &mut stats);
                         trace.record(Event {
                             iter,
@@ -172,7 +189,7 @@ pub fn simulate_layer_with(layer: &ConvLayer, cfg: &SimConfig, part: Partition) 
                         // Single write with a sideband command; the read
                         // happens inside the controller.
                         let op = if last { MemOp::AddRelu } else { MemOp::Add };
-                        bus.write(&cfg.bus, ps_elems, op, &mut stats);
+                        bus.write_wide(&cfg.bus, ps_elems, wbits, op, &mut stats);
                         ctrl.bus_write(Region::Psum, ps_elems, op, &mut stats);
                         trace.record(Event {
                             iter,
@@ -198,7 +215,10 @@ pub fn simulate_layer_with(layer: &ConvLayer, cfg: &SimConfig, part: Partition) 
     if cfg.trace_cap > 0 {
         stats.trace_dropped = trace.dropped();
     }
-    stats.energy_pj = cfg.energy.energy_pj(&stats);
+    stats.energy_pj = match &cfg.bus.region_bits {
+        Some(rb) => cfg.energy.energy_pj_wide(&stats, rb),
+        None => cfg.energy.energy_pj(&stats),
+    };
     SimResult { stats, partition: Some(part), trace }
 }
 
@@ -226,7 +246,10 @@ pub fn simulate_network_detailed(net: &Network, cfg: &SimConfig) -> (SimResult, 
         layers.push(r);
     }
     stats.bus_cycles = bus_cycles;
-    stats.energy_pj = cfg.energy.energy_pj(&stats);
+    stats.energy_pj = match &cfg.bus.region_bits {
+        Some(rb) => cfg.energy.energy_pj_wide(&stats, rb),
+        None => cfg.energy.energy_pj(&stats),
+    };
     (SimResult { stats, partition: None, trace: Trace::off() }, layers)
 }
 
@@ -357,6 +380,77 @@ mod tests {
         // tracing off: nothing is "lost", so nothing is reported
         let cfg_off = SimConfig::new(512, ControllerMode::Passive, Strategy::Optimal);
         assert_eq!(simulate_layer(&l, &cfg_off).stats.trace_dropped, 0);
+    }
+
+    #[test]
+    fn ofmap_writes_are_one_per_output_element() {
+        let l = conv3();
+        for mode in ControllerMode::ALL {
+            for p in [512usize, 1 << 22] {
+                let cfg = SimConfig::new(p, mode, Strategy::Optimal);
+                let r = simulate_layer(&l, &cfg);
+                assert_eq!(r.stats.ofmap_writes, l.output_activations(), "{mode:?} P={p}");
+                assert!(r.stats.ofmap_writes <= r.stats.psum_writes);
+            }
+        }
+        // grouped convs scale the sub-count with g like everything else
+        let dw = ConvLayer::grouped("dw", 56, 56, 64, 64, 3, 1, 1, 64);
+        let cfg = SimConfig::new(512, ControllerMode::Passive, Strategy::Optimal);
+        assert_eq!(simulate_layer(&dw, &cfg).stats.ofmap_writes, dw.output_activations());
+    }
+
+    #[test]
+    fn byte_traffic_matches_analytical_byte_model() {
+        use crate::analytics::bandwidth::layer_bandwidth_bytes;
+        use crate::models::DataTypes;
+        let l = conv3();
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        for mode in ControllerMode::ALL {
+            for part in [Partition { m: 12, n: 4 }, Partition { m: 9, n: 7 }] {
+                let mut cfg = SimConfig::new(1 << 20, mode, Strategy::Optimal);
+                cfg.bus = crate::sim::interconnect::BusConfig::with_datatypes(&dt);
+                let r = simulate_layer_with(&l, &cfg, part);
+                let bw = layer_bandwidth_bytes(&l, part.m, part.n, mode, &dt);
+                assert_eq!(r.stats.activation_bytes(&dt), bw.activations(), "{part:?} {mode:?}");
+                assert_eq!(r.stats.weight_bytes(&dt) as u64, r.stats.weight_reads);
+            }
+        }
+    }
+
+    #[test]
+    fn one_byte_bus_beats_equal_total_bytes() {
+        // With a 1-byte bus every beat carries exactly one byte, so the
+        // simulator's width-aware beat count must equal the analytical
+        // byte totals (activations + weights) exactly.
+        use crate::analytics::bandwidth::layer_bandwidth_bytes;
+        use crate::models::DataTypes;
+        let l = conv3();
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        for mode in ControllerMode::ALL {
+            let mut cfg = SimConfig::new(512, mode, Strategy::Optimal);
+            cfg.bus = crate::sim::interconnect::BusConfig::with_datatypes(&dt);
+            cfg.bus.bus_bytes = 1;
+            let r = simulate_layer(&l, &cfg);
+            let p = r.partition.unwrap();
+            let bw = layer_bandwidth_bytes(&l, p.m, p.n, mode, &dt);
+            assert_eq!(r.stats.bus_beats as f64, bw.total(), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn default_bus_is_width_agnostic() {
+        // No region widths configured: beats, energy and counters are
+        // the legacy uniform-elem_bytes model (pinned goldens depend on
+        // this).
+        let l = conv3();
+        let cfg = SimConfig::new(512, ControllerMode::Passive, Strategy::Optimal);
+        assert!(cfg.bus.region_bits.is_none());
+        let r = simulate_layer(&l, &cfg);
+        // ofmap_writes is a new sub-count but doesn't change any total
+        assert_eq!(r.stats.activation_traffic(), {
+            let p = r.partition.unwrap();
+            layer_bandwidth(&l, p.m, p.n, ControllerMode::Passive).total() as u64
+        });
     }
 
     #[test]

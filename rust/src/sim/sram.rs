@@ -8,14 +8,19 @@
 /// Region tags used for accounting (which tensor a access belongs to).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Region {
+    /// Input-activation region.
     Input,
+    /// Weight region.
     Weight,
+    /// Partial-sum / output region.
     Psum,
 }
 
 impl Region {
+    /// Every region, in counter order.
     pub const ALL: [Region; 3] = [Region::Input, Region::Weight, Region::Psum];
 
+    /// Stable lowercase name.
     pub fn label(&self) -> &'static str {
         match self {
             Region::Input => "input",
@@ -25,20 +30,44 @@ impl Region {
     }
 }
 
+/// Bank word width (bits) the width-aware occupancy model packs into —
+/// matches the 32-bit reference the energy constants are normalized to.
+pub const BANK_WORD_BITS: usize = 32;
+
 /// Per-region, per-direction access counters over a banked array.
 #[derive(Clone, Debug)]
 pub struct Sram {
     banks: usize,
+    /// Optional per-region element widths (bits), indexed like `reads`.
+    /// `None` = the legacy one-element-per-bank-word model.
+    region_bits: Option<[usize; 3]>,
     reads: [u64; 3],
     writes: [u64; 3],
     bank_cycles: u64,
 }
 
 impl Sram {
-    /// `banks` must be a power of two (word-interleaved banking).
+    /// `banks` must be a power of two (word-interleaved banking). One
+    /// element occupies one bank word (the width-agnostic legacy model).
     pub fn new(banks: usize) -> Self {
         assert!(banks > 0 && banks.is_power_of_two(), "banks must be a power of two");
-        Sram { banks, reads: [0; 3], writes: [0; 3], bank_cycles: 0 }
+        Sram { banks, region_bits: None, reads: [0; 3], writes: [0; 3], bank_cycles: 0 }
+    }
+
+    /// A width-aware array: a burst of `E` elements of `b` bits occupies
+    /// `ceil(E·b / 32)` bank words, so wide psums take proportionally
+    /// more bank cycles than narrow activations. `widths` is
+    /// `[input, weight, psum]` bits (the psum region also holds the
+    /// quantized ofmap — its banks are provisioned for the wide case).
+    pub fn with_region_bits(banks: usize, widths: [usize; 3]) -> Self {
+        let mut s = Sram::new(banks);
+        s.region_bits = Some(widths);
+        s
+    }
+
+    /// An empty array with this one's configuration (per-layer reset).
+    pub fn fresh(&self) -> Self {
+        Sram { reads: [0; 3], writes: [0; 3], bank_cycles: 0, ..*self }
     }
 
     fn idx(region: Region) -> usize {
@@ -49,16 +78,27 @@ impl Sram {
         }
     }
 
+    /// Bank cycles one burst of `elements` in `region` occupies.
+    fn burst_cycles(&self, region: Region, elements: u64) -> u64 {
+        let words = match self.region_bits {
+            None => elements,
+            Some(widths) => {
+                (elements * widths[Self::idx(region)] as u64).div_ceil(BANK_WORD_BITS as u64)
+            }
+        };
+        words.div_ceil(self.banks as u64)
+    }
+
     /// Record a read burst of `elements` from `region`.
     pub fn read(&mut self, region: Region, elements: u64) {
         self.reads[Self::idx(region)] += elements;
-        self.bank_cycles += elements.div_ceil(self.banks as u64);
+        self.bank_cycles += self.burst_cycles(region, elements);
     }
 
     /// Record a write burst of `elements` into `region`.
     pub fn write(&mut self, region: Region, elements: u64) {
         self.writes[Self::idx(region)] += elements;
-        self.bank_cycles += elements.div_ceil(self.banks as u64);
+        self.bank_cycles += self.burst_cycles(region, elements);
     }
 
     /// Total reads of a region.
@@ -81,6 +121,7 @@ impl Sram {
         self.bank_cycles
     }
 
+    /// The bank count.
     pub fn banks(&self) -> usize {
         self.banks
     }
@@ -124,5 +165,42 @@ mod tests {
     #[should_panic]
     fn rejects_non_power_of_two() {
         Sram::new(12);
+    }
+
+    #[test]
+    fn width_aware_banking_charges_wide_regions_more() {
+        // 8 banks of 32-bit words: 17 psum elements at 32b = 17 words
+        // -> 3 cycles; 17 input elements at 8b = ceil(136/32) = 5 words
+        // -> 1 cycle.
+        let mut s = Sram::with_region_bits(8, [8, 8, 32]);
+        s.read(Region::Psum, 17);
+        assert_eq!(s.bank_cycles(), 3);
+        s.read(Region::Input, 17);
+        assert_eq!(s.bank_cycles(), 4);
+        // counters stay in elements regardless of widths
+        assert_eq!(s.reads(Region::Psum), 17);
+        assert_eq!(s.reads(Region::Input), 17);
+        // all-32-bit widths reproduce the legacy model exactly
+        let mut wide = Sram::with_region_bits(8, [32, 32, 32]);
+        let mut legacy = Sram::new(8);
+        for e in [1u64, 7, 8, 9, 1000] {
+            wide.read(Region::Weight, e);
+            legacy.read(Region::Weight, e);
+        }
+        assert_eq!(wide.bank_cycles(), legacy.bank_cycles());
+    }
+
+    #[test]
+    fn fresh_keeps_config_clears_counters() {
+        let mut s = Sram::with_region_bits(8, [8, 8, 32]);
+        s.read(Region::Psum, 100);
+        let f = s.fresh();
+        assert_eq!(f.total_accesses(), 0);
+        assert_eq!(f.bank_cycles(), 0);
+        assert_eq!(f.banks(), 8);
+        // width config survives the reset
+        let mut f2 = f;
+        f2.read(Region::Psum, 17);
+        assert_eq!(f2.bank_cycles(), 3);
     }
 }

@@ -2,6 +2,8 @@
 //! (activations/weights) for traffic counters — the unit the paper
 //! tabulates — with byte/beat/cycle/energy derived views.
 
+use crate::models::DataTypes;
+
 /// Counters accumulated while simulating one layer or a whole network.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct SimStats {
@@ -11,6 +13,11 @@ pub struct SimStats {
     pub psum_reads: u64,
     /// Partial sums / outputs written across the interconnect.
     pub psum_writes: u64,
+    /// Final (quantized) output writes — the last write of each
+    /// accumulation chain. A **sub-count** of `psum_writes`, split out so
+    /// byte accounting can price final writes at ofmap width and the
+    /// rest at psum width; never added to element totals.
+    pub ofmap_writes: u64,
     /// Weight elements read across the interconnect.
     pub weight_reads: u64,
     /// Reads the *active* controller performed internally (these hit the
@@ -55,6 +62,25 @@ impl SimStats {
         self.psum_reads + self.psum_writes
     }
 
+    /// Activation traffic in **bytes** under a [`DataTypes`] precision:
+    /// inputs at ifmap width, intermediate psum crossings at psum width,
+    /// final writes at ofmap width. Agrees exactly with
+    /// [`layer_bandwidth_bytes`](crate::analytics::bandwidth::layer_bandwidth_bytes)
+    /// for the same partition (pinned by `rust/tests/precision_model.rs`),
+    /// and equals [`SimStats::activation_traffic`] under the default
+    /// uniform one-byte precision.
+    pub fn activation_bytes(&self, dt: &DataTypes) -> f64 {
+        debug_assert!(self.ofmap_writes <= self.psum_writes);
+        self.input_reads as f64 * dt.ifmap_bytes()
+            + (self.psum_reads + self.psum_writes - self.ofmap_writes) as f64 * dt.psum_bytes()
+            + self.ofmap_writes as f64 * dt.ofmap_bytes()
+    }
+
+    /// Weight traffic in bytes under a [`DataTypes`] precision.
+    pub fn weight_bytes(&self, dt: &DataTypes) -> f64 {
+        self.weight_reads as f64 * dt.weight_bytes()
+    }
+
     /// Total wall-clock cycles under the max(compute, bus) overlap model.
     pub fn total_cycles(&self) -> u64 {
         self.compute_cycles.max(self.bus_cycles)
@@ -77,6 +103,7 @@ impl SimStats {
         self.input_reads *= f;
         self.psum_reads *= f;
         self.psum_writes *= f;
+        self.ofmap_writes *= f;
         self.weight_reads *= f;
         self.internal_psum_reads *= f;
         self.controller_adds *= f;
@@ -96,6 +123,7 @@ impl SimStats {
         self.input_reads += other.input_reads;
         self.psum_reads += other.psum_reads;
         self.psum_writes += other.psum_writes;
+        self.ofmap_writes += other.ofmap_writes;
         self.weight_reads += other.weight_reads;
         self.internal_psum_reads += other.internal_psum_reads;
         self.controller_adds += other.controller_adds;
@@ -139,6 +167,24 @@ mod tests {
         };
         assert_eq!(s.activation_traffic(), 190);
         assert_eq!(s.output_traffic(), 90);
+    }
+
+    #[test]
+    fn activation_bytes_prices_regions_independently() {
+        let dt = DataTypes::parse("8:8:32:8").unwrap();
+        let s = SimStats {
+            input_reads: 100,
+            psum_reads: 30,
+            psum_writes: 40,  // 10 of which are final ofmap writes
+            ofmap_writes: 10,
+            weight_reads: 8,
+            ..Default::default()
+        };
+        // 100*1 + (30 + 40 - 10)*4 + 10*1 = 350
+        assert_eq!(s.activation_bytes(&dt), 350.0);
+        assert_eq!(s.weight_bytes(&dt), 8.0);
+        // default precision: bytes == elements
+        assert_eq!(s.activation_bytes(&DataTypes::default()), s.activation_traffic() as f64);
     }
 
     #[test]

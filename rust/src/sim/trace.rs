@@ -9,15 +9,22 @@ use super::sram::Region;
 pub struct Event {
     /// Iteration index (co_block * ci_blocks + ci_block).
     pub iter: u32,
+    /// Read or write.
     pub kind: Kind,
+    /// Which tensor region it touched.
     pub region: Region,
+    /// Elements moved.
     pub elements: u64,
+    /// Sideband command carried (writes).
     pub op: MemOp,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Transaction direction.
 pub enum Kind {
+    /// A read burst (AR + R).
     Read,
+    /// A write burst (AW + W + B).
     Write,
 }
 
@@ -30,6 +37,7 @@ pub struct Trace {
 }
 
 impl Trace {
+    /// A ring keeping the last `cap` events (0 = disabled).
     pub fn new(cap: usize) -> Self {
         Trace { cap, events: Vec::new(), dropped: 0 }
     }
@@ -39,6 +47,7 @@ impl Trace {
         Trace::new(0)
     }
 
+    /// Record one event, evicting the oldest when full.
     pub fn record(&mut self, e: Event) {
         if self.cap == 0 {
             self.dropped += 1;
@@ -51,10 +60,12 @@ impl Trace {
         self.events.push(e);
     }
 
+    /// The retained events, oldest first.
     pub fn events(&self) -> &[Event] {
         &self.events
     }
 
+    /// Events evicted (or discarded while disabled).
     pub fn dropped(&self) -> u64 {
         self.dropped
     }

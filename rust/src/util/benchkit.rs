@@ -9,12 +9,19 @@ use std::time::{Duration, Instant};
 /// Result statistics for one benchmark.
 #[derive(Clone, Debug)]
 pub struct Stats {
+    /// Benchmark name.
     pub name: String,
+    /// Timed samples taken.
     pub samples: usize,
+    /// Mean sample time.
     pub mean: Duration,
+    /// Median sample time.
     pub median: Duration,
+    /// Sample standard deviation.
     pub stddev: Duration,
+    /// Fastest sample.
     pub min: Duration,
+    /// Slowest sample.
     pub max: Duration,
     /// Optional elements-per-iteration for throughput reporting.
     pub elements: Option<u64>,
@@ -41,6 +48,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// A runner with default (or `PSIM_BENCH_QUICK`) settings.
     pub fn new() -> Self {
         // Honour the libtest `--bench` / filter args passively: we accept
         // and ignore them so `cargo bench` works unmodified.

@@ -11,19 +11,27 @@ use std::fmt;
 /// A JSON value. Object keys are ordered (BTreeMap) for stable output.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true`/`false`.
     Bool(bool),
+    /// A number (all JSON numbers are `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys sorted for stable output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Build an object from key/value pairs (keys sort on output).
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -31,10 +39,12 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if it is one exactly.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as usize)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -42,6 +52,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -49,6 +60,7 @@ impl Json {
         }
     }
 
+    /// Object field lookup (None for non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -72,7 +84,9 @@ impl Json {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset of the error.
     pub at: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

@@ -10,10 +10,12 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
         Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (must match the header width).
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(
@@ -27,6 +29,7 @@ impl Table {
         self
     }
 
+    /// Number of data rows.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }

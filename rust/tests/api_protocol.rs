@@ -71,12 +71,29 @@ fn fixed_requests_round_trip() {
             p_macs: 2048,
             strategy: Strategy::MaxOutput,
             mode: ControllerMode::Active,
+            dt: psim::models::DataTypes::default(),
+        },
+        Request::Fusion {
+            networks: vec![zoo::alexnet()],
+            depth: 2,
+            p_macs: 1024,
+            strategy: Strategy::Optimal,
+            mode: ControllerMode::Passive,
+            dt: psim::models::DataTypes::parse("8:8:32:8").unwrap(),
         },
         Request::Analyze {
             network: zoo::resnet18(),
             p_macs: 512,
             strategy: Strategy::OptimalSearch,
             mode: ControllerMode::Passive,
+            dt: psim::models::DataTypes::default(),
+        },
+        Request::Analyze {
+            network: zoo::alexnet(),
+            p_macs: 2048,
+            strategy: Strategy::Optimal,
+            mode: ControllerMode::Active,
+            dt: psim::models::DataTypes::parse("8:8:24:8").unwrap(),
         },
         Request::Tables { table: psim::api::TableKind::Fig2Ascii, faithful: true },
         Request::Infer { image: vec![0.0, 1.5, -2.25] },
@@ -122,14 +139,22 @@ fn random_subset<T: Copy>(rng: &mut Rng, pool: &[T]) -> Vec<T> {
 
 #[test]
 fn random_sweep_requests_round_trip() {
+    const BITS: [&str; 4] = ["8:8:8:8", "8:8:32:8", "16:16:32:16", "8:8:24:8"];
     let mut rng = Rng::new(0x5eed_0001);
     for _ in 0..50 {
-        let spec = SweepSpec::new(random_networks(&mut rng))
+        let mut spec = SweepSpec::new(random_networks(&mut rng))
             .with_macs((0..rng.range(1, 4)).map(|_| rng.range(1, 20000)).collect())
             .with_strategies(random_subset(&mut rng, &STRATEGIES))
             .with_modes(rng.pick(&MODE_SETS).to_vec())
             .with_batches((0..rng.range(1, 3)).map(|_| rng.range(1, 16)).collect())
             .with_fusion((0..rng.range(1, 3)).map(|_| rng.range(1, 4)).collect());
+        if rng.chance(0.5) {
+            spec = spec.with_datatypes(
+                (0..rng.range(1, 3))
+                    .map(|_| psim::models::DataTypes::parse(rng.pick(&BITS)).unwrap())
+                    .collect(),
+            );
+        }
         let workers = rng.chance(0.5).then(|| rng.range(1, 64));
         roundtrip(&Request::Sweep { spec, workers });
     }
@@ -145,13 +170,18 @@ fn random_explore_requests_round_trip() {
     ];
     let mut rng = Rng::new(0x5eed_0002);
     for _ in 0..50 {
-        let spec = ExploreSpec::new(random_networks(&mut rng))
+        let mut spec = ExploreSpec::new(random_networks(&mut rng))
             .with_macs((0..rng.range(1, 4)).map(|_| rng.range(1, 20000)).collect())
             .with_sram(random_subset(&mut rng, &SRAM))
             .with_strategies(random_subset(&mut rng, &STRATEGIES))
             .with_modes(rng.pick(&MODE_SETS).to_vec())
             .with_fusion((0..rng.range(1, 3)).map(|_| rng.range(1, 4)).collect())
             .with_objectives(random_subset(&mut rng, &Objective::ALL));
+        if rng.chance(0.5) {
+            spec = spec
+                .with_datatypes(psim::models::DataTypes::parse("8:8:32:8").unwrap())
+                .with_objectives(vec![Objective::BandwidthBytes, Objective::Utilization]);
+        }
         let workers = rng.chance(0.5).then(|| rng.range(1, 64));
         roundtrip(&Request::Explore { spec, workers });
     }
