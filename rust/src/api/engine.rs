@@ -5,8 +5,18 @@
 //! through), the per-request size caps (previously enforced by `serve`
 //! only — now every frontend gets them), the optional PJRT inference
 //! stack, and per-request metrics.
+//!
+//! For concurrent hosts (the pooled `psim serve`) the engine also
+//! coalesces identical in-flight analytics requests
+//! ([`Engine::handle_line_shared`]): byte-identical request lines that
+//! arrive while the first is still computing share one computation and
+//! fan the reply out, and [`ServeStats`] counts the serve-side lifecycle
+//! (accepted/shed/refused/timed-out connections, coalesced replies,
+//! queue high-water mark) without touching the wire `metrics` reply.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
 
@@ -88,6 +98,84 @@ impl Counters {
     }
 }
 
+/// Serve-side lifecycle counters, owned by the engine so the pooled
+/// server, tests and embedders read one source of truth. Deliberately
+/// NOT part of the wire `{"cmd":"metrics"}` reply: the nine protocol
+/// golden fixtures pin that reply byte-exactly against a fresh engine,
+/// and connection accounting is a host concern, not a protocol one.
+#[derive(Default)]
+pub struct ServeStats {
+    /// Connections admitted into the worker pool (served or queued).
+    pub accepted: AtomicU64,
+    /// Connections shed with a `too_busy` reply (queue full or
+    /// `--max-conns` reached).
+    pub shed: AtomicU64,
+    /// Connections refused because the socket could not be tracked
+    /// (`try_clone` failed, e.g. fd exhaustion) — previously silent.
+    pub refused: AtomicU64,
+    /// Connections closed by the per-request `--timeout-ms` deadline.
+    pub timed_out: AtomicU64,
+    /// Replies written by pool workers (every request on an accepted
+    /// connection produces exactly one).
+    pub lines: AtomicU64,
+    /// Replies answered by another connection's in-flight computation
+    /// (see [`Engine::handle_line_shared`]).
+    pub coalesced: AtomicU64,
+    queue_peak: AtomicU64,
+}
+
+impl ServeStats {
+    /// Record an observed queue depth, keeping the high-water mark.
+    pub fn note_queue_depth(&self, depth: usize) {
+        self.queue_peak.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// The queue high-water mark: the deepest the bounded connection
+    /// queue ever got. Never exceeds the configured bound — the
+    /// backpressure property test asserts exactly that.
+    pub fn queue_peak(&self) -> u64 {
+        self.queue_peak.load(Ordering::Relaxed)
+    }
+
+    /// One human-readable line for the shutdown banner.
+    pub fn summary(&self) -> String {
+        format!(
+            "conns accepted={} shed={} refused={} timed_out={}; \
+             replies={} ({} coalesced); queue peak={}",
+            self.accepted.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.refused.load(Ordering::Relaxed),
+            self.timed_out.load(Ordering::Relaxed),
+            self.lines.load(Ordering::Relaxed),
+            self.coalesced.load(Ordering::Relaxed),
+            self.queue_peak.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// One in-flight coalescable computation: the leader fills `done` and
+/// notifies; followers wait on the condvar and clone the reply.
+#[derive(Default)]
+struct Flight {
+    done: Mutex<Option<(Json, bool)>>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn fill(&self, value: (Json, bool)) {
+        *self.done.lock().unwrap() = Some(value);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> (Json, bool) {
+        let mut done = self.done.lock().unwrap();
+        while done.is_none() {
+            done = self.cv.wait(done).unwrap();
+        }
+        done.clone().unwrap()
+    }
+}
+
 /// The typed facade every frontend dispatches through.
 ///
 /// Create one engine and keep it alive: the grid cache persists across
@@ -100,6 +188,9 @@ pub struct Engine {
     /// per-request failures report the actual cause, not a guess.
     inference_error: Option<String>,
     counters: Counters,
+    serve: ServeStats,
+    /// Coalescing map: request line -> the in-flight computation for it.
+    inflight: Mutex<HashMap<String, Arc<Flight>>>,
 }
 
 impl Engine {
@@ -107,11 +198,17 @@ impl Engine {
     /// (which reports `inference_unavailable`). This is the embedding
     /// entry point for library callers and tests.
     pub fn analytics() -> Engine {
+        Engine::assemble(None, None)
+    }
+
+    fn assemble(service: Option<InferenceService>, inference_error: Option<String>) -> Engine {
         Engine {
             grid: GridEngine::new(),
-            service: None,
-            inference_error: None,
+            service,
+            inference_error,
             counters: Counters::default(),
+            serve: ServeStats::default(),
+            inflight: Mutex::new(HashMap::new()),
         }
     }
 
@@ -129,12 +226,7 @@ impl Engine {
             ),
             Err(e) => (None, Some(format!("{e:#}"))),
         };
-        Ok(Engine {
-            grid: GridEngine::new(),
-            service,
-            inference_error,
-            counters: Counters::default(),
-        })
+        Ok(Engine::assemble(service, inference_error))
     }
 
     /// Whether `{"image": ...}` requests can be served.
@@ -155,6 +247,13 @@ impl Engine {
     /// `(hits, misses)` of the shared layer-shape cache.
     pub fn cache_stats(&self) -> (u64, u64) {
         self.grid.cache_stats()
+    }
+
+    /// The serve-side lifecycle counters (host-facing, never on the
+    /// wire). The pooled server increments these; tests and embedders
+    /// read them.
+    pub fn serve_stats(&self) -> &ServeStats {
+        &self.serve
     }
 
     /// The underlying grid engine (for callers composing their own
@@ -185,6 +284,69 @@ impl Engine {
                 Err(e)
             }
         };
+        Engine::encode(result)
+    }
+
+    /// [`Engine::handle_line`] with in-flight coalescing for concurrent
+    /// hosts: when several connections submit **byte-identical** analytics
+    /// lines (`sweep`/`explore`/`fusion`/`analyze`/`tables`) at the same
+    /// time, exactly one computes and the rest wait for — and share — its
+    /// reply. Stateful and trivial commands (`infer`, `metrics`,
+    /// `version`, `shutdown`) and undecodable lines always dispatch
+    /// directly. The reply bytes are identical to [`Engine::handle_line`]
+    /// for a leader; followers additionally bump
+    /// [`ServeStats::coalesced`] and skip the per-command counter (the
+    /// computation was counted once, by the leader).
+    pub fn handle_line_shared(&self, line: &str) -> (Json, bool) {
+        let req = match codec::decode_line(line) {
+            Ok(req) => req,
+            Err(e) => {
+                self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                return Engine::encode(Err(e));
+            }
+        };
+        if !Engine::coalescable(&req) {
+            return Engine::encode(self.dispatch(&req));
+        }
+        let key = line.trim();
+        let (flight, leader) = {
+            let mut map = self.inflight.lock().unwrap();
+            match map.get(key) {
+                Some(flight) => (flight.clone(), false),
+                None => {
+                    let flight = Arc::new(Flight::default());
+                    map.insert(key.to_string(), flight.clone());
+                    (flight, true)
+                }
+            }
+        };
+        if !leader {
+            self.serve.coalesced.fetch_add(1, Ordering::Relaxed);
+            return flight.wait();
+        }
+        // The guard guarantees the flight is filled and the map entry
+        // removed even if the computation panics — followers must never
+        // wait forever on a leader that died.
+        let guard = FlightGuard { engine: self, key, flight, filled: false };
+        let value = Engine::encode(self.dispatch(&req));
+        guard.fill(value)
+    }
+
+    /// Whether identical concurrent requests may share one computation:
+    /// pure analytics only. `infer`/`metrics`/`shutdown` are stateful and
+    /// `version` is cheaper than the rendezvous.
+    fn coalescable(req: &Request) -> bool {
+        matches!(
+            req,
+            Request::Sweep { .. }
+                | Request::Explore { .. }
+                | Request::Fusion { .. }
+                | Request::Analyze { .. }
+                | Request::Tables { .. }
+        )
+    }
+
+    fn encode(result: Result<Response, ApiError>) -> (Json, bool) {
         match result {
             Ok(resp) => {
                 let stop = matches!(resp, Response::Shutdown);
@@ -332,6 +494,41 @@ impl Engine {
     }
 }
 
+/// Completion guard for a coalescing leader: `fill` publishes the real
+/// reply; if the leader unwinds first, `Drop` publishes an `internal`
+/// error instead so followers wake rather than hang, then removes the
+/// map entry either way.
+struct FlightGuard<'a> {
+    engine: &'a Engine,
+    key: &'a str,
+    flight: Arc<Flight>,
+    filled: bool,
+}
+
+impl FlightGuard<'_> {
+    fn fill(mut self, value: (Json, bool)) -> (Json, bool) {
+        self.complete(value.clone());
+        value
+    }
+
+    fn complete(&mut self, value: (Json, bool)) {
+        if self.filled {
+            return;
+        }
+        self.filled = true;
+        self.flight.fill(value);
+        self.engine.inflight.lock().unwrap().remove(self.key);
+    }
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        let poisoned =
+            ApiError::internal(anyhow::anyhow!("request computation panicked")).to_json();
+        self.complete((poisoned, false));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -457,5 +654,91 @@ mod tests {
         assert_eq!(effective_workers(Some(3)), 3);
         assert_eq!(effective_workers(Some(1000)), 64);
         assert!(effective_workers(None) >= 1);
+    }
+
+    const SWEEP_LINE: &str = r#"{"cmd":"sweep","networks":["AlexNet"],"macs":[512],
+                                 "strategies":["optimal"],"modes":["passive"]}"#;
+
+    #[test]
+    fn shared_handler_matches_handle_line_bytes() {
+        // Leader path: reply bytes identical to the plain handler, for
+        // analytics, trivial and undecodable lines alike.
+        for line in [SWEEP_LINE, r#"{"cmd":"version"}"#, "not json", r#"{"cmd":"tables"}"#] {
+            let (plain, stop_a) = Engine::analytics().handle_line(line);
+            let (shared, stop_b) = Engine::analytics().handle_line_shared(line);
+            assert_eq!(plain.to_string(), shared.to_string(), "{line}");
+            assert_eq!(stop_a, stop_b);
+        }
+    }
+
+    #[test]
+    fn shared_handler_cleans_up_the_inflight_map() {
+        let engine = Engine::analytics();
+        let _ = engine.handle_line_shared(SWEEP_LINE);
+        assert!(engine.inflight.lock().unwrap().is_empty());
+        assert_eq!(engine.serve_stats().coalesced.load(Ordering::Relaxed), 0);
+    }
+
+    /// Deterministic follower rendezvous: pre-insert the flight (what a
+    /// leader does first), start a follower, then publish a marker reply.
+    /// The follower must return the marker — proof it shared the flight
+    /// instead of computing — regardless of thread timing.
+    #[test]
+    fn concurrent_identical_requests_share_one_flight() {
+        let engine = Engine::analytics();
+        let key = SWEEP_LINE.trim();
+        let flight = Arc::new(Flight::default());
+        engine.inflight.lock().unwrap().insert(key.to_string(), flight.clone());
+
+        let marker = Json::obj(vec![("marker", Json::Bool(true))]);
+        std::thread::scope(|scope| {
+            let follower = scope.spawn(|| engine.handle_line_shared(SWEEP_LINE));
+            // Publish the marker; the follower picks it up whether it is
+            // already parked on the condvar or yet to arrive.
+            flight.fill((marker.clone(), false));
+            let (reply, stop) = follower.join().unwrap();
+            assert_eq!(reply.to_string(), marker.to_string());
+            assert!(!stop);
+        });
+        assert_eq!(engine.serve_stats().coalesced.load(Ordering::Relaxed), 1);
+        // The follower never dispatched: no sweep was counted.
+        assert_eq!(engine.counters.sweep.load(Ordering::Relaxed), 0);
+        engine.inflight.lock().unwrap().remove(key);
+    }
+
+    #[test]
+    fn burst_of_identical_requests_agrees_on_the_reply() {
+        let engine = Engine::analytics();
+        let replies: Vec<String> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| scope.spawn(|| engine.handle_line_shared(SWEEP_LINE).0.to_string()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Every reply is a real sweep result... but cache deltas differ
+        // between a cold leader and later runs, so compare the cells only.
+        for reply in &replies {
+            let json = Json::parse(reply).unwrap();
+            assert_eq!(json.get("count").unwrap().as_usize(), Some(1), "{reply}");
+        }
+        assert!(engine.inflight.lock().unwrap().is_empty());
+        let coalesced = engine.serve_stats().coalesced.load(Ordering::Relaxed);
+        let dispatched = engine.counters.sweep.load(Ordering::Relaxed);
+        assert_eq!(coalesced + dispatched, 8, "every request was answered exactly once");
+        assert!(dispatched >= 1);
+    }
+
+    #[test]
+    fn serve_stats_track_peak_and_summarize() {
+        let stats = ServeStats::default();
+        stats.note_queue_depth(3);
+        stats.note_queue_depth(1);
+        assert_eq!(stats.queue_peak(), 3);
+        stats.accepted.fetch_add(2, Ordering::Relaxed);
+        stats.shed.fetch_add(1, Ordering::Relaxed);
+        let line = stats.summary();
+        assert!(line.contains("accepted=2"), "{line}");
+        assert!(line.contains("shed=1"), "{line}");
+        assert!(line.contains("queue peak=3"), "{line}");
     }
 }

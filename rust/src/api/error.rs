@@ -26,6 +26,9 @@ pub enum ErrorCode {
     InferenceUnavailable,
     /// The request was valid but the engine failed to serve it.
     Internal,
+    /// The server is saturated (connection queue full or connection
+    /// limit reached) and shed the request instead of queueing it.
+    TooBusy,
 }
 
 impl ErrorCode {
@@ -36,9 +39,15 @@ impl ErrorCode {
             ErrorCode::TooLarge => "too_large",
             ErrorCode::InferenceUnavailable => "inference_unavailable",
             ErrorCode::Internal => "internal",
+            ErrorCode::TooBusy => "too_busy",
         }
     }
 }
+
+/// The canonical `too_busy` message. One fixed string (pinned by the
+/// `rust/tests/golden/protocol/serve/too_busy.txt` fixture) so shed
+/// replies are byte-identical no matter which saturation path fired.
+pub const TOO_BUSY_MESSAGE: &str = "server at capacity, try again later";
 
 /// A dispatch failure: stable `code`, byte-compatible `message`.
 #[derive(Clone, Debug)]
@@ -76,6 +85,12 @@ impl ApiError {
         ApiError::new(ErrorCode::Internal, format!("{err:#}"))
     }
 
+    /// The canonical load-shedding reply ([`TOO_BUSY_MESSAGE`]): emitted
+    /// by the pooled server when the connection queue is full.
+    pub fn too_busy() -> ApiError {
+        ApiError::new(ErrorCode::TooBusy, TOO_BUSY_MESSAGE)
+    }
+
     /// The wire reply: `{"code": "...", "error": "..."}`. The `error`
     /// field carries the exact pre-facade text; `code` is additive.
     pub fn to_json(&self) -> Json {
@@ -104,6 +119,15 @@ mod tests {
         assert_eq!(ErrorCode::TooLarge.as_str(), "too_large");
         assert_eq!(ErrorCode::InferenceUnavailable.as_str(), "inference_unavailable");
         assert_eq!(ErrorCode::Internal.as_str(), "internal");
+        assert_eq!(ErrorCode::TooBusy.as_str(), "too_busy");
+    }
+
+    #[test]
+    fn too_busy_reply_is_one_fixed_line() {
+        assert_eq!(
+            ApiError::too_busy().to_json().to_string(),
+            r#"{"code":"too_busy","error":"server at capacity, try again later"}"#
+        );
     }
 
     #[test]

@@ -73,6 +73,16 @@
 //!         assert!(doc.contains(line), "PROTOCOL.md {cmd} example drifted from its fixture");
 //!     }
 //! }
+//! // The serve-concurrency section documents load shedding with the
+//! // pinned `too_busy` fixture, byte-for-byte.
+//! let shed = std::fs::read_to_string(
+//!     format!("{root}/rust/tests/golden/protocol/serve/too_busy.txt"),
+//! )
+//! .expect("too_busy fixture");
+//! for line in shed.lines() {
+//!     assert!(doc.contains(line), "PROTOCOL.md too_busy example drifted from its fixture");
+//! }
+//! assert!(doc.contains("too_busy"), "PROTOCOL.md must document the too_busy error code");
 //! ```
 
 pub mod codec;
@@ -81,8 +91,8 @@ pub mod error;
 pub mod request;
 pub mod response;
 
-pub use engine::{Engine, IMAGE_ELEMS, MAX_REQUEST_CELLS};
-pub use error::{ApiError, ErrorCode};
+pub use engine::{Engine, ServeStats, IMAGE_ELEMS, MAX_REQUEST_CELLS};
+pub use error::{ApiError, ErrorCode, TOO_BUSY_MESSAGE};
 pub use request::{protocol_table, Request, TableKind, COMMANDS};
 pub use response::Response;
 

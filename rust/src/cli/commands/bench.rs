@@ -1,0 +1,295 @@
+//! `bench`: a protocol-level load generator against a running
+//! `psim serve`, generalizing the concurrency plumbing `psim infer` uses
+//! (same exact client-share split, scoped threads, atomic accounting) to
+//! arbitrary protocol command mixes.
+//!
+//! Each client thread keeps one JSON-lines connection alive and fires
+//! its share of requests back-to-back, reconnecting after a `too_busy`
+//! shed (the server closes shed connections) or an I/O error. The merged
+//! result is printed as one JSON summary line
+//! ([`crate::report::bench::SUMMARY_KEYS`]) — the format checked in as
+//! `BENCH_serve.json` and schema-validated by CI.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::args::Args;
+use crate::coordinator::parallel::split_shares;
+use crate::report::bench::BenchRun;
+use crate::util::json::Json;
+
+/// Canned request line for one protocol command, sized so a mixed load
+/// exercises the engine without any single request dominating the run.
+fn canned(cmd: &str) -> Option<&'static str> {
+    Some(match cmd {
+        "sweep" => concat!(
+            r#"{"cmd":"sweep","networks":["AlexNet"],"macs":[512],"#,
+            r#""strategies":["optimal"],"modes":["passive"]}"#
+        ),
+        "explore" => concat!(
+            r#"{"cmd":"explore","networks":["AlexNet"],"macs":[512],"sram":["unlimited"],"#,
+            r#""strategies":["optimal"],"modes":["active"]}"#
+        ),
+        "fusion" => r#"{"cmd":"fusion","networks":["AlexNet"],"depth":2,"macs":512}"#,
+        "analyze" => r#"{"cmd":"analyze","network":"AlexNet","macs":512}"#,
+        "tables" => r#"{"cmd":"tables","table":"table3"}"#,
+        "metrics" => r#"{"cmd":"metrics"}"#,
+        "version" => r#"{"cmd":"version"}"#,
+        _ => return None,
+    })
+}
+
+/// Expand a `--mix` string (`"sweep,explore,version"` or weighted
+/// `"sweep:3,version:1"`) into the request-line rotation.
+fn parse_mix(mix: &str) -> Result<Vec<&'static str>> {
+    let mut lines = Vec::new();
+    for token in mix.split(',') {
+        let token = token.trim();
+        let (name, count) = match token.split_once(':') {
+            Some((name, count)) => {
+                let count: usize = count
+                    .parse()
+                    .with_context(|| format!("bad weight in mix token '{token}'"))?;
+                (name, count)
+            }
+            None => (token, 1),
+        };
+        if count == 0 || count > 1000 {
+            bail!("mix weight for '{name}' must be 1..=1000, got {count}");
+        }
+        let Some(line) = canned(name) else {
+            bail!(
+                "unknown mix command '{name}' (known: sweep, explore, fusion, analyze, \
+                 tables, metrics, version)"
+            );
+        };
+        for _ in 0..count {
+            lines.push(line);
+        }
+    }
+    if lines.is_empty() {
+        bail!("--mix expanded to no requests");
+    }
+    Ok(lines)
+}
+
+/// One client's keep-alive connection, re-established on demand.
+struct BenchConn {
+    port: u16,
+    stream: Option<(TcpStream, BufReader<TcpStream>)>,
+}
+
+impl BenchConn {
+    fn new(port: u16) -> BenchConn {
+        BenchConn { port, stream: None }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> std::io::Result<String> {
+        if self.stream.is_none() {
+            let stream = TcpStream::connect(("127.0.0.1", self.port))?;
+            // A liveness guard only: server-side work is bounded by the
+            // request-size cap, but a wedged server must not hang the
+            // bench forever.
+            stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+            let reader = BufReader::new(stream.try_clone()?);
+            self.stream = Some((stream, reader));
+        }
+        let (writer, reader) = self.stream.as_mut().expect("connected above");
+        let result = exchange(writer, reader, line);
+        if result.is_err() {
+            self.stream = None;
+        }
+        result
+    }
+
+    /// Drop the connection (after a shed reply: the server closes it).
+    fn disconnect(&mut self) {
+        self.stream = None;
+    }
+}
+
+/// One request/reply exchange on an established connection.
+fn exchange(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    line: &str,
+) -> std::io::Result<String> {
+    writeln!(writer, "{line}")?;
+    let mut reply = String::new();
+    if reader.read_line(&mut reply)? == 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "server closed the connection",
+        ));
+    }
+    Ok(reply)
+}
+
+#[derive(Default)]
+struct ClientStats {
+    served: u64,
+    shed: u64,
+    errors: u64,
+    attempted: usize,
+    latencies_us: Vec<u64>,
+}
+
+fn run_client(
+    port: u16,
+    mix: &[&'static str],
+    client: usize,
+    share: usize,
+    deadline: Option<Instant>,
+) -> ClientStats {
+    let mut conn = BenchConn::new(port);
+    let mut stats = ClientStats::default();
+    let mut consecutive_failures = 0u32;
+    let mut i = 0usize;
+    loop {
+        let done = match deadline {
+            Some(d) => Instant::now() >= d,
+            None => i >= share,
+        };
+        if done {
+            break;
+        }
+        let line = mix[(client + i) % mix.len()];
+        stats.attempted += 1;
+        let t0 = Instant::now();
+        match conn.roundtrip(line) {
+            Ok(reply) => {
+                stats.latencies_us.push(t0.elapsed().as_micros() as u64);
+                consecutive_failures = 0;
+                match Json::parse(reply.trim()) {
+                    Ok(json) if json.get("code").and_then(Json::as_str) == Some("too_busy") => {
+                        stats.shed += 1;
+                        conn.disconnect();
+                    }
+                    Ok(json) if json.get("error").is_some() => stats.errors += 1,
+                    Ok(_) => stats.served += 1,
+                    Err(_) => stats.errors += 1,
+                }
+            }
+            Err(_) => {
+                stats.errors += 1;
+                consecutive_failures += 1;
+                if consecutive_failures > 3 {
+                    // The server is gone; stop burning the share.
+                    break;
+                }
+            }
+        }
+        i += 1;
+    }
+    stats
+}
+
+/// `psim bench [--port P] [--clients C] [--requests N] [--duration SECS]
+/// [--mix sweep,explore,version] [--out FILE]`
+///
+/// Fires `--requests` total requests (split exactly across `--clients`
+/// connections, like `psim infer`), or runs for `--duration` seconds
+/// when given. Prints the JSON summary to stdout (and `--out FILE`), a
+/// human line to stderr. Exit code 1 when any request errored —
+/// `too_busy` sheds are expected under saturation and do NOT fail the
+/// run.
+pub fn bench(args: &Args) -> Result<i32> {
+    let port = args.opt_usize("port")?.unwrap_or(7878) as u16;
+    let clients = args.opt_usize("clients")?.unwrap_or(4).clamp(1, 256);
+    let requests = args.opt_usize("requests")?.unwrap_or(256);
+    let duration_s = args.opt_usize("duration")?;
+    let mix_str = args.opt("mix").unwrap_or("sweep,explore,version").to_string();
+    let out = args.opt("out").map(String::from);
+    args.reject_unknown()?;
+    let mix = parse_mix(&mix_str)?;
+
+    // Probe before spawning clients: fail fast (and clearly) when no
+    // server is listening.
+    let mut probe = BenchConn::new(port);
+    probe
+        .roundtrip(r#"{"cmd":"version"}"#)
+        .with_context(|| format!("connecting to 127.0.0.1:{port} — is `psim serve` running?"))?;
+    drop(probe);
+
+    let t0 = Instant::now();
+    let deadline = duration_s.map(|s| t0 + Duration::from_secs(s as u64));
+    let shares = split_shares(requests, clients);
+    let per_client: Vec<ClientStats> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shares
+            .iter()
+            .enumerate()
+            .map(|(c, &share)| {
+                let mix = &mix;
+                scope.spawn(move || run_client(port, mix, c, share, deadline))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall = t0.elapsed();
+
+    let mut run = BenchRun {
+        clients,
+        mix: mix_str,
+        requests: 0,
+        served: 0,
+        shed: 0,
+        errors: 0,
+        wall,
+        latencies_us: Vec::new(),
+    };
+    for stats in per_client {
+        run.requests += stats.attempted;
+        run.served += stats.served;
+        run.shed += stats.shed;
+        run.errors += stats.errors;
+        run.latencies_us.extend(stats.latencies_us);
+    }
+
+    let summary = run.summary();
+    println!("{summary}");
+    eprintln!("{}", run.human_line());
+    if let Some(path) = out {
+        std::fs::write(&path, format!("{summary}\n"))
+            .with_context(|| format!("writing {path}"))?;
+    }
+    Ok(if run.errors == 0 { 0 } else { 1 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_expands_tokens_and_weights() {
+        let mix = parse_mix("sweep,version").unwrap();
+        assert_eq!(mix.len(), 2);
+        assert!(mix[0].contains("\"sweep\""));
+        assert!(mix[1].contains("\"version\""));
+        let weighted = parse_mix("version:3,metrics").unwrap();
+        assert_eq!(weighted.len(), 4);
+        assert_eq!(weighted[0], weighted[2]);
+    }
+
+    #[test]
+    fn mix_rejects_unknown_commands_and_bad_weights() {
+        assert!(parse_mix("frobnicate").is_err());
+        assert!(parse_mix("sweep:0").is_err());
+        assert!(parse_mix("sweep:9999").is_err());
+        assert!(parse_mix("sweep:abc").is_err());
+        assert!(parse_mix("").is_err());
+    }
+
+    #[test]
+    fn every_canned_line_is_a_valid_request() {
+        for cmd in ["sweep", "explore", "fusion", "analyze", "tables", "metrics", "version"] {
+            let line = canned(cmd).unwrap();
+            let req = crate::api::codec::decode_line(line)
+                .unwrap_or_else(|e| panic!("canned {cmd} line rejected: {e}"));
+            assert_eq!(req.cmd(), cmd, "canned line dispatches as its own command");
+        }
+        assert!(canned("shutdown").is_none(), "bench must never shut the server down");
+    }
+}

@@ -6,6 +6,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cli::args::Args;
+use crate::coordinator::parallel::split_shares;
 use crate::coordinator::{InferenceService, ServiceConfig};
 use crate::runtime::{ArtifactDir, Tensor};
 
@@ -43,10 +44,10 @@ pub fn infer(args: &Args) -> Result<i32> {
     let t0 = Instant::now();
     let failures = AtomicUsize::new(0);
     std::thread::scope(|scope| {
-        for c in 0..concurrency {
-            // Exact distribution: the first `requests % concurrency`
-            // clients take one extra request; the total is always N.
-            let n = requests / concurrency + usize::from(c < requests % concurrency);
+        // Exact distribution (shared with `psim bench`): the first
+        // `requests % concurrency` clients take one extra request; the
+        // total is always N.
+        for (c, n) in split_shares(requests, concurrency).into_iter().enumerate() {
             let service = &service;
             let failures = &failures;
             scope.spawn(move || {

@@ -1,6 +1,7 @@
 //! Command implementations, one module per command family.
 
 pub mod analyze;
+pub mod bench;
 pub mod explore;
 pub mod fusion;
 pub mod infer;

@@ -2,12 +2,24 @@
 //!
 //! The server is a thin socket layer over [`crate::api::Engine`]: every
 //! line is decoded, dispatched and encoded by the typed facade
-//! ([`Engine::handle_line`]), so the wire protocol, the request-size
-//! caps and the per-request metrics are exactly the ones every other
-//! frontend (CLI commands, `psim request`, library embedders) gets.
-//! When the PJRT artifacts are absent the server starts in
-//! *analytics-only* mode: analytics commands work, inference requests
+//! ([`Engine::handle_line_shared`]), so the wire protocol, the
+//! request-size caps and the per-request metrics are exactly the ones
+//! every other frontend (CLI commands, `psim request`, library
+//! embedders) gets. When the PJRT artifacts are absent the server starts
+//! in *analytics-only* mode: analytics commands work, inference requests
 //! report `inference_unavailable`.
+//!
+//! Concurrency model (PR 6): a **bounded worker pool**, not a thread per
+//! connection. The accept loop admits at most `--max-conns` live
+//! connections and hands them to `--workers` threads through a bounded
+//! [`Bounded`] queue of `--queue` slots. When the queue is full (or the
+//! connection limit is reached) the connection is **shed** immediately
+//! with one stable `{"code":"too_busy",...}` line instead of queueing
+//! unboundedly — the paper's finite-resource discipline applied to the
+//! server itself. `--timeout-ms` bounds how long a worker waits on (or
+//! writes to) a kept-alive connection, so idle peers cannot pin workers.
+//! Identical in-flight analytics requests are coalesced by the engine
+//! (one computation, fan-out replies).
 //!
 //! Protocol (one JSON object per line): see the README's protocol table
 //! (generated from [`crate::api::COMMANDS`]) or [`crate::api::codec`].
@@ -15,22 +27,24 @@
 //! machine-readable code.
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::api::Engine;
+use crate::api::{ApiError, Engine, ServeStats};
 use crate::cli::args::Args;
+use crate::coordinator::pool::Bounded;
 use crate::runtime::Tensor;
 use crate::util::json::Json;
 
 /// Live connection sockets, so `{"cmd":"shutdown"}` can unblock peers
 /// parked in a blocking read. Without this, `thread::scope` in
-/// [`serve_on`] waits forever on idle keep-alive clients (their handler
-/// threads sit in `reader.lines()` until the *client* hangs up).
+/// [`serve_on`] waits forever on idle keep-alive clients (their worker
+/// threads sit in a blocking read until the *client* hangs up).
 #[derive(Default)]
 struct ConnRegistry {
     conns: Mutex<HashMap<u64, TcpStream>>,
@@ -55,7 +69,7 @@ impl ConnRegistry {
     }
 
     /// Shut down every tracked socket: blocked readers see EOF/error and
-    /// their handler threads exit. Sockets stay registered until their
+    /// their worker threads move on. Sockets stay registered until their
     /// handler deregisters; double-shutdown is harmless.
     fn shutdown_all(&self) {
         for conn in self.conns.lock().unwrap().values() {
@@ -64,57 +78,176 @@ impl ConnRegistry {
     }
 }
 
-/// `psim serve [--port P] [--max-batch B]`
+/// Pooled-server knobs, one field per `psim serve` flag. The defaults
+/// are the flag defaults.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads serving connections (`--workers`, clamped 1..=64).
+    pub workers: usize,
+    /// Bounded hand-off queue capacity (`--queue`); 0 sheds every
+    /// connection a worker cannot take immediately.
+    pub queue: usize,
+    /// Live-connection limit, queued + in service (`--max-conns`).
+    pub max_conns: usize,
+    /// Per-request read/write deadline (`--timeout-ms`; `None` = never).
+    pub timeout: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let timeout = Some(Duration::from_secs(30));
+        ServeConfig { workers: 8, queue: 32, max_conns: 256, timeout }
+    }
+}
+
+/// Bind `127.0.0.1:port`, returning the listener and the **actual** port
+/// — with `--port 0` the OS picks an ephemeral one, which is what tests
+/// and bench harnesses should use instead of racing on fixed ports.
+pub fn bind(port: u16) -> Result<(TcpListener, u16)> {
+    let listener =
+        TcpListener::bind(("127.0.0.1", port)).with_context(|| format!("binding port {port}"))?;
+    let actual = listener.local_addr().context("reading bound address")?.port();
+    Ok((listener, actual))
+}
+
+/// `psim serve [--port P] [--max-batch B] [--workers N] [--queue N]
+/// [--max-conns N] [--timeout-ms MS]`
 pub fn serve(args: &Args) -> Result<i32> {
     let port = args.opt_usize("port")?.unwrap_or(7878) as u16;
     let max_batch = args.opt_usize("max-batch")?.unwrap_or(8).clamp(1, 8);
+    let config = ServeConfig {
+        workers: args.opt_usize("workers")?.unwrap_or(8).clamp(1, 64),
+        queue: args.opt_usize("queue")?.unwrap_or(32),
+        max_conns: args.opt_usize("max-conns")?.unwrap_or(256).max(1),
+        timeout: match args.opt_usize("timeout-ms")?.unwrap_or(30_000) {
+            0 => None,
+            ms => Some(Duration::from_millis(ms as u64)),
+        },
+    };
     args.reject_unknown()?;
 
     let engine = Arc::new(Engine::start(max_batch)?);
     if let Some(err) = engine.inference_error() {
         eprintln!("psim serve: inference disabled ({err}); serving design-space queries only");
     }
-    let listener =
-        TcpListener::bind(("127.0.0.1", port)).with_context(|| format!("binding port {port}"))?;
+    let (listener, port) = bind(port)?;
     println!(
-        "psim serve: listening on 127.0.0.1:{port} (max_batch={max_batch}, inference {})",
+        "psim serve: listening on 127.0.0.1:{port} (workers={}, queue={}, max_conns={}, \
+         timeout_ms={}, max_batch={max_batch}, inference {})",
+        config.workers,
+        config.queue,
+        config.max_conns,
+        config.timeout.map_or(0, |t| t.as_millis()),
         if engine.has_inference() { "enabled" } else { "disabled" }
     );
-    serve_on(listener, &engine)?;
+    serve_on(listener, &engine, &config)?;
     let (hits, misses) = engine.cache_stats();
     match engine.service_metrics() {
         Some(summary) => println!("psim serve: shut down. {summary}"),
         None => println!("psim serve: shut down. sweep cache {hits} hits / {misses} misses"),
     }
+    println!("psim serve: {}", engine.serve_stats().summary());
     Ok(0)
 }
 
-/// Accept loop: runs until a `{"cmd":"shutdown"}` request flips the flag.
+/// The pooled accept loop: runs until a `{"cmd":"shutdown"}` request
+/// flips the flag. Public so integration tests (and embedders) can run
+/// the real server on an ephemeral listener with test-sized pools.
+///
+/// Admission control happens here, in one place:
+///
+/// 1. untrackable sockets (`try_clone` failure) are refused and counted
+///    ([`ServeStats::refused`]) — previously a silent drop;
+/// 2. at `max_conns` live connections, or with the hand-off queue full,
+///    the connection is shed with one `too_busy` line
+///    ([`ServeStats::shed`]);
+/// 3. otherwise it is queued for the worker pool
+///    ([`ServeStats::accepted`]).
+///
 /// Guaranteed to return even with idle keep-alive clients connected: the
-/// shutting-down handler closes every registered socket, so no handler
-/// thread can stay parked in a blocking read (regression-tested by
-/// `shutdown_unblocks_idle_connections`).
-fn serve_on(listener: TcpListener, engine: &Arc<Engine>) -> Result<()> {
-    let shutdown = Arc::new(AtomicBool::new(false));
-    let registry = Arc::new(ConnRegistry::default());
+/// shutting-down worker closes every registered socket, so no worker can
+/// stay parked in a blocking read (regression-tested by
+/// `shutdown_unblocks_idle_connections` and `rust/tests/serve_stress.rs`).
+pub fn serve_on(listener: TcpListener, engine: &Arc<Engine>, config: &ServeConfig) -> Result<()> {
+    let shutdown = AtomicBool::new(false);
+    let registry = ConnRegistry::default();
+    let queue: Bounded<(TcpStream, u64)> = Bounded::new(config.queue);
+    let live = AtomicUsize::new(0);
+    let stats = engine.serve_stats();
 
     std::thread::scope(|scope| -> Result<()> {
-        for stream in listener.incoming() {
-            if shutdown.load(Ordering::SeqCst) {
-                break;
-            }
-            let stream = stream?;
-            let engine = engine.clone();
-            let shutdown = shutdown.clone();
-            let registry = registry.clone();
-            scope.spawn(move || {
-                if let Err(e) = handle_conn(stream, &engine, &shutdown, &registry) {
-                    eprintln!("psim serve: connection error: {e:#}");
+        for _ in 0..config.workers.max(1) {
+            scope.spawn(|| {
+                while let Some((stream, id)) = queue.pop() {
+                    if let Err(e) = handle_conn(stream, engine, &shutdown, &registry) {
+                        eprintln!("psim serve: connection error: {e:#}");
+                    }
+                    registry.deregister(id);
+                    live.fetch_sub(1, Ordering::SeqCst);
                 }
             });
         }
-        Ok(())
+
+        let result = accept_loop(&listener, config, stats, &registry, &queue, &live, &shutdown);
+        // Wake the pool: drain whatever is queued, then exit.
+        queue.close();
+        result
     })
+}
+
+/// Admission control, one connection per iteration (see [`serve_on`]).
+fn accept_loop(
+    listener: &TcpListener,
+    config: &ServeConfig,
+    stats: &ServeStats,
+    registry: &ConnRegistry,
+    queue: &Bounded<(TcpStream, u64)>,
+    live: &AtomicUsize,
+    shutdown: &AtomicBool,
+) -> Result<()> {
+    for stream in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = stream?;
+        // Deadlines are set before hand-off so queued time counts
+        // against the connection's first request too.
+        let _ = stream.set_read_timeout(config.timeout);
+        let _ = stream.set_write_timeout(config.timeout);
+        // Register before queueing: shutdown_all must reach sockets
+        // still waiting in the queue.
+        let Some(id) = registry.register(&stream) else {
+            let refused = stats.refused.fetch_add(1, Ordering::Relaxed) + 1;
+            eprintln!(
+                "psim serve: refused untrackable connection \
+                 (try_clone failed; {refused} refused so far)"
+            );
+            continue;
+        };
+        if live.load(Ordering::SeqCst) >= config.max_conns {
+            shed(stream, id, registry, stats);
+            continue;
+        }
+        match queue.try_push((stream, id)) {
+            Ok(depth) => {
+                live.fetch_add(1, Ordering::SeqCst);
+                stats.accepted.fetch_add(1, Ordering::Relaxed);
+                stats.note_queue_depth(depth);
+            }
+            Err((stream, id)) => shed(stream, id, registry, stats),
+        }
+    }
+    Ok(())
+}
+
+/// Shed one connection: a single canonical `too_busy` line, then close.
+/// Constant time and constant memory per connection — saturation can
+/// never grow a backlog.
+fn shed(mut stream: TcpStream, id: u64, registry: &ConnRegistry, stats: &ServeStats) {
+    stats.shed.fetch_add(1, Ordering::Relaxed);
+    let _ = writeln!(stream, "{}", ApiError::too_busy().to_json());
+    let _ = stream.shutdown(Shutdown::Both);
+    registry.deregister(id);
 }
 
 fn handle_conn(
@@ -123,31 +256,25 @@ fn handle_conn(
     shutdown: &AtomicBool,
     registry: &ConnRegistry,
 ) -> Result<()> {
-    let Some(id) = registry.register(&stream) else {
-        // Untrackable (try_clone failed, e.g. fd exhaustion): refuse the
-        // connection rather than serve a socket shutdown can't reach.
-        return Ok(());
-    };
-    // A connection accepted in the shutdown race window is never served:
+    // A connection popped in the shutdown race window is never served:
     // the flag is set before `shutdown_all`, so either our socket was
     // already shut or we observe the flag here.
-    let result = if shutdown.load(Ordering::SeqCst) {
-        Ok(())
-    } else {
-        conn_loop(stream, engine, shutdown, registry)
-    };
-    registry.deregister(id);
-    result
+    if shutdown.load(Ordering::SeqCst) {
+        return Ok(());
+    }
+    conn_loop(stream, engine, shutdown, registry)
 }
 
 /// One connection's request/reply loop: read a line, let the engine
-/// decode + dispatch + encode it, write the reply.
+/// decode + dispatch + encode it (coalescing identical in-flight
+/// analytics requests), write the reply.
 fn conn_loop(
     stream: TcpStream,
     engine: &Engine,
     shutdown: &AtomicBool,
     registry: &ConnRegistry,
 ) -> Result<()> {
+    let stats = engine.serve_stats();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -156,12 +283,18 @@ fn conn_loop(
             // A peer unblocked by shutdown_all surfaces a read error
             // (or EOF, which ends the iterator) — not a failure.
             Err(_) if shutdown.load(Ordering::SeqCst) => break,
+            // The per-request deadline fired: reclaim the worker. A
+            // clean close, counted but not an error.
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                stats.timed_out.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
             Err(e) => return Err(e.into()),
         };
         if line.trim().is_empty() {
             continue;
         }
-        let (reply, stop) = engine.handle_line(&line);
+        let (reply, stop) = engine.handle_line_shared(&line);
         if stop {
             shutdown.store(true, Ordering::SeqCst);
         }
@@ -173,6 +306,7 @@ fn conn_loop(
             }
             return Err(e.into());
         }
+        stats.lines.fetch_add(1, Ordering::Relaxed);
         if shutdown.load(Ordering::SeqCst) {
             // Poke the accept loop so it observes the flag, then unblock
             // every other connection's parked reader.
@@ -266,22 +400,32 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_unblocks_idle_connections() {
-        use std::time::Duration;
+    fn bind_port_zero_reports_the_actual_port() {
+        let (listener, port) = bind(0).unwrap();
+        assert_ne!(port, 0, "ephemeral bind must report the real port");
+        assert_eq!(listener.local_addr().unwrap().port(), port);
+        // A second ephemeral bind coexists: no fixed-port race.
+        let (_other, other_port) = bind(0).unwrap();
+        assert_ne!(other_port, 0);
+        assert_ne!(other_port, port);
+    }
 
+    #[test]
+    fn shutdown_unblocks_idle_connections() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let engine = Arc::new(Engine::analytics());
+        let config = ServeConfig { workers: 4, queue: 8, max_conns: 64, timeout: None };
         let (tx, rx) = std::sync::mpsc::channel();
         let server = std::thread::spawn(move || {
-            let result = serve_on(listener, &engine);
+            let result = serve_on(listener, &engine, &config);
             let _ = tx.send(());
             result
         });
 
         // An idle keep-alive client: connects, sends nothing, stays open.
-        // Pre-fix, its handler thread blocked in `reader.lines()` forever
-        // and `thread::scope` never returned.
+        // Pre-fix, its worker thread blocked in the read loop forever and
+        // `thread::scope` never returned.
         let idle = TcpStream::connect(addr).unwrap();
         std::thread::sleep(Duration::from_millis(50)); // let it park in read
 

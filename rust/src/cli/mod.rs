@@ -3,7 +3,9 @@
 //! Paper regenerators: `table1`, `table2`, `table3`, `fig2`, `validate`.
 //! Exploration: `analyze`, `simulate`, `sweep`, `networks`.
 //! Functional stack: `infer` (batched PJRT inference), `serve` (TCP
-//! JSON-lines server), `client` (load generator against `serve`).
+//! JSON-lines server with a bounded worker pool), `bench` (protocol-level
+//! load generator against `serve`), `client` (legacy inference-only load
+//! generator).
 
 pub mod args;
 pub mod commands;
@@ -69,9 +71,18 @@ Functional stack (PJRT over artifacts/; run `make artifacts` first):
      options: [--requests N] [--concurrency C] [--max-batch B] [--seed S]
   serve               TCP JSON-lines server: inference + design-space
                       queries ({\"cmd\":\"sweep\", ...}); runs without
-                      artifacts in analytics-only mode
-     options: [--port P] [--max-batch B]
-  client              load generator against a running server
+                      artifacts in analytics-only mode; bounded worker
+                      pool sheds load with code:\"too_busy\" when
+                      saturated (--port 0 picks an ephemeral port)
+     options: [--port P] [--max-batch B] [--workers N] [--queue N]
+              [--max-conns N] [--timeout-ms MS]
+  bench               protocol-level load generator against a running
+                      server; prints a JSON summary (throughput, p50/
+                      p95/p99 latency, shed count) -- the
+                      BENCH_serve.json schema
+     options: [--port P] [--clients C] [--requests N] [--duration SECS]
+              [--mix sweep,explore,version] [--out FILE]
+  client              legacy inference-only load generator
      options: [--port P] [--requests N]
   request             one-shot protocol dispatch: decode JSON request
                       lines (--json or stdin), print the JSON replies --
@@ -110,6 +121,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "fusion" => commands::fusion::fusion(&args),
         "infer" => commands::infer::infer(&args),
         "serve" => commands::serve::serve(&args),
+        "bench" => commands::bench::bench(&args),
         "client" => commands::serve::client(&args),
         "request" => commands::request::request(&args),
         other => bail!("unknown command '{other}' — try `psim help`"),
@@ -398,6 +410,13 @@ mod tests {
     fn unknown_flags_are_rejected_per_command() {
         assert!(run(&sv(&["table1", "--frobnicate"])).is_err());
         assert!(run(&sv(&["simulate", "--network", "AlexNet", "--warp", "9"])).is_err());
+    }
+
+    #[test]
+    fn bench_rejects_bad_flags_and_mixes_before_connecting() {
+        // Both fail during argument validation, so no server is needed.
+        assert!(run(&sv(&["bench", "--frobnicate"])).is_err());
+        assert!(run(&sv(&["bench", "--mix", "frobnicate"])).is_err());
     }
 
     #[test]

@@ -23,12 +23,15 @@
 //!   together behind a `submit()` API.
 //! * [`metrics`] — lock-free counters + latency histogram.
 //! * [`parallel`] — scoped-thread fan-out used by sweeps and benches.
+//! * [`pool`] — the bounded connection hand-off queue behind the pooled
+//!   `psim serve` accept loop (non-blocking push = load shedding).
 
 pub mod batcher;
 pub mod engine;
 pub mod job;
 pub mod metrics;
 pub mod parallel;
+pub mod pool;
 pub mod service;
 pub mod weights;
 

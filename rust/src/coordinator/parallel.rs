@@ -45,6 +45,15 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(1)
 }
 
+/// Split `total` work items into exactly `parts` shares that sum to
+/// `total`: the first `total % parts` shares take one extra item. This is
+/// the distribution `psim infer` always used for its client threads,
+/// extracted so the `psim bench` load generator shares it.
+pub fn split_shares(total: usize, parts: usize) -> Vec<usize> {
+    let parts = parts.max(1);
+    (0..parts).map(|c| total / parts + usize::from(c < total % parts)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,6 +77,23 @@ mod tests {
         // More workers than items must not deadlock or panic.
         let out = parallel_map(&[1, 2, 3], 64, |&x| x);
         assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn split_shares_is_exact() {
+        assert_eq!(split_shares(10, 3), vec![4, 3, 3]);
+        assert_eq!(split_shares(3, 5), vec![1, 1, 1, 0, 0]);
+        assert_eq!(split_shares(0, 4), vec![0, 0, 0, 0]);
+        assert_eq!(split_shares(7, 0), vec![7], "zero parts clamps to one");
+        for total in [0usize, 1, 16, 257, 1000] {
+            for parts in 1..=17 {
+                let shares = split_shares(total, parts);
+                assert_eq!(shares.len(), parts);
+                assert_eq!(shares.iter().sum::<usize>(), total, "{total}/{parts}");
+                let (min, max) = (shares.iter().min().unwrap(), shares.iter().max().unwrap());
+                assert!(max - min <= 1, "{total}/{parts}: uneven split {shares:?}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! A bounded MPMC hand-off queue for the pooled `psim serve` accept loop.
+//!
+//! The accept thread pushes connections with [`Bounded::try_push`] — which
+//! **never blocks**: when the queue is at capacity the push fails and the
+//! caller sheds the connection with a `too_busy` reply instead of queueing
+//! unboundedly (the paper's lesson applied to the server: finite resources
+//! need explicit pressure shaping, not implicit infinite buffers). Worker
+//! threads block in [`Bounded::pop`] until an item or [`Bounded::close`]
+//! arrives. Plain `Mutex<VecDeque>` + `Condvar` — no dependencies, no
+//! unsafe, exactly as fast as it needs to be for a connection hand-off.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded queue: non-blocking producers, blocking consumers.
+///
+/// Capacity 0 is legal and means "shed everything" — every `try_push`
+/// fails, which the serve smoke test uses to exercise the shed path
+/// deterministically.
+pub struct Bounded<T> {
+    state: Mutex<State<T>>,
+    takers: Condvar,
+    capacity: usize,
+}
+
+impl<T> Bounded<T> {
+    /// An empty queue holding at most `capacity` items.
+    pub fn new(capacity: usize) -> Bounded<T> {
+        Bounded {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            takers: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Enqueue without blocking. `Ok(depth)` is the queue depth after the
+    /// push (for high-water-mark accounting); `Err(item)` returns the
+    /// item when the queue is full or closed, so the caller can shed it.
+    pub fn try_push(&self, item: T) -> Result<usize, T> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.items.len() >= self.capacity {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        let depth = st.items.len();
+        drop(st);
+        self.takers.notify_one();
+        Ok(depth)
+    }
+
+    /// Dequeue, blocking until an item is available. After [`Bounded::close`]
+    /// the remaining items are drained in order, then every caller gets
+    /// `None` — the worker-thread exit signal.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.takers.wait(st).unwrap();
+        }
+    }
+
+    /// Refuse further pushes and wake every blocked [`Bounded::pop`].
+    /// Already-queued items are still handed out (the serve shutdown path
+    /// relies on workers draining them so their sockets get deregistered).
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.takers.notify_all();
+    }
+
+    /// Items currently queued (racy by nature; for tests and accounting).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The fixed capacity bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn push_pop_fifo() {
+        let q = Bounded::new(4);
+        assert_eq!(q.try_push(1), Ok(1));
+        assert_eq!(q.try_push(2), Ok(2));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn full_queue_rejects_without_blocking() {
+        let q = Bounded::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.try_push(3), Err(3));
+        assert_eq!(q.len(), 2);
+        // Popping frees a slot.
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+    }
+
+    #[test]
+    fn zero_capacity_sheds_everything() {
+        let q = Bounded::new(0);
+        assert_eq!(q.try_push(42), Err(42));
+        assert_eq!(q.capacity(), 0);
+    }
+
+    #[test]
+    fn close_drains_then_yields_none() {
+        let q = Bounded::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        assert_eq!(q.try_push(3), Err(3), "closed queue must refuse pushes");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_unblocks_parked_consumers() {
+        let q = Bounded::<u32>::new(4);
+        let exited = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                scope.spawn(|| {
+                    assert_eq!(q.pop(), None);
+                    exited.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            q.close();
+        });
+        assert_eq!(exited.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn concurrent_producers_and_consumers_conserve_items() {
+        let q = Bounded::new(8);
+        let popped = AtomicUsize::new(0);
+        let shed = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    while q.pop().is_some() {
+                        popped.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+            scope.spawn(|| {
+                for i in 0..1000u32 {
+                    if q.try_push(i).is_err() {
+                        shed.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+                q.close();
+            });
+        });
+        assert_eq!(popped.load(Ordering::SeqCst) + shed.load(Ordering::SeqCst), 1000);
+    }
+}

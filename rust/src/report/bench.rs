@@ -1,0 +1,257 @@
+//! The `psim bench` JSON summary: one flat object per run, the repo's
+//! perf-trajectory record format.
+//!
+//! `BENCH_serve.json` at the repo root is a checked-in summary produced
+//! by `psim bench --out`; CI re-runs a short bench against the pooled
+//! server and validates both files against [`SUMMARY_KEYS`] (schema
+//! gated, numbers recorded). The key list is additionally pinned by the
+//! `rust/tests/golden/protocol/serve/bench_summary.txt` fixture so the
+//! schema cannot drift silently.
+
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::api::PROTOCOL_VERSION;
+use crate::util::benchkit::percentile;
+use crate::util::json::Json;
+
+/// Every key of the bench summary object, sorted (the serializer sorts
+/// object keys, so this is also the output order). Append-only.
+pub const SUMMARY_KEYS: [&str; 14] = [
+    "bench",
+    "clients",
+    "duration_s",
+    "errors",
+    "latency_mean_us",
+    "latency_p50_us",
+    "latency_p95_us",
+    "latency_p99_us",
+    "mix",
+    "protocol",
+    "requests",
+    "served",
+    "shed",
+    "throughput_rps",
+];
+
+/// One completed load-generator run, merged over all client threads.
+pub struct BenchRun {
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// The `--mix` string the run used (verbatim).
+    pub mix: String,
+    /// Requests attempted (= served + shed + errors).
+    pub requests: usize,
+    /// Requests answered with a non-error reply.
+    pub served: u64,
+    /// Requests answered with `code:"too_busy"` (load shedding).
+    pub shed: u64,
+    /// Requests that failed (error reply, I/O error, or malformed reply).
+    pub errors: u64,
+    /// Wall-clock time for the whole run.
+    pub wall: Duration,
+    /// Per-reply round-trip latencies, µs (unsorted; one per reply).
+    pub latencies_us: Vec<u64>,
+}
+
+impl BenchRun {
+    /// The JSON summary object ([`SUMMARY_KEYS`] shape).
+    pub fn summary(&self) -> Json {
+        let mut lat = self.latencies_us.clone();
+        lat.sort_unstable();
+        let mean = if lat.is_empty() {
+            0
+        } else {
+            (lat.iter().sum::<u64>() as f64 / lat.len() as f64).round() as u64
+        };
+        let wall_s = self.wall.as_secs_f64();
+        let throughput = self.served as f64 / wall_s.max(1e-9);
+        Json::obj(vec![
+            ("bench", Json::Str("serve".into())),
+            ("clients", Json::Num(self.clients as f64)),
+            ("duration_s", Json::Num(round_to(wall_s, 1000.0))),
+            ("errors", Json::Num(self.errors as f64)),
+            ("latency_mean_us", Json::Num(mean as f64)),
+            ("latency_p50_us", Json::Num(percentile(&lat, 0.50) as f64)),
+            ("latency_p95_us", Json::Num(percentile(&lat, 0.95) as f64)),
+            ("latency_p99_us", Json::Num(percentile(&lat, 0.99) as f64)),
+            ("mix", Json::Str(self.mix.clone())),
+            ("protocol", Json::Num(PROTOCOL_VERSION as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("throughput_rps", Json::Num(round_to(throughput, 10.0))),
+        ])
+    }
+
+    /// One human-readable line for stderr (the JSON goes to stdout).
+    pub fn human_line(&self) -> String {
+        let mut lat = self.latencies_us.clone();
+        lat.sort_unstable();
+        format!(
+            "bench: {} requests over {} clients in {:.3}s: {} served, {} shed, {} errors; \
+             {:.1} rps, p50/p95/p99 = {}/{}/{} us",
+            self.requests,
+            self.clients,
+            self.wall.as_secs_f64(),
+            self.served,
+            self.shed,
+            self.errors,
+            self.served as f64 / self.wall.as_secs_f64().max(1e-9),
+            percentile(&lat, 0.50),
+            percentile(&lat, 0.95),
+            percentile(&lat, 0.99),
+        )
+    }
+}
+
+fn round_to(x: f64, scale: f64) -> f64 {
+    (x * scale).round() / scale
+}
+
+/// Validate a bench summary object: exact [`SUMMARY_KEYS`] key set,
+/// numeric fields numeric and non-negative, percentiles ordered,
+/// `served + shed + errors == requests`, matching protocol version.
+/// This is what the CI bench smoke step runs against both the fresh
+/// summary and the checked-in `BENCH_serve.json`.
+pub fn validate_summary(summary: &Json) -> Result<()> {
+    let Json::Obj(map) = summary else {
+        bail!("bench summary must be a JSON object");
+    };
+    let keys: Vec<&str> = map.keys().map(String::as_str).collect();
+    ensure!(keys == SUMMARY_KEYS, "bench summary keys {keys:?} != {SUMMARY_KEYS:?}");
+    ensure!(
+        summary.get("bench").and_then(Json::as_str) == Some("serve"),
+        "bench field must be \"serve\""
+    );
+    ensure!(
+        summary.get("mix").and_then(Json::as_str).is_some_and(|m| !m.is_empty()),
+        "mix must be a non-empty string"
+    );
+    ensure!(
+        summary.get("protocol").and_then(Json::as_usize) == Some(PROTOCOL_VERSION),
+        "protocol must be {PROTOCOL_VERSION}"
+    );
+    let num = |key: &str| -> Result<f64> {
+        let Some(n) = summary.get(key).and_then(Json::as_f64) else {
+            bail!("{key} must be a number");
+        };
+        ensure!(n >= 0.0, "{key} must be non-negative, got {n}");
+        Ok(n)
+    };
+    let (p50, p95, p99) =
+        (num("latency_p50_us")?, num("latency_p95_us")?, num("latency_p99_us")?);
+    ensure!(p50 <= p95 && p95 <= p99, "percentiles out of order: {p50}/{p95}/{p99}");
+    num("latency_mean_us")?;
+    num("duration_s")?;
+    num("clients")?;
+    num("throughput_rps")?;
+    let (requests, served, shed, errors) =
+        (num("requests")?, num("served")?, num("shed")?, num("errors")?);
+    ensure!(
+        served + shed + errors == requests,
+        "accounting broken: served {served} + shed {shed} + errors {errors} != requests {requests}"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run() -> BenchRun {
+        BenchRun {
+            clients: 4,
+            mix: "sweep,explore,version".into(),
+            requests: 10,
+            served: 8,
+            shed: 2,
+            errors: 0,
+            wall: Duration::from_millis(250),
+            latencies_us: vec![900, 100, 500, 300, 700, 200, 400, 600, 800, 1000],
+        }
+    }
+
+    #[test]
+    fn summary_matches_the_pinned_key_list() {
+        let summary = run().summary();
+        validate_summary(&summary).unwrap();
+        let Json::Obj(map) = &summary else { panic!("not an object") };
+        let keys: Vec<&str> = map.keys().map(String::as_str).collect();
+        assert_eq!(keys, SUMMARY_KEYS);
+        // ... and the key list matches the golden fixture, one key per
+        // line, so the schema is pinned on disk for CI.
+        let fixture = concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/tests/golden/protocol/serve/bench_summary.txt"
+        );
+        let text = std::fs::read_to_string(fixture).expect("bench_summary fixture");
+        let pinned: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        assert_eq!(pinned, SUMMARY_KEYS, "fixture drifted from SUMMARY_KEYS");
+    }
+
+    #[test]
+    fn summary_computes_exact_percentiles_and_throughput() {
+        let summary = run().summary();
+        assert_eq!(summary.get("latency_p50_us").unwrap().as_usize(), Some(500));
+        assert_eq!(summary.get("latency_p95_us").unwrap().as_usize(), Some(1000));
+        assert_eq!(summary.get("latency_p99_us").unwrap().as_usize(), Some(1000));
+        assert_eq!(summary.get("latency_mean_us").unwrap().as_usize(), Some(550));
+        // 8 served / 0.25 s = 32 rps; duration rounds to 3 decimals.
+        assert_eq!(summary.get("throughput_rps").unwrap().as_f64(), Some(32.0));
+        assert_eq!(summary.get("duration_s").unwrap().as_f64(), Some(0.25));
+        assert_eq!(summary.get("served").unwrap().as_usize(), Some(8));
+        assert_eq!(summary.get("shed").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_summaries() {
+        // Wrong accounting.
+        let mut bad = run();
+        bad.errors = 5;
+        assert!(validate_summary(&bad.summary()).is_err());
+        // Missing key.
+        let Json::Obj(mut map) = run().summary() else { panic!() };
+        map.remove("shed");
+        assert!(validate_summary(&Json::Obj(map)).is_err());
+        // Extra key.
+        let Json::Obj(mut map) = run().summary() else { panic!() };
+        map.insert("zzz_extra".into(), Json::Num(1.0));
+        assert!(validate_summary(&Json::Obj(map)).is_err());
+        // Wrong bench tag.
+        let Json::Obj(mut map) = run().summary() else { panic!() };
+        map.insert("bench".into(), Json::Str("other".into()));
+        assert!(validate_summary(&Json::Obj(map)).is_err());
+        // Percentiles out of order.
+        let Json::Obj(mut map) = run().summary() else { panic!() };
+        map.insert("latency_p50_us".into(), Json::Num(9999.0));
+        assert!(validate_summary(&Json::Obj(map)).is_err());
+        // Not an object at all.
+        assert!(validate_summary(&Json::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn empty_run_is_still_schema_valid() {
+        let empty = BenchRun {
+            clients: 1,
+            mix: "version".into(),
+            requests: 0,
+            served: 0,
+            shed: 0,
+            errors: 0,
+            wall: Duration::from_millis(1),
+            latencies_us: vec![],
+        };
+        validate_summary(&empty.summary()).unwrap();
+        assert_eq!(empty.summary().get("latency_p99_us").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn human_line_reports_the_headline_numbers() {
+        let line = run().human_line();
+        assert!(line.contains("8 served"), "{line}");
+        assert!(line.contains("2 shed"), "{line}");
+        assert!(line.contains("p50/p95/p99 = 500/1000/1000 us"), "{line}");
+    }
+}

@@ -10,8 +10,11 @@
 //! * [`frontier`] — Pareto-frontier table/summary for `psim explore`.
 //! * [`fusion`] — fused-vs-unfused bandwidth table for `psim fusion`.
 //! * [`analyze`] — per-layer partition/bandwidth table for `psim analyze`.
+//! * [`bench`] — the `psim bench` JSON summary (the `BENCH_serve.json`
+//!   perf-trajectory schema) and its CI validator.
 
 pub mod analyze;
+pub mod bench;
 pub mod compare;
 pub mod fig2;
 pub mod frontier;

@@ -144,6 +144,20 @@ impl Bench {
     }
 }
 
+/// Nearest-rank percentile over a **sorted ascending** sample set:
+/// `percentile(s, 0.5)` is the median, `percentile(s, 0.99)` the p99.
+/// Exact sample values (no interpolation, no histogram bucketing — the
+/// `coordinator::Metrics` histogram rounds to bucket bounds; `psim bench`
+/// wants the raw samples it actually measured). Empty input yields 0.
+pub fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let n = sorted.len();
+    let rank = ((p * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
 fn human(d: Duration) -> String {
     let ns = d.as_nanos();
     if ns < 1_000 {
@@ -198,6 +212,20 @@ mod tests {
         let mut b = Bench::new();
         let s = b.run_throughput("sum-1k", 1000, || (0..1000u64).sum::<u64>()).clone();
         assert!(s.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&s, 0.50), 50);
+        assert_eq!(percentile(&s, 0.95), 95);
+        assert_eq!(percentile(&s, 0.99), 99);
+        assert_eq!(percentile(&s, 1.0), 100);
+        assert_eq!(percentile(&s, 0.0), 1);
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[7], 0.99), 7);
+        // Nearest-rank on a 3-sample set: p50 is the 2nd sample.
+        assert_eq!(percentile(&[10, 20, 30], 0.5), 20);
     }
 
     #[test]

@@ -1,0 +1,400 @@
+//! Stress / regression suite for the pooled `psim serve` (PR 6):
+//!
+//! * full-load stress: 32 concurrent clients over a mixed workload plus
+//!   idle keep-alives — every request gets a reply, nothing is shed
+//!   below the configured bounds, and the served-request counters add up
+//!   exactly;
+//! * shutdown under load returns within a hard deadline and closes every
+//!   peer cleanly;
+//! * backpressure property: with a pool of 1 worker and a queue of 1,
+//!   a burst of K connections yields exactly `accepted + shed == K`,
+//!   every shed reply is the pinned `too_busy` fixture line, and the
+//!   queue high-water mark never exceeds the bound;
+//! * per-request timeouts reclaim workers pinned by idle peers;
+//! * all nine PR-4 protocol fixtures replay **byte-identical** through
+//!   the pooled server;
+//! * the `psim bench` CLI produces a schema-valid summary against the
+//!   pooled server and fails cleanly without one.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use psim::api::{Engine, Request, Response, TOO_BUSY_MESSAGE};
+use psim::cli::commands::serve::{bind, serve_on, ServeConfig};
+use psim::util::json::Json;
+
+const VERSION_LINE: &str = r#"{"cmd":"version"}"#;
+const METRICS_LINE: &str = r#"{"cmd":"metrics"}"#;
+const SHUTDOWN_LINE: &str = r#"{"cmd":"shutdown"}"#;
+const SWEEP_LINE: &str = concat!(
+    r#"{"cmd":"sweep","networks":["AlexNet"],"macs":[512],"#,
+    r#""strategies":["optimal"],"modes":["passive"]}"#
+);
+const EXPLORE_LINE: &str = concat!(
+    r#"{"cmd":"explore","networks":["AlexNet"],"macs":[512],"sram":["unlimited"],"#,
+    r#""strategies":["optimal"],"modes":["active"]}"#
+);
+/// The stress workload: two real analytics computations (coalescable)
+/// and two trivial commands, rotated per client so every client touches
+/// every kind.
+const MIX: [&str; 4] = [SWEEP_LINE, VERSION_LINE, EXPLORE_LINE, METRICS_LINE];
+
+/// A real pooled server on an ephemeral port, with the engine kept
+/// reachable for counter assertions after shutdown.
+struct Server {
+    addr: SocketAddr,
+    engine: Arc<Engine>,
+    done: mpsc::Receiver<()>,
+    handle: thread::JoinHandle<()>,
+}
+
+impl Server {
+    fn start(config: ServeConfig) -> Server {
+        let (listener, _port) = bind(0).expect("ephemeral bind");
+        let addr = listener.local_addr().unwrap();
+        let engine = Arc::new(Engine::analytics());
+        let (tx, done) = mpsc::channel();
+        let handle = thread::spawn({
+            let engine = engine.clone();
+            move || {
+                serve_on(listener, &engine, &config).expect("server failed");
+                let _ = tx.send(());
+            }
+        });
+        Server { addr, engine, done, handle }
+    }
+
+    /// Wait for a clean server exit; panics loudly past the deadline
+    /// (the regression this suite exists to catch is exactly "shutdown
+    /// hangs forever").
+    fn join_within(self, deadline: Duration) -> Arc<Engine> {
+        self.done.recv_timeout(deadline).expect("server did not shut down within the deadline");
+        self.handle.join().expect("server thread panicked");
+        self.engine
+    }
+}
+
+/// One JSON-lines client connection with a liveness read timeout.
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Client { writer: stream.try_clone().unwrap(), reader: BufReader::new(stream) }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").expect("send");
+    }
+
+    /// Read one reply line; EOF is an error (callers that expect a clean
+    /// close use [`Client::expect_close`] instead).
+    fn read_reply(&mut self) -> std::io::Result<String> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ));
+        }
+        Ok(line.trim_end().to_string())
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.send(line);
+        self.read_reply().expect("reply")
+    }
+
+    fn try_roundtrip(&mut self, line: &str) -> std::io::Result<String> {
+        writeln!(self.writer, "{line}")?;
+        self.read_reply()
+    }
+
+    /// The server must close this connection without sending anything
+    /// more: EOF and a reset both qualify, extra data does not.
+    fn expect_close(&mut self) {
+        let mut rest = String::new();
+        match self.reader.read_line(&mut rest) {
+            Ok(0) | Err(_) => {}
+            Ok(_) => panic!("expected a clean close, got extra data: {rest:?}"),
+        }
+    }
+}
+
+/// Poll `cond` (e.g. a server-side counter) up to a 5 s deadline.
+fn wait_until(what: &str, cond: impl Fn() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Tentpole stress test: 32 concurrent clients x 4 mixed requests each,
+/// with 4 idle keep-alive connections pinning workers the whole time.
+/// Every request gets a valid non-error reply, nothing is shed (the
+/// bounds are sized above the offered load), shutdown lands within the
+/// deadline with the idle peers still connected, and the engine's
+/// counters account for every reply exactly once.
+#[test]
+fn stress_full_load_every_request_replied() {
+    let config = ServeConfig { workers: 8, queue: 64, max_conns: 128, timeout: None };
+    let server = Server::start(config);
+    let addr = server.addr;
+
+    // Idle keep-alives: connect, send nothing, stay open. Fewer than the
+    // worker count, so they can pin workers without starving the pool.
+    let mut idles: Vec<Client> = (0..4).map(|_| Client::connect(addr)).collect();
+
+    let replies: Vec<Vec<String>> = thread::scope(|scope| {
+        let handles: Vec<_> = (0..32)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr);
+                    (0..4).map(|i| client.roundtrip(MIX[(c + i) % MIX.len()])).collect()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    assert_eq!(replies.iter().map(Vec::len).sum::<usize>(), 128);
+    for reply in replies.iter().flatten() {
+        let json = Json::parse(reply).expect("every reply is one JSON line");
+        assert!(json.get("error").is_none(), "unexpected error reply: {reply}");
+    }
+
+    // Shutdown with the idle connections still open: the pre-PR-3 hang.
+    let mut ctl = Client::connect(addr);
+    let bye = ctl.roundtrip(SHUTDOWN_LINE);
+    assert!(bye.contains("true"), "{bye}");
+    let engine = server.join_within(Duration::from_secs(10));
+    for idle in &mut idles {
+        idle.expect_close();
+    }
+
+    let stats = engine.serve_stats();
+    assert_eq!(stats.accepted.load(Ordering::Relaxed), 37, "32 clients + 4 idle + ctl");
+    assert_eq!(stats.shed.load(Ordering::Relaxed), 0, "load was below every bound");
+    assert_eq!(stats.refused.load(Ordering::Relaxed), 0);
+    assert_eq!(stats.timed_out.load(Ordering::Relaxed), 0);
+    assert_eq!(stats.lines.load(Ordering::Relaxed), 129, "128 client replies + shutdown ack");
+    assert!(stats.queue_peak() <= 64, "queue peak {} exceeded the bound", stats.queue_peak());
+
+    // Counter accounting: every wire reply was either dispatched (and
+    // counted per command) or coalesced onto another dispatch — plus the
+    // one Metrics dispatch below. No request errored.
+    let Response::Metrics { requests, .. } = engine.dispatch(&Request::Metrics).unwrap() else {
+        panic!("not a metrics response");
+    };
+    let dispatched: u64 = requests.iter().filter(|(n, _)| *n != "errors").map(|&(_, n)| n).sum();
+    let coalesced = stats.coalesced.load(Ordering::Relaxed);
+    assert_eq!(dispatched + coalesced, 129 + 1, "every reply accounted for exactly once");
+    assert!(requests.iter().all(|(n, _)| *n != "errors"), "no request errored: {requests:?}");
+}
+
+/// `{"cmd":"shutdown"}` mid-load: clients still hammering the server are
+/// cut off cleanly (EOF or reset, never a hang) and the server returns
+/// within the deadline.
+#[test]
+fn shutdown_mid_load_returns_within_deadline() {
+    let config = ServeConfig { workers: 4, queue: 32, max_conns: 64, timeout: None };
+    let server = Server::start(config);
+    let addr = server.addr;
+
+    thread::scope(|scope| {
+        for _ in 0..8 {
+            scope.spawn(move || {
+                let mut client = Client::connect(addr);
+                for _ in 0..200 {
+                    // Mid-shutdown a request may be answered, cut off, or
+                    // refused — an error is a clean end, not a failure.
+                    if client.try_roundtrip(VERSION_LINE).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        thread::sleep(Duration::from_millis(30));
+        let mut ctl = Client::connect(addr);
+        let bye = ctl.roundtrip(SHUTDOWN_LINE);
+        assert!(bye.contains("true"), "{bye}");
+    });
+
+    let engine = server.join_within(Duration::from_secs(10));
+    let stats = engine.serve_stats();
+    assert_eq!(stats.shed.load(Ordering::Relaxed), 0, "bounds were above the offered load");
+    assert!(stats.lines.load(Ordering::Relaxed) >= 1);
+}
+
+/// Backpressure property: 1 worker + queue of 1. Connection A pins the
+/// worker, connection B fills the queue, and every connection beyond the
+/// bound is shed immediately with the pinned `too_busy` fixture bytes —
+/// `accepted + shed == K`, and the queue high-water mark never exceeds
+/// its bound.
+#[test]
+fn saturation_sheds_with_too_busy_and_the_queue_stays_bounded() {
+    let config = ServeConfig { workers: 1, queue: 1, max_conns: 64, timeout: None };
+    let server = Server::start(config);
+    let engine = server.engine.clone();
+
+    // A occupies the only worker (kept alive after its reply).
+    let mut a = Client::connect(server.addr);
+    assert!(a.roundtrip(VERSION_LINE).contains("protocol"));
+
+    // B occupies the only queue slot; its shutdown request sits buffered
+    // in the socket until a worker finally pops it.
+    let mut b = Client::connect(server.addr);
+    b.send(SHUTDOWN_LINE);
+    wait_until("connection B to be queued", || {
+        engine.serve_stats().accepted.load(Ordering::Relaxed) == 2
+    });
+
+    // Saturated: every further connection is shed with the exact fixture
+    // line, then closed. (Shed clients must not send first — the server
+    // replies before reading, and unread data would reset the close.)
+    let fixture = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/golden/protocol/serve/too_busy.txt"
+    ))
+    .expect("too_busy fixture");
+    let expected = fixture.lines().nth(1).expect("fixture reply line");
+    assert!(expected.contains(TOO_BUSY_MESSAGE), "fixture drifted from the API constant");
+    for i in 0..14 {
+        let mut shed = Client::connect(server.addr);
+        assert_eq!(shed.read_reply().unwrap(), expected, "shed reply #{i}");
+        shed.expect_close();
+    }
+
+    let stats = engine.serve_stats();
+    let (accepted, shed) =
+        (stats.accepted.load(Ordering::Relaxed), stats.shed.load(Ordering::Relaxed));
+    assert_eq!(accepted, 2);
+    assert_eq!(shed, 14);
+    assert_eq!(accepted + shed, 16, "burst of 16 split exactly into accepted + shed");
+    assert_eq!(stats.queue_peak(), 1, "queue depth never exceeded its bound of 1");
+
+    // Freeing the worker drains the queue: B's buffered shutdown is
+    // finally served and brings the server down.
+    drop(a);
+    let bye = b.read_reply().expect("queued connection served after the worker freed up");
+    assert!(bye.contains("true"), "{bye}");
+    server.join_within(Duration::from_secs(10));
+}
+
+/// `--timeout-ms`: an idle peer cannot pin a worker forever — its read
+/// deadline fires, the connection is closed and counted, and the worker
+/// serves the next connection.
+#[test]
+fn per_request_timeout_reclaims_pinned_workers() {
+    let timeout = Some(Duration::from_millis(150));
+    let config = ServeConfig { workers: 1, queue: 4, max_conns: 8, timeout };
+    let server = Server::start(config);
+    let engine = server.engine.clone();
+
+    let mut idle = Client::connect(server.addr);
+    idle.expect_close(); // blocks until the server-side deadline fires
+
+    let mut active = Client::connect(server.addr);
+    let v = active.roundtrip(VERSION_LINE);
+    assert!(v.contains("protocol"), "worker was not reclaimed: {v}");
+    assert!(engine.serve_stats().timed_out.load(Ordering::Relaxed) >= 1);
+
+    let bye = active.roundtrip(SHUTDOWN_LINE);
+    assert!(bye.contains("true"), "{bye}");
+    server.join_within(Duration::from_secs(10));
+}
+
+/// Golden regression: all nine PR-4 protocol fixtures replay byte-
+/// identical through the pooled server (fresh engine per fixture, like
+/// the fixtures were pinned).
+#[test]
+fn protocol_fixtures_replay_byte_identical_through_the_pooled_server() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/protocol");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(dir).expect("fixture dir") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("txt") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        let request = lines.next().expect("fixture request line");
+        let expected = lines.next().expect("fixture reply line");
+
+        let config = ServeConfig { workers: 2, queue: 8, max_conns: 16, timeout: None };
+        let server = Server::start(config);
+        let mut client = Client::connect(server.addr);
+        let reply = client.roundtrip(request);
+        assert_eq!(reply, expected, "fixture {} drifted through the pooled server", path.display());
+        if path.file_stem().and_then(|s| s.to_str()) != Some("shutdown") {
+            let bye = client.roundtrip(SHUTDOWN_LINE);
+            assert!(bye.contains("true"), "{bye}");
+        }
+        server.join_within(Duration::from_secs(10));
+        seen += 1;
+    }
+    assert_eq!(seen, 9, "expected all nine pinned fixtures to replay");
+}
+
+/// End-to-end: the `psim bench` CLI against a live pooled server writes
+/// a summary that passes the CI schema validator with exact accounting.
+#[test]
+fn bench_cli_produces_a_valid_summary_against_the_pooled_server() {
+    let config = ServeConfig { workers: 4, queue: 16, max_conns: 64, timeout: None };
+    let server = Server::start(config);
+    let out = std::env::temp_dir().join("psim_stress_bench_out.json");
+    let _ = std::fs::remove_file(&out);
+
+    let port = server.addr.port().to_string();
+    let argv: Vec<String> = [
+        "bench",
+        "--port",
+        port.as_str(),
+        "--clients",
+        "2",
+        "--requests",
+        "20",
+        "--mix",
+        "version,sweep",
+        "--out",
+        out.to_str().unwrap(),
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    assert_eq!(psim::cli::run(&argv).unwrap(), 0);
+
+    let text = std::fs::read_to_string(&out).expect("--out file written");
+    let summary = Json::parse(text.trim()).expect("summary is one JSON line");
+    psim::report::bench::validate_summary(&summary).expect("summary passes the CI validator");
+    assert_eq!(summary.get("requests").unwrap().as_usize(), Some(20));
+    assert_eq!(summary.get("served").unwrap().as_usize(), Some(20));
+    assert_eq!(summary.get("errors").unwrap().as_usize(), Some(0));
+    let _ = std::fs::remove_file(&out);
+
+    let mut ctl = Client::connect(server.addr);
+    let bye = ctl.roundtrip(SHUTDOWN_LINE);
+    assert!(bye.contains("true"), "{bye}");
+    server.join_within(Duration::from_secs(10));
+}
+
+/// Without a server, `psim bench` fails fast with a pointed error
+/// instead of spawning clients that all time out.
+#[test]
+fn bench_cli_fails_cleanly_without_a_server() {
+    let (listener, port) = bind(0).unwrap();
+    drop(listener); // the port is now (very likely) unbound
+    let port = port.to_string();
+    let args = ["bench", "--port", port.as_str(), "--requests", "1"];
+    let argv: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+    let err = psim::cli::run(&argv).unwrap_err();
+    assert!(err.to_string().contains("is `psim serve` running"), "{err}");
+}
