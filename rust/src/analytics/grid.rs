@@ -687,8 +687,16 @@ impl GridEngine {
                 }
             }
         }
+        // Per-cell wall time feeds the host-side observability registry
+        // (`grid_cell_eval_us`); the cells themselves stay byte-identical.
+        let cell_hist = crate::obs::registry::global().histogram("grid_cell_eval_us");
         let cells = parallel_map(&jobs, workers.max(1), |&(ni, p, s, mode, b, f, dt)| {
-            self.cell_fused_dt(&spec.networks[ni], p, s, mode, b, f, &dt)
+            let started = std::time::Instant::now();
+            let cell = self.cell_fused_dt(&spec.networks[ni], p, s, mode, b, f, &dt);
+            let us = started.elapsed().as_micros() as u64;
+            cell_hist.record(us);
+            crate::obs::span::global().record_us(crate::obs::span::stage::GRID_CELL, us);
+            cell
         });
         GridResult { cells }
     }

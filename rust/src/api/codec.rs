@@ -205,6 +205,7 @@ pub fn decode_request(msg: &Json) -> Result<Request, ApiError> {
             "analyze" => decode_analyze(msg).map_err(ApiError::bad),
             "tables" => decode_tables(msg).map_err(ApiError::bad),
             "metrics" => Ok(Request::Metrics),
+            "stats" => Ok(Request::Stats),
             "version" => Ok(Request::Version),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(ApiError::bad_msg(format!("unknown cmd '{other}'"))),
@@ -399,6 +400,7 @@ pub fn encode_request(req: &Request) -> Json {
             Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
         )]),
         Request::Metrics => Json::obj(vec![cmd("metrics"), proto]),
+        Request::Stats => Json::obj(vec![cmd("stats"), proto]),
         Request::Version => Json::obj(vec![cmd("version"), proto]),
         Request::Shutdown => Json::obj(vec![cmd("shutdown"), proto]),
     }
@@ -423,6 +425,7 @@ mod tests {
     #[test]
     fn decode_dispatches_on_cmd() {
         assert!(matches!(decode_line(r#"{"cmd":"metrics"}"#), Ok(Request::Metrics)));
+        assert!(matches!(decode_line(r#"{"cmd":"stats"}"#), Ok(Request::Stats)));
         assert!(matches!(decode_line(r#"{"cmd":"version"}"#), Ok(Request::Version)));
         assert!(matches!(decode_line(r#"{"cmd":"shutdown"}"#), Ok(Request::Shutdown)));
         let err = decode_line(r#"{"cmd":"bogus"}"#).unwrap_err();

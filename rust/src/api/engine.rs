@@ -13,10 +13,18 @@
 //! fan the reply out, and [`ServeStats`] counts the serve-side lifecycle
 //! (accepted/shed/refused/timed-out connections, coalesced replies,
 //! queue high-water mark) without touching the wire `metrics` reply.
+//!
+//! Every engine owns a private [`Registry`]: request counters, serve
+//! counters, per-command latency histograms and the pool queue-wait
+//! histogram all live there, and `{"cmd":"stats"}` renders it as one
+//! versioned sorted-key snapshot. Per-engine (not process-global) on
+//! purpose — `cargo test` runs many engines concurrently in one
+//! process, and the pinned stats fixture needs a fresh engine to be
+//! byte-reproducible.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -24,6 +32,9 @@ use crate::analytics::grid::GridEngine;
 use crate::coordinator::parallel::default_workers;
 use crate::coordinator::{InferenceService, ServiceConfig};
 use crate::dse::explore as dse_explore;
+use crate::obs::metrics::{Counter, Gauge, Histogram};
+use crate::obs::registry::{register_catalog, Registry};
+use crate::obs::span;
 use crate::report::{analyze as report_analyze, fig2, fusion as report_fusion, tables};
 use crate::runtime::{ArtifactDir, Tensor};
 use crate::util::json::Json;
@@ -48,23 +59,43 @@ pub fn effective_workers(requested: Option<usize>) -> usize {
 }
 
 /// Per-command request counters (and an error total), surfaced through
-/// `{"cmd":"metrics"}`.
-#[derive(Default)]
+/// `{"cmd":"metrics"}`. Registry-backed: each slot is the
+/// `api_requests_<cmd>` counter of the engine's [`Registry`], so the
+/// legacy `metrics` reply and the `stats` snapshot read one source of
+/// truth.
 struct Counters {
-    sweep: AtomicU64,
-    explore: AtomicU64,
-    fusion: AtomicU64,
-    analyze: AtomicU64,
-    tables: AtomicU64,
-    infer: AtomicU64,
-    metrics: AtomicU64,
-    version: AtomicU64,
-    shutdown: AtomicU64,
-    errors: AtomicU64,
+    sweep: Arc<Counter>,
+    explore: Arc<Counter>,
+    fusion: Arc<Counter>,
+    analyze: Arc<Counter>,
+    tables: Arc<Counter>,
+    infer: Arc<Counter>,
+    metrics: Arc<Counter>,
+    stats: Arc<Counter>,
+    version: Arc<Counter>,
+    shutdown: Arc<Counter>,
+    errors: Arc<Counter>,
 }
 
 impl Counters {
-    fn slots(&self) -> [(&'static str, &AtomicU64); 10] {
+    fn new(reg: &Registry) -> Counters {
+        let c = |cmd: &str| reg.counter(&format!("api_requests_{cmd}"));
+        Counters {
+            sweep: c("sweep"),
+            explore: c("explore"),
+            fusion: c("fusion"),
+            analyze: c("analyze"),
+            tables: c("tables"),
+            infer: c("infer"),
+            metrics: c("metrics"),
+            stats: c("stats"),
+            version: c("version"),
+            shutdown: c("shutdown"),
+            errors: reg.counter("api_errors"),
+        }
+    }
+
+    fn slots(&self) -> [(&'static str, &Arc<Counter>); 11] {
         [
             ("sweep", &self.sweep),
             ("explore", &self.explore),
@@ -73,6 +104,7 @@ impl Counters {
             ("tables", &self.tables),
             ("infer", &self.infer),
             ("metrics", &self.metrics),
+            ("stats", &self.stats),
             ("version", &self.version),
             ("shutdown", &self.shutdown),
             ("errors", &self.errors),
@@ -82,7 +114,7 @@ impl Counters {
     fn count(&self, cmd: &str) {
         for (name, slot) in self.slots() {
             if name == cmd {
-                slot.fetch_add(1, Ordering::Relaxed);
+                slot.inc();
                 return;
             }
         }
@@ -92,49 +124,111 @@ impl Counters {
     fn snapshot(&self) -> Vec<(&'static str, u64)> {
         self.slots()
             .into_iter()
-            .map(|(name, slot)| (name, slot.load(Ordering::Relaxed)))
+            .map(|(name, slot)| (name, slot.get()))
             .filter(|&(_, n)| n > 0)
             .collect()
     }
 }
 
+/// Per-command dispatch-latency histograms (`api_latency_us_<cmd>`),
+/// recorded by [`Engine::dispatch`] *after* `dispatch_inner` returns so
+/// a stats snapshot never observes its own in-flight dispatch (the
+/// pinned stats fixture depends on that).
+struct CommandLatency {
+    slots: [(&'static str, Arc<Histogram>); 10],
+}
+
+impl CommandLatency {
+    fn new(reg: &Registry) -> CommandLatency {
+        let h = |cmd: &str| reg.histogram(&format!("api_latency_us_{cmd}"));
+        CommandLatency {
+            slots: [
+                ("sweep", h("sweep")),
+                ("explore", h("explore")),
+                ("fusion", h("fusion")),
+                ("analyze", h("analyze")),
+                ("tables", h("tables")),
+                ("infer", h("infer")),
+                ("metrics", h("metrics")),
+                ("stats", h("stats")),
+                ("version", h("version")),
+                ("shutdown", h("shutdown")),
+            ],
+        }
+    }
+
+    fn observe(&self, cmd: &str, us: u64) {
+        for (name, hist) in &self.slots {
+            if *name == cmd {
+                hist.record(us);
+                return;
+            }
+        }
+    }
+}
+
 /// Serve-side lifecycle counters, owned by the engine so the pooled
-/// server, tests and embedders read one source of truth. Deliberately
-/// NOT part of the wire `{"cmd":"metrics"}` reply: the nine protocol
-/// golden fixtures pin that reply byte-exactly against a fresh engine,
-/// and connection accounting is a host concern, not a protocol one.
-#[derive(Default)]
+/// server, tests and embedders read one source of truth. Registry-backed
+/// (`serve_*` metrics), so the same values reach `{"cmd":"stats"}` —
+/// but deliberately NOT part of the wire `{"cmd":"metrics"}` reply: the
+/// pre-existing protocol golden fixtures pin that reply byte-exactly
+/// against a fresh engine, and connection accounting is a host concern,
+/// not a protocol one.
 pub struct ServeStats {
     /// Connections admitted into the worker pool (served or queued).
-    pub accepted: AtomicU64,
+    pub accepted: Arc<Counter>,
     /// Connections shed with a `too_busy` reply (queue full or
     /// `--max-conns` reached).
-    pub shed: AtomicU64,
+    pub shed: Arc<Counter>,
     /// Connections refused because the socket could not be tracked
     /// (`try_clone` failed, e.g. fd exhaustion) — previously silent.
-    pub refused: AtomicU64,
+    pub refused: Arc<Counter>,
     /// Connections closed by the per-request `--timeout-ms` deadline.
-    pub timed_out: AtomicU64,
+    pub timed_out: Arc<Counter>,
     /// Replies written by pool workers (every request on an accepted
     /// connection produces exactly one).
-    pub lines: AtomicU64,
+    pub lines: Arc<Counter>,
     /// Replies answered by another connection's in-flight computation
     /// (see [`Engine::handle_line_shared`]).
-    pub coalesced: AtomicU64,
-    queue_peak: AtomicU64,
+    pub coalesced: Arc<Counter>,
+    /// Replies computed by a fresh dispatch (everything
+    /// [`Engine::handle_line_shared`] returns that was not coalesced,
+    /// decode errors included). Incremented after the reply is built,
+    /// so `dispatched + coalesced == lines` holds whenever no request
+    /// is in flight — the CI stats smoke asserts exactly that.
+    pub dispatched: Arc<Counter>,
+    /// Time connections spent parked in the bounded hand-off queue
+    /// (`serve_queue_wait_us`), recorded by the popping worker.
+    pub queue_wait: Arc<Histogram>,
+    queue_peak: Arc<Gauge>,
 }
 
 impl ServeStats {
+    /// Serve counters backed by `reg`'s `serve_*` metrics.
+    pub fn new(reg: &Registry) -> ServeStats {
+        ServeStats {
+            accepted: reg.counter("serve_conns_accepted"),
+            shed: reg.counter("serve_conns_shed"),
+            refused: reg.counter("serve_conns_refused"),
+            timed_out: reg.counter("serve_conns_timed_out"),
+            lines: reg.counter("serve_replies"),
+            coalesced: reg.counter("serve_replies_coalesced"),
+            dispatched: reg.counter("serve_replies_dispatched"),
+            queue_wait: reg.histogram("serve_queue_wait_us"),
+            queue_peak: reg.gauge("serve_queue_depth_peak"),
+        }
+    }
+
     /// Record an observed queue depth, keeping the high-water mark.
     pub fn note_queue_depth(&self, depth: usize) {
-        self.queue_peak.fetch_max(depth as u64, Ordering::Relaxed);
+        self.queue_peak.note_max(depth as u64);
     }
 
     /// The queue high-water mark: the deepest the bounded connection
     /// queue ever got. Never exceeds the configured bound — the
     /// backpressure property test asserts exactly that.
     pub fn queue_peak(&self) -> u64 {
-        self.queue_peak.load(Ordering::Relaxed)
+        self.queue_peak.get()
     }
 
     /// One human-readable line for the shutdown banner.
@@ -142,13 +236,13 @@ impl ServeStats {
         format!(
             "conns accepted={} shed={} refused={} timed_out={}; \
              replies={} ({} coalesced); queue peak={}",
-            self.accepted.load(Ordering::Relaxed),
-            self.shed.load(Ordering::Relaxed),
-            self.refused.load(Ordering::Relaxed),
-            self.timed_out.load(Ordering::Relaxed),
-            self.lines.load(Ordering::Relaxed),
-            self.coalesced.load(Ordering::Relaxed),
-            self.queue_peak.load(Ordering::Relaxed),
+            self.accepted.get(),
+            self.shed.get(),
+            self.refused.get(),
+            self.timed_out.get(),
+            self.lines.get(),
+            self.coalesced.get(),
+            self.queue_peak.get(),
         )
     }
 }
@@ -187,7 +281,9 @@ pub struct Engine {
     /// Why inference is unavailable (the real artifact-load error), so
     /// per-request failures report the actual cause, not a guess.
     inference_error: Option<String>,
+    registry: Registry,
     counters: Counters,
+    latency: CommandLatency,
     serve: ServeStats,
     /// Coalescing map: request line -> the in-flight computation for it.
     inflight: Mutex<HashMap<String, Arc<Flight>>>,
@@ -202,12 +298,21 @@ impl Engine {
     }
 
     fn assemble(service: Option<InferenceService>, inference_error: Option<String>) -> Engine {
+        // Eager catalog registration gives even a fresh engine the full
+        // all-zero metric set, so the stats snapshot shape is stable.
+        let registry = Registry::new();
+        register_catalog(&registry);
+        let counters = Counters::new(&registry);
+        let latency = CommandLatency::new(&registry);
+        let serve = ServeStats::new(&registry);
         Engine {
             grid: GridEngine::new(),
             service,
             inference_error,
-            counters: Counters::default(),
-            serve: ServeStats::default(),
+            registry,
+            counters,
+            latency,
+            serve,
             inflight: Mutex::new(HashMap::new()),
         }
     }
@@ -249,11 +354,18 @@ impl Engine {
         self.grid.cache_stats()
     }
 
-    /// The serve-side lifecycle counters (host-facing, never on the
-    /// wire). The pooled server increments these; tests and embedders
-    /// read them.
+    /// The serve-side lifecycle counters (host-facing; on the wire only
+    /// through `{"cmd":"stats"}`). The pooled server increments these;
+    /// tests and embedders read them.
     pub fn serve_stats(&self) -> &ServeStats {
         &self.serve
+    }
+
+    /// The engine's metric registry — every counter and histogram the
+    /// `{"cmd":"stats"}` snapshot renders, for embedders that want the
+    /// Prometheus exposition or direct handles.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
     }
 
     /// The underlying grid engine (for callers composing their own
@@ -266,9 +378,16 @@ impl Engine {
     /// so the size caps, worker policy and metrics apply uniformly.
     pub fn dispatch(&self, req: &Request) -> Result<Response, ApiError> {
         self.counters.count(req.cmd());
+        let started = Instant::now();
         let result = self.dispatch_inner(req);
+        // Recorded after dispatch_inner: a stats snapshot built inside
+        // it must not observe its own in-flight dispatch (the pinned
+        // stats fixture depends on that).
+        let us = started.elapsed().as_micros() as u64;
+        self.latency.observe(req.cmd(), us);
+        span::global().record_us(span::stage::DISPATCH, us);
         if result.is_err() {
-            self.counters.errors.fetch_add(1, Ordering::Relaxed);
+            self.counters.errors.inc();
         }
         result
     }
@@ -280,7 +399,7 @@ impl Engine {
         let result = match codec::decode_line(line) {
             Ok(req) => self.dispatch(&req),
             Err(e) => {
-                self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                self.counters.errors.inc();
                 Err(e)
             }
         };
@@ -298,15 +417,27 @@ impl Engine {
     /// [`ServeStats::coalesced`] and skip the per-command counter (the
     /// computation was counted once, by the leader).
     pub fn handle_line_shared(&self, line: &str) -> (Json, bool) {
-        let req = match codec::decode_line(line) {
+        let decode_started = Instant::now();
+        let decoded = codec::decode_line(line);
+        span::global().record_us(span::stage::DECODE, decode_started.elapsed().as_micros() as u64);
+        let req = match decoded {
             Ok(req) => req,
             Err(e) => {
-                self.counters.errors.fetch_add(1, Ordering::Relaxed);
-                return Engine::encode(Err(e));
+                self.counters.errors.inc();
+                let value = Engine::encode_timed(Err(e));
+                // Error replies are still written replies; counted after
+                // encoding, like every dispatched path below.
+                self.serve.dispatched.inc();
+                return value;
             }
         };
         if !Engine::coalescable(&req) {
-            return Engine::encode(self.dispatch(&req));
+            let value = Engine::encode_timed(self.dispatch(&req));
+            // Counted after the reply is built so a stats snapshot never
+            // includes its own (still in-flight) request — that keeps
+            // `dispatched + coalesced == lines` exact at snapshot time.
+            self.serve.dispatched.inc();
+            return value;
         }
         let key = line.trim();
         let (flight, leader) = {
@@ -321,14 +452,15 @@ impl Engine {
             }
         };
         if !leader {
-            self.serve.coalesced.fetch_add(1, Ordering::Relaxed);
+            self.serve.coalesced.inc();
             return flight.wait();
         }
         // The guard guarantees the flight is filled and the map entry
         // removed even if the computation panics — followers must never
         // wait forever on a leader that died.
         let guard = FlightGuard { engine: self, key, flight, filled: false };
-        let value = Engine::encode(self.dispatch(&req));
+        let value = Engine::encode_timed(self.dispatch(&req));
+        self.serve.dispatched.inc();
         guard.fill(value)
     }
 
@@ -354,6 +486,14 @@ impl Engine {
             }
             Err(e) => (e.to_json(), false),
         }
+    }
+
+    /// [`Engine::encode`] with the `encode` span recorded (serve path).
+    fn encode_timed(result: Result<Response, ApiError>) -> (Json, bool) {
+        let started = Instant::now();
+        let value = Engine::encode(result);
+        span::global().record_us(span::stage::ENCODE, started.elapsed().as_micros() as u64);
+        value
     }
 
     fn dispatch_inner(&self, req: &Request) -> Result<Response, ApiError> {
@@ -488,9 +628,22 @@ impl Engine {
                 };
                 Ok(Response::Metrics { summary, requests: self.counters.snapshot() })
             }
+            Request::Stats => Ok(Response::Stats { snapshot: self.stats_snapshot() }),
             Request::Version => Ok(Response::Version),
             Request::Shutdown => Ok(Response::Shutdown),
         }
+    }
+
+    /// The `{"cmd":"stats"}` document: the registry snapshot (sorted
+    /// keys) plus the protocol and stats-schema versions. Additive-only:
+    /// new metrics appear as new keys without bumping `schema`.
+    fn stats_snapshot(&self) -> Json {
+        let Json::Obj(mut snap) = self.registry.snapshot_json() else {
+            unreachable!("registry snapshot is an object");
+        };
+        snap.insert("protocol".to_string(), Json::Num(super::PROTOCOL_VERSION as f64));
+        snap.insert("schema".to_string(), Json::Num(super::STATS_SCHEMA_VERSION as f64));
+        Json::Obj(snap)
     }
 }
 
@@ -676,7 +829,7 @@ mod tests {
         let engine = Engine::analytics();
         let _ = engine.handle_line_shared(SWEEP_LINE);
         assert!(engine.inflight.lock().unwrap().is_empty());
-        assert_eq!(engine.serve_stats().coalesced.load(Ordering::Relaxed), 0);
+        assert_eq!(engine.serve_stats().coalesced.get(), 0);
     }
 
     /// Deterministic follower rendezvous: pre-insert the flight (what a
@@ -700,9 +853,9 @@ mod tests {
             assert_eq!(reply.to_string(), marker.to_string());
             assert!(!stop);
         });
-        assert_eq!(engine.serve_stats().coalesced.load(Ordering::Relaxed), 1);
+        assert_eq!(engine.serve_stats().coalesced.get(), 1);
         // The follower never dispatched: no sweep was counted.
-        assert_eq!(engine.counters.sweep.load(Ordering::Relaxed), 0);
+        assert_eq!(engine.counters.sweep.get(), 0);
         engine.inflight.lock().unwrap().remove(key);
     }
 
@@ -722,23 +875,72 @@ mod tests {
             assert_eq!(json.get("count").unwrap().as_usize(), Some(1), "{reply}");
         }
         assert!(engine.inflight.lock().unwrap().is_empty());
-        let coalesced = engine.serve_stats().coalesced.load(Ordering::Relaxed);
-        let dispatched = engine.counters.sweep.load(Ordering::Relaxed);
+        let coalesced = engine.serve_stats().coalesced.get();
+        let dispatched = engine.counters.sweep.get();
         assert_eq!(coalesced + dispatched, 8, "every request was answered exactly once");
         assert!(dispatched >= 1);
+        // The serve-side reply accounting agrees: every reply was either
+        // freshly dispatched or coalesced.
+        assert_eq!(engine.serve_stats().dispatched.get() + coalesced, 8);
     }
 
     #[test]
     fn serve_stats_track_peak_and_summarize() {
-        let stats = ServeStats::default();
+        let stats = ServeStats::new(&Registry::new());
         stats.note_queue_depth(3);
         stats.note_queue_depth(1);
         assert_eq!(stats.queue_peak(), 3);
-        stats.accepted.fetch_add(2, Ordering::Relaxed);
-        stats.shed.fetch_add(1, Ordering::Relaxed);
+        stats.accepted.add(2);
+        stats.shed.inc();
         let line = stats.summary();
         assert!(line.contains("accepted=2"), "{line}");
         assert!(line.contains("shed=1"), "{line}");
         assert!(line.contains("queue peak=3"), "{line}");
+    }
+
+    #[test]
+    fn stats_snapshot_is_deterministic_on_a_fresh_engine() {
+        let engine = Engine::analytics();
+        let (reply, stop) = engine.handle_line(r#"{"cmd":"stats"}"#);
+        assert!(!stop);
+        let counters = reply.get("counters").unwrap();
+        // The stats request itself was counted before dispatch_inner ran…
+        assert_eq!(counters.get("api_requests_stats").unwrap().as_usize(), Some(1));
+        assert_eq!(counters.get("serve_conns_accepted").unwrap().as_usize(), Some(0));
+        assert_eq!(counters.get("serve_replies_dispatched").unwrap().as_usize(), Some(0));
+        // …but its latency is recorded only after the snapshot was built.
+        let hist = reply.get("histograms").unwrap().get("api_latency_us_stats").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_usize(), Some(0));
+        assert_eq!(reply.get("protocol").unwrap().as_usize(), Some(super::super::PROTOCOL_VERSION));
+        assert_eq!(
+            reply.get("schema").unwrap().as_usize(),
+            Some(super::super::STATS_SCHEMA_VERSION)
+        );
+    }
+
+    #[test]
+    fn latency_histograms_record_completed_dispatches() {
+        let engine = Engine::analytics();
+        engine.dispatch(&Request::Version).unwrap();
+        engine.dispatch(&Request::Version).unwrap();
+        let (first, _) = engine.handle_line(r#"{"cmd":"stats"}"#);
+        let version = first.get("histograms").unwrap().get("api_latency_us_version").unwrap();
+        assert_eq!(version.get("count").unwrap().as_usize(), Some(2));
+        // A second snapshot sees the first stats dispatch completed.
+        let (second, _) = engine.handle_line(r#"{"cmd":"stats"}"#);
+        let stats = second.get("histograms").unwrap().get("api_latency_us_stats").unwrap();
+        assert_eq!(stats.get("count").unwrap().as_usize(), Some(1));
+        let requests = second.get("counters").unwrap().get("api_requests_stats").unwrap();
+        assert_eq!(requests.as_usize(), Some(2));
+    }
+
+    #[test]
+    fn shared_handler_counts_dispatched_replies() {
+        let engine = Engine::analytics();
+        let _ = engine.handle_line_shared(r#"{"cmd":"version"}"#);
+        let _ = engine.handle_line_shared("not json");
+        let _ = engine.handle_line_shared(SWEEP_LINE);
+        assert_eq!(engine.serve_stats().dispatched.get(), 3);
+        assert_eq!(engine.serve_stats().coalesced.get(), 0);
     }
 }

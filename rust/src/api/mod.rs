@@ -102,6 +102,11 @@ pub use response::Response;
 /// accepted back via the optional `"protocol"` request field.
 pub const PROTOCOL_VERSION: usize = 1;
 
+/// Version of the `{"cmd":"stats"}` snapshot schema, reported as its
+/// `"schema"` field. Bumped only when an existing key changes meaning
+/// or disappears; new metrics are additive and do not bump it.
+pub const STATS_SCHEMA_VERSION: usize = 1;
+
 /// The crate version (from `Cargo.toml`), reported alongside
 /// [`PROTOCOL_VERSION`].
 pub const CRATE_VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -31,6 +31,12 @@ pub enum Response {
     /// Engine/server metrics: the inference summary line plus per-command
     /// request counters (only non-zero ones appear on the wire).
     Metrics { summary: String, requests: Vec<(&'static str, u64)> },
+    /// An observability snapshot, pre-rendered by the engine from its
+    /// registry (sorted keys; versioned via `"protocol"`/`"schema"`).
+    Stats {
+        /// The full snapshot document, emitted verbatim.
+        snapshot: Json,
+    },
     /// Crate + protocol version.
     Version,
     /// Acknowledges a shutdown request; the host owning the socket (or
@@ -82,6 +88,7 @@ impl Response {
                     ),
                 ),
             ]),
+            Response::Stats { snapshot } => snapshot.clone(),
             Response::Version => Json::obj(vec![
                 ("version", Json::Str(super::CRATE_VERSION.to_string())),
                 ("protocol", Json::Num(super::PROTOCOL_VERSION as f64)),
@@ -111,6 +118,13 @@ mod tests {
         assert!(bare.to_json().get("note").is_none());
         let with = Response::Table { table, note: "hi".to_string() };
         assert_eq!(with.to_json().get("note").unwrap().as_str(), Some("hi"));
+    }
+
+    #[test]
+    fn stats_emits_its_snapshot_verbatim() {
+        let snapshot = Json::obj(vec![("protocol", Json::Num(1.0)), ("schema", Json::Num(1.0))]);
+        let s = Response::Stats { snapshot };
+        assert_eq!(s.to_json().to_string(), r#"{"protocol":1,"schema":1}"#);
     }
 
     #[test]

@@ -188,12 +188,14 @@ fn run_client(
 }
 
 /// `psim bench [--port P] [--clients C] [--requests N] [--duration SECS]
-/// [--mix sweep,explore,version] [--out FILE]`
+/// [--mix sweep,explore,version] [--out FILE] [--stats]`
 ///
 /// Fires `--requests` total requests (split exactly across `--clients`
 /// connections, like `psim infer`), or runs for `--duration` seconds
 /// when given. Prints the JSON summary to stdout (and `--out FILE`), a
-/// human line to stderr. Exit code 1 when any request errored —
+/// human line to stderr. `--stats` additionally polls the server's live
+/// `{"cmd":"stats"}` snapshot after the run and reports the queue-wait
+/// vs compute split to stderr. Exit code 1 when any request errored —
 /// `too_busy` sheds are expected under saturation and do NOT fail the
 /// run.
 pub fn bench(args: &Args) -> Result<i32> {
@@ -203,6 +205,7 @@ pub fn bench(args: &Args) -> Result<i32> {
     let duration_s = args.opt_usize("duration")?;
     let mix_str = args.opt("mix").unwrap_or("sweep,explore,version").to_string();
     let out = args.opt("out").map(String::from);
+    let poll_stats = args.flag("stats");
     args.reject_unknown()?;
     let mix = parse_mix(&mix_str)?;
 
@@ -251,6 +254,10 @@ pub fn bench(args: &Args) -> Result<i32> {
     let summary = run.summary();
     println!("{summary}");
     eprintln!("{}", run.human_line());
+    if poll_stats {
+        let snap = super::stats::fetch(port).context("polling server stats after the run")?;
+        eprintln!("{}", super::stats::human_line(&snap));
+    }
     if let Some(path) = out {
         std::fs::write(&path, format!("{summary}\n"))
             .with_context(|| format!("writing {path}"))?;

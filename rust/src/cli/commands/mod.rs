@@ -8,5 +8,6 @@ pub mod infer;
 pub mod request;
 pub mod serve;
 pub mod simulate;
+pub mod stats;
 pub mod sweep;
 pub mod tables;

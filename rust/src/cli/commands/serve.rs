@@ -38,6 +38,7 @@ use anyhow::{Context, Result};
 use crate::api::{ApiError, Engine, ServeStats};
 use crate::cli::args::Args;
 use crate::coordinator::pool::Bounded;
+use crate::obs::span;
 use crate::runtime::Tensor;
 use crate::util::json::Json;
 
@@ -178,7 +179,10 @@ pub fn serve_on(listener: TcpListener, engine: &Arc<Engine>, config: &ServeConfi
     std::thread::scope(|scope| -> Result<()> {
         for _ in 0..config.workers.max(1) {
             scope.spawn(|| {
-                while let Some((stream, id)) = queue.pop() {
+                while let Some(((stream, id), waited)) = queue.pop_timed() {
+                    let waited_us = waited.as_micros() as u64;
+                    stats.queue_wait.record(waited_us);
+                    span::global().record_us(span::stage::QUEUE_WAIT, waited_us);
                     if let Err(e) = handle_conn(stream, engine, &shutdown, &registry) {
                         eprintln!("psim serve: connection error: {e:#}");
                     }
@@ -217,7 +221,7 @@ fn accept_loop(
         // Register before queueing: shutdown_all must reach sockets
         // still waiting in the queue.
         let Some(id) = registry.register(&stream) else {
-            let refused = stats.refused.fetch_add(1, Ordering::Relaxed) + 1;
+            let refused = stats.refused.inc();
             eprintln!(
                 "psim serve: refused untrackable connection \
                  (try_clone failed; {refused} refused so far)"
@@ -231,7 +235,7 @@ fn accept_loop(
         match queue.try_push((stream, id)) {
             Ok(depth) => {
                 live.fetch_add(1, Ordering::SeqCst);
-                stats.accepted.fetch_add(1, Ordering::Relaxed);
+                stats.accepted.inc();
                 stats.note_queue_depth(depth);
             }
             Err((stream, id)) => shed(stream, id, registry, stats),
@@ -244,7 +248,7 @@ fn accept_loop(
 /// Constant time and constant memory per connection — saturation can
 /// never grow a backlog.
 fn shed(mut stream: TcpStream, id: u64, registry: &ConnRegistry, stats: &ServeStats) {
-    stats.shed.fetch_add(1, Ordering::Relaxed);
+    stats.shed.inc();
     let _ = writeln!(stream, "{}", ApiError::too_busy().to_json());
     let _ = stream.shutdown(Shutdown::Both);
     registry.deregister(id);
@@ -286,7 +290,7 @@ fn conn_loop(
             // The per-request deadline fired: reclaim the worker. A
             // clean close, counted but not an error.
             Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
-                stats.timed_out.fetch_add(1, Ordering::Relaxed);
+                stats.timed_out.inc();
                 break;
             }
             Err(e) => return Err(e.into()),
@@ -298,6 +302,7 @@ fn conn_loop(
         if stop {
             shutdown.store(true, Ordering::SeqCst);
         }
+        let write_started = std::time::Instant::now();
         if let Err(e) = writeln!(writer, "{reply}") {
             // A write aborted by shutdown_all (broken pipe) is part of a
             // clean shutdown, not a connection error.
@@ -306,7 +311,8 @@ fn conn_loop(
             }
             return Err(e.into());
         }
-        stats.lines.fetch_add(1, Ordering::Relaxed);
+        span::global().record_us(span::stage::WRITE, write_started.elapsed().as_micros() as u64);
+        stats.lines.inc();
         if shutdown.load(Ordering::SeqCst) {
             // Poke the accept loop so it observes the flag, then unblock
             // every other connection's parked reader.

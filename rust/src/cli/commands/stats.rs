@@ -1,0 +1,126 @@
+//! `stats`: one-shot snapshot of a running server's observability
+//! registry — connect, send `{"cmd":"stats"}`, print the reply.
+//!
+//! The raw JSON line goes to stdout (pipe it to `jq` or a scraper); a
+//! short human digest goes to stderr. `psim bench --stats` reuses
+//! [`fetch`] to report the queue-wait vs compute split after a load run.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::args::Args;
+use crate::util::json::Json;
+
+/// Fetch one `{"cmd":"stats"}` snapshot from the server on `port`.
+pub fn fetch(port: u16) -> Result<Json> {
+    let mut writer = TcpStream::connect(("127.0.0.1", port))
+        .with_context(|| format!("connecting to 127.0.0.1:{port} — is `psim serve` running?"))?;
+    writer.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(writer.try_clone()?);
+    let line = r#"{"cmd":"stats"}"#;
+    writeln!(writer, "{line}")?;
+    let mut reply = String::new();
+    if reader.read_line(&mut reply)? == 0 {
+        bail!("server closed the connection before replying to stats");
+    }
+    let snap = Json::parse(reply.trim()).context("unparseable stats reply")?;
+    if snap.get("error").is_some() {
+        bail!("server rejected the stats request: {snap}");
+    }
+    Ok(snap)
+}
+
+/// Pull one `u64` field out of a snapshot by path, defaulting to 0.
+fn field(snap: &Json, path: &[&str]) -> u64 {
+    let mut node = snap;
+    for key in path {
+        match node.get(key) {
+            Some(next) => node = next,
+            None => return 0,
+        }
+    }
+    node.as_f64().map(|v| v as u64).unwrap_or(0)
+}
+
+/// Total microseconds spent inside command dispatch, summed over every
+/// `api_latency_us_*` histogram in the snapshot.
+fn compute_us(snap: &Json) -> u64 {
+    let Some(Json::Obj(hists)) = snap.get("histograms") else {
+        return 0;
+    };
+    hists
+        .iter()
+        .filter(|(name, _)| name.starts_with("api_latency_us_"))
+        .map(|(_, h)| h.get("sum_us").and_then(Json::as_f64).map(|v| v as u64).unwrap_or(0))
+        .sum()
+}
+
+/// The human digest printed to stderr: reply accounting plus the
+/// queue-wait vs compute split the paper's pressure-shaping lesson asks
+/// servers to watch.
+pub fn human_line(snap: &Json) -> String {
+    let replies = field(snap, &["counters", "serve_replies"]);
+    let dispatched = field(snap, &["counters", "serve_replies_dispatched"]);
+    let coalesced = field(snap, &["counters", "serve_replies_coalesced"]);
+    let shed = field(snap, &["counters", "serve_conns_shed"]);
+    let errors = field(snap, &["counters", "api_errors"]);
+    let queue_us = field(snap, &["histograms", "serve_queue_wait_us", "sum_us"]);
+    let queue_p95 = field(snap, &["histograms", "serve_queue_wait_us", "p95_us"]);
+    let compute = compute_us(snap);
+    format!(
+        "psim stats: {replies} replies ({dispatched} dispatched + {coalesced} coalesced), \
+         {shed} shed, {errors} errors; queue-wait {queue_us}us total (p95 {queue_p95}us) \
+         vs compute {compute}us"
+    )
+}
+
+/// `psim stats [--port P]` — print one live snapshot and exit.
+pub fn stats(args: &Args) -> Result<i32> {
+    let port = args.opt_usize("port")?.unwrap_or(7878) as u16;
+    args.reject_unknown()?;
+    let snap = fetch(port)?;
+    println!("{snap}");
+    eprintln!("{}", human_line(&snap));
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(concat!(
+            r#"{"counters":{"api_errors":1,"serve_conns_shed":2,"serve_replies":10,"#,
+            r#""serve_replies_coalesced":3,"serve_replies_dispatched":7},"#,
+            r#""histograms":{"api_latency_us_sweep":{"sum_us":400},"#,
+            r#""api_latency_us_version":{"sum_us":100},"#,
+            r#""serve_queue_wait_us":{"p95_us":9,"sum_us":50}},"protocol":1,"schema":1}"#,
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn human_line_reports_the_split() {
+        let line = human_line(&sample());
+        assert!(line.contains("10 replies (7 dispatched + 3 coalesced)"), "{line}");
+        assert!(line.contains("2 shed"), "{line}");
+        assert!(line.contains("queue-wait 50us total (p95 9us)"), "{line}");
+        assert!(line.contains("compute 500us"), "{line}");
+    }
+
+    #[test]
+    fn missing_fields_default_to_zero() {
+        let line = human_line(&Json::parse("{}").unwrap());
+        assert!(line.contains("0 replies (0 dispatched + 0 coalesced)"), "{line}");
+        assert!(line.contains("compute 0us"), "{line}");
+    }
+
+    #[test]
+    fn fetch_fails_cleanly_without_a_server() {
+        // Port 1 is never listening in the test environment.
+        assert!(fetch(1).is_err());
+    }
+}

@@ -4,7 +4,8 @@
 //! Exploration: `analyze`, `simulate`, `sweep`, `networks`.
 //! Functional stack: `infer` (batched PJRT inference), `serve` (TCP
 //! JSON-lines server with a bounded worker pool), `bench` (protocol-level
-//! load generator against `serve`), `client` (legacy inference-only load
+//! load generator against `serve`), `stats` (one-shot observability
+//! snapshot of a running server), `client` (legacy inference-only load
 //! generator).
 
 pub mod args;
@@ -81,7 +82,10 @@ Functional stack (PJRT over artifacts/; run `make artifacts` first):
                       p95/p99 latency, shed count) -- the
                       BENCH_serve.json schema
      options: [--port P] [--clients C] [--requests N] [--duration SECS]
-              [--mix sweep,explore,version] [--out FILE]
+              [--mix sweep,explore,version] [--out FILE] [--stats]
+  stats               one-shot {\"cmd\":\"stats\"} snapshot of a running
+                      server: JSON to stdout, human digest to stderr
+     options: [--port P]
   client              legacy inference-only load generator
      options: [--port P] [--requests N]
   request             one-shot protocol dispatch: decode JSON request
@@ -122,6 +126,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "infer" => commands::infer::infer(&args),
         "serve" => commands::serve::serve(&args),
         "bench" => commands::bench::bench(&args),
+        "stats" => commands::stats::stats(&args),
         "client" => commands::serve::client(&args),
         "request" => commands::request::request(&args),
         other => bail!("unknown command '{other}' — try `psim help`"),
@@ -417,6 +422,13 @@ mod tests {
         // Both fail during argument validation, so no server is needed.
         assert!(run(&sv(&["bench", "--frobnicate"])).is_err());
         assert!(run(&sv(&["bench", "--mix", "frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn stats_rejects_bad_flags_and_fails_without_a_server() {
+        assert!(run(&sv(&["stats", "--frobnicate"])).is_err());
+        // Port 1 is never listening in the test environment.
+        assert!(run(&sv(&["stats", "--port", "1"])).is_err());
     }
 
     #[test]

@@ -8,12 +8,18 @@
 //! threads block in [`Bounded::pop`] until an item or [`Bounded::close`]
 //! arrives. Plain `Mutex<VecDeque>` + `Condvar` — no dependencies, no
 //! unsafe, exactly as fast as it needs to be for a connection hand-off.
+//!
+//! Every item is stamped with its enqueue time, and [`Bounded::pop_timed`]
+//! surfaces the queue-wait duration to the popping worker — that is the
+//! `serve_queue_wait_us` histogram behind `{"cmd":"stats"}`, the number
+//! that makes `--queue` depth tuning data-driven instead of guesswork.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 struct State<T> {
-    items: VecDeque<T>,
+    items: VecDeque<(Instant, T)>,
     closed: bool,
 }
 
@@ -46,7 +52,7 @@ impl<T> Bounded<T> {
         if st.closed || st.items.len() >= self.capacity {
             return Err(item);
         }
-        st.items.push_back(item);
+        st.items.push_back((Instant::now(), item));
         let depth = st.items.len();
         drop(st);
         self.takers.notify_one();
@@ -57,10 +63,17 @@ impl<T> Bounded<T> {
     /// the remaining items are drained in order, then every caller gets
     /// `None` — the worker-thread exit signal.
     pub fn pop(&self) -> Option<T> {
+        self.pop_timed().map(|(item, _)| item)
+    }
+
+    /// [`Bounded::pop`] plus how long the item waited in the queue
+    /// (enqueue stamp to hand-off), so the worker can record queue-wait
+    /// latency.
+    pub fn pop_timed(&self) -> Option<(T, Duration)> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(item) = st.items.pop_front() {
-                return Some(item);
+            if let Some((queued_at, item)) = st.items.pop_front() {
+                return Some((item, queued_at.elapsed()));
             }
             if st.closed {
                 return None;
@@ -125,6 +138,20 @@ mod tests {
         let q = Bounded::new(0);
         assert_eq!(q.try_push(42), Err(42));
         assert_eq!(q.capacity(), 0);
+    }
+
+    #[test]
+    fn pop_timed_reports_the_queue_wait() {
+        let q = Bounded::new(4);
+        q.try_push(7).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let (item, waited) = q.pop_timed().unwrap();
+        assert_eq!(item, 7);
+        assert!(waited >= std::time::Duration::from_millis(10), "waited {waited:?}");
+        // A fresh push pops with (almost) no wait.
+        q.try_push(8).unwrap();
+        let (_, waited) = q.pop_timed().unwrap();
+        assert!(waited < std::time::Duration::from_secs(5), "waited {waited:?}");
     }
 
     #[test]

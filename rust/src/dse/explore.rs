@@ -166,6 +166,9 @@ pub fn explore(engine: &GridEngine, spec: &ExploreSpec, workers: usize) -> Explo
     });
 
     // Phase 2: chunked exact evaluation with archive-based pruning.
+    // Per-chunk wall time feeds the host-side observability registry
+    // (`dse_chunk_eval_us`); the frontier itself is unaffected.
+    let chunk_hist = crate::obs::registry::global().histogram("dse_chunk_eval_us");
     let mut frontier = Vec::new();
     let mut pruned = Vec::new();
     let mut evaluated = 0usize;
@@ -185,6 +188,7 @@ pub fn explore(engine: &GridEngine, spec: &ExploreSpec, workers: usize) -> Explo
                     survivors.push(pi);
                 }
             }
+            let chunk_started = std::time::Instant::now();
             let exacts: Vec<Option<Objectives>> = parallel_map(&survivors, workers, |&pi| {
                 // An unconstrained candidate's bound IS its exact vector
                 // (no striping to apply) — don't evaluate it twice.
@@ -194,6 +198,9 @@ pub fn explore(engine: &GridEngine, spec: &ExploreSpec, workers: usize) -> Explo
                 scope_stats(engine, nets, &points[pi], &bus)
                     .map(|s| Objectives::from_stats_dt(&s, points[pi].p_macs, &dt))
             });
+            let chunk_us = chunk_started.elapsed().as_micros() as u64;
+            chunk_hist.record(chunk_us);
+            crate::obs::span::global().record_us(crate::obs::span::stage::DSE_CHUNK, chunk_us);
             for (pi, exact) in survivors.iter().zip(&exacts) {
                 evaluated += 1;
                 match exact {

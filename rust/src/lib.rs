@@ -53,6 +53,8 @@ pub mod coordinator;
 pub mod dse;
 /// CNN workload descriptors and the precision model.
 pub mod models;
+/// Observability: metrics, span tracing, stats snapshot registry.
+pub mod obs;
 /// Paper table/figure renderers.
 pub mod report;
 /// The PJRT execution runtime over AOT artifacts.

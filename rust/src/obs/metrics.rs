@@ -1,0 +1,286 @@
+//! Typed metric primitives: counters, gauges, and log-2-bucket latency
+//! histograms.
+//!
+//! Everything here is lock-free (plain `AtomicU64` increments) so the
+//! hot paths — `api::Engine::dispatch`, the pooled `serve` workers, the
+//! sweep/explore closures — can record without contention. Histograms
+//! are mergeable across threads: per-thread instances can be folded
+//! into one with [`Histogram::merge`] and the result is identical to a
+//! single-thread recording of the union (bucket counts, count, sum and
+//! max are all additive or max-combining).
+//!
+//! The histogram generalizes [`crate::util::benchkit::percentile`]
+//! (nearest-rank on a sorted slice) onto fixed log-2 buckets: the rank
+//! rule is the same, but the walk runs over cumulative bucket counts
+//! and returns the matched bucket's upper bound — within one bucket
+//! width of the raw-sample percentile by construction.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Number of log-2 histogram buckets. Bucket `i` (for `0 < i <
+/// BUCKETS-1`) holds values in `[2^(i-1), 2^i - 1]`; bucket 0 holds
+/// exactly 0 and the last bucket is the overflow bucket. 32 buckets
+/// cover `[0, 2^30]` microseconds (~18 minutes) before overflow.
+pub const BUCKETS: usize = 32;
+
+/// Upper bound (inclusive) of bucket `i`. The overflow bucket reports
+/// `u64::MAX`; the Prometheus exposition renders it as `+Inf`.
+pub fn bucket_bound(i: usize) -> u64 {
+    if i + 1 >= BUCKETS {
+        u64::MAX
+    } else if i == 0 {
+        0
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Bucket index for a recorded value: 0 for 0, else `bit_length(v)`
+/// clamped into the overflow bucket.
+fn bucket_index(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// A monotonically increasing event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// A counter at zero.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Add 1 and return the new value (handy for "how many so far" logs).
+    pub fn inc(&self) -> u64 {
+        self.value.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge: a value that can be set or high-water-marked.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    /// A gauge at zero.
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the value to `v` if `v` is larger (high-water mark).
+    pub fn note_max(&self, v: u64) {
+        self.value.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A fixed-bucket log-2 latency histogram (values in microseconds by
+/// convention — the snapshot keys say so explicitly).
+///
+/// Reads under concurrent writes are racy-but-monotone: a snapshot may
+/// miss in-flight increments but never observes torn values.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one value.
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Fold another histogram into this one (per-thread aggregation).
+    pub fn merge(&self, other: &Histogram) {
+        for (mine, theirs) in self.counts.iter().zip(other.counts.iter()) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Largest recorded value (0 when empty).
+    pub fn max_value(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Truncating mean of recorded values (0 when empty).
+    pub fn mean(&self) -> u64 {
+        let n = self.count();
+        if n == 0 { 0 } else { self.sum() / n }
+    }
+
+    /// Raw bucket counts (index `i` per [`bucket_bound`]).
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed))
+    }
+
+    /// Nearest-rank percentile over the buckets: the same rank rule as
+    /// [`crate::util::benchkit::percentile`], walked over cumulative
+    /// bucket counts. Returns the matched bucket's upper bound clamped
+    /// to the observed max — at most one bucket width above the
+    /// raw-sample percentile.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((p * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for i in 0..BUCKETS {
+            cum += self.counts[i].load(Ordering::Relaxed);
+            if cum >= rank {
+                return bucket_bound(i).min(self.max_value());
+            }
+        }
+        // Racy snapshot (count ahead of bucket increments): report max.
+        self.max_value()
+    }
+
+    /// Sorted-key JSON summary — the per-histogram object in the
+    /// `{"cmd":"stats"}` snapshot. Bucket detail stays out of the wire
+    /// schema; it is available via the Prometheus exposition.
+    pub fn snapshot_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("max_us", Json::Num(self.max_value() as f64)),
+            ("mean_us", Json::Num(self.mean() as f64)),
+            ("p50_us", Json::Num(self.percentile(0.50) as f64)),
+            ("p95_us", Json::Num(self.percentile(0.95) as f64)),
+            ("p99_us", Json::Num(self.percentile(0.99) as f64)),
+            ("sum_us", Json::Num(self.sum() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_are_monotone_and_cover_u64() {
+        for i in 1..BUCKETS {
+            assert!(bucket_bound(i) > bucket_bound(i - 1), "bucket {i} not monotone");
+        }
+        assert_eq!(bucket_bound(0), 0);
+        assert_eq!(bucket_bound(BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn bucket_index_matches_bounds() {
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 1000, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(v <= bucket_bound(i), "v={v} above bound of bucket {i}");
+            if i > 0 {
+                assert!(v > bucket_bound(i - 1), "v={v} should be in an earlier bucket than {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        assert_eq!(c.inc(), 1);
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.note_max(3);
+        g.note_max(1);
+        assert_eq!(g.get(), 3);
+        g.set(2);
+        assert_eq!(g.get(), 2);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(0.99), 0);
+        assert_eq!(h.mean(), 0);
+        assert_eq!(
+            h.snapshot_json().to_string(),
+            r#"{"count":0,"max_us":0,"mean_us":0,"p50_us":0,"p95_us":0,"p99_us":0,"sum_us":0}"#
+        );
+    }
+
+    #[test]
+    fn percentile_is_clamped_to_the_observed_max() {
+        let h = Histogram::new();
+        h.record(1000); // bucket upper bound 1023
+        assert_eq!(h.percentile(0.5), 1000);
+        assert_eq!(h.max_value(), 1000);
+    }
+
+    #[test]
+    fn merge_is_additive() {
+        let (a, b) = (Histogram::new(), Histogram::new());
+        for v in [1u64, 5, 9] {
+            a.record(v);
+        }
+        for v in [2u64, 1_000_000] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.sum(), 1 + 5 + 9 + 2 + 1_000_000);
+        assert_eq!(a.max_value(), 1_000_000);
+    }
+}

@@ -1,0 +1,46 @@
+//! Observability: metrics, span tracing and the stats snapshot
+//! registry.
+//!
+//! Three zero-dependency pieces:
+//!
+//! * [`metrics`] — typed counters, gauges and log-2-bucket latency
+//!   histograms (lock-free increments, mergeable across threads);
+//! * [`span`] — scoped stage timers feeding a bounded ring buffer with
+//!   an explicit `dropped` counter (the sim-trace discipline);
+//! * [`registry`] — named-metric registries rendering a sorted-key JSON
+//!   snapshot and a Prometheus-style text exposition, plus the typed
+//!   [`registry::METRICS`] catalog every recorder registers from.
+//!
+//! The wiring: each [`crate::api::Engine`] owns a registry (per-command
+//! latency histograms, request counters, serve counters, pool
+//! queue-wait) and answers `{"cmd":"stats"}` from it; `analytics::grid`
+//! and `dse::explore` time their cells/chunks into the process-global
+//! registry and span log. `docs/OBSERVABILITY.md` is the human
+//! reference.
+//!
+//! That document is generated from the typed catalog and the pinned
+//! stats fixture, and this doc-test keeps it honest — the metric table
+//! must appear verbatim, and so must every line of the
+//! `{"cmd":"stats"}` golden fixture:
+//!
+//! ```
+//! let root = concat!(env!("CARGO_MANIFEST_DIR"), "/..");
+//! let doc = std::fs::read_to_string(format!("{root}/docs/OBSERVABILITY.md"))
+//!     .expect("docs/OBSERVABILITY.md exists");
+//! assert!(
+//!     doc.contains(&psim::obs::registry::metrics_table()),
+//!     "OBSERVABILITY.md metric table is stale"
+//! );
+//! let fixture = std::fs::read_to_string(format!("{root}/rust/tests/golden/protocol/stats.txt"))
+//!     .expect("stats fixture");
+//! for line in fixture.lines() {
+//!     assert!(doc.contains(line), "OBSERVABILITY.md stats example drifted from its fixture");
+//! }
+//! for stage in ["queue_wait", "decode", "dispatch", "encode", "write", "grid_cell", "dse_chunk"] {
+//!     assert!(doc.contains(&format!("`{stage}`")), "OBSERVABILITY.md missing stage {stage}");
+//! }
+//! ```
+
+pub mod metrics;
+pub mod registry;
+pub mod span;

@@ -1,0 +1,308 @@
+//! Named-metric registry with sorted-key JSON and Prometheus-style
+//! text renderings, plus the typed catalog of every metric this crate
+//! records.
+//!
+//! Two instances matter in practice:
+//!
+//! * each [`crate::api::Engine`] owns a private [`Registry`] so the
+//!   `{"cmd":"stats"}` reply is deterministic per engine — crucially,
+//!   `cargo test` runs many engines concurrently in one process, and
+//!   the pinned stats fixture would be unreproducible against shared
+//!   state;
+//! * [`global`] is the process-wide registry for code with no engine
+//!   in reach (per-cell grid timings, per-chunk dse timings) — host
+//!   observability only, never rendered onto the wire.
+//!
+//! Registration is register-or-get by name, so eager catalog
+//! registration (for a complete, stable snapshot shape) and lazy
+//! handle lookup compose.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::metrics::{bucket_bound, Counter, Gauge, Histogram, BUCKETS};
+use crate::util::json::Json;
+
+/// What kind of metric a catalog entry names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotone event count.
+    Counter,
+    /// Set / high-water-marked value.
+    Gauge,
+    /// Log-2-bucket latency histogram (microseconds).
+    Histogram,
+}
+
+impl MetricKind {
+    fn label(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One row of the metric catalog: a name, its kind, which registry
+/// carries it, and a one-line description.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricDesc {
+    /// Metric name as it appears in snapshots and the exposition.
+    pub name: &'static str,
+    /// Counter, gauge or histogram.
+    pub kind: MetricKind,
+    /// `"engine"` (per-[`crate::api::Engine`], on the wire via
+    /// `{"cmd":"stats"}`) or `"process"` (global registry, host-side).
+    pub scope: &'static str,
+    /// One-line description for the docs table.
+    pub help: &'static str,
+}
+
+const fn counter(name: &'static str, scope: &'static str, help: &'static str) -> MetricDesc {
+    MetricDesc { name, kind: MetricKind::Counter, scope, help }
+}
+
+const fn gauge(name: &'static str, scope: &'static str, help: &'static str) -> MetricDesc {
+    MetricDesc { name, kind: MetricKind::Gauge, scope, help }
+}
+
+const fn histogram(name: &'static str, scope: &'static str, help: &'static str) -> MetricDesc {
+    MetricDesc { name, kind: MetricKind::Histogram, scope, help }
+}
+
+/// Every metric this crate records, sorted by name. Engine-scoped
+/// entries are eagerly registered by [`register_catalog`] so the
+/// `{"cmd":"stats"}` snapshot always carries the full, stable key set;
+/// process-scoped entries appear in [`global`] once their recorder
+/// first runs.
+pub const METRICS: [MetricDesc; 32] = [
+    counter("api_errors", "engine", "Requests that returned a protocol error reply"),
+    histogram("api_latency_us_analyze", "engine", "Dispatch latency of `analyze` requests"),
+    histogram("api_latency_us_explore", "engine", "Dispatch latency of `explore` requests"),
+    histogram("api_latency_us_fusion", "engine", "Dispatch latency of `fusion` requests"),
+    histogram("api_latency_us_infer", "engine", "Dispatch latency of `infer` requests"),
+    histogram("api_latency_us_metrics", "engine", "Dispatch latency of `metrics` requests"),
+    histogram("api_latency_us_shutdown", "engine", "Dispatch latency of `shutdown` requests"),
+    histogram("api_latency_us_stats", "engine", "Dispatch latency of `stats` requests"),
+    histogram("api_latency_us_sweep", "engine", "Dispatch latency of `sweep` requests"),
+    histogram("api_latency_us_tables", "engine", "Dispatch latency of `tables` requests"),
+    histogram("api_latency_us_version", "engine", "Dispatch latency of `version` requests"),
+    counter("api_requests_analyze", "engine", "`analyze` requests dispatched"),
+    counter("api_requests_explore", "engine", "`explore` requests dispatched"),
+    counter("api_requests_fusion", "engine", "`fusion` requests dispatched"),
+    counter("api_requests_infer", "engine", "`infer` requests dispatched"),
+    counter("api_requests_metrics", "engine", "`metrics` requests dispatched"),
+    counter("api_requests_shutdown", "engine", "`shutdown` requests dispatched"),
+    counter("api_requests_stats", "engine", "`stats` requests dispatched"),
+    counter("api_requests_sweep", "engine", "`sweep` requests dispatched"),
+    counter("api_requests_tables", "engine", "`tables` requests dispatched"),
+    counter("api_requests_version", "engine", "`version` requests dispatched"),
+    histogram("dse_chunk_eval_us", "process", "Exact evaluation time per explore chunk"),
+    histogram("grid_cell_eval_us", "process", "Evaluation time per sweep grid cell"),
+    counter("serve_conns_accepted", "engine", "Connections accepted into the worker pool"),
+    counter("serve_conns_refused", "engine", "Connections refused during shutdown"),
+    counter("serve_conns_shed", "engine", "Connections shed with `too_busy`"),
+    counter("serve_conns_timed_out", "engine", "Connections closed by the idle read timeout"),
+    gauge("serve_queue_depth_peak", "engine", "High-water mark of the bounded hand-off queue"),
+    histogram("serve_queue_wait_us", "engine", "Time connections waited in the hand-off queue"),
+    counter("serve_replies", "engine", "Reply lines written to clients"),
+    counter("serve_replies_coalesced", "engine", "Replies served from an in-flight leader"),
+    counter("serve_replies_dispatched", "engine", "Replies computed by a fresh dispatch"),
+];
+
+/// Markdown table of [`METRICS`] — pinned verbatim into
+/// `docs/OBSERVABILITY.md` by the `obs` module doc-test so the docs
+/// cannot drift from the typed catalog.
+pub fn metrics_table() -> String {
+    let mut out = String::from("| metric | kind | scope | description |\n|---|---|---|---|\n");
+    for m in &METRICS {
+        out.push_str(&format!(
+            "| `{}` | {} | {} | {} |\n",
+            m.name,
+            m.kind.label(),
+            m.scope,
+            m.help
+        ));
+    }
+    out
+}
+
+/// Register every engine-scoped catalog entry into `reg`, giving a
+/// fresh engine a complete all-zero snapshot shape.
+pub fn register_catalog(reg: &Registry) {
+    for m in METRICS.iter().filter(|m| m.scope == "engine") {
+        match m.kind {
+            MetricKind::Counter => {
+                reg.counter(m.name);
+            }
+            MetricKind::Gauge => {
+                reg.gauge(m.name);
+            }
+            MetricKind::Histogram => {
+                reg.histogram(m.name);
+            }
+        }
+    }
+}
+
+/// A set of named metrics. Lookup is mutex-guarded (cold path: once
+/// per handle, at registration); the returned `Arc` handles record
+/// lock-free.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register-or-get the counter called `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().expect("registry lock");
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Register-or-get the gauge called `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().expect("registry lock");
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Register-or-get the histogram called `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().expect("registry lock");
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Sorted-key JSON snapshot:
+    /// `{"counters":{...},"gauges":{...},"histograms":{...}}`.
+    pub fn snapshot_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .lock()
+            .expect("registry lock")
+            .iter()
+            .map(|(name, c)| (name.clone(), Json::Num(c.get() as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .lock()
+            .expect("registry lock")
+            .iter()
+            .map(|(name, g)| (name.clone(), Json::Num(g.get() as f64)))
+            .collect();
+        let histograms: BTreeMap<String, Json> = self
+            .histograms
+            .lock()
+            .expect("registry lock")
+            .iter()
+            .map(|(name, h)| (name.clone(), h.snapshot_json()))
+            .collect();
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(histograms)),
+        ])
+    }
+
+    /// Prometheus-style text exposition: `# TYPE` lines, plain
+    /// `name value` samples, and cumulative `_bucket{le="..."}` /
+    /// `_sum` / `_count` lines per histogram.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().expect("registry lock").iter() {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().expect("registry lock").iter() {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+        }
+        for (name, h) in self.histograms.lock().expect("registry lock").iter() {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, n) in h.bucket_counts().iter().enumerate() {
+                cum += n;
+                if i + 1 == BUCKETS {
+                    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                } else {
+                    out.push_str(&format!("{name}_bucket{{le=\"{}\"}} {cum}\n", bucket_bound(i)));
+                }
+            }
+            out.push_str(&format!("{name}_sum {}\n{name}_count {}\n", h.sum(), h.count()));
+        }
+        out
+    }
+}
+
+/// The process-global registry for recorders with no engine in reach
+/// (grid cells, dse chunks). Never rendered onto the wire.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_is_sorted_and_unique_by_name() {
+        for pair in METRICS.windows(2) {
+            assert!(pair[0].name < pair[1].name, "METRICS out of order at {}", pair[1].name);
+        }
+    }
+
+    #[test]
+    fn register_or_get_returns_the_same_handle() {
+        let reg = Registry::new();
+        let a = reg.counter("x");
+        let b = reg.counter("x");
+        a.inc();
+        assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    fn snapshot_json_has_sorted_sections() {
+        let reg = Registry::new();
+        reg.counter("b").add(2);
+        reg.counter("a").inc();
+        reg.gauge("g").set(7);
+        reg.histogram("h").record(3);
+        let snap = reg.snapshot_json().to_string();
+        assert!(snap.starts_with(r#"{"counters":{"a":1,"b":2},"gauges":{"g":7},"histograms":"#));
+        assert!(snap.contains(r#""h":{"count":1,"max_us":3,"mean_us":3"#));
+    }
+
+    #[test]
+    fn prometheus_exposition_renders_cumulative_buckets() {
+        let reg = Registry::new();
+        reg.counter("hits").add(4);
+        let h = reg.histogram("lat");
+        h.record(1);
+        h.record(100);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE hits counter\nhits 4\n"));
+        assert!(text.contains("lat_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("lat_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("lat_sum 101\nlat_count 2\n"));
+    }
+
+    #[test]
+    fn catalog_registration_matches_engine_scope() {
+        let reg = Registry::new();
+        register_catalog(&reg);
+        let snap = reg.snapshot_json().to_string();
+        for m in &METRICS {
+            if m.scope == "engine" {
+                assert!(snap.contains(&format!("\"{}\":", m.name)), "{} missing", m.name);
+            } else {
+                assert!(!snap.contains(m.name), "{} should not be engine-scoped", m.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Lightweight scoped span timers feeding a bounded ring buffer.
+//!
+//! Same discipline as [`crate::sim::trace::Trace`]: a fixed capacity,
+//! oldest-first eviction, and an explicit `dropped` counter so a
+//! saturated log is visible instead of silent. Capacity 0 disables
+//! recording entirely (every record counts as dropped).
+//!
+//! Stage names are `&'static str` constants (see [`stage`]) so
+//! recording never allocates; the per-stage glossary lives in
+//! `docs/OBSERVABILITY.md`.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Canonical stage names recorded by the serving and analytics paths.
+pub mod stage {
+    /// Time a queued connection waited in the bounded hand-off queue
+    /// between the accept loop and a pooled worker.
+    pub const QUEUE_WAIT: &str = "queue_wait";
+    /// Decoding one request line into a typed [`crate::api::Request`].
+    pub const DECODE: &str = "decode";
+    /// Dispatching a typed request through the engine (compute included).
+    pub const DISPATCH: &str = "dispatch";
+    /// Encoding the typed reply back to a JSON line.
+    pub const ENCODE: &str = "encode";
+    /// Writing the reply line to the client socket.
+    pub const WRITE: &str = "write";
+    /// Evaluating one sweep grid cell (`analytics::grid`).
+    pub const GRID_CELL: &str = "grid_cell";
+    /// Evaluating one exact-evaluation chunk in `dse::explore`.
+    pub const DSE_CHUNK: &str = "dse_chunk";
+}
+
+/// One recorded span: a stage name plus its duration in microseconds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Which stage this span timed (one of the [`stage`] constants).
+    pub stage: &'static str,
+    /// Wall-clock duration in microseconds.
+    pub dur_us: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    ring: VecDeque<SpanRecord>,
+    dropped: u64,
+}
+
+/// A bounded ring buffer of recent spans with a dropped counter.
+#[derive(Debug)]
+pub struct SpanLog {
+    cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl SpanLog {
+    /// A log retaining at most `cap` recent spans (0 disables).
+    pub fn new(cap: usize) -> SpanLog {
+        SpanLog { cap, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Record a finished span. Evicts the oldest retained span (and
+    /// bumps `dropped`) when full; with capacity 0 every record drops.
+    pub fn record_us(&self, stage: &'static str, dur_us: u64) {
+        let mut inner = self.inner.lock().expect("span log lock");
+        if self.cap == 0 {
+            inner.dropped += 1;
+            return;
+        }
+        if inner.ring.len() == self.cap {
+            inner.ring.pop_front();
+            inner.dropped += 1;
+        }
+        inner.ring.push_back(SpanRecord { stage, dur_us });
+    }
+
+    /// Start a scoped timer; the span records itself on drop.
+    pub fn time(&self, stage: &'static str) -> SpanTimer<'_> {
+        SpanTimer { log: self, stage, started: Instant::now() }
+    }
+
+    /// Number of spans currently retained.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("span log lock").ring.len()
+    }
+
+    /// True when no spans are retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total spans evicted or rejected since creation.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().expect("span log lock").dropped
+    }
+
+    /// Copy of the retained spans, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        self.inner.lock().expect("span log lock").ring.iter().copied().collect()
+    }
+
+    /// Aggregate the retained spans: `(stage, count, total_us)` sorted
+    /// by stage name.
+    pub fn stage_totals(&self) -> Vec<(&'static str, u64, u64)> {
+        let mut totals: BTreeMap<&'static str, (u64, u64)> = BTreeMap::new();
+        for span in self.inner.lock().expect("span log lock").ring.iter() {
+            let entry = totals.entry(span.stage).or_insert((0, 0));
+            entry.0 += 1;
+            entry.1 += span.dur_us;
+        }
+        totals.into_iter().map(|(stage, (count, total))| (stage, count, total)).collect()
+    }
+}
+
+/// Scoped timer returned by [`SpanLog::time`]; records on drop.
+#[must_use = "the span records its duration when dropped"]
+#[derive(Debug)]
+pub struct SpanTimer<'a> {
+    log: &'a SpanLog,
+    stage: &'static str,
+    started: Instant,
+}
+
+impl Drop for SpanTimer<'_> {
+    fn drop(&mut self) {
+        self.log.record_us(self.stage, self.started.elapsed().as_micros() as u64);
+    }
+}
+
+/// The process-global span log (capacity 4096) shared by serve, grid
+/// and dse instrumentation. Host-side observability only: nothing in
+/// the wire protocol reads it, so concurrent tests sharing it cannot
+/// perturb pinned replies.
+pub fn global() -> &'static SpanLog {
+    static GLOBAL: OnceLock<SpanLog> = OnceLock::new();
+    GLOBAL.get_or_init(|| SpanLog::new(4096))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let log = SpanLog::new(2);
+        log.record_us("a", 1);
+        log.record_us("b", 2);
+        assert_eq!(log.dropped(), 0);
+        log.record_us("c", 3);
+        assert_eq!(log.dropped(), 1);
+        let spans = log.snapshot();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].stage, "b");
+        assert_eq!(spans[1].stage, "c");
+    }
+
+    #[test]
+    fn zero_capacity_drops_everything() {
+        let log = SpanLog::new(0);
+        log.record_us("a", 1);
+        log.record_us("b", 2);
+        assert!(log.is_empty());
+        assert_eq!(log.dropped(), 2);
+    }
+
+    #[test]
+    fn scoped_timer_records_on_drop() {
+        let log = SpanLog::new(8);
+        {
+            let _span = log.time(stage::DECODE);
+        }
+        let spans = log.snapshot();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].stage, stage::DECODE);
+    }
+
+    #[test]
+    fn stage_totals_aggregate_sorted_by_stage() {
+        let log = SpanLog::new(8);
+        log.record_us("write", 5);
+        log.record_us("decode", 2);
+        log.record_us("decode", 3);
+        assert_eq!(log.stage_totals(), vec![("decode", 2, 5), ("write", 1, 5)]);
+    }
+}

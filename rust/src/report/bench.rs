@@ -1,16 +1,19 @@
 //! The `psim bench` JSON summary: one flat object per run, the repo's
 //! perf-trajectory record format.
 //!
-//! `BENCH_serve.json` at the repo root is a checked-in summary produced
-//! by `psim bench --out`; CI re-runs a short bench against the pooled
-//! server and validates both files against [`SUMMARY_KEYS`] (schema
-//! gated, numbers recorded). The key list is additionally pinned by the
+//! `BENCH_serve.json` at the repo root is an append-only JSON array —
+//! one summary per PR, each produced by `psim bench --out` (or carried
+//! forward as an unmeasured baseline tagged `"measured": false`). CI
+//! re-runs a short bench against the pooled server and validates the
+//! fresh summary with [`validate_summary`] and the checked-in history
+//! with [`validate_history`] (schema gated, numbers recorded). The key
+//! list is additionally pinned by the
 //! `rust/tests/golden/protocol/serve/bench_summary.txt` fixture so the
 //! schema cannot drift silently.
 
 use std::time::Duration;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::api::PROTOCOL_VERSION;
 use crate::util::benchkit::percentile;
@@ -156,6 +159,33 @@ pub fn validate_summary(summary: &Json) -> Result<()> {
     Ok(())
 }
 
+/// Validate the append-only `BENCH_serve.json` history: a non-empty
+/// JSON array with one [`validate_summary`]-clean entry per PR. Each
+/// entry may carry an extra `"measured": bool` marker (`false` means
+/// the numbers were carried forward from an earlier environment, not
+/// re-measured); the marker is stripped before schema validation so
+/// the summary key set stays exact.
+pub fn validate_history(history: &Json) -> Result<()> {
+    let Some(entries) = history.as_arr() else {
+        bail!("bench history must be a JSON array of summaries");
+    };
+    ensure!(!entries.is_empty(), "bench history must hold at least one entry");
+    for (i, entry) in entries.iter().enumerate() {
+        let Json::Obj(map) = entry else {
+            bail!("bench history entry {i} must be an object");
+        };
+        let mut map = map.clone();
+        if let Some(flag) = map.remove("measured") {
+            ensure!(
+                matches!(flag, Json::Bool(_)),
+                "bench history entry {i}: \"measured\" must be a bool"
+            );
+        }
+        validate_summary(&Json::Obj(map)).with_context(|| format!("bench history entry {i}"))?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +275,32 @@ mod tests {
         };
         validate_summary(&empty.summary()).unwrap();
         assert_eq!(empty.summary().get("latency_p99_us").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn checked_in_history_validates() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+        let text = std::fs::read_to_string(path).expect("BENCH_serve.json at the repo root");
+        let history = Json::parse(&text).expect("BENCH_serve.json parses");
+        validate_history(&history).unwrap();
+        // The baseline entry is explicitly tagged as carried forward.
+        let first = &history.as_arr().unwrap()[0];
+        assert_eq!(first.get("measured"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn history_validator_rejects_bad_shapes() {
+        assert!(validate_history(&Json::Num(1.0)).is_err(), "non-array");
+        assert!(validate_history(&Json::Arr(vec![])).is_err(), "empty history");
+        assert!(validate_history(&Json::Arr(vec![Json::Num(1.0)])).is_err(), "non-object entry");
+        // A "measured" marker is tolerated (and stripped) ...
+        let Json::Obj(mut map) = run().summary() else { panic!() };
+        map.insert("measured".into(), Json::Bool(false));
+        validate_history(&Json::Arr(vec![Json::Obj(map)])).unwrap();
+        // ... but only as a bool.
+        let Json::Obj(mut map) = run().summary() else { panic!() };
+        map.insert("measured".into(), Json::Num(0.0));
+        assert!(validate_history(&Json::Arr(vec![Json::Obj(map)])).is_err());
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Property-based invariants for the `obs::metrics` histogram and the
+//! `obs::span` ring buffer, using the in-tree quickcheck harness
+//! (deterministic, replayable).
+//!
+//! The three load-bearing claims behind `{"cmd":"stats"}`:
+//! per-thread histograms merge losslessly, bucketed percentiles stay
+//! within one bucket width of the exact [`percentile`] over the raw
+//! samples, and concurrent recording never drops a count.
+
+use psim::obs::metrics::{bucket_bound, Counter, Histogram, BUCKETS};
+use psim::obs::span::SpanLog;
+use psim::prop_assert;
+use psim::util::benchkit::percentile;
+use psim::util::prng::Rng;
+use psim::util::quickcheck::forall;
+
+/// Smallest bucket index whose upper bound holds `v` — the bucket
+/// `Histogram::record` files `v` under, recomputed from the public
+/// bounds so the test cannot share a bug with the implementation.
+fn bucket_of(v: u64) -> usize {
+    (0..BUCKETS).find(|&i| v <= bucket_bound(i)).expect("last bucket holds u64::MAX")
+}
+
+/// Random latency sample sets: mixed magnitudes so buckets across the
+/// whole log-2 range (including 0 and the overflow bucket) get hit.
+fn gen_samples(r: &mut Rng) -> Vec<u64> {
+    let n = r.range(1, 200);
+    (0..n)
+        .map(|_| {
+            let magnitude = r.range(0, 40) as u32;
+            r.below(2u64.saturating_pow(magnitude).max(1))
+        })
+        .collect()
+}
+
+#[test]
+fn merged_shards_equal_single_histogram() {
+    forall("hist-merge-lossless", 64, gen_samples, |samples| {
+        let single = Histogram::new();
+        for &v in samples {
+            single.record(v);
+        }
+        // Shard the same samples over 4 histograms, then merge.
+        let shards: Vec<Histogram> = (0..4).map(|_| Histogram::new()).collect();
+        for (i, &v) in samples.iter().enumerate() {
+            shards[i % shards.len()].record(v);
+        }
+        let merged = Histogram::new();
+        for shard in &shards {
+            merged.merge(shard);
+        }
+        prop_assert!(merged.count() == single.count(), "count diverged");
+        prop_assert!(merged.sum() == single.sum(), "sum diverged");
+        prop_assert!(merged.max_value() == single.max_value(), "max diverged");
+        prop_assert!(
+            merged.bucket_counts() == single.bucket_counts(),
+            "bucket counts diverged: {:?} != {:?}",
+            merged.bucket_counts(),
+            single.bucket_counts()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn bucketed_percentiles_track_exact_percentiles() {
+    forall("hist-percentile-vs-exact", 64, gen_samples, |samples| {
+        let hist = Histogram::new();
+        for &v in samples {
+            hist.record(v);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for p in [0.50, 0.95, 0.99] {
+            let exact = percentile(&sorted, p);
+            let bucketed = hist.percentile(p);
+            prop_assert!(
+                exact <= bucketed,
+                "p{p}: bucketed {bucketed} below exact {exact}"
+            );
+            let bucket = bucket_of(exact);
+            prop_assert!(
+                bucket_of(bucketed) == bucket,
+                "p{p}: bucketed {bucketed} left exact {exact}'s bucket {bucket}"
+            );
+            let lower = if bucket == 0 { 0 } else { bucket_bound(bucket - 1) };
+            let width = bucket_bound(bucket) - lower;
+            prop_assert!(
+                bucketed - exact <= width,
+                "p{p}: bucketed {bucketed} more than one bucket width {width} above {exact}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn concurrent_recording_never_loses_counts() {
+    for (threads, per_thread) in [(2, 100), (4, 250), (8, 397)] {
+        let hist = Histogram::new();
+        let counter = Counter::new();
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let (hist, counter) = (&hist, &counter);
+                scope.spawn(move || {
+                    for i in 0..per_thread {
+                        hist.record((t * per_thread + i) as u64);
+                        counter.inc();
+                    }
+                });
+            }
+        });
+        let expected = (threads * per_thread) as u64;
+        assert_eq!(hist.count(), expected, "{threads}x{per_thread}: histogram lost counts");
+        assert_eq!(counter.get(), expected, "{threads}x{per_thread}: counter lost increments");
+        let bucket_total: u64 = hist.bucket_counts().iter().sum();
+        assert_eq!(bucket_total, expected, "{threads}x{per_thread}: buckets lost counts");
+        let max_sample = expected - 1;
+        let exact_sum = max_sample * expected / 2;
+        assert_eq!(hist.sum(), exact_sum, "{threads}x{per_thread}: sum lost increments");
+        assert_eq!(hist.max_value(), max_sample, "{threads}x{per_thread}: max lost");
+    }
+}
+
+#[test]
+fn span_ring_accounts_for_every_record() {
+    forall(
+        "span-ring-conservation",
+        64,
+        |r: &mut Rng| (r.range(0, 16), r.range(0, 64)),
+        |&(cap, records)| {
+            let log = SpanLog::new(cap);
+            for i in 0..records {
+                log.record_us("stage", i as u64);
+            }
+            let kept = records.min(cap);
+            prop_assert!(log.len() == kept, "kept {} != {kept}", log.len());
+            prop_assert!(
+                log.dropped() == (records - kept) as u64,
+                "dropped {} != {}",
+                log.dropped(),
+                records - kept
+            );
+            // The ring keeps the NEWEST entries: the survivors are the
+            // last `kept` durations in record order.
+            let tail: Vec<u64> = (records - kept..records).map(|i| i as u64).collect();
+            let snap: Vec<u64> = log.snapshot().iter().map(|s| s.dur_us).collect();
+            prop_assert!(snap == tail, "ring kept {snap:?}, expected {tail:?}");
+            Ok(())
+        },
+    );
+}
