@@ -204,6 +204,7 @@ pub fn decode_request(msg: &Json) -> Result<Request, ApiError> {
             "fusion" => decode_fusion(msg).map_err(ApiError::bad),
             "analyze" => decode_analyze(msg).map_err(ApiError::bad),
             "tables" => decode_tables(msg).map_err(ApiError::bad),
+            "zoo" => Ok(Request::Zoo),
             "metrics" => Ok(Request::Metrics),
             "stats" => Ok(Request::Stats),
             "version" => Ok(Request::Version),
@@ -399,6 +400,7 @@ pub fn encode_request(req: &Request) -> Json {
             "image",
             Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
         )]),
+        Request::Zoo => Json::obj(vec![cmd("zoo"), proto]),
         Request::Metrics => Json::obj(vec![cmd("metrics"), proto]),
         Request::Stats => Json::obj(vec![cmd("stats"), proto]),
         Request::Version => Json::obj(vec![cmd("version"), proto]),

@@ -35,7 +35,9 @@ use crate::dse::explore as dse_explore;
 use crate::obs::metrics::{Counter, Gauge, Histogram};
 use crate::obs::registry::{register_catalog, Registry};
 use crate::obs::span;
-use crate::report::{analyze as report_analyze, fig2, fusion as report_fusion, tables};
+use crate::report::{
+    analyze as report_analyze, fig2, fusion as report_fusion, tables, zoo as report_zoo,
+};
 use crate::runtime::{ArtifactDir, Tensor};
 use crate::util::json::Json;
 
@@ -600,6 +602,14 @@ impl Engine {
                     TableKind::Fig2Ascii => Response::Text { text: fig2::fig2_ascii() },
                 })
             }
+            Request::Zoo => {
+                // Static listing (no engine state, no knobs): cheaper
+                // than the coalescing rendezvous, so it dispatches
+                // directly like `version`, and needs no new metric —
+                // count/observe no-op on commands outside the catalog.
+                let (table, note) = report_zoo::zoo_table();
+                Ok(Response::Table { table, note })
+            }
             Request::Infer { image } => {
                 let service = self.service.as_ref().ok_or_else(|| {
                     ApiError::new(
@@ -791,6 +801,23 @@ mod tests {
         };
         assert!(summary.contains("disabled"));
         assert_eq!(requests, vec![("metrics", 1), ("version", 2), ("errors", 1)]);
+    }
+
+    #[test]
+    fn zoo_lists_networks_without_touching_the_metric_catalog() {
+        let engine = Engine::analytics();
+        let (reply, stop) = engine.handle_line(r#"{"cmd":"zoo"}"#);
+        assert!(!stop);
+        let table = reply.get("table").unwrap().as_str().unwrap();
+        assert!(table.contains("ViT-Tiny"), "{table}");
+        assert!(table.contains("AlexNet"), "{table}");
+        assert!(reply.get("note").unwrap().as_str().unwrap().contains("networks"));
+        // `zoo` is deliberately outside the pinned metric catalog
+        // (count/observe no-op on it): the stats snapshot shape — pinned
+        // by the stats fixture — must not grow a zoo entry.
+        let (stats, _) = engine.handle_line(r#"{"cmd":"stats"}"#);
+        assert!(stats.get("counters").unwrap().get("api_requests_zoo").is_none());
+        assert!(stats.get("histograms").unwrap().get("api_latency_us_zoo").is_none());
     }
 
     #[test]

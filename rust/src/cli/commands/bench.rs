@@ -36,6 +36,7 @@ fn canned(cmd: &str) -> Option<&'static str> {
         "fusion" => r#"{"cmd":"fusion","networks":["AlexNet"],"depth":2,"macs":512}"#,
         "analyze" => r#"{"cmd":"analyze","network":"AlexNet","macs":512}"#,
         "tables" => r#"{"cmd":"tables","table":"table3"}"#,
+        "zoo" => r#"{"cmd":"zoo"}"#,
         "metrics" => r#"{"cmd":"metrics"}"#,
         "version" => r#"{"cmd":"version"}"#,
         _ => return None,
@@ -63,7 +64,7 @@ fn parse_mix(mix: &str) -> Result<Vec<&'static str>> {
         let Some(line) = canned(name) else {
             bail!(
                 "unknown mix command '{name}' (known: sweep, explore, fusion, analyze, \
-                 tables, metrics, version)"
+                 tables, zoo, metrics, version)"
             );
         };
         for _ in 0..count {
@@ -291,7 +292,8 @@ mod tests {
 
     #[test]
     fn every_canned_line_is_a_valid_request() {
-        for cmd in ["sweep", "explore", "fusion", "analyze", "tables", "metrics", "version"] {
+        for cmd in ["sweep", "explore", "fusion", "analyze", "tables", "zoo", "metrics", "version"]
+        {
             let line = canned(cmd).unwrap();
             let req = crate::api::codec::decode_line(line)
                 .unwrap_or_else(|e| panic!("canned {cmd} line rejected: {e}"));

@@ -11,3 +11,4 @@ pub mod simulate;
 pub mod stats;
 pub mod sweep;
 pub mod tables;
+pub mod zoo;

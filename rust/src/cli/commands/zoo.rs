@@ -1,0 +1,29 @@
+//! `zoo`: the operator-aware network listing.
+//!
+//! Unlike `networks` (lowered-layer totals for the paper/faithful
+//! profiles), `zoo` reports the typed operator view: per-op kind counts
+//! (conv/gemm/attention), true parameter counts, and activation totals
+//! — the same table the `{"cmd":"zoo"}` protocol request returns.
+
+use anyhow::Result;
+
+use crate::api::{Engine, Request, Response};
+use crate::cli::args::Args;
+
+/// `psim zoo [--csv]` — every registered network through the same
+/// engine dispatch the protocol's `{"cmd":"zoo"}` uses.
+pub fn zoo(args: &Args) -> Result<i32> {
+    let csv = args.flag("csv");
+    args.reject_unknown()?;
+    let engine = Engine::analytics();
+    let Response::Table { table, note } = engine.dispatch(&Request::Zoo)? else {
+        unreachable!("zoo dispatch always returns a table response")
+    };
+    if csv {
+        print!("{}", table.to_csv());
+    } else {
+        print!("{}", table.to_markdown());
+    }
+    println!("\n{note}");
+    Ok(0)
+}

@@ -1,7 +1,7 @@
 //! The `psim` command surface.
 //!
 //! Paper regenerators: `table1`, `table2`, `table3`, `fig2`, `validate`.
-//! Exploration: `analyze`, `simulate`, `sweep`, `networks`.
+//! Exploration: `analyze`, `simulate`, `sweep`, `networks`, `zoo`.
 //! Functional stack: `infer` (batched PJRT inference), `serve` (TCP
 //! JSON-lines server with a bounded worker pool), `bench` (protocol-level
 //! load generator against `serve`), `stats` (one-shot observability
@@ -34,6 +34,10 @@ Paper evaluation (Section IV):
 
 Exploration:
   networks            list the model zoo with layer/MAC/BW summaries
+  zoo                 operator-aware zoo listing: per-op kind counts
+                      (conv/gemm/attention), MACs, true params,
+                      activation totals
+     options: [--csv]
   analyze             per-layer partitions + bandwidth for one network
      options: --network NAME --macs P [--strategy S] [--mode M]
   simulate            run the event-level simulator, cross-check analytics
@@ -117,6 +121,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "fig2" => commands::tables::fig2(&args),
         "validate" => commands::tables::validate(&args),
         "networks" => commands::analyze::networks(&args),
+        "zoo" => commands::zoo::zoo(&args),
         "analyze" => commands::analyze::analyze(&args),
         "simulate" => commands::simulate::simulate(&args),
         "simsweep" => commands::simulate::simsweep(&args),
@@ -208,6 +213,13 @@ mod tests {
             run(&sv(&["simulate", "--network", "resnet34", "--macs", "2048"])).unwrap(),
             0
         );
+    }
+
+    #[test]
+    fn zoo_runs_and_rejects_unknown_flags() {
+        assert_eq!(run(&sv(&["zoo"])).unwrap(), 0);
+        assert_eq!(run(&sv(&["zoo", "--csv"])).unwrap(), 0);
+        assert!(run(&sv(&["zoo", "--frobnicate"])).is_err());
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //!
 //! The crate has four pillars:
 //!
-//! * [`models`] — conv-layer descriptors + the eight evaluated CNNs.
+//! * [`models`] — the typed operator abstraction (conv / GEMM /
+//!   attention, lowered onto the conv equations by [`models::Op`]) and
+//!   the network zoo: the paper's eight CNNs plus extensions including
+//!   a GEMM/attention ViT-Tiny.
 //! * [`analytics`] — the paper's first-order bandwidth model: partitioning
 //!   strategies (eqs. 1–7), active-memory-controller model, sweeps, and
 //!   the unified [`analytics::grid`] scenario-sweep engine (declarative
@@ -51,7 +54,8 @@ pub mod config;
 pub mod coordinator;
 /// The design-space explorer (Pareto frontiers).
 pub mod dse;
-/// CNN workload descriptors and the precision model.
+/// Workload descriptors (conv/GEMM/attention ops) and the precision
+/// model.
 pub mod models;
 /// Observability: metrics, span tracing, stats snapshot registry.
 pub mod obs;

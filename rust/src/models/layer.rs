@@ -162,7 +162,11 @@ pub struct ConvLayer {
 }
 
 impl ConvLayer {
-    /// Construct a dense (groups=1) layer.
+    /// Construct a dense (groups=1) layer, panicking on invalid shapes.
+    ///
+    /// Zoo builders and tests use this for brevity; anything fed by
+    /// hostile input (config files, the wire protocol) must go through
+    /// [`ConvLayer::try_new`] instead so bad shapes error cleanly.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         name: &str,
@@ -177,7 +181,9 @@ impl ConvLayer {
         Self::grouped(name, wi, hi, m, n, k, stride, pad, 1)
     }
 
-    /// Construct a grouped layer (depthwise when `groups == m == n`).
+    /// Construct a grouped layer (depthwise when `groups == m == n`),
+    /// panicking on invalid shapes — the trusted-input counterpart of
+    /// [`ConvLayer::try_grouped`].
     #[allow(clippy::too_many_arguments)]
     pub fn grouped(
         name: &str,
@@ -190,13 +196,51 @@ impl ConvLayer {
         pad: usize,
         groups: usize,
     ) -> Self {
-        assert!(wi > 0 && hi > 0 && m > 0 && n > 0 && k > 0 && stride > 0 && groups > 0,
-            "invalid layer {name}");
-        assert!(m % groups == 0 && n % groups == 0,
-            "layer {name}: channels {m}->{n} not divisible by groups {groups}");
-        assert!(wi + 2 * pad >= k && hi + 2 * pad >= k,
-            "layer {name}: kernel {k} larger than padded input {wi}x{hi}+2*{pad}");
-        ConvLayer {
+        Self::try_grouped(name, wi, hi, m, n, k, stride, pad, groups)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallibly construct a dense (groups=1) layer — the entry point for
+    /// hostile input (config files, protocol requests).
+    #[allow(clippy::too_many_arguments)]
+    pub fn try_new(
+        name: &str,
+        wi: usize,
+        hi: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Result<Self> {
+        Self::try_grouped(name, wi, hi, m, n, k, stride, pad, 1)
+    }
+
+    /// Fallibly construct a grouped layer, validating the shape: every
+    /// dimension positive, channels divisible by `groups`, and the kernel
+    /// no larger than the padded input.
+    #[allow(clippy::too_many_arguments)]
+    pub fn try_grouped(
+        name: &str,
+        wi: usize,
+        hi: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    ) -> Result<Self> {
+        if !(wi > 0 && hi > 0 && m > 0 && n > 0 && k > 0 && stride > 0 && groups > 0) {
+            bail!("invalid layer {name}");
+        }
+        if m % groups != 0 || n % groups != 0 {
+            bail!("layer {name}: channels {m}->{n} not divisible by groups {groups}");
+        }
+        if wi + 2 * pad < k || hi + 2 * pad < k {
+            bail!("layer {name}: kernel {k} larger than padded input {wi}x{hi}+2*{pad}");
+        }
+        Ok(ConvLayer {
             name: name.to_string(),
             wi,
             hi,
@@ -206,7 +250,7 @@ impl ConvLayer {
             stride,
             pad,
             groups,
-        }
+        })
     }
 
     /// Output width: `floor((Wi + 2*pad - K)/stride) + 1`.
@@ -366,5 +410,21 @@ mod tests {
     #[should_panic]
     fn rejects_kernel_bigger_than_input() {
         ConvLayer::new("bad", 2, 2, 8, 8, 7, 1, 0);
+    }
+
+    #[test]
+    fn try_constructors_error_instead_of_panicking() {
+        // The same three shape violations the panicking wrappers trap,
+        // surfaced as clean errors for hostile-input paths.
+        let err = ConvLayer::try_new("z", 0, 8, 8, 8, 3, 1, 1).unwrap_err();
+        assert!(err.to_string().contains("invalid layer z"), "{err}");
+        let err = ConvLayer::try_grouped("g", 8, 8, 10, 10, 3, 1, 1, 3).unwrap_err();
+        assert!(err.to_string().contains("not divisible by groups"), "{err}");
+        let err = ConvLayer::try_new("k", 2, 2, 8, 8, 7, 1, 0).unwrap_err();
+        assert!(err.to_string().contains("larger than padded input"), "{err}");
+        // And the happy path agrees with the panicking constructor.
+        let a = ConvLayer::try_grouped("dw", 112, 112, 32, 32, 3, 1, 1, 32).unwrap();
+        let b = ConvLayer::grouped("dw", 112, 112, 32, 32, 3, 1, 1, 32);
+        assert_eq!(a, b);
     }
 }

@@ -1,14 +1,20 @@
-//! CNN workload descriptors.
+//! Workload descriptors: conv layers, the GEMM/attention operator
+//! abstraction, and the network zoo.
 //!
-//! The paper's analysis depends only on the *shapes* of the convolution
-//! layers (input/output spatial dims, channel counts, kernel size, groups),
-//! never on weights or activations. [`ConvLayer`] captures exactly that,
-//! and [`zoo`] provides torchvision-faithful definitions of the eight
-//! networks evaluated in the paper (Tables I–III) at 224x224 input.
+//! The paper's analysis depends only on the *shapes* of the operators
+//! (spatial dims, channel counts, kernel size, groups — or GEMM
+//! M/K/N), never on weights or activations. [`ConvLayer`] captures a
+//! convolution; [`Op`] generalizes to GEMM and attention by lowering
+//! them onto the 1×1-conv equations (see [`op`]); [`zoo`] provides
+//! torchvision-faithful definitions of the eight networks evaluated in
+//! the paper (Tables I–III) at 224x224 input, plus extension networks
+//! including a GEMM/attention ViT-Tiny.
 
 pub mod layer;
 pub mod network;
+pub mod op;
 pub mod zoo;
 
 pub use layer::{ConvLayer, DataTypes};
 pub use network::Network;
+pub use op::{Op, OpKind};

@@ -1,21 +1,44 @@
-//! A network = named ordered list of conv layers, plus aggregate queries.
+//! A network = named ordered list of operators, plus aggregate queries.
+//!
+//! The typed [`Op`] list is the source of truth; the lowered
+//! [`ConvLayer`] list (`layers`) is what every analytical/simulated
+//! consumer evaluates. Conv-only networks lower to themselves, so the
+//! two views coincide for the paper's eight CNNs and every pre-existing
+//! golden stays byte-identical.
 
 use super::layer::{ConvLayer, DataTypes};
+use super::op::Op;
 
-/// A CNN's convolution stack (the only part the paper's analysis touches).
+/// A network's operator stack (conv-only CNNs, GEMM/attention
+/// transformers, or a mix), with the lowered conv view alongside.
 #[derive(Clone, Debug)]
 pub struct Network {
     /// Paper-facing name, e.g. `"AlexNet"`.
     pub name: String,
-    /// Conv layers in execution order.
+    /// Lowered conv layers in execution order — the representation the
+    /// analytics/sim/dse stack consumes (see [`Op::lower`]).
     pub layers: Vec<ConvLayer>,
+    /// Typed operators in execution order — the source of truth
+    /// `layers` is lowered from. For conv-only networks this is one
+    /// [`Op::Conv`] per layer.
+    pub ops: Vec<Op>,
 }
 
 impl Network {
-    /// A named network over a non-empty conv stack.
+    /// A named network over a non-empty conv stack (each layer becomes
+    /// one [`Op::Conv`]).
     pub fn new(name: &str, layers: Vec<ConvLayer>) -> Self {
         assert!(!layers.is_empty(), "network {name} has no layers");
-        Network { name: name.to_string(), layers }
+        let ops = layers.iter().cloned().map(Op::Conv).collect();
+        Network { name: name.to_string(), layers, ops }
+    }
+
+    /// A named network over a non-empty operator list; `layers` is the
+    /// concatenated lowering in execution order.
+    pub fn from_ops(name: &str, ops: Vec<Op>) -> Self {
+        assert!(!ops.is_empty(), "network {name} has no ops");
+        let layers = ops.iter().flat_map(Op::lower).collect();
+        Network { name: name.to_string(), layers, ops }
     }
 
     /// Minimum bandwidth (activations moved if every tensor is read once
@@ -43,7 +66,7 @@ impl Network {
             .sum()
     }
 
-    /// Total MACs over all conv layers.
+    /// Total MACs over all (lowered) conv layers.
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(|l| l.macs()).sum()
     }
@@ -53,18 +76,32 @@ impl Network {
         self.layers.iter().map(|l| l.weights()).sum()
     }
 
-    /// Find a layer by name.
+    /// Find a (lowered) layer by name.
     pub fn layer(&self, name: &str) -> Option<&ConvLayer> {
         self.layers.iter().find(|l| l.name == name)
     }
 
+    /// Find an operator by name.
+    pub fn op(&self, name: &str) -> Option<&Op> {
+        self.ops.iter().find(|o| o.name() == name)
+    }
+
     /// The network with every layer's `groups` erased — see
     /// [`ConvLayer::dense_equivalent`]. Minimum bandwidth is unchanged;
-    /// partitioned bandwidth generally grows.
+    /// partitioned bandwidth generally grows. GEMM/attention ops carry
+    /// no groups and pass through untouched.
     pub fn dense_equivalent(&self) -> Network {
         Network {
             name: self.name.clone(),
             layers: self.layers.iter().map(|l| l.dense_equivalent()).collect(),
+            ops: self
+                .ops
+                .iter()
+                .map(|o| match o {
+                    Op::Conv(l) => Op::Conv(l.dense_equivalent()),
+                    other => other.clone(),
+                })
+                .collect(),
         }
     }
 }
@@ -119,8 +156,48 @@ mod tests {
     }
 
     #[test]
+    fn conv_networks_carry_one_conv_op_per_layer() {
+        let n = tiny();
+        assert_eq!(n.ops.len(), n.layers.len());
+        assert!(n.ops.iter().all(|o| matches!(o, Op::Conv(_))));
+        assert!(n.op("c1").is_some());
+        assert!(n.op("nope").is_none());
+    }
+
+    #[test]
+    fn from_ops_lowers_in_execution_order() {
+        let n = Network::from_ops(
+            "mixed",
+            vec![
+                Op::Conv(ConvLayer::new("stem", 8, 8, 3, 16, 3, 1, 1)),
+                Op::gemm("fc", 64, 16, 32).unwrap(),
+                Op::attention("attn", 64, 2, 32, 16).unwrap(),
+            ],
+        );
+        assert_eq!(n.ops.len(), 3);
+        // stem + fc + (3 proj + 2 heads × 2 + out proj) attention layers.
+        assert_eq!(n.layers.len(), 1 + 1 + 8);
+        assert_eq!(n.layers[0].name, "stem");
+        assert_eq!(n.layers[1].name, "fc");
+        assert!(n.layers[2].name.starts_with("attn."));
+        // Aggregates agree between the op view and the lowered view.
+        let op_macs: u64 = n.ops.iter().map(Op::macs).sum();
+        assert_eq!(n.total_macs(), op_macs);
+        // Dense-equivalent passes non-conv ops through untouched.
+        let d = n.dense_equivalent();
+        assert_eq!(d.layers.len(), n.layers.len());
+        assert_eq!(d.ops.len(), n.ops.len());
+    }
+
+    #[test]
     #[should_panic]
     fn empty_network_rejected() {
         Network::new("empty", vec![]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_op_network_rejected() {
+        Network::from_ops("empty", vec![]);
     }
 }

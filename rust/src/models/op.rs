@@ -1,0 +1,434 @@
+//! The operator abstraction: conv, GEMM and attention workloads behind
+//! one type, all lowered onto the paper's conv equations.
+//!
+//! The paper's bandwidth model (eqs. 2–4) and the eq.-7 optimum apply to
+//! any operator that accumulates over a reduction dimension and spills
+//! wide partial sums — a GEMM is exactly the 1×1-conv special case:
+//!
+//! ```text
+//! Gemm { m_rows, k_dim, n_cols }
+//!   ≡ ConvLayer { wi: 1, hi: m_rows, m: k_dim, n: n_cols, k: 1, s: 1 }
+//! ```
+//!
+//! Under that mapping eq. 2 reads `B_i = m_rows·k_dim·ceil(n_cols/n)`
+//! (the A matrix re-read once per B-column block), eq. 3 reads
+//! `B_o = m_rows·n_cols·(2·ceil(k_dim/m)−1)` (C-tile partial sums written
+//! and read back once per K-slice), and eq. 7's `m*` optimizes the
+//! K-dimension split — element-for-element what the conv equations give,
+//! pinned by `rust/tests/op_equivalence.rs`. An attention layer is a
+//! fixed DAG of GEMMs (QKV projections, per-head `Q·Kᵀ` and `attn·V`,
+//! output projection), so it lowers to a list of 1×1 convs; softmax and
+//! residual adds are elementwise and carry no reduction, so the
+//! first-order model ignores them (as it ignores pooling/ReLU for CNNs).
+//!
+//! [`Op::lower`] is the single bridge: everything downstream of
+//! [`Network`](super::Network) (analytics, sim, dse, report) consumes the
+//! lowered [`ConvLayer`] list, so conv networks reproduce their pinned
+//! goldens byte-for-byte and the new workload classes ride the same
+//! equations, byte model and memo cache.
+
+use anyhow::{bail, Result};
+
+use super::layer::ConvLayer;
+
+/// The workload class of an [`Op`] (stable lowercase labels for tables
+/// and the wire).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// A convolution layer.
+    Conv,
+    /// A dense matrix multiply.
+    Gemm,
+    /// A multi-head self-attention layer.
+    Attention,
+}
+
+impl OpKind {
+    /// Stable lowercase label (`"conv"`/`"gemm"`/`"attention"`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpKind::Conv => "conv",
+            OpKind::Gemm => "gemm",
+            OpKind::Attention => "attention",
+        }
+    }
+}
+
+/// One operator of a [`Network`](super::Network): the typed source of
+/// truth a network is built from, lowered to [`ConvLayer`]s for every
+/// downstream consumer (see the module docs for the mapping).
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// A convolution layer — lowers to itself.
+    Conv(ConvLayer),
+    /// A dense GEMM `C[m_rows×n_cols] = A[m_rows×k_dim] · W[k_dim×n_cols]`
+    /// with `A` as the streamed activation and `W` as weights.
+    Gemm {
+        /// Operator name (becomes the lowered layer name).
+        name: String,
+        /// Output rows (the streamed/batch-like dimension, e.g. tokens).
+        m_rows: usize,
+        /// Reduction depth — the dimension partial sums accumulate over.
+        k_dim: usize,
+        /// Output columns (weight-stationary dimension).
+        n_cols: usize,
+    },
+    /// Multi-head self-attention over `seq` tokens of width `d_model`,
+    /// with `heads` heads of width `d_head`. Lowers to the GEMM DAG
+    /// `3× QKV projection, per-head Q·Kᵀ and attn·V, output projection`.
+    Attention {
+        /// Operator name (prefix of the lowered layer names).
+        name: String,
+        /// Sequence length (tokens, incl. any class token).
+        seq: usize,
+        /// Number of attention heads.
+        heads: usize,
+        /// Model (residual-stream) width.
+        d_model: usize,
+        /// Per-head width.
+        d_head: usize,
+    },
+}
+
+impl Op {
+    /// Wrap a conv layer (always valid — the layer validated on
+    /// construction).
+    pub fn conv(layer: ConvLayer) -> Op {
+        Op::Conv(layer)
+    }
+
+    /// Fallibly construct a GEMM op (every dimension must be positive) —
+    /// hostile-input entry point, like [`ConvLayer::try_new`].
+    pub fn gemm(name: &str, m_rows: usize, k_dim: usize, n_cols: usize) -> Result<Op> {
+        if m_rows == 0 || k_dim == 0 || n_cols == 0 {
+            bail!("invalid gemm {name}: dimensions {m_rows}x{k_dim}x{n_cols} must be positive");
+        }
+        Ok(Op::Gemm { name: name.to_string(), m_rows, k_dim, n_cols })
+    }
+
+    /// Fallibly construct an attention op (every dimension must be
+    /// positive).
+    pub fn attention(
+        name: &str,
+        seq: usize,
+        heads: usize,
+        d_model: usize,
+        d_head: usize,
+    ) -> Result<Op> {
+        if seq == 0 || heads == 0 || d_model == 0 || d_head == 0 {
+            bail!(
+                "invalid attention {name}: seq={seq} heads={heads} \
+                 d_model={d_model} d_head={d_head} must be positive"
+            );
+        }
+        Ok(Op::Attention { name: name.to_string(), seq, heads, d_model, d_head })
+    }
+
+    /// Operator name.
+    pub fn name(&self) -> &str {
+        match self {
+            Op::Conv(l) => &l.name,
+            Op::Gemm { name, .. } | Op::Attention { name, .. } => name,
+        }
+    }
+
+    /// Workload class.
+    pub fn kind(&self) -> OpKind {
+        match self {
+            Op::Conv(_) => OpKind::Conv,
+            Op::Gemm { .. } => OpKind::Gemm,
+            Op::Attention { .. } => OpKind::Attention,
+        }
+    }
+
+    /// The attention GEMM DAG in execution order (empty for other kinds):
+    /// Q/K/V projections, then per-head `Q·Kᵀ` (scores) and `attn·V`
+    /// (context), then the output projection. Softmax is elementwise and
+    /// carries no reduction, so it contributes no GEMM.
+    fn attention_gemms(&self) -> Vec<Op> {
+        let Op::Attention { name, seq, heads, d_model, d_head } = self else {
+            return Vec::new();
+        };
+        let (seq, heads, d_model, d_head) = (*seq, *heads, *d_model, *d_head);
+        let inner = heads * d_head;
+        let mut gemms = Vec::with_capacity(4 + 2 * heads);
+        for proj in ["q", "k", "v"] {
+            gemms.push(Op::Gemm {
+                name: format!("{name}.{proj}"),
+                m_rows: seq,
+                k_dim: d_model,
+                n_cols: inner,
+            });
+        }
+        for h in 0..heads {
+            // Q·Kᵀ: every pair of tokens, reduced over the head width.
+            gemms.push(Op::Gemm {
+                name: format!("{name}.h{h}.score"),
+                m_rows: seq,
+                k_dim: d_head,
+                n_cols: seq,
+            });
+            // attn·V: context vectors, reduced over the sequence.
+            gemms.push(Op::Gemm {
+                name: format!("{name}.h{h}.ctx"),
+                m_rows: seq,
+                k_dim: seq,
+                n_cols: d_head,
+            });
+        }
+        gemms.push(Op::Gemm {
+            name: format!("{name}.proj"),
+            m_rows: seq,
+            k_dim: inner,
+            n_cols: d_model,
+        });
+        gemms
+    }
+
+    /// Lower to the conv layers every downstream consumer evaluates: a
+    /// conv to itself, a GEMM to its 1×1-conv equivalent (`hi = m_rows`,
+    /// `m = k_dim`, `n = n_cols` — so spatial striping tiles the GEMM's
+    /// row dimension and eq. 3 prices its K-dimension partial sums), an
+    /// attention op to its lowered GEMM DAG.
+    ///
+    /// The worked `d_model = 192` example of `docs/MODEL.md` ("GEMM and
+    /// attention on the same equations"), pinned:
+    ///
+    /// ```
+    /// use psim::analytics::bandwidth::{layer_bandwidth, layer_bandwidth_bytes, ControllerMode};
+    /// use psim::analytics::partition::{partition_layer, partition_layer_bytes, Strategy};
+    /// use psim::models::{DataTypes, Op};
+    ///
+    /// // ViT-Tiny's MLP fc1: C[197×768] = A[197×192] · W[192×768], P = 512.
+    /// let fc1 = Op::gemm("fc1", 197, 192, 768).unwrap();
+    /// let layers = fc1.lower();
+    /// let l = &layers[0];
+    /// let mode = ControllerMode::Passive;
+    ///
+    /// // Element optimum: eq. 7 collapses to m* = sqrt(2·512) = 32.
+    /// let p = partition_layer(l, 512, Strategy::Optimal, mode);
+    /// assert_eq!((p.m, p.n), (32, 16));
+    /// let bw = layer_bandwidth(l, p.m, p.n, mode);
+    /// assert_eq!(bw.input, 1815552.0);  // eq. 2: 197·192·ceil(768/16)
+    /// assert_eq!(bw.output, 1664256.0); // eq. 3: 197·768·(2·ceil(192/32)−1)
+    ///
+    /// // Byte optimum under wide psums: m*_bytes = 2·m* = 64.
+    /// let dt = DataTypes::parse("8:8:32:8").unwrap();
+    /// let pb = partition_layer_bytes(l, 512, Strategy::Optimal, mode, &dt);
+    /// assert_eq!((pb.m, pb.n), (64, 8));
+    /// let bytes = layer_bandwidth_bytes(l, pb.m, pb.n, mode, &dt);
+    /// assert_eq!(bytes.input, 3631104.0);
+    /// assert_eq!(bytes.psum, 2420736.0);
+    /// assert_eq!(bytes.ofmap, 151296.0);
+    /// assert_eq!(bytes.input + bytes.psum + bytes.ofmap, 6203136.0);
+    /// ```
+    pub fn lower(&self) -> Vec<ConvLayer> {
+        match self {
+            Op::Conv(l) => vec![l.clone()],
+            Op::Gemm { name, m_rows, k_dim, n_cols } => {
+                vec![ConvLayer::new(name, 1, *m_rows, *k_dim, *n_cols, 1, 1, 0)]
+            }
+            Op::Attention { .. } => {
+                self.attention_gemms().iter().flat_map(|g| g.lower()).collect()
+            }
+        }
+    }
+
+    /// Input activations streamed in once: `Wi·Hi·M` per conv,
+    /// `m_rows·k_dim` per GEMM, summed over the lowered DAG for
+    /// attention (each stage's input counted once, intermediates
+    /// included).
+    pub fn input_activations(&self) -> u64 {
+        match self {
+            Op::Conv(l) => l.input_activations(),
+            Op::Gemm { m_rows, k_dim, .. } => *m_rows as u64 * *k_dim as u64,
+            Op::Attention { .. } => self.attention_gemms().iter().map(Op::input_activations).sum(),
+        }
+    }
+
+    /// Output activations written once: `Wo·Ho·N` per conv,
+    /// `m_rows·n_cols` per GEMM, summed over the lowered DAG for
+    /// attention.
+    pub fn output_activations(&self) -> u64 {
+        match self {
+            Op::Conv(l) => l.output_activations(),
+            Op::Gemm { m_rows, n_cols, .. } => *m_rows as u64 * *n_cols as u64,
+            Op::Attention { .. } => self.attention_gemms().iter().map(Op::output_activations).sum(),
+        }
+    }
+
+    /// Weight parameters: `N·(M/g)·K²` per conv, `k_dim·n_cols` per GEMM.
+    /// Attention weights are its four projection GEMMs; the per-head
+    /// `Q·Kᵀ`/`attn·V` stages multiply two *activations* and carry no
+    /// weights — the lowered model streams one operand as eq. 2 input
+    /// and treats the other as the layer's (once-loaded) kernel, which
+    /// is exactly how a weight-stationary array executes them.
+    pub fn weights(&self) -> u64 {
+        match self {
+            Op::Conv(l) => l.weights(),
+            Op::Gemm { k_dim, n_cols, .. } => *k_dim as u64 * *n_cols as u64,
+            Op::Attention { heads, d_model, d_head, .. } => {
+                // q + k + v + proj: 4 × d_model·(heads·d_head).
+                4 * *d_model as u64 * (*heads as u64 * *d_head as u64)
+            }
+        }
+    }
+
+    /// Total multiply-accumulates: `Wo·Ho·N·(M/g)·K²` per conv,
+    /// `m_rows·k_dim·n_cols` per GEMM, summed over the DAG for attention.
+    pub fn macs(&self) -> u64 {
+        match self {
+            Op::Conv(l) => l.macs(),
+            Op::Gemm { m_rows, k_dim, n_cols, .. } => {
+                *m_rows as u64 * *k_dim as u64 * *n_cols as u64
+            }
+            Op::Attention { .. } => self.attention_gemms().iter().map(Op::macs).sum(),
+        }
+    }
+
+    /// Reduction depth: how many products accumulate into one output
+    /// element — `(M/g)·K²` per conv, `k_dim` per GEMM, the deepest
+    /// lowered stage for attention. This is the dimension eq. 3's
+    /// `it = ceil(M/m)` splits, i.e. what makes partial sums spill.
+    pub fn reduction_depth(&self) -> u64 {
+        match self {
+            Op::Conv(l) => l.m_per_group() as u64 * (l.k * l.k) as u64,
+            Op::Gemm { k_dim, .. } => *k_dim as u64,
+            Op::Attention { .. } => {
+                self.attention_gemms().iter().map(Op::reduction_depth).max().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Partial-sum footprint: live accumulator elements while the op's
+    /// widest stage computes — its output elements (`Wo·Ho·N` /
+    /// `m_rows·n_cols`), each held at psum width until the final
+    /// quantized write. For attention this is the largest lowered stage
+    /// (the `seq×seq` score matrix once `seq > heads·d_head`).
+    pub fn psum_footprint(&self) -> u64 {
+        match self {
+            Op::Conv(_) | Op::Gemm { .. } => self.output_activations(),
+            Op::Attention { .. } => {
+                self.attention_gemms().iter().map(Op::psum_footprint).max().unwrap_or(0)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Op {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Op::Conv(l) => write!(f, "{l}"),
+            Op::Gemm { name, m_rows, k_dim, n_cols } => {
+                write!(f, "{name}: gemm {m_rows}x{k_dim} . {k_dim}x{n_cols}")
+            }
+            Op::Attention { name, seq, heads, d_model, d_head } => {
+                write!(f, "{name}: attention seq{seq} h{heads} d{d_model}/{d_head}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gemm() -> Op {
+        Op::gemm("fc", 197, 192, 768).unwrap()
+    }
+
+    fn attn() -> Op {
+        Op::attention("attn", 197, 3, 192, 64).unwrap()
+    }
+
+    #[test]
+    fn gemm_lowers_to_one_by_one_conv() {
+        let layers = gemm().lower();
+        assert_eq!(layers.len(), 1);
+        let l = &layers[0];
+        assert_eq!((l.wi, l.hi, l.m, l.n), (1, 197, 192, 768));
+        assert_eq!((l.k, l.stride, l.pad, l.groups), (1, 1, 0, 1));
+        assert_eq!((l.wo(), l.ho()), (1, 197));
+    }
+
+    #[test]
+    fn gemm_derived_quantities_match_lowered_conv() {
+        let op = gemm();
+        let layers = op.lower();
+        let l = &layers[0];
+        assert_eq!(op.input_activations(), l.input_activations());
+        assert_eq!(op.output_activations(), l.output_activations());
+        assert_eq!(op.weights(), l.weights());
+        assert_eq!(op.macs(), l.macs());
+        assert_eq!(op.reduction_depth(), l.m as u64);
+        assert_eq!(op.psum_footprint(), l.output_activations());
+    }
+
+    #[test]
+    fn conv_op_is_transparent() {
+        let l = ConvLayer::new("conv3", 13, 13, 192, 384, 3, 1, 1);
+        let op = Op::conv(l.clone());
+        assert_eq!(op.kind(), OpKind::Conv);
+        assert_eq!(op.lower(), vec![l.clone()]);
+        assert_eq!(op.macs(), l.macs());
+        assert_eq!(op.reduction_depth(), (192 * 9) as u64);
+        assert_eq!(op.psum_footprint(), l.output_activations());
+    }
+
+    #[test]
+    fn attention_lowering_has_the_textbook_shape() {
+        let op = attn();
+        let layers = op.lower();
+        // 3 projections + 3 heads × (score + ctx) + output projection.
+        assert_eq!(layers.len(), 3 + 3 * 2 + 1);
+        // MACs: 4·seq·d_model·inner + heads·2·seq²·d_head.
+        let proj = 4u64 * 197 * 192 * 192;
+        let heads = 3u64 * 2 * 197 * 197 * 64;
+        assert_eq!(op.macs(), proj + heads);
+        assert_eq!(op.macs(), layers.iter().map(|l| l.macs()).sum::<u64>());
+        // Weights: the four projections only.
+        assert_eq!(op.weights(), 4 * 192 * 192);
+        let lowered_weights: u64 = layers.iter().map(|l| l.weights()).sum();
+        // The lowered model charges the score/ctx "kernels" as weights
+        // (they are really the K/V activations): strictly more.
+        assert!(lowered_weights > op.weights());
+        // Deepest reduction: the ctx stage reduces over seq=197 > 192.
+        assert_eq!(op.reduction_depth(), 197);
+        // Widest psum stage: the 197×197 score matrix.
+        assert_eq!(op.psum_footprint(), 197 * 197);
+        // Aggregates delegate to the same DAG as lower().
+        assert_eq!(
+            op.input_activations(),
+            layers.iter().map(|l| l.input_activations()).sum::<u64>()
+        );
+        assert_eq!(
+            op.output_activations(),
+            layers.iter().map(|l| l.output_activations()).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn lowered_attention_names_are_unique() {
+        let names: Vec<String> = attn().lower().into_iter().map(|l| l.name).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len(), "{names:?}");
+    }
+
+    #[test]
+    fn constructors_reject_zero_dimensions() {
+        assert!(Op::gemm("z", 0, 192, 768).is_err());
+        assert!(Op::gemm("z", 197, 192, 0).is_err());
+        assert!(Op::attention("z", 197, 0, 192, 64).is_err());
+        let err = Op::attention("z", 0, 3, 192, 64).unwrap_err();
+        assert!(err.to_string().contains("invalid attention z"), "{err}");
+    }
+
+    #[test]
+    fn kind_labels_are_stable() {
+        assert_eq!(Op::conv(ConvLayer::new("c", 8, 8, 3, 8, 3, 1, 1)).kind().label(), "conv");
+        assert_eq!(gemm().kind().label(), "gemm");
+        assert_eq!(attn().kind().label(), "attention");
+    }
+}

@@ -22,6 +22,7 @@ mod mobilenet_v2;
 mod resnet;
 mod squeezenet;
 mod vgg16;
+mod vit;
 
 pub use alexnet::alexnet;
 pub use googlenet::googlenet;
@@ -31,6 +32,7 @@ pub use mobilenet_v2::mobilenet_v2;
 pub use resnet::{resnet18, resnet34, resnet50, resnet50_classic};
 pub use squeezenet::{squeezenet1_0, squeezenet1_1};
 pub use vgg16::{vgg11, vgg13, vgg16, vgg19};
+pub use vit::vit_tiny;
 
 use super::network::Network;
 
@@ -81,7 +83,8 @@ pub fn faithful_networks() -> Vec<Network> {
     ]
 }
 
-/// Extra networks beyond the paper's eight (extensions/ablations).
+/// Extra networks beyond the paper's eight (extensions/ablations),
+/// including the GEMM/attention [`vit_tiny`] transformer.
 pub fn extra_networks() -> Vec<Network> {
     vec![
         mobilenet_v2(),
@@ -91,6 +94,7 @@ pub fn extra_networks() -> Vec<Network> {
         vgg11(),
         vgg13(),
         vgg19(),
+        vit_tiny(),
     ]
 }
 
@@ -150,6 +154,8 @@ mod tests {
         assert!(by_name("RESNET18").is_some());
         assert!(by_name("resnet34").is_some(), "extras are searchable");
         assert!(by_name("SqueezeNet1.1").is_some());
+        assert!(by_name("vit_tiny").is_some(), "CLI spelling of ViT-Tiny");
+        assert!(by_name("ViT-Tiny").is_some());
         assert!(by_name("resnet101").is_none());
     }
 

@@ -1,0 +1,92 @@
+//! ViT-Tiny (patch 16, 224×224): the transformer workload built from the
+//! GEMM/attention operator abstraction.
+//!
+//! Shape source: the DeiT-Tiny/ViT-Ti configuration — a 16×16 conv patch
+//! embed (3 → 192), then 12 encoder blocks over `seq = 14·14 + 1 = 197`
+//! tokens of width `d_model = 192`, each block = 3-head self-attention
+//! (`d_head = 64`) + a 4× MLP (192 → 768 → 192). LayerNorm, softmax and
+//! residual adds are elementwise (no reduction dimension, no partial
+//! sums) and are ignored exactly as pooling/ReLU are for the CNNs.
+//!
+//! Everything lowers onto the 1×1-conv equations via [`Op::lower`], so
+//! the K-dimension partial-sum traffic of every GEMM rides the paper's
+//! eqs. 2–4 and the byte model unchanged.
+
+use crate::models::{ConvLayer, Network, Op};
+
+/// ViT-Tiny/16 @224: 1 conv patch embed + 12 × (attention, MLP fc1,
+/// MLP fc2) — 37 ops lowering to 145 conv-equivalent layers.
+pub fn vit_tiny() -> Network {
+    const SEQ: usize = 197; // 14×14 patches + class token
+    const D_MODEL: usize = 192;
+    const HEADS: usize = 3;
+    const D_HEAD: usize = 64;
+    const D_MLP: usize = 768;
+
+    let mut ops = vec![Op::Conv(ConvLayer::new("patch_embed", 224, 224, 3, D_MODEL, 16, 16, 0))];
+    for b in 0..12 {
+        ops.push(
+            Op::attention(&format!("block{b}.attn"), SEQ, HEADS, D_MODEL, D_HEAD)
+                .expect("static shape"),
+        );
+        ops.push(
+            Op::gemm(&format!("block{b}.mlp.fc1"), SEQ, D_MODEL, D_MLP).expect("static shape"),
+        );
+        ops.push(
+            Op::gemm(&format!("block{b}.mlp.fc2"), SEQ, D_MLP, D_MODEL).expect("static shape"),
+        );
+    }
+    Network::from_ops("ViT-Tiny", ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::OpKind;
+
+    #[test]
+    fn op_and_layer_counts() {
+        let net = vit_tiny();
+        assert_eq!(net.ops.len(), 1 + 12 * 3);
+        // patch embed + 12 × (10 attention layers + 2 MLP GEMMs).
+        assert_eq!(net.layers.len(), 1 + 12 * 12);
+        let kinds: Vec<OpKind> = net.ops.iter().map(|o| o.kind()).collect();
+        assert_eq!(kinds.iter().filter(|k| **k == OpKind::Conv).count(), 1);
+        assert_eq!(kinds.iter().filter(|k| **k == OpKind::Attention).count(), 12);
+        assert_eq!(kinds.iter().filter(|k| **k == OpKind::Gemm).count(), 24);
+    }
+
+    #[test]
+    fn macs_match_the_published_flop_count() {
+        // Patch embed 14²·192·3·16² + 12 × (attention QKV/proj + per-head
+        // score/ctx + MLP) = 1.2535 GMACs — the ViT-Ti/DeiT-Ti ballpark
+        // (published ~1.26 GFLOPs/2, which also counts norms + head).
+        let patch = 14u64 * 14 * 192 * 3 * 256;
+        let attn = 4u64 * 197 * 192 * 192 + 3 * 2 * 197 * 197 * 64;
+        let mlp = 2u64 * 197 * 192 * 768;
+        let expect = patch + 12 * (attn + mlp);
+        assert_eq!(vit_tiny().total_macs(), expect);
+        assert_eq!(expect, 1_253_491_200);
+    }
+
+    #[test]
+    fn parameter_count_is_vit_tiny() {
+        // Op-view weights (true parameters): patch embed + per block
+        // 4·192² attention + 2·192·768 MLP = 5.456 M — ViT-Ti's ~5.7 M
+        // less the norms/pos-embed/classifier this model ignores.
+        let expect = 147_456u64 + 12 * (4 * 192 * 192 + 2 * 192 * 768);
+        let got: u64 = vit_tiny().ops.iter().map(Op::weights).sum();
+        assert_eq!(got, expect);
+        assert_eq!(expect, 5_455_872);
+    }
+
+    #[test]
+    fn lowered_layer_names_unique() {
+        let net = vit_tiny();
+        let mut names: Vec<&str> = net.layers.iter().map(|l| l.name.as_str()).collect();
+        let before = names.len();
+        names.sort();
+        names.dedup();
+        assert_eq!(before, names.len());
+    }
+}

@@ -12,6 +12,8 @@
 //! * [`analyze`] — per-layer partition/bandwidth table for `psim analyze`.
 //! * [`bench`] — the `psim bench` JSON summary (the `BENCH_serve.json`
 //!   perf-trajectory schema) and its CI validator.
+//! * [`zoo`] — the network-zoo listing for `psim zoo` (per-op kind
+//!   counts and MAC/param/activation totals).
 
 pub mod analyze;
 pub mod bench;
@@ -20,3 +22,4 @@ pub mod fig2;
 pub mod frontier;
 pub mod fusion;
 pub mod tables;
+pub mod zoo;

@@ -1,0 +1,121 @@
+//! The network-zoo listing behind `psim zoo` and the protocol's
+//! `{"cmd":"zoo"}` request: one row per registered network with per-op
+//! kind counts and MAC/weight/activation totals, generated from the
+//! typed [`Op`](crate::models::Op) lists (not the lowered layers).
+
+use crate::models::{zoo, Network, Op, OpKind};
+use crate::util::tablefmt::{mact, Table};
+
+/// One row per network — the paper's eight, then the extensions in zoo
+/// registration order. Columns from the typed op view:
+///
+/// * `ops` + per-kind counts (`conv`/`gemm`/`attention`);
+/// * `layers` — conv-equivalent layers after [`Op::lower`];
+/// * `MACs (M)` — op-view MACs (equals the lowered total);
+/// * `params (M)` — true weight parameters (attention counts its four
+///   projections only, not the lowered score/ctx pseudo-kernels);
+/// * `acts (M)` — activations read + written once (the Table III floor).
+///
+/// Returns the table plus a one-line summary note.
+///
+/// The README's `psim zoo` excerpt is pinned against this table (and
+/// `docs/PROTOCOL.md` embeds the whole reply via its fixture doc-test),
+/// so neither can drift from the code:
+///
+/// ```
+/// let readme =
+///     std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md")).unwrap();
+/// let (table, _) = psim::report::zoo::zoo_table();
+/// let md = table.to_markdown();
+/// let mut pinned = 0;
+/// for row in md.lines().filter(|l| l.contains("AlexNet ") || l.contains("ViT-Tiny")) {
+///     assert!(readme.contains(row), "README zoo excerpt is stale: {row}");
+///     pinned += 1;
+/// }
+/// assert_eq!(pinned, 2);
+/// let header = md.lines().next().unwrap();
+/// assert!(readme.contains(header), "README zoo header is stale");
+/// ```
+pub fn zoo_table() -> (Table, String) {
+    let mut t = Table::new(vec![
+        "network", "ops", "conv", "gemm", "attention", "layers", "MACs (M)", "params (M)",
+        "acts (M)",
+    ]);
+    let paper = zoo::paper_networks();
+    let extras = zoo::extra_networks();
+    let n_paper = paper.len();
+    let n_extras = extras.len();
+    for net in paper.iter().chain(extras.iter()) {
+        t.row(zoo_row(net));
+    }
+    let note = format!(
+        "{} networks: {n_paper} paper profiles + {n_extras} extensions; totals from the \
+         typed op view (docs/MODEL.md maps gemm/attention onto eqs. 2-4)",
+        n_paper + n_extras,
+    );
+    (t, note)
+}
+
+fn zoo_row(net: &Network) -> Vec<String> {
+    let count = |kind: OpKind| net.ops.iter().filter(|o| o.kind() == kind).count();
+    let macs: u64 = net.ops.iter().map(Op::macs).sum();
+    let params: u64 = net.ops.iter().map(Op::weights).sum();
+    let acts: u64 = net.ops.iter().map(|o| o.input_activations() + o.output_activations()).sum();
+    vec![
+        net.name.clone(),
+        net.ops.len().to_string(),
+        count(OpKind::Conv).to_string(),
+        count(OpKind::Gemm).to_string(),
+        count(OpKind::Attention).to_string(),
+        net.layers.len().to_string(),
+        mact(macs as f64, 1),
+        mact(params as f64, 2),
+        mact(acts as f64, 2),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_row_per_registered_network() {
+        let (table, note) = zoo_table();
+        let expect = zoo::paper_networks().len() + zoo::extra_networks().len();
+        assert_eq!(table.n_rows(), expect);
+        assert!(note.starts_with(&format!("{expect} networks")), "{note}");
+    }
+
+    #[test]
+    fn conv_networks_report_pure_conv_counts() {
+        let (table, _) = zoo_table();
+        let md = table.to_markdown();
+        let alexnet = md.lines().find(|l| l.contains("AlexNet")).unwrap();
+        let cells: Vec<&str> = alexnet.split('|').map(str::trim).collect();
+        // | network | ops | conv | gemm | attention | layers | ...
+        assert_eq!(&cells[2..7], &["5", "5", "0", "0", "5"]);
+    }
+
+    #[test]
+    fn vit_row_reports_the_op_mix_and_true_params() {
+        let (table, _) = zoo_table();
+        let md = table.to_markdown();
+        let vit = md.lines().find(|l| l.contains("ViT-Tiny")).unwrap();
+        let cells: Vec<&str> = vit.split('|').map(str::trim).collect();
+        assert_eq!(&cells[2..7], &["37", "1", "24", "12", "145"]);
+        // 1253.5 M MACs, 5.46 M true params (not the lowered pseudo-kernels).
+        assert_eq!(cells[7], "1253.5");
+        assert_eq!(cells[8], "5.46");
+    }
+
+    #[test]
+    fn activations_column_is_the_table_iii_floor() {
+        // Op-view activation totals delegate to the same DAG lower() uses,
+        // so the column equals Network::min_bandwidth for every network.
+        for net in zoo::paper_networks().iter().chain(zoo::extra_networks().iter()) {
+            let acts: u64 =
+                net.ops.iter().map(|o| o.input_activations() + o.output_activations()).sum();
+            assert_eq!(acts, net.min_bandwidth(), "{}", net.name);
+        }
+    }
+}

@@ -48,7 +48,7 @@ fn golden_protocol_fixtures() {
         assert_eq!(reply.to_string(), expected, "fixture {}", path.display());
         seen += 1;
     }
-    assert_eq!(seen, 10, "one fixture per protocol command");
+    assert_eq!(seen, 11, "one fixture per protocol command");
 }
 
 fn roundtrip(req: &Request) {
@@ -96,6 +96,7 @@ fn fixed_requests_round_trip() {
             dt: psim::models::DataTypes::parse("8:8:24:8").unwrap(),
         },
         Request::Tables { table: psim::api::TableKind::Fig2Ascii, faithful: true },
+        Request::Zoo,
         Request::Infer { image: vec![0.0, 1.5, -2.25] },
         Request::Metrics,
         Request::Stats,

@@ -1,0 +1,134 @@
+//! GEMM ↔ 1×1-conv equivalence: the property the operator abstraction
+//! rests on (`models::op` module docs).
+//!
+//! Over randomized GEMM shapes, [`Op::Gemm`] lowered through
+//! [`Op::lower`] must match the hand-built 1×1 [`ConvLayer`]
+//! (`wi=1, hi=m_rows, m=k_dim, n=n_cols, k=1`) element-for-element:
+//! derived quantities, every partitioning strategy, eq. 2/3 bandwidth,
+//! the eq.-7 real-valued optimum — at element weighting and at the
+//! paper's wide-psum byte weighting (8:8:32:8).
+
+use psim::analytics::bandwidth::{layer_bandwidth, layer_bandwidth_bytes, ControllerMode};
+use psim::analytics::optimizer::{optimal_m_real, optimal_m_real_bytes};
+use psim::analytics::partition::{partition_layer, partition_layer_bytes, Strategy};
+use psim::models::{ConvLayer, DataTypes, Op};
+use psim::util::prng::Rng;
+
+const STRATEGIES: [Strategy; 5] = [
+    Strategy::MaxInput,
+    Strategy::MaxOutput,
+    Strategy::EqualMacs,
+    Strategy::Optimal,
+    Strategy::OptimalSearch,
+];
+
+/// A randomized GEMM op and its hand-built conv twin.
+fn random_pair(rng: &mut Rng) -> (Op, ConvLayer) {
+    let m_rows = rng.range(1, 512);
+    let k_dim = rng.range(1, 1024);
+    let n_cols = rng.range(1, 1024);
+    let op = Op::gemm("g", m_rows, k_dim, n_cols).unwrap();
+    let twin = ConvLayer::new("g", 1, m_rows, k_dim, n_cols, 1, 1, 0);
+    (op, twin)
+}
+
+#[test]
+fn gemm_derived_quantities_match_the_conv_twin() {
+    let mut rng = Rng::new(0x0e0e_0001);
+    for _ in 0..200 {
+        let (op, twin) = random_pair(&mut rng);
+        let lowered = op.lower();
+        assert_eq!(lowered.len(), 1);
+        assert_eq!(lowered[0], twin, "{op}");
+        assert_eq!(op.macs(), twin.macs(), "{op}");
+        assert_eq!(op.weights(), twin.weights(), "{op}");
+        assert_eq!(op.input_activations(), twin.input_activations(), "{op}");
+        assert_eq!(op.output_activations(), twin.output_activations(), "{op}");
+        assert_eq!(op.reduction_depth(), twin.m as u64, "{op}");
+    }
+}
+
+#[test]
+fn gemm_bandwidth_matches_the_conv_twin_under_every_strategy() {
+    let wide = DataTypes::parse("8:8:32:8").unwrap();
+    let mut rng = Rng::new(0x0e0e_0002);
+    for _ in 0..100 {
+        let (op, twin) = random_pair(&mut rng);
+        let lowered_layers = op.lower();
+        let lowered = &lowered_layers[0];
+        let p_macs = rng.range(1, 20000);
+        for strategy in STRATEGIES {
+            for mode in [ControllerMode::Passive, ControllerMode::Active] {
+                let a = partition_layer(lowered, p_macs, strategy, mode);
+                let b = partition_layer(&twin, p_macs, strategy, mode);
+                assert_eq!(a, b, "{op} P={p_macs} {strategy:?} {mode:?}");
+                let ba = layer_bandwidth(lowered, a.m, a.n, mode);
+                let bb = layer_bandwidth(&twin, b.m, b.n, mode);
+                assert_eq!(ba.input, bb.input, "{op} P={p_macs} {strategy:?} {mode:?}");
+                assert_eq!(ba.output, bb.output, "{op} P={p_macs} {strategy:?} {mode:?}");
+
+                // Byte weighting: wide partial sums shift the optimal
+                // split identically for both spellings.
+                let a = partition_layer_bytes(lowered, p_macs, strategy, mode, &wide);
+                let b = partition_layer_bytes(&twin, p_macs, strategy, mode, &wide);
+                assert_eq!(a, b, "{op} P={p_macs} {strategy:?} {mode:?} bytes");
+                let ba = layer_bandwidth_bytes(lowered, a.m, a.n, mode, &wide);
+                let bb = layer_bandwidth_bytes(&twin, b.m, b.n, mode, &wide);
+                assert_eq!(ba.total(), bb.total(), "{op} P={p_macs} {strategy:?} {mode:?} bytes");
+            }
+        }
+    }
+}
+
+/// The lowered GEMM's traffic is the module docs' closed form: eq. 2 reads
+/// `m_rows·k_dim·ceil(n_cols/n)`, eq. 3 reads
+/// `m_rows·n_cols·(2·ceil(k_dim/m)−1)` passive / `·ceil(k_dim/m)` active.
+#[test]
+fn gemm_bandwidth_is_the_documented_closed_form() {
+    let mut rng = Rng::new(0x0e0e_0003);
+    for _ in 0..200 {
+        let (op, twin) = random_pair(&mut rng);
+        let Op::Gemm { m_rows, k_dim, n_cols, .. } = &op else { unreachable!() };
+        let m = rng.range(1, *k_dim);
+        let n = rng.range(1, *n_cols);
+        let psum_iters = k_dim.div_ceil(m);
+        let bw = layer_bandwidth(&twin, m, n, ControllerMode::Passive);
+        assert_eq!(bw.input, (m_rows * k_dim * n_cols.div_ceil(n)) as f64, "{op}");
+        assert_eq!(bw.output, (m_rows * n_cols * (2 * psum_iters - 1)) as f64, "{op}");
+        let bw = layer_bandwidth(&twin, m, n, ControllerMode::Active);
+        assert_eq!(bw.output, (m_rows * n_cols * psum_iters) as f64, "{op}");
+    }
+}
+
+/// Eq. 7 under the GEMM mapping: `Wo·Ho = Wi·Hi = m_rows` and `K = 1`,
+/// so `m* = sqrt(f·Wo·Ho·P / (Wi·Hi·K²))` collapses to `sqrt(f·P)` —
+/// the optimal K-dimension split depends only on the controller and the
+/// MAC budget — and must agree with the conv twin exactly, in both
+/// currencies.
+#[test]
+fn gemm_eq7_optimum_matches_the_conv_twin() {
+    let wide = DataTypes::parse("8:8:32:8").unwrap();
+    let mut rng = Rng::new(0x0e0e_0004);
+    for _ in 0..200 {
+        let (op, twin) = random_pair(&mut rng);
+        let lowered_layers = op.lower();
+        let lowered = &lowered_layers[0];
+        let p_macs = rng.range(1, 20000);
+        for mode in [ControllerMode::Passive, ControllerMode::Active] {
+            let a = optimal_m_real(lowered, p_macs, mode);
+            let b = optimal_m_real(&twin, p_macs, mode);
+            assert_eq!(a, b, "{op} P={p_macs} {mode:?}");
+            let f = match mode {
+                ControllerMode::Passive => 2.0,
+                ControllerMode::Active => 1.0,
+            };
+            let closed = (f * p_macs as f64).sqrt();
+            assert!((a - closed).abs() < 1e-9 * closed.max(1.0), "{op}: {a} vs {closed}");
+            let ab = optimal_m_real_bytes(lowered, p_macs, mode, &wide);
+            let bb = optimal_m_real_bytes(&twin, p_macs, mode, &wide);
+            assert_eq!(ab, bb, "{op} P={p_macs} {mode:?} bytes");
+            // Wide psums (4 bytes vs 1) double the optimal reduction split.
+            assert_eq!(ab, a * 2.0, "{op} P={p_macs} {mode:?} byte shift");
+        }
+    }
+}

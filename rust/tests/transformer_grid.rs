@@ -1,0 +1,37 @@
+//! End-to-end grid goldens for the transformer workload class: ViT-Tiny
+//! swept over the paper's full per-network grid (6 MAC budgets × 4
+//! Table I strategies × both controller modes, batch 1) must reproduce
+//! `rust/tests/golden/vit_tiny_grid.jsonl` byte-for-byte — the same file
+//! the CI smoke step diffs against the built binary. Values recomputed
+//! independently from the lowered 1×1-conv equations.
+
+use psim::analytics::grid::{GridEngine, SweepSpec};
+use psim::models::zoo;
+
+#[test]
+fn vit_tiny_jsonl_golden() {
+    let golden = include_str!("golden/vit_tiny_grid.jsonl");
+    // `SweepSpec::new` defaults are exactly the paper's per-network grid.
+    let spec = SweepSpec::new(vec![zoo::vit_tiny()]);
+    assert_eq!(spec.cell_count(), 48);
+    let jsonl = GridEngine::new().run_with_workers(&spec, 1).to_jsonl();
+    assert_eq!(jsonl, golden);
+    // and the stream is worker-count independent
+    let eight = GridEngine::new().run_with_workers(&spec, 8).to_jsonl();
+    assert_eq!(jsonl, eight);
+}
+
+#[test]
+fn vit_tiny_floor_is_respected_and_attention_dominates() {
+    let spec = SweepSpec::new(vec![zoo::vit_tiny()]);
+    let grid = GridEngine::new().run_with_workers(&spec, 4);
+    let net = zoo::vit_tiny();
+    let floor = net.min_bandwidth() as f64;
+    for cell in &grid.cells {
+        assert!(cell.total() >= floor, "{} below the activation floor", cell.total());
+    }
+    // The op view and the lowered view agree on the floor.
+    let acts: u64 =
+        net.ops.iter().map(|o| o.input_activations() + o.output_activations()).sum();
+    assert_eq!(acts, net.min_bandwidth());
+}
