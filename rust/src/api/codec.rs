@@ -327,7 +327,9 @@ pub fn encode_request(req: &Request) -> Json {
             // request bytes (and their pinned fixtures) intact. Length
             // matters too: a multi-entry all-default axis yields more
             // cells, so omitting it would be lossy.
-            if spec.datatypes.len() != 1 || !spec.datatypes[0].is_default() {
+            let non_default =
+                spec.datatypes.first().is_some_and(|dt| !dt.is_default());
+            if spec.datatypes.len() != 1 || non_default {
                 pairs.push((
                     "bits",
                     Json::Arr(spec.datatypes.iter().map(|dt| Json::Str(dt.label())).collect()),

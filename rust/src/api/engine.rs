@@ -40,6 +40,7 @@ use crate::report::{
 };
 use crate::runtime::{ArtifactDir, Tensor};
 use crate::util::json::Json;
+use crate::util::sync::{lock_unpoisoned, wait_unpoisoned};
 
 use super::codec;
 use super::error::{ApiError, ErrorCode};
@@ -259,16 +260,18 @@ struct Flight {
 
 impl Flight {
     fn fill(&self, value: (Json, bool)) {
-        *self.done.lock().unwrap() = Some(value);
+        *lock_unpoisoned(&self.done) = Some(value);
         self.cv.notify_all();
     }
 
     fn wait(&self) -> (Json, bool) {
-        let mut done = self.done.lock().unwrap();
-        while done.is_none() {
-            done = self.cv.wait(done).unwrap();
+        let mut done = lock_unpoisoned(&self.done);
+        loop {
+            if let Some(value) = done.as_ref() {
+                return value.clone();
+            }
+            done = wait_unpoisoned(&self.cv, done);
         }
-        done.clone().unwrap()
     }
 }
 
@@ -443,7 +446,7 @@ impl Engine {
         }
         let key = line.trim();
         let (flight, leader) = {
-            let mut map = self.inflight.lock().unwrap();
+            let mut map = lock_unpoisoned(&self.inflight);
             match map.get(key) {
                 Some(flight) => (flight.clone(), false),
                 None => {
@@ -648,8 +651,11 @@ impl Engine {
     /// keys) plus the protocol and stats-schema versions. Additive-only:
     /// new metrics appear as new keys without bumping `schema`.
     fn stats_snapshot(&self) -> Json {
-        let Json::Obj(mut snap) = self.registry.snapshot_json() else {
-            unreachable!("registry snapshot is an object");
+        // The snapshot is an object by construction; the fallback keeps
+        // this path panic-free (lint PS100) rather than asserting it.
+        let mut snap = match self.registry.snapshot_json() {
+            Json::Obj(snap) => snap,
+            _ => std::collections::BTreeMap::new(),
         };
         snap.insert("protocol".to_string(), Json::Num(super::PROTOCOL_VERSION as f64));
         snap.insert("schema".to_string(), Json::Num(super::STATS_SCHEMA_VERSION as f64));
@@ -680,7 +686,7 @@ impl FlightGuard<'_> {
         }
         self.filled = true;
         self.flight.fill(value);
-        self.engine.inflight.lock().unwrap().remove(self.key);
+        lock_unpoisoned(&self.engine.inflight).remove(self.key);
     }
 }
 

@@ -1,0 +1,47 @@
+//! `lint`: the repo-invariant static analyzer (`psim-lint`).
+//!
+//! Runs the full pass registry (see `docs/LINTS.md`) over the repo
+//! tree: panic freedom on the hostile-input modules, overflow-safe size
+//! accounting, metrics-catalog and protocol sync, the format gate, and
+//! the orphan-golden sweep. Exit code 0 means zero non-allowlisted
+//! findings — CI gates on exactly that with `--json`.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::cli::args::Args;
+use crate::lint::{self, LintConfig};
+
+/// `psim lint [--json] [--fix-hints] [--root DIR]`
+pub fn lint(args: &Args) -> Result<i32> {
+    let json = args.flag("json");
+    let fix_hints = args.flag("fix-hints");
+    let root = PathBuf::from(args.opt("root").unwrap_or("."));
+    args.reject_unknown()?;
+    if !root.join("rust/src").is_dir() {
+        bail!(
+            "{} does not look like the repo root (no rust/src/) — \
+             run from the repo root or pass --root DIR",
+            root.display()
+        );
+    }
+
+    let report = lint::run(&LintConfig::repo(&root))?;
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        for f in &report.findings {
+            println!("{}:{}:{}: {} {}", f.path, f.line, f.col, f.code, f.message);
+            if fix_hints {
+                println!("    hint: {}", lint::hint_for(f.code));
+            }
+        }
+        eprintln!(
+            "psim lint: {} finding(s) across {} files",
+            report.findings.len(),
+            report.files_scanned
+        );
+    }
+    Ok(if report.findings.is_empty() { 0 } else { 1 })
+}

@@ -5,6 +5,7 @@ pub mod bench;
 pub mod explore;
 pub mod fusion;
 pub mod infer;
+pub mod lint;
 pub mod request;
 pub mod serve;
 pub mod simulate;

@@ -41,6 +41,7 @@ use crate::coordinator::pool::Bounded;
 use crate::obs::span;
 use crate::runtime::Tensor;
 use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
 
 /// Live connection sockets, so `{"cmd":"shutdown"}` can unblock peers
 /// parked in a blocking read. Without this, `thread::scope` in
@@ -61,19 +62,19 @@ impl ConnRegistry {
     fn register(&self, stream: &TcpStream) -> Option<u64> {
         let clone = stream.try_clone().ok()?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.conns.lock().unwrap().insert(id, clone);
+        lock_unpoisoned(&self.conns).insert(id, clone);
         Some(id)
     }
 
     fn deregister(&self, id: u64) {
-        self.conns.lock().unwrap().remove(&id);
+        lock_unpoisoned(&self.conns).remove(&id);
     }
 
     /// Shut down every tracked socket: blocked readers see EOF/error and
     /// their worker threads move on. Sockets stay registered until their
     /// handler deregisters; double-shutdown is harmless.
     fn shutdown_all(&self) {
-        for conn in self.conns.lock().unwrap().values() {
+        for conn in lock_unpoisoned(&self.conns).values() {
             let _ = conn.shutdown(Shutdown::Both);
         }
     }

@@ -98,6 +98,13 @@ Functional stack (PJRT over artifacts/; run `make artifacts` first):
                       (analytics-only engine; inference needs `serve`)
      options: [--json LINE]
 
+Repo tooling:
+  lint                run the psim-lint static analyzer over the repo
+                      (panic freedom, overflow surface, catalog/protocol
+                      sync, format gate, orphan goldens -- docs/LINTS.md);
+                      exit 1 on any non-allowlisted finding
+     options: [--json] [--fix-hints] [--root DIR]
+
   version             crate + protocol version (also: psim --version)
   help                this text
 ";
@@ -134,6 +141,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "stats" => commands::stats::stats(&args),
         "client" => commands::serve::client(&args),
         "request" => commands::request::request(&args),
+        "lint" => commands::lint::lint(&args),
         other => bail!("unknown command '{other}' — try `psim help`"),
     }
 }

@@ -219,6 +219,39 @@ max_batch = 8
     }
 
     #[test]
+    fn malformed_input_never_panics() {
+        // Pinned outcome of the lint PS100 audit: the parser already
+        // returns typed errors (never panics) on every malformed form
+        // below. Kept as a regression net so a future refactor cannot
+        // quietly reintroduce an unwrap on this path.
+        for src in [
+            "[unterminated\n",
+            "[s]\n= 1\n",
+            "[s]\nx = \"unterminated\n",
+            "[s]\nx = @@\n",
+            "[]\nx = 1\n",
+            "[s]\nx\n",
+        ] {
+            assert!(ConfigDoc::parse(src).is_err(), "{src:?} should error");
+        }
+        // Arbitrary bytes (a fuzz-shaped corpus, deterministic): parse
+        // must return, Ok or Err, without panicking.
+        for seed in 0_u64..64 {
+            let mut x = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1);
+            let bytes: Vec<u8> = (0..48)
+                .map(|_| {
+                    x ^= x << 13;
+                    x ^= x >> 7;
+                    x ^= x << 17;
+                    (x & 0x7f) as u8
+                })
+                .collect();
+            let doc = String::from_utf8_lossy(&bytes).into_owned();
+            let _ = ConfigDoc::parse(&doc);
+        }
+    }
+
+    #[test]
     fn negative_ints_not_usize() {
         let d = ConfigDoc::parse("[s]\nx = -5\n").unwrap();
         assert_eq!(d.get_usize("s", "x"), None);

@@ -191,7 +191,7 @@ impl ExploreSpec {
     /// Total candidates the explorer will consider: one scope per network
     /// plus, with several networks, the whole-zoo aggregate scope.
     pub fn candidate_count(&self) -> usize {
-        let scopes = self.networks.len() + usize::from(self.networks.len() > 1);
+        let scopes = self.networks.len().saturating_add(usize::from(self.networks.len() > 1));
         scopes.saturating_mul(self.points_per_network())
     }
 

@@ -34,13 +34,16 @@
 //! Supporting modules: [`config`] (accelerator/workload config files),
 //! [`report`] (paper table/figure renderers), [`util`] (offline-friendly
 //! substrate: PRNG, JSON, table formatting, property-test + bench
-//! harnesses), [`cli`] (the `psim` binary's command surface).
+//! harnesses), [`cli`] (the `psim` binary's command surface), and
+//! [`lint`] (the repo-invariant static analyzer behind `psim lint`,
+//! CI-blocking; see `docs/LINTS.md`).
 //!
 //! Reference documents: `docs/MODEL.md` (the full equation derivations,
 //! element and byte forms), `docs/PROTOCOL.md` (the wire reference) and
 //! `docs/ARCHITECTURE.md` (the data flow) — each pinned against this
 //! crate by doc-tests so they cannot drift.
 
+#![forbid(unsafe_code)]
 #![warn(missing_docs)]
 
 pub mod analytics;
@@ -54,6 +57,8 @@ pub mod config;
 pub mod coordinator;
 /// The design-space explorer (Pareto frontiers).
 pub mod dse;
+/// The repo-invariant static analyzer behind `psim lint`.
+pub mod lint;
 /// Workload descriptors (conv/GEMM/attention ops) and the precision
 /// model.
 pub mod models;

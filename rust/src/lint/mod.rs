@@ -1,0 +1,501 @@
+//! `psim-lint`: the repo-invariant static analyzer behind `psim lint`.
+//!
+//! The build container has no rustfmt/clippy, the serve surface feeds
+//! hostile bytes into hand-rolled parsers, and a growing set of
+//! cross-file contracts (protocol commands ↔ PROTOCOL.md ↔ golden
+//! fixtures; the typed `METRICS` catalog ↔ recorded metric names) was
+//! enforced only by convention. This subsystem makes those conventions
+//! machine-checked in the repo's zero-dependency style: a hand-rolled
+//! tokenizer ([`tokens`]) that can never confuse comments or string
+//! literals with code, feeding the typed pass registry ([`PASSES`],
+//! executed by [`passes`]). Every finding carries a stable code, a
+//! span-accurate `path:line:col`, and respects the
+//! `// lint:allow(CODE, reason)` allowlist. `psim lint` runs the whole
+//! registry over the tree and CI gates on zero findings; the seeded
+//! fixtures under `rust/tests/lint_fixtures/` prove each pass fails
+//! when it should.
+//!
+//! `docs/LINTS.md` is generated from the registry and this doc-test
+//! keeps it honest — the pass table and every per-pass section must
+//! appear verbatim:
+//!
+//! ```
+//! let root = concat!(env!("CARGO_MANIFEST_DIR"), "/..");
+//! let doc = std::fs::read_to_string(format!("{root}/docs/LINTS.md"))
+//!     .expect("docs/LINTS.md exists");
+//! assert!(doc.contains(&psim::lint::lints_table()), "LINTS.md pass table is stale");
+//! assert!(doc.contains(&psim::lint::lints_doc()), "LINTS.md pass sections are stale");
+//! ```
+
+/// The pass implementations (`PS000`–`PS600`) and allowlist audit.
+pub mod passes;
+/// The hand-rolled lexer: spans, test regions, allow directives.
+pub mod tokens;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use passes::GoldenEntry;
+use tokens::ScannedFile;
+
+/// One entry of the typed pass registry: everything `docs/LINTS.md`,
+/// `--fix-hints` and the JSON report need to describe a pass.
+#[derive(Clone, Copy, Debug)]
+pub struct PassDesc {
+    /// Stable finding code (`PS100`).
+    pub code: &'static str,
+    /// Short pass name.
+    pub name: &'static str,
+    /// One-line invariant, for the summary table.
+    pub summary: &'static str,
+    /// Why the invariant exists.
+    pub rationale: &'static str,
+    /// An example diagnostic, verbatim shape.
+    pub example: &'static str,
+    /// How to fix a finding.
+    pub hint: &'static str,
+}
+
+/// The pass registry, in code order. `PS000` is the meta-pass over the
+/// allowlist itself; `PS100`–`PS600` are the repo invariants.
+pub const PASSES: [PassDesc; 7] = [
+    PassDesc {
+        code: "PS000",
+        name: "allowlist hygiene",
+        summary: "every `lint:allow` parses, names a known code, gives a reason and suppresses a real finding",
+        rationale: "An allowlist stays trustworthy only while every entry is live. A directive that no longer suppresses anything is a stale exemption waiting to hide a future regression, and a malformed one suppresses nothing while looking like it does.",
+        example: "rust/src/lib.rs:41:1: PS000 stale lint:allow(PS100): it suppresses nothing",
+        hint: "delete the stale directive, or fix its code and give a reason",
+    },
+    PassDesc {
+        code: "PS100",
+        name: "panic freedom",
+        summary: "no `unwrap`/`expect`/panicking macros/indexing-by-literal in hostile-input modules",
+        rationale: "The serve path feeds attacker-controlled bytes from an open socket into hand-rolled parsers (`api::codec`, `util::json`, `config::parser`) and the dispatch/serve machinery around them; any panic there is a remote crash. Errors must flow back as typed `ApiError` replies, and lock poisoning must be recovered (`util::sync`), never unwrapped. Test regions are exempt — tests panic freely.",
+        example: "rust/src/api/engine.rs:262:27: PS100 `.unwrap()` on the hostile-input path",
+        hint: "return a typed ApiError, or recover locks via util::sync::lock_unpoisoned",
+    },
+    PassDesc {
+        code: "PS200",
+        name: "overflow surface",
+        summary: "size-accounting fns (`*_count`) use `checked_`/`saturating_` arithmetic only",
+        rationale: "Request axes multiply into the cell/candidate counts that gate the per-request size caps. A wrapped `*` lets a maliciously huge request overflow past `MAX_REQUEST_CELLS` and masquerade as a tiny one — the PR-4 `cell_count` hardening, generalized to every function whose name ends in `_count`.",
+        example: "rust/src/dse/space.rs:194:42: PS200 unchecked `+` in size-accounting fn `candidate_count`",
+        hint: "use saturating_add/saturating_mul (or checked_* with an explicit error)",
+    },
+    PassDesc {
+        code: "PS300",
+        name: "metrics catalog sync",
+        summary: "every recorded metric name exists in `obs::registry::METRICS`, and vice versa",
+        rationale: "The typed METRICS catalog is the contract behind docs/OBSERVABILITY.md and the stats snapshot schema. A recorder writing an uncataloged name (or a catalog row nothing records) silently splits the live snapshot from its documentation. Dynamic names built with `format!` match as anchored `{..}` wildcards against the catalog.",
+        example: "rust/src/api/engine.rs:84:35: PS300 metric \"api_request\" recorded but absent from the METRICS catalog",
+        hint: "add the name to obs::registry::METRICS, or fix the recording site",
+    },
+    PassDesc {
+        code: "PS400",
+        name: "protocol sync",
+        summary: "every protocol command has a PROTOCOL.md section, a table row and a golden fixture; no orphan fixtures",
+        rationale: "The wire surface is pinned three ways — the typed `COMMANDS` table in `api::request`, docs/PROTOCOL.md, and the golden fixtures CI replays byte-for-byte. Drift between them is exactly the class of silent break the protocol smoke exists to catch, so the lint closes the triangle in both directions.",
+        example: "rust/src/api/request.rs:160:18: PS400 command \"sweep\" has no golden fixture sweep.txt",
+        hint: "add the PROTOCOL.md section/row and a rust/tests/golden/protocol fixture",
+    },
+    PassDesc {
+        code: "PS500",
+        name: "format gate",
+        summary: "100-col line limit and no trailing whitespace (string-literal spans exempt)",
+        rationale: "The offline build container has no rustfmt, so the repo's 100-column convention is enforced here, over sources, tests, benches and examples alike. Overflow inside a string literal is exempt because rustfmt cannot break it either.",
+        example: "rust/src/api/request.rs:57:101: PS500 line is 113 chars (limit 100)",
+        hint: "wrap the line at 100 columns and strip trailing whitespace",
+    },
+    PassDesc {
+        code: "PS600",
+        name: "orphan goldens",
+        summary: "every file under `rust/tests/golden/` is replayed by a test, CI step or doc",
+        rationale: "A golden fixture that nothing replays is dead weight that still looks authoritative: when a rename or a removed smoke step strands one, its pinned bytes stop guarding anything. A file counts as referenced by basename, by a directory glob (`golden/protocol/*.txt`), or by a quoted directory path a test enumerates at runtime.",
+        example: "rust/tests/golden/old.jsonl:1:1: PS600 golden file old.jsonl is referenced by no test, CI step or doc",
+        hint: "replay the fixture from a test or CI smoke step, or delete it",
+    },
+];
+
+/// The registry's codes, for allow-directive validation.
+pub(crate) fn known_codes() -> Vec<&'static str> {
+    PASSES.iter().map(|p| p.code).collect()
+}
+
+/// The fix hint for a code (empty for unknown codes).
+pub fn hint_for(code: &str) -> &'static str {
+    PASSES.iter().find(|p| p.code == code).map_or("", |p| p.hint)
+}
+
+/// The markdown summary table of every pass, embedded verbatim in
+/// `docs/LINTS.md` (the module doc-test pins it).
+pub fn lints_table() -> String {
+    let mut out = String::from("| code | pass | invariant |\n| --- | --- | --- |\n");
+    for p in &PASSES {
+        out.push_str(&format!("| `{}` | {} | {} |\n", p.code, p.name, p.summary));
+    }
+    out
+}
+
+/// The per-pass sections of `docs/LINTS.md`, generated from the
+/// registry (the module doc-test pins them verbatim).
+pub fn lints_doc() -> String {
+    let mut out = String::new();
+    for p in &PASSES {
+        out.push_str(&format!("### `{}` — {}\n\n", p.code, p.name));
+        out.push_str(&format!("**Invariant.** {}\n\n", p.summary));
+        out.push_str(&format!("{}\n\n", p.rationale));
+        out.push_str("**Example diagnostic:**\n\n");
+        out.push_str(&format!("```text\n{}\n```\n\n", p.example));
+        out.push_str(&format!(
+            "**Allowlist:** `// lint:allow({}, reason)` on the offending line, or \
+             alone on the line above it. The reason is mandatory and the directive \
+             must suppress a real finding, or `PS000` flags it.\n\n",
+            p.code
+        ));
+        out.push_str(&format!("**Fix hint** (`--fix-hints`): {}.\n\n", p.hint));
+    }
+    out
+}
+
+/// One finding: stable code, repo-relative span, message.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// The pass code (`PS100`).
+    pub code: &'static str,
+    /// Path relative to the lint root, `/`-separated.
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    /// 1-based character column.
+    pub col: usize,
+    /// What is wrong at that span.
+    pub message: String,
+}
+
+/// Where the lint looks. [`LintConfig::repo`] is the real layout;
+/// tests point the fields at seeded mini-trees instead.
+#[derive(Clone, Debug)]
+pub struct LintConfig {
+    /// Every path below is resolved against this root.
+    pub root: PathBuf,
+    /// Directories of Rust sources getting the full semantic passes.
+    pub src_dirs: Vec<PathBuf>,
+    /// Directories getting the format gate only (tests, benches,
+    /// examples — all-test code the semantic passes would skip anyway).
+    pub fmt_dirs: Vec<PathBuf>,
+    /// Path suffixes of the hostile-input modules PS100 covers.
+    pub hostile: Vec<String>,
+    /// PS500 line limit.
+    pub max_width: usize,
+    /// The METRICS catalog source (PS300), relative to `root`.
+    pub registry: Option<PathBuf>,
+    /// The COMMANDS table source (PS400), relative to `root`.
+    pub request: Option<PathBuf>,
+    /// The protocol reference document (PS400).
+    pub protocol_doc: Option<PathBuf>,
+    /// The protocol golden fixture directory (PS400).
+    pub fixtures_dir: Option<PathBuf>,
+    /// The golden tree (PS600).
+    pub golden_dir: Option<PathBuf>,
+    /// Files/directories whose text counts as references for PS600.
+    pub ref_paths: Vec<PathBuf>,
+    /// Directory basenames skipped by every walk (seeded violation
+    /// fixtures must not lint the real tree's run).
+    pub exclude_dirs: Vec<String>,
+}
+
+impl LintConfig {
+    /// The real repository layout rooted at `root`.
+    pub fn repo(root: &Path) -> LintConfig {
+        let hostile = [
+            "src/api/codec.rs",
+            "src/api/engine.rs",
+            "src/api/error.rs",
+            "src/api/request.rs",
+            "src/util/json.rs",
+            "src/config/parser.rs",
+            "src/cli/commands/serve.rs",
+            "src/cli/commands/request.rs",
+        ];
+        LintConfig {
+            root: root.to_path_buf(),
+            src_dirs: vec![PathBuf::from("rust/src")],
+            fmt_dirs: vec![
+                PathBuf::from("rust/tests"),
+                PathBuf::from("rust/benches"),
+                PathBuf::from("examples"),
+            ],
+            hostile: hostile.iter().map(|s| s.to_string()).collect(),
+            max_width: 100,
+            registry: Some(PathBuf::from("rust/src/obs/registry.rs")),
+            request: Some(PathBuf::from("rust/src/api/request.rs")),
+            protocol_doc: Some(PathBuf::from("docs/PROTOCOL.md")),
+            fixtures_dir: Some(PathBuf::from("rust/tests/golden/protocol")),
+            golden_dir: Some(PathBuf::from("rust/tests/golden")),
+            ref_paths: vec![
+                PathBuf::from("rust/tests"),
+                PathBuf::from("docs"),
+                PathBuf::from("README.md"),
+                PathBuf::from(".github/workflows/ci.yml"),
+            ],
+            exclude_dirs: vec!["lint_fixtures".to_string(), "golden".to_string()],
+        }
+    }
+}
+
+/// A completed lint run.
+#[derive(Debug)]
+pub struct Report {
+    /// Non-allowlisted findings, sorted by `(path, line, col, code)`.
+    pub findings: Vec<Finding>,
+    /// How many Rust files were scanned.
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// The machine-readable report: `{"schema":1, "count":N,
+    /// "findings":[{code,path,line,col,message,hint}, ...]}`.
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("code", Json::Str(f.code.to_string())),
+                    ("path", Json::Str(f.path.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("col", Json::Num(f.col as f64)),
+                    ("message", Json::Str(f.message.clone())),
+                    ("hint", Json::Str(hint_for(f.code).to_string())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("count", Json::Num(self.findings.len() as f64)),
+            ("findings", Json::Arr(findings)),
+        ])
+    }
+}
+
+/// Run every pass under `cfg` and return the sorted report.
+pub fn run(cfg: &LintConfig) -> Result<Report> {
+    let known = known_codes();
+    let src_files = scan_tree(cfg, &cfg.src_dirs, &known)?;
+    let fmt_files = scan_tree(cfg, &cfg.fmt_dirs, &known)?;
+    let mut findings = Vec::new();
+
+    for f in &src_files {
+        if cfg.hostile.iter().any(|h| f.rel.ends_with(h.as_str())) {
+            passes::panic_freedom(f, &mut findings);
+        }
+        passes::overflow_surface(f, &mut findings);
+        passes::format_gate(f, cfg.max_width, &mut findings);
+    }
+    for f in &fmt_files {
+        passes::format_gate(f, cfg.max_width, &mut findings);
+    }
+
+    if let Some(registry) = &cfg.registry {
+        passes::catalog_sync(&src_files, &rel_str(registry), &mut findings);
+    }
+    if let Some(request) = &cfg.request {
+        let doc = match &cfg.protocol_doc {
+            Some(p) => std::fs::read_to_string(cfg.root.join(p)).unwrap_or_default(),
+            None => String::new(),
+        };
+        let (fixtures, fixtures_rel) = match &cfg.fixtures_dir {
+            Some(dir) => (list_txt(&cfg.root.join(dir))?, rel_str(dir)),
+            None => (Vec::new(), String::new()),
+        };
+        passes::protocol_sync(
+            &src_files,
+            &rel_str(request),
+            &doc,
+            &fixtures,
+            &fixtures_rel,
+            &mut findings,
+        );
+    }
+    if let Some(golden_dir) = &cfg.golden_dir {
+        let golden = golden_entries(&cfg.root, golden_dir)?;
+        let corpus = reference_corpus(cfg)?;
+        passes::orphan_goldens(&golden, &corpus, &mut findings);
+    }
+
+    let all: Vec<&ScannedFile> = src_files.iter().chain(fmt_files.iter()).collect();
+    let mut findings = passes::apply_allows(&all, findings);
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.col, a.code).cmp(&(b.path.as_str(), b.line, b.col, b.code))
+    });
+    Ok(Report { findings, files_scanned: all.len() })
+}
+
+fn rel_str(path: &Path) -> String {
+    path.to_string_lossy().replace('\\', "/")
+}
+
+/// Scan every `.rs` file under the given root-relative directories,
+/// skipping excluded basenames; missing directories are fine.
+fn scan_tree(cfg: &LintConfig, dirs: &[PathBuf], known: &[&str]) -> Result<Vec<ScannedFile>> {
+    let mut files = Vec::new();
+    for dir in dirs {
+        let abs = cfg.root.join(dir);
+        if !abs.is_dir() {
+            continue;
+        }
+        for path in walk_sorted(&abs, &cfg.exclude_dirs)? {
+            if path.extension().is_some_and(|e| e == "rs") {
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading {}", path.display()))?;
+                let rel = rel_str(path.strip_prefix(&cfg.root).unwrap_or(&path));
+                files.push(ScannedFile::scan(&rel, &text, known));
+            }
+        }
+    }
+    Ok(files)
+}
+
+/// Depth-first sorted walk, skipping excluded directory basenames.
+fn walk_sorted(dir: &Path, exclude: &[String]) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("walking {}", dir.display()))?
+        .collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().to_string();
+        if path.is_dir() {
+            if !exclude.contains(&name) {
+                out.extend(walk_sorted(&path, exclude)?);
+            }
+        } else {
+            out.push(path);
+        }
+    }
+    Ok(out)
+}
+
+/// `.txt` basenames directly inside `dir` (not subdirectories).
+fn list_txt(dir: &Path) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    if !dir.is_dir() {
+        return Ok(out);
+    }
+    for path in std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?
+    {
+        let p = path.path();
+        if p.is_file() && p.extension().is_some_and(|e| e == "txt") {
+            if let Some(name) = p.file_name() {
+                out.push(name.to_string_lossy().to_string());
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Every file under the golden tree, with the parent path form
+/// references use (relative to the golden tree's own parent).
+fn golden_entries(root: &Path, golden_dir: &Path) -> Result<Vec<GoldenEntry>> {
+    let abs = root.join(golden_dir);
+    if !abs.is_dir() {
+        return Ok(Vec::new());
+    }
+    let base = abs.parent().map(Path::to_path_buf).unwrap_or_else(|| abs.clone());
+    let mut out = Vec::new();
+    for path in walk_sorted(&abs, &[])? {
+        let rel = rel_str(path.strip_prefix(root).unwrap_or(&path));
+        let name = path.file_name().map(|n| n.to_string_lossy().to_string()).unwrap_or_default();
+        let parent = path.parent().unwrap_or(&abs);
+        let parent_rel = rel_str(parent.strip_prefix(&base).unwrap_or(parent));
+        out.push(GoldenEntry { rel, name, parent_rel });
+    }
+    Ok(out)
+}
+
+/// Concatenate every PS600 reference source (tests, docs, CI config),
+/// walking directories recursively minus the excluded basenames.
+fn reference_corpus(cfg: &LintConfig) -> Result<String> {
+    let mut seen = BTreeSet::new();
+    let mut corpus = String::new();
+    for rel in &cfg.ref_paths {
+        let abs = cfg.root.join(rel);
+        let files = if abs.is_dir() {
+            walk_sorted(&abs, &cfg.exclude_dirs)?
+        } else if abs.is_file() {
+            vec![abs]
+        } else {
+            continue;
+        };
+        for path in files {
+            if seen.insert(path.clone()) {
+                if let Ok(text) = std::fs::read_to_string(&path) {
+                    corpus.push_str(&text);
+                    corpus.push('\n');
+                }
+            }
+        }
+    }
+    Ok(corpus)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_codes_are_unique_and_sorted() {
+        let codes: Vec<_> = PASSES.iter().map(|p| p.code).collect();
+        let mut sorted = codes.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(codes, sorted, "pass codes must be unique and in order");
+    }
+
+    #[test]
+    fn docs_cover_every_pass() {
+        let table = lints_table();
+        let doc = lints_doc();
+        for p in &PASSES {
+            assert!(table.contains(p.code), "{} missing from table", p.code);
+            assert!(doc.contains(&format!("### `{}` — {}", p.code, p.name)));
+            assert!(doc.contains(p.rationale), "{} rationale missing", p.code);
+            assert!(doc.contains(p.example), "{} example missing", p.code);
+        }
+    }
+
+    #[test]
+    fn hints_resolve() {
+        assert!(hint_for("PS100").contains("ApiError"));
+        assert_eq!(hint_for("nope"), "");
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let report = Report {
+            findings: vec![Finding {
+                code: "PS500",
+                path: "x.rs".into(),
+                line: 3,
+                col: 101,
+                message: "line is 110 chars (limit 100)".into(),
+            }],
+            files_scanned: 1,
+        };
+        let json = report.to_json();
+        assert_eq!(json.get("schema").and_then(Json::as_usize), Some(1));
+        assert_eq!(json.get("count").and_then(Json::as_usize), Some(1));
+        let arr = json.get("findings").and_then(Json::as_arr).expect("findings array");
+        assert_eq!(arr[0].get("code").and_then(Json::as_str), Some("PS500"));
+        assert_eq!(arr[0].get("line").and_then(Json::as_usize), Some(3));
+        assert!(arr[0].get("hint").is_some());
+    }
+}

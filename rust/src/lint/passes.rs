@@ -1,0 +1,626 @@
+//! The lint passes. Each is a pure function over [`ScannedFile`]s (plus
+//! whatever repo metadata its invariant spans) appending [`Finding`]s;
+//! all filesystem walking happens in [`super::run`], so the passes are
+//! unit-testable on in-memory sources.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::tokens::{str_value, ScannedFile, Tok, TokKind};
+use super::Finding;
+
+/// Macros PS100 treats as a panic on the hostile path.
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+fn push(out: &mut Vec<Finding>, code: &'static str, rel: &str, t: &Tok, message: String) {
+    out.push(Finding { code, path: rel.to_string(), line: t.line, col: t.col, message });
+}
+
+/// PS100: no `unwrap`/`expect`/panicking macros/indexing-by-literal in
+/// a hostile-input module (test regions excluded — tests panic freely).
+pub(crate) fn panic_freedom(f: &ScannedFile, out: &mut Vec<Finding>) {
+    let code = f.code();
+    for (i, t) in code.iter().enumerate() {
+        if f.in_test(t.line) {
+            continue;
+        }
+        if t.kind == TokKind::Ident
+            && (t.text == "unwrap" || t.text == "expect")
+            && i > 0
+            && code[i - 1].text == "."
+            && code.get(i + 1).is_some_and(|n| n.text == "(")
+        {
+            let msg = format!("`.{}()` on the hostile-input path", t.text);
+            push(out, "PS100", &f.rel, t, msg);
+        }
+        if t.kind == TokKind::Ident
+            && PANIC_MACROS.contains(&t.text.as_str())
+            && code.get(i + 1).is_some_and(|n| n.text == "!")
+        {
+            let msg = format!("`{}!` on the hostile-input path", t.text);
+            push(out, "PS100", &f.rel, t, msg);
+        }
+        if t.text == "["
+            && i > 0
+            && (code[i - 1].kind == TokKind::Ident
+                || code[i - 1].text == ")"
+                || code[i - 1].text == "]")
+            && code.get(i + 1).is_some_and(|n| n.kind == TokKind::Num)
+            && code.get(i + 2).is_some_and(|n| n.text == "]")
+        {
+            let msg = "indexing by integer literal on the hostile-input path".to_string();
+            push(out, "PS100", &f.rel, t, msg);
+        }
+    }
+}
+
+/// PS200: inside size-accounting functions (name ends with `_count`),
+/// bare `+`/`*` on request-derived sizes must be `checked_`/
+/// `saturating_` calls instead.
+pub(crate) fn overflow_surface(f: &ScannedFile, out: &mut Vec<Finding>) {
+    let code = f.code();
+    let mut i = 0;
+    while i < code.len() {
+        let is_size_fn = code[i].text == "fn"
+            && code
+                .get(i + 1)
+                .is_some_and(|n| n.kind == TokKind::Ident && n.text.ends_with("_count"))
+            && !f.in_test(code[i].line);
+        if !is_size_fn {
+            i += 1;
+            continue;
+        }
+        let name = code[i + 1].text.clone();
+        let mut j = i + 2;
+        while j < code.len() && code[j].text != "{" {
+            j += 1;
+        }
+        let mut depth = 0_isize;
+        let mut k = j;
+        while k < code.len() {
+            let t = code[k];
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                "+" | "*" if depth > 0 && k > 0 => {
+                    let prev = code[k - 1];
+                    let unary_ctx = matches!(
+                        prev.text.as_str(),
+                        "+" | "*" | "=" | "(" | "," | "<" | ">" | "&" | "return"
+                    );
+                    let binary = !unary_ctx
+                        && (matches!(prev.kind, TokKind::Ident | TokKind::Num)
+                            || prev.text == ")"
+                            || prev.text == "]");
+                    if binary {
+                        let msg = format!(
+                            "unchecked `{}` in size-accounting fn `{name}`",
+                            t.text
+                        );
+                        push(out, "PS200", &f.rel, t, msg);
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        i = k + 1;
+    }
+}
+
+/// PS500: the format gate — `max_width`-char line limit and trailing
+/// whitespace, except where the overflow lives inside a string literal
+/// (unbreakable by rustfmt too).
+pub(crate) fn format_gate(f: &ScannedFile, max_width: usize, out: &mut Vec<Finding>) {
+    let spans = line_str_spans(f);
+    let in_str = |line: usize, col: usize| {
+        spans
+            .get(&line)
+            .is_some_and(|v| v.iter().any(|&(a, b)| (a..b).contains(&col)))
+    };
+    for (idx, raw) in f.lines.iter().enumerate() {
+        let line_no = idx + 1;
+        let text = raw.strip_suffix('\r').unwrap_or(raw);
+        let width = text.chars().count();
+        if width > max_width && !in_str(line_no, max_width + 1) {
+            out.push(Finding {
+                code: "PS500",
+                path: f.rel.clone(),
+                line: line_no,
+                col: max_width + 1,
+                message: format!("line is {width} chars (limit {max_width})"),
+            });
+        }
+        if text.ends_with([' ', '\t']) && !in_str(line_no, width) {
+            out.push(Finding {
+                code: "PS500",
+                path: f.rel.clone(),
+                line: line_no,
+                col: width,
+                message: "trailing whitespace".to_string(),
+            });
+        }
+    }
+}
+
+/// Char-column ranges (half-open, 1-based) covered by string literals,
+/// per line — multi-line strings cover whole interior lines.
+fn line_str_spans(f: &ScannedFile) -> BTreeMap<usize, Vec<(usize, usize)>> {
+    let mut spans: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
+    for t in &f.toks {
+        if t.kind != TokKind::Str {
+            continue;
+        }
+        if t.line == t.end_line {
+            spans.entry(t.line).or_default().push((t.col, t.end_col));
+        } else {
+            spans.entry(t.line).or_default().push((t.col, usize::MAX));
+            for line in t.line + 1..t.end_line {
+                spans.entry(line).or_default().push((1, usize::MAX));
+            }
+            spans.entry(t.end_line).or_default().push((1, t.end_col));
+        }
+    }
+    spans
+}
+
+/// The first string literal inside the balanced parens opening at
+/// `code[open]` — the metric-name argument of a registry call.
+fn first_str_in_parens<'c>(code: &[&'c Tok], open: usize) -> Option<&'c Tok> {
+    let mut depth = 0_isize;
+    let mut k = open;
+    while k < code.len() {
+        match code[k].text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return None;
+                }
+            }
+            _ if code[k].kind == TokKind::Str && depth >= 1 => return Some(code[k]),
+            _ => {}
+        }
+        k += 1;
+    }
+    None
+}
+
+/// Does a `format!`-style literal (`{..}` wildcards) match `name`?
+fn pattern_matches(pat: &str, name: &str) -> bool {
+    let mut parts = Vec::new();
+    let mut rest = pat;
+    while let Some((head, tail)) = rest.split_once('{') {
+        parts.push(head);
+        rest = tail.split_once('}').map_or("", |(_, after)| after);
+    }
+    parts.push(rest);
+    let mut pos = 0;
+    let last = parts.len() - 1;
+    for (idx, part) in parts.iter().enumerate() {
+        if idx == 0 {
+            if !name.starts_with(part) {
+                return false;
+            }
+            pos = part.len();
+        } else if idx == last {
+            return name.ends_with(part) && name.len() - part.len() >= pos;
+        } else {
+            match name[pos..].find(part) {
+                Some(at) => pos += at + part.len(),
+                None => return false,
+            }
+        }
+    }
+    true
+}
+
+/// PS300: both directions of metric-catalog sync. Catalog names come
+/// from the plain `counter(`/`gauge(`/`histogram(` constructor calls in
+/// the registry source; recording sites are the `.counter(`/`.gauge(`/
+/// `.histogram(` method calls everywhere else. A literal containing
+/// `{..}` is a format pattern and covers every catalog name it matches.
+pub(crate) fn catalog_sync(files: &[ScannedFile], registry_rel: &str, out: &mut Vec<Finding>) {
+    let Some(reg) = files.iter().find(|f| f.rel == registry_rel) else {
+        return;
+    };
+    let is_metric_call = |t: &Tok| {
+        t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "counter" | "gauge" | "histogram")
+    };
+    let mut catalog: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    let code = reg.code();
+    for (i, t) in code.iter().enumerate() {
+        if is_metric_call(t)
+            && code.get(i + 1).is_some_and(|n| n.text == "(")
+            && (i == 0 || code[i - 1].text != ".")
+            && !reg.in_test(t.line)
+        {
+            if let Some(lit) = first_str_in_parens(&code, i + 1) {
+                catalog.insert(str_value(lit).to_string(), (lit.line, lit.col));
+            }
+        }
+    }
+    let mut recorded: Vec<(String, usize, usize, String)> = Vec::new();
+    for f in files {
+        if f.rel == reg.rel {
+            continue;
+        }
+        let code = f.code();
+        for (i, t) in code.iter().enumerate() {
+            if is_metric_call(t)
+                && i > 0
+                && code[i - 1].text == "."
+                && code.get(i + 1).is_some_and(|n| n.text == "(")
+                && !f.in_test(t.line)
+            {
+                if let Some(lit) = first_str_in_parens(&code, i + 1) {
+                    recorded.push((
+                        str_value(lit).to_string(),
+                        lit.line,
+                        lit.col,
+                        f.rel.clone(),
+                    ));
+                }
+            }
+        }
+    }
+    for (name, line, col, rel) in &recorded {
+        let covered = if name.contains('{') {
+            catalog.keys().any(|entry| pattern_matches(name, entry))
+        } else {
+            catalog.contains_key(name)
+        };
+        if !covered {
+            out.push(Finding {
+                code: "PS300",
+                path: rel.clone(),
+                line: *line,
+                col: *col,
+                message: format!("metric \"{name}\" recorded but absent from the METRICS catalog"),
+            });
+        }
+    }
+    for (entry, (line, col)) in &catalog {
+        let hit = recorded.iter().any(|(name, ..)| {
+            (name.contains('{') && pattern_matches(name, entry)) || name == entry
+        });
+        if !hit {
+            out.push(Finding {
+                code: "PS300",
+                path: reg.rel.clone(),
+                line: *line,
+                col: *col,
+                message: format!("METRICS entry \"{entry}\" is never recorded"),
+            });
+        }
+    }
+}
+
+/// PS400: every protocol command (the `cmd: "..."` rows of the typed
+/// `COMMANDS` table) has a PROTOCOL.md section, a PROTOCOL.md table row
+/// and a golden fixture; no orphan fixtures exist.
+pub(crate) fn protocol_sync(
+    files: &[ScannedFile],
+    request_rel: &str,
+    protocol_doc: &str,
+    fixtures: &[String],
+    fixtures_rel: &str,
+    out: &mut Vec<Finding>,
+) {
+    let Some(req) = files.iter().find(|f| f.rel == request_rel) else {
+        return;
+    };
+    let code = req.code();
+    let mut cmds: Vec<(String, usize, usize)> = Vec::new();
+    for (i, t) in code.iter().enumerate() {
+        if t.kind == TokKind::Ident
+            && t.text == "cmd"
+            && code.get(i + 1).is_some_and(|n| n.text == ":")
+            && code.get(i + 2).is_some_and(|n| n.kind == TokKind::Str)
+            && !req.in_test(t.line)
+        {
+            let lit = code[i + 2];
+            cmds.push((str_value(lit).to_string(), lit.line, lit.col));
+        }
+    }
+    for (cmd, line, col) in &cmds {
+        let checks = [
+            (format!("### `{cmd}`"), "PROTOCOL.md section"),
+            (format!("| `{cmd}` |"), "PROTOCOL.md table row"),
+        ];
+        for (needle, what) in checks {
+            if !protocol_doc.contains(&needle) {
+                out.push(Finding {
+                    code: "PS400",
+                    path: req.rel.clone(),
+                    line: *line,
+                    col: *col,
+                    message: format!("command \"{cmd}\" has no {what}"),
+                });
+            }
+        }
+        if !fixtures.iter().any(|f| f == &format!("{cmd}.txt")) {
+            out.push(Finding {
+                code: "PS400",
+                path: req.rel.clone(),
+                line: *line,
+                col: *col,
+                message: format!("command \"{cmd}\" has no golden fixture {cmd}.txt"),
+            });
+        }
+    }
+    let known: BTreeSet<&str> = cmds.iter().map(|(c, ..)| c.as_str()).collect();
+    for fixture in fixtures {
+        let stem = fixture.strip_suffix(".txt").unwrap_or(fixture);
+        if !known.contains(stem) {
+            out.push(Finding {
+                code: "PS400",
+                path: format!("{fixtures_rel}/{fixture}"),
+                line: 1,
+                col: 1,
+                message: format!("orphan protocol fixture {fixture}: no matching command"),
+            });
+        }
+    }
+}
+
+/// One file under the golden tree, pre-split for reference matching.
+#[derive(Clone, Debug)]
+pub struct GoldenEntry {
+    /// Path relative to the lint root.
+    pub rel: String,
+    /// Basename (`sweep.txt`).
+    pub name: String,
+    /// Parent directory relative to the golden tree's own parent
+    /// (`golden/protocol`), the form references use.
+    pub parent_rel: String,
+}
+
+/// PS600: every golden file is referenced somewhere — by basename, by a
+/// directory glob (`golden/protocol/*.txt`), or by a directory-level
+/// reference (the quoted directory path a test enumerates at runtime).
+pub(crate) fn orphan_goldens(golden: &[GoldenEntry], corpus: &str, out: &mut Vec<Finding>) {
+    for g in golden {
+        let ext = g.name.rsplit_once('.').map_or("", |(_, e)| e);
+        let covered = corpus.contains(&g.name)
+            || corpus.contains(&format!("{}\"", g.parent_rel))
+            || corpus.contains(&format!("{}/*.{ext}", g.parent_rel));
+        if !covered {
+            out.push(Finding {
+                code: "PS600",
+                path: g.rel.clone(),
+                line: 1,
+                col: 1,
+                message: format!(
+                    "golden file {} is referenced by no test, CI step or doc",
+                    g.name
+                ),
+            });
+        }
+    }
+}
+
+/// Apply the allowlist: drop findings covered by a well-formed
+/// `lint:allow` on the right line with the right code, then add PS000
+/// findings for malformed and stale directives.
+pub(crate) fn apply_allows(files: &[&ScannedFile], findings: Vec<Finding>) -> Vec<Finding> {
+    let mut allowed: BTreeSet<(String, usize, String)> = BTreeSet::new();
+    for f in files {
+        for a in &f.allows {
+            if a.well_formed {
+                allowed.insert((f.rel.clone(), a.covered_line, a.code.clone()));
+            }
+        }
+    }
+    let mut used: BTreeSet<(String, usize, String)> = BTreeSet::new();
+    let mut kept = Vec::new();
+    for finding in findings {
+        let key = (finding.path.clone(), finding.line, finding.code.to_string());
+        if allowed.contains(&key) {
+            used.insert(key);
+        } else {
+            kept.push(finding);
+        }
+    }
+    for f in files {
+        for a in &f.allows {
+            if !a.well_formed {
+                kept.push(Finding {
+                    code: "PS000",
+                    path: f.rel.clone(),
+                    line: a.line,
+                    col: 1,
+                    message: "malformed lint:allow directive (need a known code and a reason)"
+                        .to_string(),
+                });
+            } else if !used.contains(&(f.rel.clone(), a.covered_line, a.code.clone())) {
+                kept.push(Finding {
+                    code: "PS000",
+                    path: f.rel.clone(),
+                    line: a.line,
+                    col: 1,
+                    message: format!(
+                        "stale lint:allow({}): it suppresses nothing",
+                        a.code
+                    ),
+                });
+            }
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(rel: &str, src: &str) -> ScannedFile {
+        ScannedFile::scan(rel, src, &super::super::known_codes())
+    }
+
+    #[test]
+    fn panic_freedom_flags_each_shape() {
+        let src = "fn f(v: &[u8]) {\n\
+                   let a = v.first().unwrap();\n\
+                   let b = v.get(1).expect(\"x\");\n\
+                   if v.is_empty() { panic!(\"no\"); }\n\
+                   let c = v[0];\n\
+                   }\n";
+        let f = scan("h.rs", src);
+        let mut out = Vec::new();
+        panic_freedom(&f, &mut out);
+        assert_eq!(out.len(), 4, "{out:?}");
+        assert!(out.iter().all(|x| x.code == "PS100"));
+    }
+
+    #[test]
+    fn panic_freedom_skips_tests_and_unwrap_or() {
+        let src = "fn f(n: Option<u32>) -> u32 { n.unwrap_or(0) }\n\
+                   #[cfg(test)]\nmod tests {\n\
+                   #[test]\nfn t() { Some(1).unwrap(); }\n}\n";
+        let f = scan("h.rs", src);
+        let mut out = Vec::new();
+        panic_freedom(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn overflow_surface_flags_bare_ops_in_count_fns() {
+        let src = "fn cell_count(a: usize, b: usize) -> usize { a * b + 1 }\n\
+                   fn unrelated(a: usize) -> usize { a * 3 }\n";
+        let f = scan("s.rs", src);
+        let mut out = Vec::new();
+        overflow_surface(&f, &mut out);
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(out.iter().all(|x| x.code == "PS200" && x.message.contains("cell_count")));
+    }
+
+    #[test]
+    fn overflow_surface_accepts_saturating() {
+        let src = "fn cell_count(a: usize, b: usize) -> usize {\n\
+                   a.saturating_mul(b).saturating_add(1)\n}\n";
+        let f = scan("s.rs", src);
+        let mut out = Vec::new();
+        overflow_surface(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn format_gate_respects_string_literals() {
+        let long_code = format!("let x = 1; {}\n", "// padding padding padding".repeat(4));
+        let long_str = format!("let s = \"{}\";\n", "x".repeat(120));
+        let trailing = "let y = 2; \n";
+        let f = scan("w.rs", &format!("{long_code}{long_str}{trailing}"));
+        let mut out = Vec::new();
+        format_gate(&f, 100, &mut out);
+        // Long code line and trailing whitespace flagged; the long
+        // string literal line is exempt.
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert_eq!(out[0].line, 1);
+        assert_eq!(out[1].line, 3);
+    }
+
+    #[test]
+    fn catalog_sync_finds_both_directions() {
+        let registry = "pub const METRICS: [M; 2] = [\n\
+                        counter(\"hits\", \"Hits.\"),\n\
+                        counter(\"misses\", \"Misses.\"),\n];\n";
+        let user = "fn f(reg: &R) { reg.counter(\"hits\").inc(); \
+                    reg.counter(\"unknown\").inc(); }\n";
+        let files =
+            vec![scan("reg.rs", registry), scan("user.rs", user)];
+        let mut out = Vec::new();
+        catalog_sync(&files, "reg.rs", &mut out);
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(out.iter().any(|x| x.message.contains("unknown")));
+        assert!(out.iter().any(|x| x.message.contains("misses")));
+    }
+
+    #[test]
+    fn catalog_sync_format_patterns_cover_families() {
+        let registry = "pub const METRICS: [M; 2] = [\n\
+                        counter(\"req_a\", \"A.\"),\ncounter(\"req_b\", \"B.\"),\n];\n";
+        let user = "fn f(reg: &R, cmd: &str) { \
+                    reg.counter(&format!(\"req_{cmd}\")).inc(); }\n";
+        let files = vec![scan("reg.rs", registry), scan("user.rs", user)];
+        let mut out = Vec::new();
+        catalog_sync(&files, "reg.rs", &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn protocol_sync_checks_doc_and_fixtures() {
+        let request = "pub const COMMANDS: [C; 2] = [\n\
+                       C { cmd: \"alpha\" },\nC { cmd: \"beta\" },\n];\n";
+        let doc = "| `alpha` |\n### `alpha`\n";
+        let fixtures = vec!["alpha.txt".to_string(), "gamma.txt".to_string()];
+        let files = vec![scan("req.rs", request)];
+        let mut out = Vec::new();
+        protocol_sync(&files, "req.rs", doc, &fixtures, "golden/protocol", &mut out);
+        // beta: no section, no row, no fixture; gamma: orphan.
+        assert_eq!(out.len(), 4, "{out:?}");
+        assert!(out.iter().any(|x| x.message.contains("orphan")));
+    }
+
+    #[test]
+    fn orphan_goldens_accepts_all_reference_forms() {
+        let golden = vec![
+            GoldenEntry {
+                rel: "tests/golden/a.jsonl".into(),
+                name: "a.jsonl".into(),
+                parent_rel: "golden".into(),
+            },
+            GoldenEntry {
+                rel: "tests/golden/protocol/b.txt".into(),
+                name: "b.txt".into(),
+                parent_rel: "golden/protocol".into(),
+            },
+            GoldenEntry {
+                rel: "tests/golden/protocol/orphan.txt".into(),
+                name: "orphan.txt".into(),
+                parent_rel: "golden/protocol".into(),
+            },
+        ];
+        // a.jsonl by basename; b.txt would be covered by either a
+        // dir-level reference or a glob; orphan.txt... is not, because
+        // the corpus below names fixtures one by one.
+        let corpus = "diff a.jsonl out\nreplay b.txt\n";
+        let mut out = Vec::new();
+        orphan_goldens(&golden, corpus, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].path.contains("orphan"));
+        let mut out = Vec::new();
+        orphan_goldens(&golden, "read_dir(\"tests/golden/protocol\")\na.jsonl", &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn allows_suppress_and_go_stale() {
+        let src = "fn f(v: &[u8]) {\n\
+                   let a = v.first().unwrap(); // lint:allow(PS100, trusted static table)\n\
+                   let b = 1; // lint:allow(PS100, nothing to suppress here)\n\
+                   }\n";
+        let f = scan("h.rs", src);
+        let mut out = Vec::new();
+        panic_freedom(&f, &mut out);
+        assert_eq!(out.len(), 1);
+        let kept = apply_allows(&[&f], out);
+        // The real finding is suppressed; the stale allow surfaces.
+        assert_eq!(kept.len(), 1, "{kept:?}");
+        assert_eq!(kept[0].code, "PS000");
+        assert!(kept[0].message.contains("stale"));
+    }
+
+    #[test]
+    fn pattern_matching_is_anchored() {
+        assert!(pattern_matches("api_requests_{cmd}", "api_requests_sweep"));
+        assert!(!pattern_matches("api_requests_{cmd}", "serve_api_requests_x"));
+        assert!(pattern_matches("{a}_us", "wait_us"));
+        assert!(!pattern_matches("{a}_us", "wait_ms"));
+    }
+}

@@ -1,0 +1,522 @@
+//! The hand-rolled Rust-source tokenizer behind every lint pass.
+//!
+//! Deliberately not a parser: the passes only need a token stream in
+//! which comments, string/char literals and lifetimes can never be
+//! confused with code — the classic failure mode of grep-based checks.
+//! Handles line comments, nested block comments, plain/raw/byte string
+//! literals (including multi-hash raw strings and `\`-continuations),
+//! char-literal-vs-lifetime disambiguation, and keeps 1-based line/col
+//! spans in characters so diagnostics point at the offending token.
+
+/// Token classification, as coarse as the passes need.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// `// ...` (doc comments included).
+    LineComment,
+    /// `/* ... */`, nesting handled.
+    BlockComment,
+    /// String literal: plain, raw (`r#"..."#`) or byte (`b"..."`).
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Identifier or keyword.
+    Ident,
+    /// Numeric literal.
+    Num,
+    /// Any single punctuation character.
+    Punct,
+}
+
+/// One token with its character span (1-based line/col, end exclusive).
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// Classification.
+    pub kind: TokKind,
+    /// Raw source text of the token.
+    pub text: String,
+    /// 1-based start line.
+    pub line: usize,
+    /// 1-based start column (chars).
+    pub col: usize,
+    /// 1-based end line.
+    pub end_line: usize,
+    /// 1-based end column (chars, exclusive).
+    pub end_col: usize,
+}
+
+impl Tok {
+    /// Is this a comment or a code token? Passes scan code tokens only;
+    /// the allowlist scans comments.
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+}
+
+/// The literal value of a string token: prefix (`r`/`b`/`br`), hash
+/// guards and quotes stripped, escapes left as written (the passes
+/// compare metric/command names, which never need escapes).
+pub fn str_value(tok: &Tok) -> &str {
+    let mut s = tok.text.as_str();
+    for prefix in ["br", "rb", "b", "r"] {
+        if let Some(rest) = s.strip_prefix(prefix) {
+            if rest.starts_with(['"', '#']) {
+                s = rest;
+                break;
+            }
+        }
+    }
+    s = s.trim_matches('#');
+    s = s.strip_prefix('"').unwrap_or(s);
+    s.strip_suffix('"').unwrap_or(s)
+}
+
+struct Scanner {
+    chars: Vec<char>,
+    i: usize,
+    line: usize,
+    col: usize,
+}
+
+impl Scanner {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) {
+        if self.peek(0) == Some('\n') {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        self.i += 1;
+    }
+
+    fn bump_n(&mut self, n: usize) {
+        for _ in 0..n {
+            self.bump();
+        }
+    }
+
+    /// Consume a quoted literal starting at the opening quote; `\` keeps
+    /// escaped quotes (and line continuations) inside the token.
+    fn quoted(&mut self, quote: char) {
+        self.bump(); // opening quote
+        while let Some(c) = self.peek(0) {
+            if c == '\\' {
+                self.bump();
+                self.bump();
+                continue;
+            }
+            self.bump();
+            if c == quote {
+                return;
+            }
+        }
+    }
+
+    /// Consume a raw string body: the `#` guards and opening quote are
+    /// next; scan to `"` followed by the same number of `#`s.
+    fn raw_quoted(&mut self) {
+        let mut hashes = 0;
+        while self.peek(hashes) == Some('#') {
+            hashes += 1;
+        }
+        self.bump_n(hashes + 1); // guards + opening quote
+        while let Some(c) = self.peek(0) {
+            if c == '"' && (0..hashes).all(|h| self.peek(1 + h) == Some('#')) {
+                self.bump_n(1 + hashes);
+                return;
+            }
+            self.bump();
+        }
+    }
+}
+
+/// Tokenize Rust source. Never fails: unterminated constructs just end
+/// their token at end-of-file (the compiler owns rejecting them).
+pub fn tokenize(text: &str) -> Vec<Tok> {
+    let mut s = Scanner { chars: text.chars().collect(), i: 0, line: 1, col: 1 };
+    let mut toks = Vec::new();
+    while let Some(c) = s.peek(0) {
+        let (si, sl, sc) = (s.i, s.line, s.col);
+        let kind = match c {
+            '\n' | ' ' | '\t' | '\r' => {
+                s.bump();
+                continue;
+            }
+            '/' if s.peek(1) == Some('/') => {
+                while s.peek(0).is_some_and(|c| c != '\n') {
+                    s.bump();
+                }
+                TokKind::LineComment
+            }
+            '/' if s.peek(1) == Some('*') => {
+                let mut depth = 0_usize;
+                while let Some(c) = s.peek(0) {
+                    if c == '/' && s.peek(1) == Some('*') {
+                        depth += 1;
+                        s.bump_n(2);
+                    } else if c == '*' && s.peek(1) == Some('/') {
+                        depth -= 1;
+                        s.bump_n(2);
+                        if depth == 0 {
+                            break;
+                        }
+                    } else {
+                        s.bump();
+                    }
+                }
+                TokKind::BlockComment
+            }
+            '"' => {
+                s.quoted('"');
+                TokKind::Str
+            }
+            'r' | 'b' => {
+                // Possible literal prefix: r" r#" b" br" br#" b'
+                let mut p = 1;
+                if (c == 'b' && s.peek(1) == Some('r')) || (c == 'r' && s.peek(1) == Some('b')) {
+                    p = 2;
+                }
+                let mut hashes = 0;
+                while s.peek(p + hashes) == Some('#') {
+                    hashes += 1;
+                }
+                let raw = c == 'r' || p == 2;
+                if raw && s.peek(p + hashes) == Some('"') {
+                    s.bump_n(p);
+                    s.raw_quoted();
+                    TokKind::Str
+                } else if c == 'b' && p == 1 && s.peek(1) == Some('"') {
+                    s.bump();
+                    s.quoted('"');
+                    TokKind::Str
+                } else if c == 'b' && p == 1 && s.peek(1) == Some('\'') {
+                    s.bump();
+                    s.quoted('\'');
+                    TokKind::Char
+                } else {
+                    while s.peek(0).is_some_and(|c| c.is_alphanumeric() || c == '_') {
+                        s.bump();
+                    }
+                    TokKind::Ident
+                }
+            }
+            '\'' => {
+                // Char literal vs lifetime: escapes and the `'x'` shape
+                // are chars; otherwise consume a lifetime identifier.
+                if s.peek(1) == Some('\\') || s.peek(2) == Some('\'') {
+                    s.quoted('\'');
+                    TokKind::Char
+                } else {
+                    s.bump();
+                    while s.peek(0).is_some_and(|c| c.is_alphanumeric() || c == '_') {
+                        s.bump();
+                    }
+                    TokKind::Lifetime
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                while s.peek(0).is_some_and(|c| c.is_alphanumeric() || c == '_') {
+                    s.bump();
+                }
+                TokKind::Ident
+            }
+            c if c.is_ascii_digit() => {
+                while let Some(c) = s.peek(0) {
+                    // Stop before `..` so ranges stay punctuation.
+                    if c == '.' && s.peek(1) == Some('.') {
+                        break;
+                    }
+                    if !(c.is_alphanumeric() || c == '_' || c == '.') {
+                        break;
+                    }
+                    s.bump();
+                }
+                TokKind::Num
+            }
+            _ => {
+                s.bump();
+                TokKind::Punct
+            }
+        };
+        toks.push(Tok {
+            kind,
+            text: s.chars[si..s.i].iter().collect(),
+            line: sl,
+            col: sc,
+            end_line: s.line,
+            end_col: s.col,
+        });
+    }
+    toks
+}
+
+/// One `// lint:allow(CODE, reason)` directive found in a comment.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// The lint code being suppressed.
+    pub code: String,
+    /// The mandatory human reason.
+    pub reason: String,
+    /// Line the directive itself is on.
+    pub line: usize,
+    /// Line whose findings it suppresses (its own line when trailing
+    /// code, the next line when the comment stands alone).
+    pub covered_line: usize,
+    /// Parsed cleanly with a known code and a non-empty reason.
+    pub well_formed: bool,
+}
+
+/// A tokenized source file plus the derived facts the passes need.
+#[derive(Debug)]
+pub struct ScannedFile {
+    /// Path relative to the lint root, `/`-separated.
+    pub rel: String,
+    /// Source split on `\n` (for the format gate).
+    pub lines: Vec<String>,
+    /// The full token stream.
+    pub toks: Vec<Tok>,
+    /// `(first_line, last_line)` of `#[cfg(test)]`/`#[test]` blocks.
+    pub test_regions: Vec<(usize, usize)>,
+    /// Every `lint:allow` directive in the file.
+    pub allows: Vec<Allow>,
+}
+
+impl ScannedFile {
+    /// Scan `text` as the file `rel`. `known_codes` validates allow
+    /// directives.
+    pub fn scan(rel: &str, text: &str, known_codes: &[&str]) -> ScannedFile {
+        let toks = tokenize(text);
+        let test_regions = find_test_regions(&toks);
+        let allows = find_allows(&toks, known_codes);
+        ScannedFile {
+            rel: rel.to_string(),
+            lines: text.split('\n').map(str::to_string).collect(),
+            toks,
+            test_regions,
+            allows,
+        }
+    }
+
+    /// Code tokens only (comments stripped), the view passes scan.
+    pub fn code(&self) -> Vec<&Tok> {
+        self.toks.iter().filter(|t| !t.is_comment()).collect()
+    }
+
+    /// Is the line inside a `#[cfg(test)]` / `#[test]` region?
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_regions.iter().any(|&(a, b)| (a..=b).contains(&line))
+    }
+}
+
+/// Brace-match the block following each `#[cfg(test)]` or `#[test]`
+/// attribute. A `;` before the `{` means the attribute decorated a
+/// statement, not a block — skip it.
+fn find_test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let code: Vec<&Tok> = toks.iter().filter(|t| !t.is_comment()).collect();
+    let mut regions = Vec::new();
+    let mut i = 0;
+    while i < code.len() {
+        let span = attr_span(&code, i);
+        let Some(span) = span else {
+            i += 1;
+            continue;
+        };
+        let mut j = i + span;
+        while j < code.len() && code[j].text != "{" && code[j].text != ";" {
+            j += 1;
+        }
+        if j >= code.len() || code[j].text == ";" {
+            i += span;
+            continue;
+        }
+        let mut depth = 0_isize;
+        let mut k = j;
+        while k < code.len() {
+            match code[k].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        if k < code.len() {
+            regions.push((code[i].line, code[k].end_line));
+            i = k + 1;
+        } else {
+            i += span;
+        }
+    }
+    regions
+}
+
+/// If `code[i..]` starts a `#[cfg(test)]` or `#[test]` attribute,
+/// return its token length.
+fn attr_span(code: &[&Tok], i: usize) -> Option<usize> {
+    let text = |k: usize| code.get(i + k).map(|t| t.text.as_str());
+    if text(0) != Some("#") || text(1) != Some("[") {
+        return None;
+    }
+    if text(2) == Some("test") && text(3) == Some("]") {
+        return Some(4);
+    }
+    if text(2) == Some("cfg")
+        && text(3) == Some("(")
+        && text(4) == Some("test")
+        && text(5) == Some(")")
+        && text(6) == Some("]")
+    {
+        return Some(7);
+    }
+    None
+}
+
+/// Extract `lint:allow(CODE, reason)` directives from comment tokens.
+fn find_allows(toks: &[Tok], known_codes: &[&str]) -> Vec<Allow> {
+    const MARKER: &str = "lint:allow(";
+    let mut allows = Vec::new();
+    for (idx, tok) in toks.iter().enumerate() {
+        if !tok.is_comment() {
+            continue;
+        }
+        // The directive must open the comment (`// lint:allow(...)`);
+        // prose that merely mentions the marker mid-sentence is not one.
+        let head = tok.text.trim_start_matches(['/', '*', '!']).trim_start();
+        if !head.starts_with(MARKER) {
+            continue;
+        }
+        let rest = &head[MARKER.len()..];
+        let closed = rest.find(')');
+        let body = &rest[..closed.unwrap_or(rest.len())];
+        let (code, reason) = match body.split_once(',') {
+            Some((code, reason)) => (code.trim(), reason.trim()),
+            None => (body.trim(), ""),
+        };
+        let well_formed = closed.is_some() && known_codes.contains(&code) && !reason.is_empty();
+        // Trailing comment (code earlier on the same line) covers its
+        // own line; a standalone comment line covers the next line.
+        let trailing = toks[..idx]
+            .iter()
+            .any(|t| !t.is_comment() && t.end_line == tok.line && t.col < tok.col);
+        let covered_line = if trailing { tok.line } else { tok.line + 1 };
+        allows.push(Allow {
+            code: code.to_string(),
+            reason: reason.to_string(),
+            line: tok.line,
+            covered_line,
+            well_formed,
+        });
+    }
+    allows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        tokenize(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_opaque() {
+        let src = "let a = \"x.unwrap() // not code\"; // real comment\n";
+        let toks = kinds(src);
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokKind::Str && t.contains("unwrap")));
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokKind::LineComment && t.contains("real comment")));
+        // The unwrap inside the string never shows up as an ident.
+        assert!(!toks.iter().any(|(k, t)| *k == TokKind::Ident && t == "unwrap"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let toks = kinds(r####"let s = r#"embedded "quote" ok"#; let b = b"bytes";"####);
+        let strs: Vec<_> =
+            toks.iter().filter(|(k, _)| *k == TokKind::Str).collect();
+        assert_eq!(strs.len(), 2);
+        assert!(strs[0].1.contains("embedded"));
+        assert_eq!(strs[1].1, "b\"bytes\"");
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = kinds("let c: char = 'x'; fn f<'a>(v: &'a str) {} let n = '\\n';");
+        let chars = toks.iter().filter(|(k, _)| *k == TokKind::Char).count();
+        let lifetimes = toks.iter().filter(|(k, _)| *k == TokKind::Lifetime).count();
+        assert_eq!((chars, lifetimes), (2, 2));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = kinds("/* outer /* inner */ still comment */ let x = 1;");
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokKind::BlockComment).count(), 1);
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Ident && t == "let"));
+    }
+
+    #[test]
+    fn spans_are_one_based_chars() {
+        let toks = tokenize("ab\n  cd");
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (2, 3));
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_blocks() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\n";
+        let f = ScannedFile::scan("x.rs", src, &["PS100"]);
+        assert!(!f.in_test(1));
+        assert!(f.in_test(3));
+        assert!(f.in_test(4));
+    }
+
+    #[test]
+    fn cfg_test_on_statement_is_not_a_region() {
+        let src = "#[cfg(test)]\nuse std::fmt;\nfn live() { body(); }\n";
+        let f = ScannedFile::scan("x.rs", src, &["PS100"]);
+        assert!(!f.in_test(3));
+    }
+
+    #[test]
+    fn allow_directives_parse_and_attach() {
+        let src = "let a = 1; // lint:allow(PS100, trusted table)\n\
+                   // lint:allow(PS500, generated line)\n\
+                   let b = 2;\n\
+                   // lint:allow(BOGUS, nope)\n\
+                   // lint:allow(PS100)\n";
+        let f = ScannedFile::scan("x.rs", src, &["PS100", "PS500"]);
+        assert_eq!(f.allows.len(), 4);
+        assert!(f.allows[0].well_formed);
+        assert_eq!(f.allows[0].covered_line, 1); // trailing: same line
+        assert!(f.allows[1].well_formed);
+        assert_eq!(f.allows[1].covered_line, 3); // standalone: next line
+        assert!(!f.allows[2].well_formed); // unknown code
+        assert!(!f.allows[3].well_formed); // missing reason
+    }
+
+    #[test]
+    fn str_value_strips_quotes_and_prefixes() {
+        let cases = [
+            ("\"plain\"", "plain"),
+            ("r\"raw\"", "raw"),
+            ("r#\"guarded\"#", "guarded"),
+            ("b\"bytes\"", "bytes"),
+        ];
+        for (src, want) in cases {
+            let toks = tokenize(src);
+            assert_eq!(str_value(&toks[0]), want, "{src}");
+        }
+    }
+}

@@ -69,8 +69,12 @@ impl Json {
     }
 
     /// Parse a JSON document from text.
+    ///
+    /// Nesting is capped at [`MAX_DEPTH`] levels: the parser recurses
+    /// per nesting level, and hostile input like 100k `[`s must come
+    /// back as a clean [`JsonError`], not a stack-overflow abort.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -98,9 +102,15 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Maximum container nesting [`Json::parse`] accepts. Far deeper than
+/// any legitimate psim document (requests nest 2–3 levels) while small
+/// enough that parse recursion can never exhaust the thread stack.
+pub const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -137,7 +147,11 @@ impl<'a> Parser<'a> {
     }
 
     fn value(&mut self) -> Result<Json, JsonError> {
-        match self.peek() {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("too deeply nested"));
+        }
+        self.depth += 1;
+        let v = match self.peek() {
             Some(b'n') => self.lit("null", Json::Null),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -146,7 +160,9 @@ impl<'a> Parser<'a> {
             Some(b'{') => self.object(),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(self.err("expected a JSON value")),
-        }
+        };
+        self.depth -= 1;
+        v
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
@@ -225,7 +241,8 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("bad number"))?;
         s.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 
@@ -389,6 +406,36 @@ mod tests {
         assert_eq!(Json::parse("3").unwrap().as_usize(), Some(3));
         assert_eq!(Json::parse("3.5").unwrap().as_usize(), None);
         assert_eq!(Json::parse("-3").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn hostile_deep_nesting_errors_cleanly() {
+        // Regression (lint PS100 hardening): before the MAX_DEPTH cap,
+        // these exact bytes crashed the process with a stack-overflow
+        // abort instead of returning a JsonError.
+        for open in ["[", "{\"k\":"] {
+            let hostile = open.repeat(100_000);
+            let err = Json::parse(&hostile).unwrap_err();
+            assert!(err.msg.contains("too deeply nested"), "{err}");
+        }
+    }
+
+    #[test]
+    fn nesting_inside_the_cap_still_parses() {
+        let depth = MAX_DEPTH - 1;
+        let doc = format!("{}0{}", "[".repeat(depth), "]".repeat(depth));
+        assert!(Json::parse(&doc).is_ok());
+        let doc = format!("{}0{}", "[".repeat(depth + 1), "]".repeat(depth + 1));
+        assert!(Json::parse(&doc).is_err());
+    }
+
+    #[test]
+    fn malformed_numbers_error_cleanly() {
+        // Regression companions to the number() from_utf8 hardening:
+        // every truncated or bare-sign form must be a clean error.
+        for src in ["-", "1e", "1e+", ".5", "--1"] {
+            assert!(Json::parse(src).is_err(), "{src:?} should not parse");
+        }
     }
 
     #[test]

@@ -12,10 +12,13 @@
 //! * [`benchkit`] — a criterion-like micro-benchmark harness
 //!   (warmup, N samples, mean/median/stddev, throughput).
 //! * [`mathx`] — small numeric helpers (divisors, log-space distance).
+//! * [`sync`] — poison-tolerant `Mutex`/`Condvar` helpers for the
+//!   panic-free serve path.
 
 pub mod benchkit;
 pub mod json;
 pub mod mathx;
 pub mod prng;
 pub mod quickcheck;
+pub mod sync;
 pub mod tablefmt;

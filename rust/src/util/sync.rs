@@ -1,0 +1,44 @@
+//! Poison-tolerant synchronization helpers.
+//!
+//! The serve path must stay panic-free on hostile input (lint pass
+//! `PS100`), and `Mutex::lock().unwrap()` is a deferred panic: one
+//! panicking lock holder anywhere would poison the lock and cascade the
+//! crash into every worker that touches it afterwards. The state guarded
+//! on that path (connection registries, the request-coalescing map)
+//! stays consistent entry-by-entry even across a holder's unwind, so
+//! recovering the guard is strictly better than taking the whole server
+//! down.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// `mutex.lock()` that survives poisoning by adopting the inner guard.
+pub fn lock_unpoisoned<T>(mutex: &Mutex<T>) -> MutexGuard<'_, T> {
+    mutex.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `condvar.wait(guard)` that survives poisoning the same way.
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::{Arc, Mutex};
+
+    use super::lock_unpoisoned;
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_holder_panic() {
+        let shared = Arc::new(Mutex::new(7_u32));
+        let poisoner = Arc::clone(&shared);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(shared.is_poisoned(), "holder panic must poison the lock");
+        assert_eq!(*lock_unpoisoned(&shared), 7);
+        *lock_unpoisoned(&shared) = 8;
+        assert_eq!(*lock_unpoisoned(&shared), 8);
+    }
+}

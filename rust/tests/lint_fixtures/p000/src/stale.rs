@@ -1,0 +1,6 @@
+// Seeded PS000 violations: a stale allow and a malformed one.
+pub fn fine() -> u8 {
+    // lint:allow(PS100, nothing on the next line needs this)
+    7
+}
+// lint:allow(NOPE)

@@ -1,0 +1,9 @@
+// Seeded PS100 violations: one per detection shape.
+pub fn parse(v: &[u8]) -> u8 {
+    let first = v.first().unwrap();
+    let second = v.get(1).expect("second byte");
+    if *first == 0 {
+        panic!("zero");
+    }
+    *second + v[0]
+}

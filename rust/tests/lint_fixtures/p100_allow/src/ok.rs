@@ -1,0 +1,8 @@
+// A trusted static-table constructor: the allowlisted counterpart to
+// the p100 fixture. Must lint clean — and the allow must count as used.
+pub const TABLE: [u8; 2] = [1, 2];
+
+pub fn lookup() -> u8 {
+    // lint:allow(PS100, trusted static table with a compile-time length)
+    *TABLE.first().unwrap()
+}

@@ -1,0 +1,9 @@
+// Seeded PS200 violation: bare arithmetic in a size-accounting fn.
+pub fn cell_count(rows: usize, cols: usize) -> usize {
+    rows * cols
+}
+
+// Not size accounting: bare arithmetic here is fine.
+pub fn area(rows: usize, cols: usize) -> usize {
+    rows * cols
+}

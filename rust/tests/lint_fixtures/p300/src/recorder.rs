@@ -1,0 +1,5 @@
+// Seeded PS300 recording sites: one cataloged, one unknown.
+pub fn record(reg: &Registry) {
+    reg.counter("requests_total").inc();
+    reg.counter("unknown_metric").inc();
+}

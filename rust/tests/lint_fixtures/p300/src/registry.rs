@@ -1,0 +1,14 @@
+// Seeded PS300 catalog: one live entry, one never recorded.
+pub struct MetricDesc {
+    pub name: &'static str,
+    pub help: &'static str,
+}
+
+const fn counter(name: &'static str, help: &'static str) -> MetricDesc {
+    MetricDesc { name, help }
+}
+
+pub const METRICS: [MetricDesc; 2] = [
+    counter("requests_total", "Requests handled."),
+    counter("never_recorded", "Nothing records this."),
+];

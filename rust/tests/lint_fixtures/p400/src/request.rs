@@ -1,0 +1,9 @@
+// Seeded PS400 command table: `alpha` fully pinned, `beta` drifted.
+pub struct CommandDoc {
+    pub cmd: &'static str,
+}
+
+pub const COMMANDS: [CommandDoc; 2] = [
+    CommandDoc { cmd: "alpha" },
+    CommandDoc { cmd: "beta" },
+];

@@ -1,0 +1,3 @@
+// Seeded PS500 violations: this comment line deliberately runs well past the format gate's one-hundred-column limit.
+pub const WIRE: &str = "string literals are exempt because rustfmt cannot break them either: xxxxxxxxxxxx";
+pub fn f() {} 

@@ -1,0 +1,179 @@
+//! Integration tests for `psim lint`.
+//!
+//! Each pass must fire on its seeded fixture tree under
+//! `tests/lint_fixtures/` (one deliberately-bad mini repo per pass),
+//! the allowlist must both suppress covered findings and be audited by
+//! `PS000`, and — the meta-test — the real repository must lint clean,
+//! which is exactly what the CI gate asserts via `psim lint --json`.
+
+use std::path::PathBuf;
+
+use psim::lint::{run, LintConfig, Report};
+use psim::util::json::Json;
+
+fn fixture_cfg(case: &str) -> LintConfig {
+    let root = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/lint_fixtures"));
+    LintConfig {
+        root: root.join(case),
+        src_dirs: vec![PathBuf::from("src")],
+        fmt_dirs: Vec::new(),
+        hostile: vec!["bad.rs".to_string(), "ok.rs".to_string()],
+        max_width: 100,
+        registry: Some(PathBuf::from("src/registry.rs")),
+        request: Some(PathBuf::from("src/request.rs")),
+        protocol_doc: Some(PathBuf::from("docs/PROTOCOL.md")),
+        fixtures_dir: Some(PathBuf::from("golden/protocol")),
+        golden_dir: Some(PathBuf::from("golden")),
+        ref_paths: vec![PathBuf::from("refs")],
+        exclude_dirs: Vec::new(),
+    }
+}
+
+fn lint_fixture(case: &str) -> Report {
+    run(&fixture_cfg(case)).expect("fixture lint run")
+}
+
+fn with_code<'a>(report: &'a Report, code: &str) -> Vec<&'a psim::lint::Finding> {
+    report.findings.iter().filter(|f| f.code == code).collect()
+}
+
+#[test]
+fn ps100_flags_every_panic_shape() {
+    let report = lint_fixture("p100");
+    let hits = with_code(&report, "PS100");
+    let got: Vec<(usize, &str)> =
+        hits.iter().map(|f| (f.line, f.message.as_str())).collect();
+    assert_eq!(
+        got,
+        vec![
+            (3, "`.unwrap()` on the hostile-input path"),
+            (4, "`.expect()` on the hostile-input path"),
+            (6, "`panic!` on the hostile-input path"),
+            (8, "indexing by integer literal on the hostile-input path"),
+        ],
+        "all findings: {:?}",
+        report.findings
+    );
+    for f in &hits {
+        assert_eq!(f.path, "src/bad.rs");
+        assert!(f.col > 0, "columns are 1-based");
+    }
+}
+
+#[test]
+fn allowlisted_violation_is_suppressed_and_counts_as_used() {
+    let report = lint_fixture("p100_allow");
+    // The unwrap is covered by the standalone allow on the line above,
+    // and because the allow suppressed something, PS000 stays quiet.
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+}
+
+#[test]
+fn ps200_flags_unchecked_arithmetic_in_count_fns_only() {
+    let report = lint_fixture("p200");
+    let hits = with_code(&report, "PS200");
+    assert_eq!(hits.len(), 1, "{:?}", report.findings);
+    assert_eq!(hits[0].message, "unchecked `*` in size-accounting fn `cell_count`");
+    assert_eq!(hits[0].line, 3);
+}
+
+#[test]
+fn ps300_flags_catalog_drift_in_both_directions() {
+    let report = lint_fixture("p300");
+    let msgs: Vec<&str> =
+        with_code(&report, "PS300").iter().map(|f| f.message.as_str()).collect();
+    assert_eq!(msgs.len(), 2, "{:?}", report.findings);
+    assert!(msgs
+        .contains(&"metric \"unknown_metric\" recorded but absent from the METRICS catalog"));
+    assert!(msgs.contains(&"METRICS entry \"never_recorded\" is never recorded"));
+}
+
+#[test]
+fn ps400_flags_undocumented_commands_and_orphan_fixtures() {
+    let report = lint_fixture("p400");
+    let msgs: Vec<&str> =
+        with_code(&report, "PS400").iter().map(|f| f.message.as_str()).collect();
+    assert_eq!(msgs.len(), 4, "{:?}", report.findings);
+    assert!(msgs.contains(&"command \"beta\" has no PROTOCOL.md section"));
+    assert!(msgs.contains(&"command \"beta\" has no PROTOCOL.md table row"));
+    assert!(msgs.contains(&"command \"beta\" has no golden fixture beta.txt"));
+    assert!(msgs.contains(&"orphan protocol fixture gamma.txt: no matching command"));
+    // `alpha` is pinned all three ways and must not be flagged.
+    assert!(msgs.iter().all(|m| !m.contains("alpha")));
+}
+
+#[test]
+fn ps500_flags_width_and_trailing_ws_but_exempts_string_literals() {
+    let report = lint_fixture("p500");
+    let hits = with_code(&report, "PS500");
+    assert_eq!(hits.len(), 2, "{:?}", report.findings);
+    assert_eq!((hits[0].line, hits[0].col), (1, 101));
+    assert!(hits[0].message.contains("chars (limit 100)"));
+    assert_eq!(hits[1].line, 3);
+    assert_eq!(hits[1].message, "trailing whitespace");
+    // Line 2 overflows too, but only inside a string literal.
+    assert!(hits.iter().all(|f| f.line != 2));
+}
+
+#[test]
+fn ps600_flags_unreferenced_golden_files() {
+    let report = lint_fixture("p600");
+    let hits = with_code(&report, "PS600");
+    assert_eq!(hits.len(), 1, "{:?}", report.findings);
+    assert_eq!(hits[0].path, "golden/orphan.jsonl");
+    assert_eq!(
+        hits[0].message,
+        "golden file orphan.jsonl is referenced by no test, CI step or doc"
+    );
+}
+
+#[test]
+fn ps000_flags_stale_and_malformed_allows() {
+    let report = lint_fixture("p000");
+    let hits = with_code(&report, "PS000");
+    assert_eq!(hits.len(), 2, "{:?}", report.findings);
+    assert_eq!(hits[0].line, 3);
+    assert_eq!(hits[0].message, "stale lint:allow(PS100): it suppresses nothing");
+    assert_eq!(hits[1].line, 6);
+    assert_eq!(
+        hits[1].message,
+        "malformed lint:allow directive (need a known code and a reason)"
+    );
+}
+
+#[test]
+fn json_report_round_trips_through_the_parser() {
+    let report = lint_fixture("p500");
+    let parsed = Json::parse(&report.to_json().to_string()).expect("report JSON parses");
+    assert_eq!(parsed.get("schema").and_then(Json::as_usize), Some(1));
+    assert_eq!(parsed.get("count").and_then(Json::as_usize), Some(2));
+    let findings = parsed.get("findings").and_then(Json::as_arr).expect("findings");
+    assert_eq!(findings.len(), 2);
+    for f in findings {
+        assert_eq!(f.get("code").and_then(Json::as_str), Some("PS500"));
+        assert!(f.get("path").and_then(Json::as_str).is_some());
+        assert!(f.get("line").and_then(Json::as_usize).is_some());
+        assert!(f.get("hint").and_then(Json::as_str).is_some());
+    }
+}
+
+/// The meta-test behind the CI gate: the real tree lints clean with
+/// the production configuration, and this covers the orphan-golden
+/// sweep for every file under `rust/tests/golden/` too (PS600 runs as
+/// part of the full registry).
+#[test]
+fn repository_lints_clean_with_the_production_config() {
+    let root = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/.."));
+    let report = run(&LintConfig::repo(&root)).expect("repo lint run");
+    let rendered: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| format!("{}:{}:{}: {} {}", f.path, f.line, f.col, f.code, f.message))
+        .collect();
+    assert!(
+        report.findings.is_empty(),
+        "the repository must lint clean; findings:\n{}",
+        rendered.join("\n")
+    );
+    assert!(report.files_scanned > 50, "scanned only {} files", report.files_scanned);
+}
