@@ -23,7 +23,7 @@
 //! byte-reproducible.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -292,6 +292,9 @@ pub struct Engine {
     serve: ServeStats,
     /// Coalescing map: request line -> the in-flight computation for it.
     inflight: Mutex<HashMap<String, Arc<Flight>>>,
+    /// Optional content-addressed result store: the coalescer dedupes
+    /// in-flight duplicates, the store dedupes across time and restarts.
+    store: OnceLock<crate::store::ResultStore>,
 }
 
 impl Engine {
@@ -319,6 +322,7 @@ impl Engine {
             latency,
             serve,
             inflight: Mutex::new(HashMap::new()),
+            store: OnceLock::new(),
         }
     }
 
@@ -379,6 +383,41 @@ impl Engine {
         &self.grid
     }
 
+    /// Attach a content-addressed result store. At most one store per
+    /// engine lifetime: returns `false` (and drops `store`) if one is
+    /// already attached. Build the store against [`Engine::registry`] so
+    /// its `cache_*` counters land in this engine's stats snapshot.
+    pub fn attach_store(&self, store: crate::store::ResultStore) -> bool {
+        self.store.set(store).is_ok()
+    }
+
+    /// The attached result store, if any.
+    pub fn store(&self) -> Option<&crate::store::ResultStore> {
+        self.store.get()
+    }
+
+    /// Replay a stored reply for `req`, if a store is attached, the
+    /// request is cacheable and the store holds a valid entry. The
+    /// stored payload re-parses to `Json` so hits render through the
+    /// same display path as fresh replies (byte-stable by the JSON
+    /// round-trip invariant pinned in `util::json`).
+    fn store_lookup(&self, req: &Request) -> Option<Json> {
+        let store = self.store.get()?;
+        let key = crate::store::canon::cache_key(req)?;
+        let payload = store.lookup(&key)?;
+        // An unparseable payload cannot happen for bytes the store
+        // validated, but degrade to a fresh dispatch rather than trust.
+        Json::parse(&payload).ok()
+    }
+
+    /// Record a successful reply in the attached store (no-op without a
+    /// store or for non-cacheable requests).
+    fn store_record(&self, req: &Request, reply: &Json) {
+        let Some(store) = self.store.get() else { return };
+        let Some(key) = crate::store::canon::cache_key(req) else { return };
+        store.insert(&key, &reply.to_string());
+    }
+
     /// Dispatch one typed request. Every frontend funnels through here,
     /// so the size caps, worker policy and metrics apply uniformly.
     pub fn dispatch(&self, req: &Request) -> Result<Response, ApiError> {
@@ -400,15 +439,29 @@ impl Engine {
     /// Decode, dispatch and encode one JSON-lines request. Errors become
     /// `{"code": ..., "error": ...}` replies. The bool asks the host to
     /// stop serving (a `shutdown` request was acknowledged).
+    ///
+    /// With a store attached, a cacheable request whose canonical form
+    /// was answered before replays the stored bytes and skips dispatch
+    /// entirely — no per-command counter, no latency observation, no
+    /// grid work. Only successful replies are recorded.
     pub fn handle_line(&self, line: &str) -> (Json, bool) {
-        let result = match codec::decode_line(line) {
-            Ok(req) => self.dispatch(&req),
+        let req = match codec::decode_line(line) {
+            Ok(req) => req,
             Err(e) => {
                 self.counters.errors.inc();
-                Err(e)
+                return Engine::encode(Err(e));
             }
         };
-        Engine::encode(result)
+        if let Some(reply) = self.store_lookup(&req) {
+            return (reply, false);
+        }
+        let result = self.dispatch(&req);
+        let ok = result.is_ok();
+        let value = Engine::encode(result);
+        if ok {
+            self.store_record(&req, &value.0);
+        }
+        value
     }
 
     /// [`Engine::handle_line`] with in-flight coalescing for concurrent
@@ -420,7 +473,10 @@ impl Engine {
     /// directly. The reply bytes are identical to [`Engine::handle_line`]
     /// for a leader; followers additionally bump
     /// [`ServeStats::coalesced`] and skip the per-command counter (the
-    /// computation was counted once, by the leader).
+    /// computation was counted once, by the leader). With a store
+    /// attached, a stored reply short-circuits before the rendezvous —
+    /// the coalescer dedupes in-flight duplicates, the store dedupes
+    /// across time and process restarts.
     pub fn handle_line_shared(&self, line: &str) -> (Json, bool) {
         let decode_started = Instant::now();
         let decoded = codec::decode_line(line);
@@ -436,6 +492,14 @@ impl Engine {
                 return value;
             }
         };
+        // The store sits in front of the coalescer: a stored reply needs
+        // no rendezvous (there is nothing in flight to share). A hit is
+        // a written reply, so it still counts as dispatched — that keeps
+        // `dispatched + coalesced == lines` exact.
+        if let Some(reply) = self.store_lookup(&req) {
+            self.serve.dispatched.inc();
+            return (reply, false);
+        }
         if !Engine::coalescable(&req) {
             let value = Engine::encode_timed(self.dispatch(&req));
             // Counted after the reply is built so a stats snapshot never
@@ -464,7 +528,12 @@ impl Engine {
         // removed even if the computation panics — followers must never
         // wait forever on a leader that died.
         let guard = FlightGuard { engine: self, key, flight, filled: false };
-        let value = Engine::encode_timed(self.dispatch(&req));
+        let result = self.dispatch(&req);
+        let ok = result.is_ok();
+        let value = Engine::encode_timed(result);
+        if ok {
+            self.store_record(&req, &value.0);
+        }
         self.serve.dispatched.inc();
         guard.fill(value)
     }
@@ -975,5 +1044,70 @@ mod tests {
         let _ = engine.handle_line_shared(SWEEP_LINE);
         assert_eq!(engine.serve_stats().dispatched.get(), 3);
         assert_eq!(engine.serve_stats().coalesced.get(), 0);
+    }
+
+    fn engine_with_memory_store() -> Engine {
+        let engine = Engine::analytics();
+        let store = crate::store::ResultStore::memory(8, engine.registry());
+        assert!(engine.attach_store(store));
+        engine
+    }
+
+    #[test]
+    fn attach_store_accepts_exactly_one_store() {
+        let engine = engine_with_memory_store();
+        let second = crate::store::ResultStore::memory(8, engine.registry());
+        assert!(!engine.attach_store(second));
+        assert!(engine.store().is_some());
+    }
+
+    #[test]
+    fn store_hit_replays_bytes_and_skips_dispatch() {
+        let engine = engine_with_memory_store();
+        let (cold, _) = engine.handle_line(SWEEP_LINE);
+        let (warm, _) = engine.handle_line(SWEEP_LINE);
+        assert_eq!(cold.to_string(), warm.to_string());
+        // The warm reply never dispatched: one sweep counted, and its
+        // latency histogram saw exactly one observation.
+        assert_eq!(engine.counters.sweep.get(), 1);
+        let c = engine.store().unwrap().counters();
+        assert_eq!((c.lookups.get(), c.hits.get(), c.misses.get()), (2, 1, 1));
+    }
+
+    #[test]
+    fn store_hit_counts_as_dispatched_on_the_shared_path() {
+        let engine = engine_with_memory_store();
+        let _ = engine.handle_line_shared(SWEEP_LINE);
+        let _ = engine.handle_line_shared(SWEEP_LINE);
+        // Both replies were written: dispatched covers fresh AND stored
+        // replies, so `dispatched + coalesced == lines` stays exact.
+        assert_eq!(engine.serve_stats().dispatched.get(), 2);
+        assert_eq!(engine.serve_stats().coalesced.get(), 0);
+        assert_eq!(engine.counters.sweep.get(), 1);
+        assert_eq!(engine.store().unwrap().counters().hits.get(), 1);
+    }
+
+    #[test]
+    fn spelling_variants_share_one_store_entry() {
+        let engine = engine_with_memory_store();
+        let a = r#"{"cmd":"tables","table":"table3"}"#;
+        let b = r#"{"table":"table3","cmd":"tables","faithful":false}"#;
+        let (cold, _) = engine.handle_line(a);
+        let (warm, _) = engine.handle_line(b);
+        assert_eq!(cold.to_string(), warm.to_string());
+        assert_eq!(engine.store().unwrap().counters().hits.get(), 1);
+    }
+
+    #[test]
+    fn error_replies_are_never_cached() {
+        let engine = engine_with_memory_store();
+        let bad = r#"{"cmd":"sweep","networks":["AlexNet"],"batches":[0]}"#;
+        let (first, _) = engine.handle_line(bad);
+        let (second, _) = engine.handle_line(bad);
+        assert!(first.get("error").is_some(), "{first}");
+        assert_eq!(first.to_string(), second.to_string());
+        let c = engine.store().unwrap().counters();
+        // Both attempts missed and neither recorded a reply.
+        assert_eq!((c.hits.get(), c.misses.get()), (0, 2));
     }
 }

@@ -1,0 +1,166 @@
+//! `cache`: inspect and maintain a result-store artifact directory.
+//!
+//! Three actions over the `--store DIR` artifact directory that `serve`
+//! and `psim request` write:
+//!
+//! - `ls` — one line per artifact (digest, validity, size, command);
+//! - `verify` — validate every artifact, exit 1 if any is invalid;
+//! - `gc` — delete invalid artifacts (valid ones are never touched;
+//!   re-derived caches need no age-based expiry).
+//!
+//! The artifact directory is hostile input by definition — anything can
+//! have rewritten those files — so this module is on the psim-lint
+//! PS100 panic-freedom list and every malformed artifact is reported,
+//! never unwrapped.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::args::Args;
+use crate::store::artifact::{self, ArtifactState};
+use crate::util::json::Json;
+
+/// `psim cache <ls|verify|gc> --store DIR` — the action token is parsed
+/// here (the flag parser takes options only), then the rest goes
+/// through [`Args`] so unknown flags fail like every other command.
+pub fn cache(argv: &[String]) -> Result<i32> {
+    let action = match argv.first().map(String::as_str) {
+        Some(a @ ("ls" | "verify" | "gc")) => a,
+        Some(other) => {
+            bail!("unknown cache action '{other}' — usage: psim cache <ls|verify|gc> --store DIR")
+        }
+        None => bail!("usage: psim cache <ls|verify|gc> --store DIR"),
+    };
+    let mut reshaped = vec![format!("cache {action}")];
+    reshaped.extend(argv.iter().skip(1).cloned());
+    let args = Args::parse(&reshaped)?;
+    let Some(dir) = args.opt("store").map(str::to_string) else {
+        bail!("psim cache {action}: --store DIR is required");
+    };
+    args.reject_unknown()?;
+
+    let dir = Path::new(&dir);
+    let entries = artifact::scan(dir)
+        .with_context(|| format!("scanning result store '{}'", dir.display()))?;
+    match action {
+        "ls" => ls(&entries),
+        "verify" => verify(&entries),
+        _ => gc(&entries),
+    }
+}
+
+/// The `cmd` of an artifact's canonical request, for the listing.
+fn canonical_cmd(manifest: &artifact::Manifest) -> String {
+    Json::parse(&manifest.canonical)
+        .ok()
+        .and_then(|json| json.get("cmd").and_then(Json::as_str).map(str::to_string))
+        .unwrap_or_else(|| "?".to_string())
+}
+
+fn file_label(path: &Path) -> String {
+    path.file_name().map(|n| n.to_string_lossy().to_string()).unwrap_or_default()
+}
+
+fn ls(entries: &[(std::path::PathBuf, ArtifactState)]) -> Result<i32> {
+    let mut invalid = 0usize;
+    for (path, state) in entries {
+        let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+        match state {
+            ArtifactState::Valid { manifest, .. } => {
+                println!(
+                    "{}  valid    {:>9} B  cmd={}  created_unix={}",
+                    file_label(path),
+                    bytes,
+                    canonical_cmd(manifest),
+                    manifest.created_unix
+                );
+            }
+            ArtifactState::Invalid { reason } => {
+                invalid += 1;
+                println!("{}  INVALID  {:>9} B  {reason}", file_label(path), bytes);
+            }
+        }
+    }
+    println!("{} artifacts, {} valid, {invalid} invalid", entries.len(), entries.len() - invalid);
+    Ok(0)
+}
+
+fn verify(entries: &[(std::path::PathBuf, ArtifactState)]) -> Result<i32> {
+    let mut invalid = 0usize;
+    for (path, state) in entries {
+        if let ArtifactState::Invalid { reason } = state {
+            invalid += 1;
+            eprintln!("psim cache verify: {}: {reason}", file_label(path));
+        }
+    }
+    println!(
+        "psim cache verify: {} artifacts, {} valid, {invalid} invalid",
+        entries.len(),
+        entries.len() - invalid
+    );
+    Ok(if invalid == 0 { 0 } else { 1 })
+}
+
+fn gc(entries: &[(std::path::PathBuf, ArtifactState)]) -> Result<i32> {
+    let mut removed = 0usize;
+    for (path, state) in entries {
+        if let ArtifactState::Invalid { reason } = state {
+            std::fs::remove_file(path)
+                .with_context(|| format!("removing invalid artifact {}", path.display()))?;
+            removed += 1;
+            println!("psim cache gc: removed {} ({reason})", file_label(path));
+        }
+    }
+    println!("psim cache gc: removed {removed} of {} artifacts", entries.len());
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+    use std::path::PathBuf;
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn temp_store(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "psim_cache_cmd_{tag}_{}_{}",
+            std::process::id(),
+            artifact::now_unix()
+        ));
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn actions_require_a_store_dir_and_valid_action() {
+        assert!(cache(&sv(&[])).is_err());
+        assert!(cache(&sv(&["frobnicate"])).is_err());
+        assert!(cache(&sv(&["ls"])).is_err());
+        assert!(cache(&sv(&["ls", "--frobnicate", "x"])).is_err());
+    }
+
+    #[test]
+    fn verify_exits_nonzero_on_corruption_and_gc_removes_it() {
+        let dir = temp_store("verify_gc");
+        let store_flag = dir.to_str().unwrap().to_string();
+        artifact::write(&dir, "req-good", "reply-good").unwrap();
+        let bad = artifact::write(&dir, "req-bad", "reply-bad").unwrap();
+        // Corrupt the payload without updating the checksum.
+        let text = fs::read_to_string(&bad).unwrap().replace("reply-bad", "reply-EVIL");
+        fs::write(&bad, text).unwrap();
+
+        assert_eq!(cache(&sv(&["ls", "--store", &store_flag])).unwrap(), 0);
+        assert_eq!(cache(&sv(&["verify", "--store", &store_flag])).unwrap(), 1);
+        assert_eq!(cache(&sv(&["gc", "--store", &store_flag])).unwrap(), 0);
+        // The corrupt artifact is gone, the valid one survived.
+        assert!(!bad.exists());
+        assert_eq!(cache(&sv(&["verify", "--store", &store_flag])).unwrap(), 0);
+        assert_eq!(artifact::scan(&dir).unwrap().len(), 1);
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -2,6 +2,7 @@
 
 pub mod analyze;
 pub mod bench;
+pub mod cache;
 pub mod explore;
 pub mod fusion;
 pub mod infer;

@@ -11,21 +11,33 @@
 //! `psim serve` / `psim client` for the PJRT path.
 
 use std::io::BufRead;
+use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::api::Engine;
 use crate::cli::args::Args;
+use crate::store::{ResultStore, DEFAULT_CAPACITY as DEFAULT_STORE_CAPACITY};
 
-/// `psim request [--json LINE]`
+/// `psim request [--json LINE] [--store DIR]`
 ///
 /// Errors are replies too (`{"code": ..., "error": ...}` on stdout, exit
 /// code 0), exactly like `serve` — the caller branches on `code`.
+/// `--store DIR` attaches the content-addressed result store, so a
+/// repeated analytics request replays the reply another process (or a
+/// previous invocation) already computed.
 pub fn request(args: &Args) -> Result<i32> {
     let json = args.opt("json").map(str::to_string);
+    let store_dir = args.opt("store").map(str::to_string);
     args.reject_unknown()?;
 
     let engine = Engine::analytics();
+    if let Some(dir) = &store_dir {
+        let store =
+            ResultStore::open(Path::new(dir), DEFAULT_STORE_CAPACITY, engine.registry())
+                .with_context(|| format!("opening result store '{dir}'"))?;
+        engine.attach_store(store);
+    }
     match json {
         Some(line) => {
             let (reply, _) = engine.handle_line(&line);

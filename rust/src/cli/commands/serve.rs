@@ -19,7 +19,10 @@
 //! server itself. `--timeout-ms` bounds how long a worker waits on (or
 //! writes to) a kept-alive connection, so idle peers cannot pin workers.
 //! Identical in-flight analytics requests are coalesced by the engine
-//! (one computation, fan-out replies).
+//! (one computation, fan-out replies), and `--store DIR` attaches the
+//! content-addressed result store ([`crate::store`]) so repeated
+//! analytics requests replay memoized reply bytes across time and
+//! process restarts.
 //!
 //! Protocol (one JSON object per line): see the README's protocol table
 //! (generated from [`crate::api::COMMANDS`]) or [`crate::api::codec`].
@@ -29,6 +32,7 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -40,6 +44,7 @@ use crate::cli::args::Args;
 use crate::coordinator::pool::Bounded;
 use crate::obs::span;
 use crate::runtime::Tensor;
+use crate::store::{ResultStore, DEFAULT_CAPACITY as DEFAULT_STORE_CAPACITY};
 use crate::util::json::Json;
 use crate::util::sync::lock_unpoisoned;
 
@@ -113,7 +118,7 @@ pub fn bind(port: u16) -> Result<(TcpListener, u16)> {
 }
 
 /// `psim serve [--port P] [--max-batch B] [--workers N] [--queue N]
-/// [--max-conns N] [--timeout-ms MS]`
+/// [--max-conns N] [--timeout-ms MS] [--store DIR]`
 pub fn serve(args: &Args) -> Result<i32> {
     let port = args.opt_usize("port")?.unwrap_or(7878) as u16;
     let max_batch = args.opt_usize("max-batch")?.unwrap_or(8).clamp(1, 8);
@@ -126,11 +131,21 @@ pub fn serve(args: &Args) -> Result<i32> {
             ms => Some(Duration::from_millis(ms as u64)),
         },
     };
+    let store_dir = args.opt("store").map(str::to_string);
     args.reject_unknown()?;
 
     let engine = Arc::new(Engine::start(max_batch)?);
     if let Some(err) = engine.inference_error() {
         eprintln!("psim serve: inference disabled ({err}); serving design-space queries only");
+    }
+    if let Some(dir) = &store_dir {
+        let store =
+            ResultStore::open(Path::new(dir), DEFAULT_STORE_CAPACITY, engine.registry())
+                .with_context(|| format!("opening result store '{dir}'"))?;
+        engine.attach_store(store);
+        eprintln!(
+            "psim serve: result store at {dir} (lru capacity {DEFAULT_STORE_CAPACITY} entries)"
+        );
     }
     let (listener, port) = bind(port)?;
     println!(

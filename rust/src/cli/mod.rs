@@ -6,7 +6,8 @@
 //! JSON-lines server with a bounded worker pool), `bench` (protocol-level
 //! load generator against `serve`), `stats` (one-shot observability
 //! snapshot of a running server), `client` (legacy inference-only load
-//! generator).
+//! generator). Repo tooling: `lint` (static analyzer), `cache`
+//! (result-store artifact inspection: ls/verify/gc).
 
 pub mod args;
 pub mod commands;
@@ -78,9 +79,11 @@ Functional stack (PJRT over artifacts/; run `make artifacts` first):
                       queries ({\"cmd\":\"sweep\", ...}); runs without
                       artifacts in analytics-only mode; bounded worker
                       pool sheds load with code:\"too_busy\" when
-                      saturated (--port 0 picks an ephemeral port)
+                      saturated (--port 0 picks an ephemeral port);
+                      --store DIR memoizes analytics replies in a
+                      content-addressed artifact directory
      options: [--port P] [--max-batch B] [--workers N] [--queue N]
-              [--max-conns N] [--timeout-ms MS]
+              [--max-conns N] [--timeout-ms MS] [--store DIR]
   bench               protocol-level load generator against a running
                       server; prints a JSON summary (throughput, p50/
                       p95/p99 latency, shed count) -- the
@@ -96,9 +99,14 @@ Functional stack (PJRT over artifacts/; run `make artifacts` first):
                       lines (--json or stdin), print the JSON replies --
                       the serve protocol without a socket
                       (analytics-only engine; inference needs `serve`)
-     options: [--json LINE]
+     options: [--json LINE] [--store DIR]
 
 Repo tooling:
+  cache               inspect a --store result-store artifact directory:
+                      `ls` lists every artifact (digest, validity, size,
+                      command), `verify` exits 1 if any artifact fails
+                      validation, `gc` deletes invalid artifacts
+     usage: psim cache <ls|verify|gc> --store DIR
   lint                run the psim-lint static analyzer over the repo
                       (panic freedom, overflow surface, catalog/protocol
                       sync, format gate, orphan goldens -- docs/LINTS.md);
@@ -111,6 +119,11 @@ Repo tooling:
 
 /// Entry point used by main(); returns the process exit code.
 pub fn run(argv: &[String]) -> Result<i32> {
+    // `cache` takes an action token (`psim cache ls ...`) the flag-only
+    // parser would reject as a positional, so it is routed first.
+    if argv.first().map(String::as_str) == Some("cache") {
+        return commands::cache::cache(&argv[1..]);
+    }
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "" | "help" | "--help" | "-h" => {
@@ -171,6 +184,37 @@ mod tests {
         assert_eq!(run(&sv(&["--version"])).unwrap(), 0);
         assert_eq!(run(&sv(&["-V"])).unwrap(), 0);
         assert!(run(&sv(&["version", "--frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn cache_routes_through_the_action_parser() {
+        // The action token would be an illegal positional for Args; the
+        // router must hand it to the cache command instead.
+        assert!(run(&sv(&["cache"])).is_err());
+        assert!(run(&sv(&["cache", "frobnicate"])).is_err());
+        assert!(run(&sv(&["cache", "ls"])).is_err(), "--store is required");
+        let dir = std::env::temp_dir().join(format!("psim_cli_cache_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(run(&sv(&["cache", "ls", "--store", dir.to_str().unwrap()])).unwrap(), 0);
+        assert_eq!(run(&sv(&["cache", "verify", "--store", dir.to_str().unwrap()])).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn request_store_warms_across_processes() {
+        let dir = std::env::temp_dir().join(format!("psim_cli_reqstore_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let line = r#"{"cmd":"tables","table":"table3"}"#;
+        for _ in 0..2 {
+            // Each run is a fresh engine: the second can only hit disk.
+            assert_eq!(
+                run(&sv(&["request", "--json", line, "--store", dir.to_str().unwrap()]))
+                    .unwrap(),
+                0
+            );
+        }
+        assert_eq!(run(&sv(&["cache", "verify", "--store", dir.to_str().unwrap()])).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -32,7 +32,9 @@
 //!   runnable example.
 //!
 //! Supporting modules: [`config`] (accelerator/workload config files),
-//! [`report`] (paper table/figure renderers), [`util`] (offline-friendly
+//! [`report`] (paper table/figure renderers), [`store`] (the
+//! content-addressed result store behind `--store` and `psim cache`),
+//! [`util`] (offline-friendly
 //! substrate: PRNG, JSON, table formatting, property-test + bench
 //! harnesses), [`cli`] (the `psim` binary's command surface), and
 //! [`lint`] (the repo-invariant static analyzer behind `psim lint`,
@@ -70,5 +72,7 @@ pub mod report;
 pub mod runtime;
 /// The event-level accelerator simulator.
 pub mod sim;
+/// Content-addressed result store (reply memoization + artifacts).
+pub mod store;
 /// Offline-friendly substrate: PRNG, JSON, tables, harnesses.
 pub mod util;

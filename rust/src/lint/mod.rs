@@ -220,6 +220,12 @@ impl LintConfig {
             "src/config/parser.rs",
             "src/cli/commands/serve.rs",
             "src/cli/commands/request.rs",
+            "src/cli/commands/cache.rs",
+            "src/store/mod.rs",
+            "src/store/artifact.rs",
+            "src/store/canon.rs",
+            "src/store/digest.rs",
+            "src/store/lru.rs",
         ];
         LintConfig {
             root: root.to_path_buf(),

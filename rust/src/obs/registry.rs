@@ -76,7 +76,7 @@ const fn histogram(name: &'static str, scope: &'static str, help: &'static str) 
 /// `{"cmd":"stats"}` snapshot always carries the full, stable key set;
 /// process-scoped entries appear in [`global`] once their recorder
 /// first runs.
-pub const METRICS: [MetricDesc; 32] = [
+pub const METRICS: [MetricDesc; 37] = [
     counter("api_errors", "engine", "Requests that returned a protocol error reply"),
     histogram("api_latency_us_analyze", "engine", "Dispatch latency of `analyze` requests"),
     histogram("api_latency_us_explore", "engine", "Dispatch latency of `explore` requests"),
@@ -98,6 +98,11 @@ pub const METRICS: [MetricDesc; 32] = [
     counter("api_requests_sweep", "engine", "`sweep` requests dispatched"),
     counter("api_requests_tables", "engine", "`tables` requests dispatched"),
     counter("api_requests_version", "engine", "`version` requests dispatched"),
+    counter("cache_evictions", "engine", "Result-store entries evicted by the LRU bound"),
+    counter("cache_hits", "engine", "Result-store lookups answered from a stored reply"),
+    counter("cache_invalidations", "engine", "Stored artifacts rejected by validation, recomputed"),
+    counter("cache_lookups", "engine", "Result-store lookups (cacheable requests seen)"),
+    counter("cache_misses", "engine", "Result-store lookups that required a fresh dispatch"),
     histogram("dse_chunk_eval_us", "process", "Exact evaluation time per explore chunk"),
     histogram("grid_cell_eval_us", "process", "Evaluation time per sweep grid cell"),
     counter("serve_conns_accepted", "engine", "Connections accepted into the worker pool"),

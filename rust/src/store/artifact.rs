@@ -1,0 +1,266 @@
+//! The on-disk half of the result store: one artifact file per cached
+//! reply, named by its canonical-request digest.
+//!
+//! An artifact is two lines of UTF-8:
+//!
+//! 1. the **manifest** — a sorted-key JSON object carrying the store
+//!    schema version, the crate and protocol versions that produced the
+//!    reply, the full canonical request line, its digest, an FNV-1a
+//!    checksum of the payload, and the creation time;
+//! 2. the **payload** — the reply's JSON line, verbatim (replies are
+//!    single-line by construction).
+//!
+//! Reads are hostile-input paths: a store directory may hold truncated,
+//! bit-flipped, renamed, foreign-version or outright garbage files, and
+//! [`inspect`] must classify every one as [`ArtifactState::Invalid`]
+//! with a reason — never panic, never let stale bytes through. Any
+//! mismatch (schema, protocol, crate version, digest, checksum,
+//! filename) invalidates; the caller treats that as a miss and
+//! recomputes.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::api::{CRATE_VERSION, PROTOCOL_VERSION};
+use crate::util::json::Json;
+
+use super::digest::digest_hex;
+
+/// Version of the on-disk artifact layout. Bumping it invalidates every
+/// existing artifact (they are re-derived caches, never primary data).
+pub const STORE_SCHEMA_VERSION: usize = 1;
+
+/// Artifact filename extension (`<digest>.psart`).
+pub const ARTIFACT_EXT: &str = "psart";
+
+/// The parsed manifest line of an artifact (field order here matches
+/// the sorted key order on disk).
+pub struct Manifest {
+    /// The canonical request line the payload answers.
+    pub canonical: String,
+    /// FNV-1a hex digest of the payload bytes.
+    pub checksum: String,
+    /// Crate version that wrote the artifact (`crate` on disk).
+    pub crate_version: String,
+    /// Creation time, seconds since the Unix epoch.
+    pub created_unix: u64,
+    /// FNV-1a hex digest of `canonical` (also the filename stem).
+    pub digest: String,
+    /// Protocol version the payload speaks.
+    pub protocol: usize,
+    /// On-disk layout version ([`STORE_SCHEMA_VERSION`]).
+    pub schema: usize,
+}
+
+impl Manifest {
+    /// The sorted-key JSON object written as an artifact's first line.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("canonical", Json::Str(self.canonical.clone())),
+            ("checksum", Json::Str(self.checksum.clone())),
+            ("crate", Json::Str(self.crate_version.clone())),
+            ("created_unix", Json::Num(self.created_unix as f64)),
+            ("digest", Json::Str(self.digest.clone())),
+            ("protocol", Json::Num(self.protocol as f64)),
+            ("schema", Json::Num(self.schema as f64)),
+        ])
+    }
+
+    /// Parse a manifest object, rejecting missing or mistyped fields.
+    pub fn from_json(json: &Json) -> Result<Manifest, String> {
+        let str_field = |key: &str| {
+            json.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("manifest field '{key}' missing or not a string"))
+        };
+        let num_field = |key: &str| {
+            json.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("manifest field '{key}' missing or not an integer"))
+        };
+        Ok(Manifest {
+            canonical: str_field("canonical")?,
+            checksum: str_field("checksum")?,
+            crate_version: str_field("crate")?,
+            created_unix: num_field("created_unix")? as u64,
+            digest: str_field("digest")?,
+            protocol: num_field("protocol")?,
+            schema: num_field("schema")?,
+        })
+    }
+}
+
+/// The outcome of validating one artifact file.
+pub enum ArtifactState {
+    /// Every check passed; the payload may be served.
+    Valid {
+        /// The validated manifest.
+        manifest: Manifest,
+        /// The reply payload (line 2, verbatim).
+        payload: String,
+    },
+    /// The artifact was rejected and must be treated as absent.
+    Invalid {
+        /// Why validation failed (for `psim cache verify` output).
+        reason: String,
+    },
+}
+
+/// Where the artifact for `digest` lives under `dir`.
+pub fn artifact_path(dir: &Path, digest: &str) -> PathBuf {
+    dir.join(format!("{digest}.{ARTIFACT_EXT}"))
+}
+
+/// Seconds since the Unix epoch (0 if the clock is before the epoch —
+/// creation time is informational metadata, never validated).
+pub fn now_unix() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+}
+
+/// Write the artifact for `(canonical, payload)` under `dir`,
+/// overwriting any previous (possibly invalid) artifact at the same
+/// digest. Returns the path written.
+pub fn write(dir: &Path, canonical: &str, payload: &str) -> std::io::Result<PathBuf> {
+    let digest = digest_hex(canonical.as_bytes());
+    let manifest = Manifest {
+        canonical: canonical.to_string(),
+        checksum: digest_hex(payload.as_bytes()),
+        crate_version: CRATE_VERSION.to_string(),
+        created_unix: now_unix(),
+        digest: digest.clone(),
+        protocol: PROTOCOL_VERSION,
+        schema: STORE_SCHEMA_VERSION,
+    };
+    let path = artifact_path(dir, &digest);
+    fs::write(&path, format!("{}\n{payload}\n", manifest.to_json()))?;
+    Ok(path)
+}
+
+/// Validate one artifact file end to end. Every failure mode — I/O
+/// error, wrong line count, garbage manifest, any version/spec/digest
+/// mismatch — comes back as [`ArtifactState::Invalid`] with a reason.
+pub fn inspect(path: &Path) -> ArtifactState {
+    let invalid = |reason: String| ArtifactState::Invalid { reason };
+    let text = match fs::read_to_string(path) {
+        Ok(text) => text,
+        Err(e) => return invalid(format!("unreadable: {e}")),
+    };
+    let mut lines = text.lines();
+    let (Some(manifest_line), Some(payload), None) = (lines.next(), lines.next(), lines.next())
+    else {
+        return invalid("expected exactly two lines (manifest, payload)".to_string());
+    };
+    let json = match Json::parse(manifest_line) {
+        Ok(json) => json,
+        Err(e) => return invalid(format!("manifest is not valid JSON: {e}")),
+    };
+    let manifest = match Manifest::from_json(&json) {
+        Ok(manifest) => manifest,
+        Err(reason) => return invalid(reason),
+    };
+    if manifest.schema != STORE_SCHEMA_VERSION {
+        return invalid(format!(
+            "store schema {} (this build writes {STORE_SCHEMA_VERSION})",
+            manifest.schema
+        ));
+    }
+    if manifest.protocol != PROTOCOL_VERSION {
+        return invalid(format!(
+            "protocol {} (this build speaks {PROTOCOL_VERSION})",
+            manifest.protocol
+        ));
+    }
+    if manifest.crate_version != CRATE_VERSION {
+        return invalid(format!(
+            "crate version {} (this build is {CRATE_VERSION})",
+            manifest.crate_version
+        ));
+    }
+    if manifest.digest != digest_hex(manifest.canonical.as_bytes()) {
+        return invalid("digest does not match the canonical request".to_string());
+    }
+    if manifest.checksum != digest_hex(payload.as_bytes()) {
+        return invalid("payload checksum mismatch".to_string());
+    }
+    // A renamed artifact must not answer another request's digest.
+    let stem = path.file_stem().and_then(|s| s.to_str());
+    if stem != Some(manifest.digest.as_str()) {
+        return invalid("filename does not match the manifest digest".to_string());
+    }
+    ArtifactState::Valid { manifest, payload: payload.to_string() }
+}
+
+/// Scan a store directory: every `*.psart` file, sorted by path, with
+/// its validation state. Files without the artifact extension are
+/// ignored (they are not ours to judge or to garbage-collect).
+pub fn scan(dir: &Path) -> std::io::Result<Vec<(PathBuf, ArtifactState)>> {
+    let mut paths: Vec<PathBuf> = fs::read_dir(dir)?
+        .filter_map(|entry| entry.ok())
+        .map(|entry| entry.path())
+        .filter(|path| path.extension().and_then(|e| e.to_str()) == Some(ARTIFACT_EXT))
+        .collect();
+    paths.sort();
+    Ok(paths
+        .into_iter()
+        .map(|path| {
+            let state = inspect(&path);
+            (path, state)
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_store(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("psim_artifact_{tag}_{}_{}", std::process::id(), now_unix()));
+        fs::create_dir_all(&dir).expect("create temp store dir");
+        dir
+    }
+
+    #[test]
+    fn write_then_inspect_round_trips() {
+        let dir = temp_store("roundtrip");
+        let canonical = r#"{"cmd":"tables","faithful":false,"protocol":1,"table":"table3"}"#;
+        let payload = r#"{"table":"..."}"#;
+        let path = write(&dir, canonical, payload).expect("write artifact");
+        match inspect(&path) {
+            ArtifactState::Valid { manifest, payload: got } => {
+                assert_eq!(manifest.canonical, canonical);
+                assert_eq!(got, payload);
+                assert_eq!(manifest.schema, STORE_SCHEMA_VERSION);
+                assert_eq!(manifest.protocol, PROTOCOL_VERSION);
+                assert_eq!(manifest.crate_version, CRATE_VERSION);
+            }
+            ArtifactState::Invalid { reason } => panic!("fresh artifact invalid: {reason}"),
+        }
+        let entries = scan(&dir).expect("scan");
+        assert_eq!(entries.len(), 1);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn renamed_artifacts_are_invalid() {
+        let dir = temp_store("rename");
+        let path = write(&dir, "request-a", "reply-a").expect("write artifact");
+        let forged = dir.join(format!("{}.{ARTIFACT_EXT}", "0".repeat(16)));
+        fs::rename(&path, &forged).expect("rename artifact");
+        match inspect(&forged) {
+            ArtifactState::Invalid { reason } => {
+                assert!(reason.contains("filename"), "{reason}");
+            }
+            ArtifactState::Valid { .. } => panic!("renamed artifact validated"),
+        }
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_invalid_not_a_panic() {
+        let state = inspect(Path::new("/nonexistent/psim/deadbeefdeadbeef.psart"));
+        assert!(matches!(state, ArtifactState::Invalid { .. }));
+    }
+}

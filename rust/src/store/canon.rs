@@ -1,0 +1,164 @@
+//! Request canonicalization: every equivalent spelling of a request —
+//! shuffled JSON keys, permuted axis lists, elided-vs-explicit default
+//! fields — maps to ONE canonical line, so the store's content address
+//! is spelling-invariant.
+//!
+//! The pipeline is deliberately boring: decode already erased JSON key
+//! order (objects live in a `BTreeMap`) and expanded every default, so
+//! canonicalization is just a normalized clone ([`canonical_request`]:
+//! axes sorted, the execution-only `workers` knob stripped) re-encoded
+//! through [`codec::encode_request`] (sorted keys, explicit `protocol`
+//! field, single-line output).
+//!
+//! One caveat the tests pin: grid cells are emitted in the spec's
+//! enumeration order, so requests that differ only in axis *order*
+//! share one cache entry and all receive the **first-computed**
+//! rendering. That is the point of content addressing — the rows are
+//! the same set — but a client that depends on row order across
+//! differently-ordered spellings should not share a store. Duplicate
+//! axis entries are kept (they change cell counts, so they are not
+//! equivalent spellings).
+
+use crate::api::codec;
+use crate::api::Request;
+
+/// Whether `req`'s reply may be memoized: the pure-analytics commands
+/// (`sweep`/`explore`/`fusion`/`analyze`/`tables`), mirroring the
+/// coalescer's set. `zoo` and `version` are static but cheaper than the
+/// cache; `infer`, `metrics`, `stats` and `shutdown` are stateful, so
+/// replaying an old reply would lie.
+pub fn cacheable(req: &Request) -> bool {
+    matches!(
+        req,
+        Request::Sweep { .. }
+            | Request::Explore { .. }
+            | Request::Fusion { .. }
+            | Request::Analyze { .. }
+            | Request::Tables { .. }
+    )
+}
+
+/// A normalized clone of `req`: networks sorted by name, numeric axes
+/// ascending, strategies by slug, modes/objectives/SRAM budgets and
+/// precision axes by label, and the `workers` execution knob stripped
+/// (it changes scheduling, never reply bytes — pinned by the grid
+/// engine's worker-invariance golden).
+pub fn canonical_request(req: &Request) -> Request {
+    let mut req = req.clone();
+    match &mut req {
+        Request::Sweep { spec, workers } => {
+            spec.networks.sort_by(|a, b| a.name.cmp(&b.name));
+            spec.mac_budgets.sort_unstable();
+            spec.strategies.sort_by_key(|s| s.slug());
+            spec.modes.sort_by_key(|m| m.label());
+            spec.batch_sizes.sort_unstable();
+            spec.fusion_depths.sort_unstable();
+            spec.datatypes.sort_by_key(|dt| dt.label());
+            *workers = None;
+        }
+        Request::Explore { spec, workers } => {
+            spec.networks.sort_by(|a, b| a.name.cmp(&b.name));
+            spec.mac_budgets.sort_unstable();
+            spec.sram_budgets.sort_by_key(|s| s.label());
+            spec.strategies.sort_by_key(|s| s.slug());
+            spec.modes.sort_by_key(|m| m.label());
+            spec.fusion_depths.sort_unstable();
+            spec.objectives.sort_by_key(|o| o.label());
+            *workers = None;
+        }
+        Request::Fusion { networks, .. } => {
+            networks.sort_by(|a, b| a.name.cmp(&b.name));
+        }
+        _ => {}
+    }
+    req
+}
+
+/// The canonical line: [`canonical_request`] re-encoded through the
+/// protocol codec's sorted-key single-line JSON. Defined for every
+/// request shape (the pinned-hash tests cover all decodable fixtures);
+/// the store itself only ever keys on [`cache_key`].
+pub fn canonical_line(req: &Request) -> String {
+    codec::encode_request(&canonical_request(req)).to_string()
+}
+
+/// The store key: `Some(canonical line)` for [`cacheable`] requests,
+/// `None` otherwise.
+pub fn cache_key(req: &Request) -> Option<String> {
+    if cacheable(req) {
+        Some(canonical_line(req))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::codec::decode_line;
+
+    #[test]
+    fn axis_order_and_key_order_are_erased() {
+        let a = decode_line(r#"{"cmd":"sweep","macs":[1024,512],"networks":["AlexNet"]}"#)
+            .unwrap();
+        let b = decode_line(r#"{"networks":["AlexNet"],"cmd":"sweep","macs":[512,1024]}"#)
+            .unwrap();
+        assert_eq!(canonical_line(&a), canonical_line(&b));
+    }
+
+    #[test]
+    fn workers_is_not_part_of_the_identity() {
+        let a = decode_line(r#"{"cmd":"sweep","networks":["AlexNet"],"workers":1}"#).unwrap();
+        let b = decode_line(r#"{"cmd":"sweep","networks":["AlexNet"],"workers":8}"#).unwrap();
+        let c = decode_line(r#"{"cmd":"sweep","networks":["AlexNet"]}"#).unwrap();
+        assert_eq!(canonical_line(&a), canonical_line(&b));
+        assert_eq!(canonical_line(&a), canonical_line(&c));
+    }
+
+    #[test]
+    fn duplicate_axis_entries_are_distinct_spellings() {
+        // [512,512] evaluates twice as many cells as [512]; the two are
+        // NOT equivalent and must not share a cache entry.
+        let once = decode_line(r#"{"cmd":"sweep","networks":["AlexNet"],"macs":[512]}"#).unwrap();
+        let twice =
+            decode_line(r#"{"cmd":"sweep","networks":["AlexNet"],"macs":[512,512]}"#).unwrap();
+        assert_ne!(canonical_line(&once), canonical_line(&twice));
+    }
+
+    #[test]
+    fn only_pure_analytics_requests_are_cacheable() {
+        let cacheable_lines = [
+            r#"{"cmd":"sweep"}"#,
+            r#"{"cmd":"explore"}"#,
+            r#"{"cmd":"fusion"}"#,
+            r#"{"cmd":"analyze","network":"AlexNet"}"#,
+            r#"{"cmd":"tables","table":"table1"}"#,
+        ];
+        for line in cacheable_lines {
+            let req = decode_line(line).unwrap();
+            assert!(cacheable(&req), "{line}");
+            assert!(cache_key(&req).is_some(), "{line}");
+        }
+        for line in [
+            r#"{"cmd":"zoo"}"#,
+            r#"{"cmd":"metrics"}"#,
+            r#"{"cmd":"stats"}"#,
+            r#"{"cmd":"version"}"#,
+            r#"{"cmd":"shutdown"}"#,
+        ] {
+            let req = decode_line(line).unwrap();
+            assert!(!cacheable(&req), "{line}");
+            assert!(cache_key(&req).is_none(), "{line}");
+        }
+    }
+
+    #[test]
+    fn canonical_line_is_idempotent() {
+        let req =
+            decode_line(r#"{"cmd":"explore","networks":["VGG-16","AlexNet"],"workers":4}"#)
+                .unwrap();
+        let line = canonical_line(&req);
+        let again = decode_line(&line).unwrap();
+        assert_eq!(canonical_line(&again), line);
+    }
+}

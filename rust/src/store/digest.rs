@@ -1,0 +1,78 @@
+//! Hand-rolled FNV-1a 64-bit digest — the store's content address.
+//!
+//! FNV-1a is the right tool here: zero dependencies, a dozen lines,
+//! deterministic across platforms, and fast on the short canonical
+//! request lines it hashes. It is **not** cryptographic — the store
+//! never trusts the digest alone: every lookup re-checks the stored
+//! canonical form against the request's (see
+//! [`super::lru::Lru::get`] and the manifest validation in
+//! [`super::artifact`]), so even a deliberate collision can only ever
+//! miss, never serve foreign bytes.
+
+/// The FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// The FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over `bytes`: XOR each byte into the hash, then multiply by
+/// the FNV prime (wrapping, as the algorithm specifies).
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut hash = FNV_OFFSET_BASIS;
+    for b in bytes {
+        hash ^= u64::from(*b);
+        hash = hash.wrapping_mul(FNV_PRIME);
+    }
+    hash
+}
+
+/// Render a digest as 16 lowercase hex characters (the artifact
+/// filename stem and every manifest digest/checksum field).
+pub fn hex16(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+/// [`fnv1a_64`] rendered through [`hex16`].
+pub fn digest_hex(bytes: &[u8]) -> String {
+    hex16(fnv1a_64(bytes))
+}
+
+/// Parse a [`hex16`] rendering back to its `u64` (`None` unless the
+/// input is exactly 16 lowercase hex characters).
+pub fn parse_hex16(s: &str) -> Option<u64> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b)) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_published_fnv1a_vectors() {
+        // Reference values from the FNV specification (Fowler/Noll/Vo).
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn hex_round_trips() {
+        for x in [0, 1, 0xdead_beef, u64::MAX, fnv1a_64(b"psim")] {
+            let hex = hex16(x);
+            assert_eq!(hex.len(), 16);
+            assert_eq!(parse_hex16(&hex), Some(x));
+        }
+        assert_eq!(parse_hex16("short"), None);
+        assert_eq!(parse_hex16("00000000DEADBEEF"), None, "uppercase is not canonical");
+        assert_eq!(parse_hex16("00000000deadbeez"), None);
+    }
+
+    #[test]
+    fn digest_is_byte_sensitive() {
+        assert_ne!(fnv1a_64(b"{\"cmd\":\"sweep\"}"), fnv1a_64(b"{\"cmd\":\"sweeq\"}"));
+        assert_eq!(digest_hex(b"x"), hex16(fnv1a_64(b"x")));
+    }
+}

@@ -1,0 +1,153 @@
+//! The in-memory half of the result store: a bounded LRU from request
+//! digest to reply payload.
+//!
+//! Deliberately simple — a `HashMap` plus a monotone use tick, evicting
+//! the least-recently-used entry with an `O(n)` scan when the bound is
+//! exceeded. The capacity is small (default
+//! [`super::DEFAULT_CAPACITY`]) and hits are `O(1)`, so the scan only
+//! ever runs on an insert that crossed the bound.
+//!
+//! Every entry stores the full canonical request line next to the
+//! payload: a lookup whose canonical form differs from the stored one
+//! (a digest collision) is a miss, never a foreign reply.
+
+use std::collections::HashMap;
+
+struct Entry {
+    canonical: String,
+    payload: String,
+    last_used: u64,
+}
+
+/// A bounded digest → reply-payload map with least-recently-used
+/// eviction.
+pub struct Lru {
+    capacity: usize,
+    tick: u64,
+    entries: HashMap<u64, Entry>,
+}
+
+impl Lru {
+    /// An empty LRU holding at most `capacity` entries (clamped to at
+    /// least 1 — a zero-capacity cache would evict its own insert).
+    pub fn new(capacity: usize) -> Lru {
+        Lru { capacity: capacity.max(1), tick: 0, entries: HashMap::new() }
+    }
+
+    /// Number of resident entries (never exceeds the capacity).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the cache holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The configured entry bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Look up `digest`, refreshing its recency on a hit. The stored
+    /// canonical line must equal `canonical` — a colliding digest is a
+    /// miss by construction.
+    pub fn get(&mut self, digest: u64, canonical: &str) -> Option<String> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.entries.get_mut(&digest) {
+            Some(entry) if entry.canonical == canonical => {
+                entry.last_used = tick;
+                Some(entry.payload.clone())
+            }
+            _ => None,
+        }
+    }
+
+    /// Insert (or overwrite) the entry for `digest`, then evict
+    /// least-recently-used entries until the bound holds. Returns how
+    /// many entries were evicted (0 or 1 in practice).
+    pub fn insert(&mut self, digest: u64, canonical: &str, payload: &str) -> u64 {
+        self.tick += 1;
+        self.entries.insert(
+            digest,
+            Entry {
+                canonical: canonical.to_string(),
+                payload: payload.to_string(),
+                last_used: self.tick,
+            },
+        );
+        let mut evicted = 0;
+        while self.entries.len() > self.capacity {
+            let oldest = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(digest, _)| *digest);
+            match oldest {
+                Some(victim) => {
+                    self.entries.remove(&victim);
+                    evicted += 1;
+                }
+                None => break,
+            }
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_bounds_the_entry_count() {
+        let mut lru = Lru::new(4);
+        let mut evicted = 0;
+        for i in 0..10u64 {
+            evicted += lru.insert(i, &format!("c{i}"), "p");
+        }
+        assert_eq!(lru.len(), 4);
+        assert_eq!(evicted, 6);
+    }
+
+    #[test]
+    fn recently_used_entries_survive_eviction() {
+        let mut lru = Lru::new(2);
+        lru.insert(1, "a", "pa");
+        lru.insert(2, "b", "pb");
+        // Touch 1 so 2 becomes the LRU victim.
+        assert_eq!(lru.get(1, "a").as_deref(), Some("pa"));
+        lru.insert(3, "c", "pc");
+        assert_eq!(lru.get(1, "a").as_deref(), Some("pa"));
+        assert_eq!(lru.get(2, "b"), None, "the LRU entry was evicted");
+        assert_eq!(lru.get(3, "c").as_deref(), Some("pc"));
+    }
+
+    #[test]
+    fn colliding_canonicals_never_share_an_entry() {
+        let mut lru = Lru::new(4);
+        lru.insert(7, "request-a", "reply-a");
+        // Same digest, different canonical form: a miss, not reply-a.
+        assert_eq!(lru.get(7, "request-b"), None);
+        assert_eq!(lru.get(7, "request-a").as_deref(), Some("reply-a"));
+    }
+
+    #[test]
+    fn overwrite_replaces_without_growing() {
+        let mut lru = Lru::new(2);
+        lru.insert(1, "a", "old");
+        let evicted = lru.insert(1, "a", "new");
+        assert_eq!(evicted, 0);
+        assert_eq!(lru.len(), 1);
+        assert_eq!(lru.get(1, "a").as_deref(), Some("new"));
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut lru = Lru::new(0);
+        assert_eq!(lru.capacity(), 1);
+        lru.insert(1, "a", "pa");
+        assert_eq!(lru.get(1, "a").as_deref(), Some("pa"));
+    }
+}

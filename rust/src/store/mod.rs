@@ -1,0 +1,214 @@
+//! Content-addressed result store: memoize full reply lines keyed by
+//! the canonical form of the request that produced them.
+//!
+//! The serve path already dedupes *in-flight* duplicates through the
+//! engine's coalescer; the store dedupes *across time and process
+//! restarts*. The two compose: a burst of identical requests folds to
+//! one dispatch (coalescer), and the next identical request — seconds
+//! or days later, same process or a fresh one — replays the stored
+//! bytes without touching the grid engine at all (store).
+//!
+//! Layers, bottom up:
+//!
+//! - [`digest`] — hand-rolled FNV-1a 64-bit content address;
+//! - [`canon`] — request canonicalization (spelling-invariant keys);
+//! - [`lru`] — the bounded in-memory payload cache;
+//! - [`artifact`] — the optional on-disk artifact format (versioned
+//!   manifest + payload, validated on every read);
+//! - [`ResultStore`] — the engine-facing facade tying them together
+//!   and keeping the `cache_*` counters honest.
+//!
+//! Accounting invariants (pinned by `tests/store_cache.rs`): every
+//! lookup increments exactly one of `cache_hits`/`cache_misses`, so
+//! `cache_hits + cache_misses == cache_lookups`; `cache_invalidations`
+//! counts rejected artifacts and is always ≤ `cache_misses` (a
+//! rejected artifact falls through to the miss path and recomputes).
+
+pub mod artifact;
+pub mod canon;
+pub mod digest;
+pub mod lru;
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::obs::metrics::Counter;
+use crate::obs::registry::Registry;
+use crate::util::sync::lock_unpoisoned;
+
+use artifact::ArtifactState;
+use lru::Lru;
+
+/// Default in-memory entry bound for a [`ResultStore`].
+pub const DEFAULT_CAPACITY: usize = 1024;
+
+/// The store's metric handles, registered in the engine's registry so
+/// they surface through `{"cmd":"stats"}` and the METRICS catalog.
+pub struct CacheCounters {
+    /// Cacheable requests that consulted the store.
+    pub lookups: Arc<Counter>,
+    /// Lookups answered from a stored reply.
+    pub hits: Arc<Counter>,
+    /// Lookups that required a fresh dispatch.
+    pub misses: Arc<Counter>,
+    /// Entries evicted by the in-memory LRU bound.
+    pub evictions: Arc<Counter>,
+    /// Stored artifacts rejected by validation and recomputed.
+    pub invalidations: Arc<Counter>,
+}
+
+impl CacheCounters {
+    /// Register the `cache_*` counters in `reg`.
+    pub fn new(reg: &Registry) -> CacheCounters {
+        CacheCounters {
+            lookups: reg.counter("cache_lookups"),
+            hits: reg.counter("cache_hits"),
+            misses: reg.counter("cache_misses"),
+            evictions: reg.counter("cache_evictions"),
+            invalidations: reg.counter("cache_invalidations"),
+        }
+    }
+}
+
+/// A bounded reply memo: in-memory LRU, optionally backed by an
+/// on-disk artifact directory that survives process restarts.
+pub struct ResultStore {
+    lru: Mutex<Lru>,
+    dir: Option<PathBuf>,
+    counters: CacheCounters,
+}
+
+impl ResultStore {
+    /// An in-memory-only store (no artifacts, nothing survives the
+    /// process), registering its counters in `reg`.
+    pub fn memory(capacity: usize, reg: &Registry) -> ResultStore {
+        ResultStore {
+            lru: Mutex::new(Lru::new(capacity)),
+            dir: None,
+            counters: CacheCounters::new(reg),
+        }
+    }
+
+    /// A store backed by the artifact directory `dir` (created if
+    /// absent), registering its counters in `reg`.
+    pub fn open(dir: &Path, capacity: usize, reg: &Registry) -> std::io::Result<ResultStore> {
+        std::fs::create_dir_all(dir)?;
+        Ok(ResultStore {
+            lru: Mutex::new(Lru::new(capacity)),
+            dir: Some(dir.to_path_buf()),
+            counters: CacheCounters::new(reg),
+        })
+    }
+
+    /// The artifact directory, if this store persists to disk.
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// The store's metric handles.
+    pub fn counters(&self) -> &CacheCounters {
+        &self.counters
+    }
+
+    /// Look up the reply for a canonical request line. Checks the
+    /// in-memory LRU first, then the artifact directory; a valid
+    /// on-disk artifact re-warms the LRU. Exactly one of
+    /// `cache_hits`/`cache_misses` is incremented per call.
+    pub fn lookup(&self, canonical: &str) -> Option<String> {
+        self.counters.lookups.inc();
+        let digest = digest::fnv1a_64(canonical.as_bytes());
+        if let Some(payload) = lock_unpoisoned(&self.lru).get(digest, canonical) {
+            self.counters.hits.inc();
+            return Some(payload);
+        }
+        if let Some(dir) = &self.dir {
+            let path = artifact::artifact_path(dir, &digest::hex16(digest));
+            if path.exists() {
+                match artifact::inspect(&path) {
+                    ArtifactState::Valid { manifest, payload }
+                        if manifest.canonical == canonical =>
+                    {
+                        let evicted =
+                            lock_unpoisoned(&self.lru).insert(digest, canonical, &payload);
+                        self.counters.evictions.add(evicted);
+                        self.counters.hits.inc();
+                        return Some(payload);
+                    }
+                    // A valid artifact answering a different canonical
+                    // form is a digest collision: reject it like any
+                    // other mismatch and recompute.
+                    ArtifactState::Valid { .. } | ArtifactState::Invalid { .. } => {
+                        self.counters.invalidations.inc();
+                    }
+                }
+            }
+        }
+        self.counters.misses.inc();
+        None
+    }
+
+    /// Record the reply for a canonical request line: insert into the
+    /// LRU and, when disk-backed, (re)write the artifact — overwriting
+    /// any invalid file that just failed validation at this digest.
+    pub fn insert(&self, canonical: &str, payload: &str) {
+        let digest = digest::fnv1a_64(canonical.as_bytes());
+        let evicted = lock_unpoisoned(&self.lru).insert(digest, canonical, payload);
+        self.counters.evictions.add(evicted);
+        if let Some(dir) = &self.dir {
+            // A failed artifact write degrades the store to in-memory
+            // for this entry; it must never fail the request itself.
+            let _ = artifact::write(dir, canonical, payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_accounting_is_conserved() {
+        let reg = Registry::new();
+        let store = ResultStore::memory(4, &reg);
+        assert!(store.lookup("a").is_none());
+        store.insert("a", "pa");
+        assert_eq!(store.lookup("a").as_deref(), Some("pa"));
+        assert!(store.lookup("b").is_none());
+        let c = store.counters();
+        assert_eq!(c.lookups.get(), 3);
+        assert_eq!(c.hits.get(), 1);
+        assert_eq!(c.misses.get(), 2);
+        assert_eq!(c.hits.get() + c.misses.get(), c.lookups.get());
+    }
+
+    #[test]
+    fn eviction_counter_tracks_the_lru_bound() {
+        let reg = Registry::new();
+        let store = ResultStore::memory(2, &reg);
+        for i in 0..5 {
+            store.insert(&format!("req-{i}"), "p");
+        }
+        assert_eq!(store.counters().evictions.get(), 3);
+    }
+
+    #[test]
+    fn disk_backed_store_survives_a_fresh_lru() {
+        let dir = std::env::temp_dir().join(format!(
+            "psim_store_warm_{}_{}",
+            std::process::id(),
+            artifact::now_unix()
+        ));
+        let reg = Registry::new();
+        let store = ResultStore::open(&dir, 4, &reg).expect("open store");
+        store.insert("req", "reply");
+        drop(store);
+        // A fresh store over the same directory (cold LRU) hits disk.
+        let reg2 = Registry::new();
+        let store = ResultStore::open(&dir, 4, &reg2).expect("reopen store");
+        assert_eq!(store.lookup("req").as_deref(), Some("reply"));
+        let c = store.counters();
+        assert_eq!(c.hits.get(), 1);
+        assert_eq!(c.invalidations.get(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

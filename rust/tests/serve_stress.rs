@@ -11,10 +11,12 @@
 //!   every shed reply is the pinned `too_busy` fixture line, and the
 //!   queue high-water mark never exceeds the bound;
 //! * per-request timeouts reclaim workers pinned by idle peers;
-//! * all ten protocol fixtures replay through the pooled server — nine
+//! * all eleven protocol fixtures replay through the pooled server — ten
 //!   byte-identical, `stats` structurally (the pooled path legitimately
 //!   counts its own accepted connection, so its counters differ from the
 //!   fresh-engine fixture pinned by `psim request`);
+//! * the same 32-client load against a store-attached engine keeps the
+//!   result-store conservation identity `hits + misses == lookups` exact;
 //! * the `psim bench` CLI produces a schema-valid summary against the
 //!   pooled server and fails cleanly without one, and the live
 //!   `{"cmd":"stats"}` snapshot keeps `dispatched + coalesced == replies`.
@@ -56,9 +58,12 @@ struct Server {
 
 impl Server {
     fn start(config: ServeConfig) -> Server {
+        Server::start_with(config, Arc::new(Engine::analytics()))
+    }
+
+    fn start_with(config: ServeConfig, engine: Arc<Engine>) -> Server {
         let (listener, _port) = bind(0).expect("ephemeral bind");
         let addr = listener.local_addr().unwrap();
-        let engine = Arc::new(Engine::analytics());
         let (tx, done) = mpsc::channel();
         let handle = thread::spawn({
             let engine = engine.clone();
@@ -207,6 +212,65 @@ fn stress_full_load_every_request_replied() {
     assert_eq!(stats.queue_wait.count(), 37, "one queue-wait sample per accepted connection");
 }
 
+/// Result-store conservation under the full 32-client load: every
+/// cacheable request (the sweep and explore in the mix) consults the
+/// store exactly once, so `cache_hits + cache_misses == cache_lookups`
+/// holds exactly in the live `{"cmd":"stats"}` snapshot, and the reply
+/// accounting (`dispatched + coalesced == serve_replies`) stays exact
+/// with store hits in the mix.
+#[test]
+fn stress_store_conservation_under_load() {
+    let config = ServeConfig { workers: 8, queue: 64, max_conns: 128, timeout: None };
+    let engine = Arc::new(Engine::analytics());
+    let store = psim::store::ResultStore::memory(64, engine.registry());
+    assert!(engine.attach_store(store));
+    let server = Server::start_with(config, engine);
+    let addr = server.addr;
+
+    let replies: Vec<Vec<String>> = thread::scope(|scope| {
+        let handles: Vec<_> = (0..32)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr);
+                    (0..4).map(|i| client.roundtrip(MIX[(c + i) % MIX.len()])).collect()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    assert_eq!(replies.iter().map(Vec::len).sum::<usize>(), 128);
+    for reply in replies.iter().flatten() {
+        let json = Json::parse(reply).expect("every reply is one JSON line");
+        assert!(json.get("error").is_none(), "unexpected error reply: {reply}");
+    }
+
+    // The load is fully drained (every roundtrip joined), so the store
+    // holds the sweep reply: one more repeat is a deterministic hit.
+    let mut ctl = Client::connect(addr);
+    let warm = ctl.roundtrip(SWEEP_LINE);
+    assert!(Json::parse(&warm).expect("warm reply parses").get("error").is_none(), "{warm}");
+    let snap = Json::parse(&ctl.roundtrip(r#"{"cmd":"stats"}"#)).expect("stats reply parses");
+    let count = |key: &str| snap.get("counters").unwrap().get(key).unwrap().as_usize().unwrap();
+    let (lookups, hits, misses) =
+        (count("cache_lookups"), count("cache_hits"), count("cache_misses"));
+    // 32 clients x 2 cacheable requests each (sweep + explore), plus the
+    // deterministic warm repeat above.
+    assert_eq!(lookups, 65, "every cacheable request consulted the store exactly once");
+    assert_eq!(hits + misses, lookups, "conservation: every lookup hit or missed");
+    assert!(misses >= 2, "the first sweep and explore must both have computed");
+    assert!(hits >= 1, "the post-load repeat is a guaranteed store hit");
+    assert_eq!(count("cache_invalidations"), 0, "in-memory store never invalidates");
+    // Reply accounting with store hits in the mix: every wire reply was
+    // dispatched (fresh, stored or trivial) or coalesced.
+    let (dispatched, coalesced) =
+        (count("serve_replies_dispatched"), count("serve_replies_coalesced"));
+    assert_eq!(dispatched + coalesced, count("serve_replies"), "reply split accounts");
+
+    let bye = ctl.roundtrip(SHUTDOWN_LINE);
+    assert!(bye.contains("true"), "{bye}");
+    server.join_within(Duration::from_secs(10));
+}
+
 /// `{"cmd":"shutdown"}` mid-load: clients still hammering the server are
 /// cut off cleanly (EOF or reset, never a hang) and the server returns
 /// within the deadline.
@@ -316,9 +380,9 @@ fn per_request_timeout_reclaims_pinned_workers() {
     server.join_within(Duration::from_secs(10));
 }
 
-/// Golden regression: all ten protocol fixtures replay through the
+/// Golden regression: all eleven protocol fixtures replay through the
 /// pooled server (fresh engine per fixture, like the fixtures were
-/// pinned) — nine byte-identical. The `stats` fixture is the one
+/// pinned) — ten byte-identical. The `stats` fixture is the one
 /// legitimate exception: its reply snapshots the engine's own counters,
 /// and the pooled path has already counted the accepted connection by
 /// the time the snapshot is taken, so it is checked structurally
@@ -361,7 +425,7 @@ fn protocol_fixtures_replay_byte_identical_through_the_pooled_server() {
         server.join_within(Duration::from_secs(10));
         seen += 1;
     }
-    assert_eq!(seen, 10, "expected all ten pinned fixtures to replay");
+    assert_eq!(seen, 11, "expected all eleven pinned fixtures to replay");
 }
 
 /// End-to-end: the `psim bench` CLI against a live pooled server writes

@@ -1,0 +1,469 @@
+//! Cache-equivalence, canonicalization and corruption suite for the
+//! content-addressed result store:
+//!
+//! * canonicalization: request spelling (JSON key order, axis order,
+//!   elided-vs-explicit defaults, `workers`, `protocol`) never changes
+//!   the content address, and a 1000-spec randomized corpus produces no
+//!   FNV-1a digest collisions;
+//! * pinned digests: the canonical digest of every decodable golden
+//!   protocol request, recomputed and compared byte-for-byte — a drift
+//!   here silently orphans every artifact ever written, so it must be
+//!   deliberate;
+//! * cache equivalence: cold replies with the store attached stay
+//!   byte-identical to the pinned fixtures, and warm repeats replay the
+//!   cold bytes verbatim — in-process and through the pooled server;
+//! * the LRU eviction property and the conservation law
+//!   `cache_hits + cache_misses == cache_lookups`;
+//! * corruption: truncated, bit-flipped, mis-checksummed, wrong-version
+//!   and garbage artifacts are rejected (counted as invalidations),
+//!   recomputed to the exact fixture bytes and repaired on disk — never
+//!   served stale, never a panic;
+//! * acceptance: the warm repeat of the full AlexNet paper-grid sweep
+//!   records zero new `grid_cell_eval_us` observations.
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use psim::api::codec::decode_line;
+use psim::api::Engine;
+use psim::cli::commands::serve::{bind, serve_on, ServeConfig};
+use psim::store::canon::{cache_key, canonical_line};
+use psim::store::digest::{digest_hex, fnv1a_64};
+use psim::store::{artifact, ResultStore};
+use psim::util::prng::Rng;
+use psim::util::sync::lock_unpoisoned;
+
+/// `grid_cell_eval_us` lives in the process-global registry, so every
+/// test in this binary that dispatches a sweep serializes here —
+/// otherwise the zero-new-observations acceptance assertion would race
+/// with its neighbors' grid evaluations.
+static GRID_HISTOGRAM: Mutex<()> = Mutex::new(());
+
+const SHUTDOWN_LINE: &str = r#"{"cmd":"shutdown"}"#;
+
+/// The pinned FNV-1a content address of every decodable golden request
+/// (`digest_hex(canonical_line(request))`). The two fixtures missing
+/// here (`analyze`, `infer`) pin error replies: their requests fail to
+/// decode and can never reach the store.
+const PINNED: [(&str, &str); 9] = [
+    ("explore", "128c793c9df0acfd"),
+    ("fusion", "6ffd21f078298471"),
+    ("metrics", "9f3db6d01f7499af"),
+    ("shutdown", "e6d083f7651e09ba"),
+    ("stats", "b322baa1be826859"),
+    ("sweep", "8801cdb52ecd4a33"),
+    ("tables", "ea80e65b9cc1145e"),
+    ("version", "989ee366adf9c38c"),
+    ("zoo", "973c519d6f4e70bc"),
+];
+
+/// `(request line, pinned reply line)` of one golden protocol fixture.
+fn fixture(stem: &str) -> (String, String) {
+    let path = format!("{}/tests/golden/protocol/{stem}.txt", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|_| panic!("fixture {stem}"));
+    let mut lines = text.lines();
+    let request = lines.next().expect("fixture request line").to_string();
+    let reply = lines.next().expect("fixture reply line").to_string();
+    (request, reply)
+}
+
+fn engine_with_memory_store(capacity: usize) -> Engine {
+    let engine = Engine::analytics();
+    let store = ResultStore::memory(capacity, engine.registry());
+    assert!(engine.attach_store(store));
+    engine
+}
+
+fn engine_with_disk_store(dir: &Path) -> Engine {
+    let engine = Engine::analytics();
+    let store = ResultStore::open(dir, 8, engine.registry()).expect("open disk store");
+    assert!(engine.attach_store(store));
+    engine
+}
+
+/// A fresh per-test artifact directory (removed up front so reruns
+/// start clean; each caller removes it again on success).
+fn temp_store_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("psim_store_cache_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+// ---------------------------------------------------------------------
+// Canonicalization
+// ---------------------------------------------------------------------
+
+/// Pinned content addresses for the golden requests. A digest change
+/// means previously written artifacts stop matching this build — a
+/// breaking store change that must be deliberate, exactly like a reply
+/// fixture drift.
+#[test]
+fn golden_request_digests_are_pinned() {
+    for (stem, expected) in PINNED {
+        let (request, _) = fixture(stem);
+        let req = decode_line(&request).unwrap_or_else(|e| panic!("decode {stem}: {e}"));
+        let digest = digest_hex(canonical_line(&req).as_bytes());
+        assert_eq!(digest, expected, "canonical digest for '{stem}' drifted");
+    }
+    for stem in ["analyze", "infer"] {
+        let (request, _) = fixture(stem);
+        assert!(decode_line(&request).is_err(), "'{stem}' fixture unexpectedly decodes");
+    }
+    // Every fixture is accounted for: a new command must pin its digest
+    // here (or join the undecodable pair above).
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/protocol");
+    let fixtures = std::fs::read_dir(dir)
+        .expect("fixture dir")
+        .filter_map(|entry| entry.ok())
+        .filter(|entry| entry.path().extension().and_then(|e| e.to_str()) == Some("txt"))
+        .count();
+    assert_eq!(fixtures, PINNED.len() + 2, "new fixture: pin its content address");
+}
+
+/// JSON key order, axis order, elided-vs-explicit defaults, the
+/// `protocol` field and `workers` are all spelling, not identity: every
+/// variant lands on one canonical line and one digest.
+#[test]
+fn spelling_never_changes_the_content_address() {
+    let sweeps = [
+        concat!(
+            r#"{"cmd":"sweep","networks":["AlexNet"],"macs":[512,1024],"#,
+            r#""strategies":["max-input","max-output"],"modes":["passive","active"],"#,
+            r#""batches":[1],"fusion_depth":[1]}"#
+        ),
+        // Scrambled keys and axes, defaults elided instead of explicit.
+        concat!(
+            r#"{"modes":["active","passive"],"strategies":["max-output","max-input"],"#,
+            r#""macs":[1024,512],"networks":["AlexNet"],"cmd":"sweep"}"#
+        ),
+        // Explicit protocol version and a worker hint.
+        concat!(
+            r#"{"cmd":"sweep","protocol":1,"workers":7,"networks":["AlexNet"],"#,
+            r#""macs":[512,1024],"strategies":["max-input","max-output"],"#,
+            r#""modes":["passive","active"]}"#
+        ),
+    ];
+    let explores = [
+        r#"{"cmd":"explore","networks":["AlexNet"],"macs":[512]}"#.to_string(),
+        // Every default axis spelled out, scrambled, plus protocol and
+        // workers: identical to the elided form above.
+        concat!(
+            r#"{"workers":3,"sram":[65536,262144,1048576,"unlimited"],"#,
+            r#""objectives":["utilization","energy","sram-accesses","bandwidth"],"#,
+            r#""strategies":["optimal","equal-macs","max-output","max-input"],"#,
+            r#""modes":["active","passive"],"fusion":[1],"macs":[512],"#,
+            r#""networks":["AlexNet"],"cmd":"explore","protocol":1}"#
+        )
+        .to_string(),
+    ];
+    let canon = |line: &str| {
+        let req = decode_line(line).unwrap_or_else(|e| panic!("decode {line}: {e}"));
+        canonical_line(&req)
+    };
+    let sweep_canonical = canon(sweeps[0]);
+    for line in &sweeps[1..] {
+        assert_eq!(canon(line), sweep_canonical, "sweep spelling changed the identity: {line}");
+    }
+    let explore_canonical = canon(&explores[0]);
+    for line in &explores[1..] {
+        assert_eq!(canon(line), explore_canonical, "explore spelling changed identity: {line}");
+    }
+    assert_ne!(
+        fnv1a_64(sweep_canonical.as_bytes()),
+        fnv1a_64(explore_canonical.as_bytes()),
+        "distinct requests must not share an address"
+    );
+}
+
+/// 1000 randomized specs (each with a unique MAC budget, so every
+/// canonical line is distinct by construction): no two may collide to
+/// one FNV-1a digest — a collision would silently cross-serve replies.
+#[test]
+fn randomized_spec_corpus_has_no_digest_collisions() {
+    const N: usize = 1_000;
+    let strategies = ["max-input", "max-output", "equal-macs", "optimal"];
+    let modes = ["passive", "active"];
+    let srams = [r#""unlimited""#, "65536", "262144"];
+    let mut rng = Rng::new(0x5eed_cafe);
+    let mut canonicals: HashSet<String> = HashSet::new();
+    let mut digests: HashSet<u64> = HashSet::new();
+    for i in 0..N {
+        let unique = 20_000 + i; // a MAC budget no other spec in the corpus has
+        let extra = 512u64 << rng.below(4);
+        let strategy = *rng.pick(&strategies);
+        let mode = *rng.pick(&modes);
+        let line = if i % 2 == 0 {
+            format!(
+                concat!(
+                    r#"{{"cmd":"sweep","networks":["AlexNet"],"macs":[{u},{e}],"#,
+                    r#""strategies":["{s}"],"modes":["{m}"]}}"#
+                ),
+                u = unique,
+                e = extra,
+                s = strategy,
+                m = mode
+            )
+        } else {
+            format!(
+                concat!(
+                    r#"{{"cmd":"explore","networks":["AlexNet"],"macs":[{u}],"#,
+                    r#""sram":[{sr}],"strategies":["{s}"],"modes":["{m}"]}}"#
+                ),
+                u = unique,
+                sr = rng.pick(&srams),
+                s = strategy,
+                m = mode
+            )
+        };
+        let req = decode_line(&line).unwrap_or_else(|e| panic!("spec #{i}: {e}"));
+        let canonical = canonical_line(&req);
+        assert!(canonicals.insert(canonical.clone()), "duplicate canonical at #{i}");
+        let fresh = digests.insert(fnv1a_64(canonical.as_bytes()));
+        assert!(fresh, "FNV-1a collision at spec #{i}: {canonical}");
+    }
+    assert_eq!(digests.len(), N);
+}
+
+// ---------------------------------------------------------------------
+// Cache equivalence
+// ---------------------------------------------------------------------
+
+/// Cold replies with the store attached are byte-identical to the
+/// pinned fixtures (attaching a store must never change reply bytes),
+/// and every cacheable command's warm repeat replays the cold bytes
+/// verbatim with exact `cache_*` accounting.
+#[test]
+fn fixtures_replay_byte_identical_cold_and_warm_in_process() {
+    let _grid = lock_unpoisoned(&GRID_HISTOGRAM);
+    for (stem, _) in PINNED {
+        let (request, expected) = fixture(stem);
+        let engine = engine_with_memory_store(16);
+        let (cold, _) = engine.handle_line(&request);
+        assert_eq!(cold.to_string(), expected, "cold '{stem}' drifted with the store on");
+        let req = decode_line(&request).expect("pinned fixtures decode");
+        if cache_key(&req).is_none() {
+            let counters = engine.store().expect("store attached").counters();
+            assert_eq!(counters.lookups.get(), 0, "'{stem}' must never consult the store");
+            continue;
+        }
+        let (warm, _) = engine.handle_line(&request);
+        assert_eq!(warm.to_string(), expected, "warm '{stem}' is not the stored bytes");
+        let counters = engine.store().expect("store attached").counters();
+        assert_eq!(counters.hits.get(), 1, "'{stem}' warm repeat must hit");
+        assert_eq!(counters.misses.get(), 1);
+        assert_eq!(counters.lookups.get(), 2);
+    }
+}
+
+/// One JSON-lines client connection against the pooled server.
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Client { writer: stream.try_clone().unwrap(), reader: BufReader::new(stream) }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        writeln!(self.writer, "{line}").expect("send");
+        let mut reply = String::new();
+        assert!(self.reader.read_line(&mut reply).expect("reply") > 0, "server closed");
+        reply.trim_end().to_string()
+    }
+}
+
+/// A pooled server over a store-attached engine on an ephemeral port.
+struct PooledServer {
+    addr: SocketAddr,
+    done: mpsc::Receiver<()>,
+    handle: thread::JoinHandle<()>,
+}
+
+fn start_pooled(engine: Arc<Engine>) -> PooledServer {
+    let config = ServeConfig { workers: 2, queue: 8, max_conns: 16, timeout: None };
+    let (listener, _port) = bind(0).expect("ephemeral bind");
+    let addr = listener.local_addr().expect("listener addr");
+    let (tx, done) = mpsc::channel();
+    let handle = thread::spawn(move || {
+        serve_on(listener, &engine, &config).expect("server failed");
+        let _ = tx.send(());
+    });
+    PooledServer { addr, done, handle }
+}
+
+/// The cacheable fixtures replay byte-identical through the pooled
+/// server too: the cold reply matches the pinned fixture and the warm
+/// repeat replays the stored bytes over the wire (the store-hit branch
+/// of the shared handler, upstream of the coalescer).
+#[test]
+fn fixtures_replay_byte_identical_through_the_pooled_server() {
+    let _grid = lock_unpoisoned(&GRID_HISTOGRAM);
+    for (stem, _) in PINNED {
+        let (request, expected) = fixture(stem);
+        let req = decode_line(&request).expect("pinned fixtures decode");
+        if cache_key(&req).is_none() {
+            continue;
+        }
+        let engine = Arc::new(engine_with_memory_store(16));
+        let server = start_pooled(engine.clone());
+        let mut client = Client::connect(server.addr);
+        let cold = client.roundtrip(&request);
+        assert_eq!(cold, expected, "cold '{stem}' drifted through the pooled server");
+        let warm = client.roundtrip(&request);
+        assert_eq!(warm, expected, "warm '{stem}' is not the stored bytes over the wire");
+        let counters = engine.store().expect("store attached").counters();
+        assert_eq!(counters.hits.get(), 1, "'{stem}' warm repeat must hit");
+        assert_eq!(counters.hits.get() + counters.misses.get(), counters.lookups.get());
+        let bye = client.roundtrip(SHUTDOWN_LINE);
+        assert!(bye.contains("true"), "{bye}");
+        server.done.recv_timeout(Duration::from_secs(10)).expect("server shutdown deadline");
+        server.handle.join().expect("server thread panicked");
+    }
+}
+
+/// LRU eviction property, end to end through the engine: a capacity-1
+/// store thrashes between two alternating requests (every lookup
+/// misses, every insert evicts) while a capacity-2 store holds both —
+/// and the conservation law holds exactly either way.
+#[test]
+fn lru_eviction_property_through_the_engine() {
+    let table1 = r#"{"cmd":"tables","table":"table1"}"#;
+    let table2 = r#"{"cmd":"tables","table":"table2"}"#;
+
+    let thrashing = engine_with_memory_store(1);
+    for line in [table1, table2, table1, table2] {
+        let (_reply, _) = thrashing.handle_line(line);
+    }
+    let c = thrashing.store().expect("store attached").counters();
+    assert_eq!(c.hits.get(), 0, "capacity 1 cannot hold two alternating entries");
+    assert_eq!(c.misses.get(), 4);
+    assert_eq!(c.evictions.get(), 3, "every insert after the first evicts the other entry");
+    assert_eq!(c.hits.get() + c.misses.get(), c.lookups.get());
+
+    let roomy = engine_with_memory_store(2);
+    for line in [table1, table2, table1, table2] {
+        let (_reply, _) = roomy.handle_line(line);
+    }
+    let c = roomy.store().expect("store attached").counters();
+    assert_eq!(c.hits.get(), 2, "capacity 2 holds both entries");
+    assert_eq!(c.misses.get(), 2);
+    assert_eq!(c.evictions.get(), 0);
+    assert_eq!(c.hits.get() + c.misses.get(), c.lookups.get());
+}
+
+// ---------------------------------------------------------------------
+// Corruption
+// ---------------------------------------------------------------------
+
+/// Every corrupted artifact is rejected (counted as exactly one
+/// invalidation), recomputed to the exact fixture bytes, and repaired
+/// on disk so the next fresh store hits again. No corruption panics,
+/// none serves stale bytes.
+#[test]
+fn corrupted_artifacts_are_rejected_recomputed_and_repaired() {
+    let (request, expected) = fixture("tables");
+    let cases: [(&str, fn(&str) -> String); 8] = [
+        ("truncated", |text| {
+            text.lines().next().map(|m| format!("{m}\n")).unwrap_or_default()
+        }),
+        ("bit_flipped_payload", |text| {
+            let mut lines = text.lines();
+            let manifest = lines.next().expect("manifest line");
+            let payload = lines.next().expect("payload line");
+            format!("{manifest}\n{payload}X\n")
+        }),
+        ("wrong_checksum", |text| {
+            let mut lines = text.lines();
+            let manifest = lines.next().expect("manifest line").to_string();
+            let payload = lines.next().expect("payload line");
+            let forged = manifest.replace(&digest_hex(payload.as_bytes()), &"0".repeat(16));
+            format!("{forged}\n{payload}\n")
+        }),
+        ("wrong_schema", |text| text.replace(r#""schema":1"#, r#""schema":99"#)),
+        ("wrong_protocol", |text| text.replace(r#""protocol":1,"#, r#""protocol":99,"#)),
+        ("garbage_manifest", |text| {
+            let payload = text.lines().nth(1).expect("payload line");
+            format!("not json {{]\n{payload}\n")
+        }),
+        ("empty_file", |_| String::new()),
+        ("extra_trailing_line", |text| format!("{text}stale\n")),
+    ];
+    for (tag, corrupt) in cases {
+        let dir = temp_store_dir(&format!("corrupt_{tag}"));
+        // Seed one valid artifact by computing through a disk-backed engine.
+        let seeded = engine_with_disk_store(&dir);
+        let (cold, _) = seeded.handle_line(&request);
+        assert_eq!(cold.to_string(), expected, "'{tag}': seed reply drifted");
+        let entries = artifact::scan(&dir).expect("scan seeded store");
+        assert_eq!(entries.len(), 1, "'{tag}': expected exactly the seeded artifact");
+        let path = entries[0].0.clone();
+        let text = std::fs::read_to_string(&path).expect("artifact text");
+        let forged = corrupt(&text);
+        assert_ne!(forged, text, "'{tag}': corruption must change the bytes");
+        std::fs::write(&path, forged).expect("write corruption");
+
+        // A fresh store must reject the artifact, recompute, and repair.
+        let engine = engine_with_disk_store(&dir);
+        let (reply, _) = engine.handle_line(&request);
+        assert_eq!(reply.to_string(), expected, "'{tag}': recomputed reply drifted");
+        let c = engine.store().expect("store attached").counters();
+        assert_eq!(c.hits.get(), 0, "'{tag}': a corrupted artifact must never hit");
+        assert_eq!(c.misses.get(), 1, "'{tag}': rejection falls through to a miss");
+        assert_eq!(c.invalidations.get(), 1, "'{tag}': rejection must be counted");
+        assert_eq!(c.hits.get() + c.misses.get(), c.lookups.get());
+
+        // The recompute rewrote the artifact: the next fresh store hits.
+        let healed = engine_with_disk_store(&dir);
+        let (warm, _) = healed.handle_line(&request);
+        assert_eq!(warm.to_string(), expected, "'{tag}': repaired reply drifted");
+        let c = healed.store().expect("store attached").counters();
+        assert_eq!(c.hits.get(), 1, "'{tag}': the repaired artifact must hit");
+        assert_eq!(c.invalidations.get(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: warm paper-grid sweep
+// ---------------------------------------------------------------------
+
+/// A warm repeat of the full AlexNet paper-grid sweep is a pure store
+/// replay: byte-identical to the cold reply AND zero new
+/// `grid_cell_eval_us` observations (the grid engine is never
+/// consulted). A respelled repeat (scrambled keys, explicit protocol)
+/// hits the same entry.
+#[test]
+fn warm_paper_grid_sweep_records_zero_new_grid_cell_observations() {
+    let _grid = lock_unpoisoned(&GRID_HISTOGRAM);
+    let engine = engine_with_memory_store(8);
+    let line = r#"{"cmd":"sweep","networks":["AlexNet"]}"#;
+    let hist = psim::obs::registry::global().histogram("grid_cell_eval_us");
+
+    let before_cold = hist.count();
+    let (cold, _) = engine.handle_line(line);
+    let after_cold = hist.count();
+    assert!(after_cold > before_cold, "cold paper-grid sweep must evaluate grid cells");
+
+    let (warm, _) = engine.handle_line(line);
+    assert_eq!(hist.count(), after_cold, "warm repeat re-evaluated grid cells");
+    assert_eq!(warm.to_string(), cold.to_string(), "warm bytes differ from cold");
+
+    let respelled = r#"{"networks":["AlexNet"],"cmd":"sweep","protocol":1}"#;
+    let (respelled_warm, _) = engine.handle_line(respelled);
+    assert_eq!(hist.count(), after_cold, "respelled repeat re-evaluated grid cells");
+    assert_eq!(respelled_warm.to_string(), cold.to_string());
+
+    let counters = engine.store().expect("store attached").counters();
+    assert_eq!(counters.hits.get(), 2, "both repeats must hit the one entry");
+    assert_eq!(counters.misses.get(), 1);
+    assert_eq!(counters.lookups.get(), 3);
+}
